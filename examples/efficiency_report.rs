@@ -1,0 +1,48 @@
+//! Fig. 1 in one screen: performance + energy + cost efficiency of
+//! FlightLLM (U280 and VHK158) against every baseline, on the paper's
+//! headline point.
+//!
+//! Run: cargo run --release --example efficiency_report
+
+use flightllm::baselines::{cta, dfx, fact, GpuStack, GpuSystem};
+use flightllm::config::Target;
+use flightllm::experiments::flightllm_full;
+use flightllm::metrics::{format_table, EvalPoint, Measurement};
+
+fn row(m: &Measurement) -> Vec<String> {
+    vec![
+        m.system.clone(),
+        format!("{:.3}", m.latency_s),
+        format!("{:.1}", m.decode_tps),
+        format!("{:.0}", m.power_w),
+        format!("{:.3}", m.tokens_per_joule()),
+        format!("{:.2}", m.tokens_per_s_per_dollar() * 1000.0),
+    ]
+}
+
+fn main() {
+    let pt = EvalPoint { prefill: 128, decode: 512 };
+    for target in [Target::u280_llama2(), Target::u280_opt()] {
+        let model = &target.model;
+        let mut rows = Vec::new();
+        rows.push(row(&GpuSystem::v100s(GpuStack::Naive).model().measure(model, pt)));
+        rows.push(row(&GpuSystem::v100s(GpuStack::Opt).model().measure(model, pt)));
+        rows.push(row(&GpuSystem::a100(GpuStack::Naive).model().measure(model, pt)));
+        rows.push(row(&GpuSystem::a100(GpuStack::Opt).model().measure(model, pt)));
+        rows.push(row(&dfx().measure(model, pt)));
+        rows.push(row(&cta().measure(model, pt)));
+        rows.push(row(&fact().measure(model, pt)));
+        rows.push(row(&flightllm_full(&target, pt)));
+        let vhk = Target { model: model.clone(), ..Target::vhk158_llama2() };
+        rows.push(row(&flightllm_full(&vhk, pt)));
+        println!(
+            "{}",
+            format_table(
+                &format!("{} @ {} — latency / throughput / efficiency", model.name, pt.label()),
+                &["system", "latency(s)", "tok/s", "W", "tok/J", "tok/s/k$"],
+                &rows
+            )
+        );
+    }
+    println!("efficiency_report OK");
+}

@@ -1,0 +1,52 @@
+//! Quickstart: the three layers in one page.
+//!
+//! 1. Ask the simulator for a FlightLLM-on-U280 decode-step estimate on
+//!    LLaMA2-7B (no artifacts needed — shapes drive everything).
+//! 2. If `make artifacts` has been run, load the real tiny model through
+//!    the PJRT runtime and generate a few tokens.
+//!
+//! Run: cargo run --release --example quickstart
+
+use flightllm::config::Target;
+use flightllm::experiments::{flightllm_full, FlightConfig};
+use flightllm::metrics::EvalPoint;
+use flightllm::runtime::ModelRuntime;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. analytical/simulated path -------------------------------
+    let target = Target::u280_llama2();
+    let pt = EvalPoint { prefill: 128, decode: 128 };
+    let m = flightllm_full(&target, pt);
+    println!("FlightLLM on {} / {}:", target.platform.name, target.model.name);
+    println!("  point {}  end-to-end latency {:.3} s", pt.label(), m.latency_s);
+    println!("  decode throughput {:.1} tokens/s", m.decode_tps);
+    println!("  decode HBM bandwidth utilization {:.1}%", m.bw_util * 100.0);
+    println!("  power {:.1} W  → {:.2} tokens/J", m.power_w, m.tokens_per_joule());
+    let _ = FlightConfig::Full; // see fig14_breakdown for the ablation
+
+    // ---- 2. real numerics through PJRT (if artifacts exist) ---------
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("\n(artifacts/ not built — run `make artifacts` to enable");
+        println!(" the real tiny-model generation demo)");
+        return Ok(());
+    }
+    println!("\nLoading tiny model artifacts (compiling 5 HLO modules)...");
+    let rt = ModelRuntime::load(dir)?;
+    let prompt: Vec<i32> = vec![17, 42, 7, 100, 255, 3, 9, 12];
+    let p = rt.prefill(&prompt)?;
+    let mut tok = ModelRuntime::argmax(&p.logits);
+    let mut kv = p.kv;
+    let mut pos = rt.bucket_for(prompt.len())? as i32;
+    print!("generated:");
+    for _ in 0..16 {
+        print!(" {tok}");
+        let out = rt.decode(tok, &kv, pos)?;
+        tok = ModelRuntime::argmax(&out.logits);
+        kv = out.kv;
+        pos += 1;
+    }
+    println!();
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,212 @@
+"""AOT lowering: JAX model -> HLO text artifacts + weights + manifest.
+
+This is the build-time half of the three-layer stack.  It runs ONCE
+(`make artifacts`); the rust coordinator then loads:
+
+    artifacts/
+      manifest.json        — param order/shape/dtype/offsets, artifact
+                             signatures, model config, golden digests
+      weights.bin          — compressed params, concatenated little-endian
+      decode.hlo.txt       — fused always-on-chip decode step
+      prefill_<L>.hlo.txt  — one module per length-adaptive prefill bucket
+      goldens.bin          — golden inputs/outputs for rust integration
+                             tests (decode + smallest prefill bucket)
+
+HLO *text* is the interchange format, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    TINY,
+    ModelConfig,
+    compress_params,
+    decode_step,
+    init_params,
+    param_order,
+    prefill,
+)
+
+# Length-adaptive prefill buckets (§5.2): prompt lengths 1..L share the
+# bucket-L executable.  Coarse on purpose — the decode stage gets the finer
+# treatment because it dominates execution frequency.
+PREFILL_BUCKETS = (16, 32, 64, 128)
+
+DTYPE_TAG = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32",
+             np.dtype(np.uint8): "u8"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    print_large_constants=True is ESSENTIAL: the default printer elides
+    big constants as `constant({...})`, which xla_extension 0.5.1's text
+    parser silently zero-fills — every baked constant (rope tables,
+    attention masks) would read as zeros on the rust side.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def load_or_init_params(cfg: ModelConfig, params_file: Path | None):
+    if params_file and params_file.exists():
+        print(f"loading trained params from {params_file}")
+        with np.load(params_file) as z:
+            return {k: z[k] for k in z.files}
+    print("WARNING: no trained params found; using random init "
+          "(run `python -m compile.train` for a meaningful model)")
+    return init_params(np.random.default_rng(0), cfg)
+
+
+def spec_of(a: np.ndarray) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(a.shape, a.dtype)
+
+
+def kv_shape(cfg: ModelConfig):
+    return (cfg.n_layers, 2, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+
+
+def build_artifacts(out_dir: Path, cfg: ModelConfig, params_file: Path | None,
+                    buckets=PREFILL_BUCKETS) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    dense = load_or_init_params(cfg, params_file)
+    cp = compress_params(dense, cfg)
+    names = param_order(cfg)
+    assert set(names) == set(cp.keys()), (
+        sorted(set(names) ^ set(cp.keys())) or "ok")
+
+    # ---- weights.bin + param table -------------------------------------
+    manifest: dict = {"config": {
+        "vocab": cfg.vocab, "dim": cfg.dim, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "ffn_dim": cfg.ffn_dim,
+        "max_seq": cfg.max_seq, "nm_m": cfg.nm_m, "nm_n": cfg.nm_n,
+        "quant_group": cfg.quant_group, "attn_block": cfg.attn_block,
+        "attn_window": cfg.attn_window, "attn_global": cfg.attn_global,
+    }, "params": [], "artifacts": {}, "prefill_buckets": list(buckets)}
+
+    blobs = []
+    offset = 0
+    for name in names:
+        a = np.ascontiguousarray(cp[name])
+        tag = DTYPE_TAG[a.dtype]
+        nbytes = a.nbytes
+        manifest["params"].append({
+            "name": name, "dtype": tag, "shape": list(a.shape),
+            "offset": offset, "nbytes": nbytes,
+        })
+        blobs.append(a.tobytes())
+        offset += nbytes
+    weights = b"".join(blobs)
+    (out_dir / "weights.bin").write_bytes(weights)
+    manifest["weights_sha256"] = hashlib.sha256(weights).hexdigest()
+
+    param_args = [jnp.asarray(cp[n]) for n in names]
+    param_specs = [spec_of(np.asarray(cp[n])) for n in names]
+    n_params = len(names)
+
+    # ---- decode module ---------------------------------------------------
+    def decode_flat(*args):
+        d = dict(zip(names, args[:n_params]))
+        token, kv, pos = args[n_params:]
+        return decode_step(d, cfg, token, kv, pos)
+
+    tok_spec = jax.ShapeDtypeStruct((1,), np.int32)
+    kv_spec = jax.ShapeDtypeStruct(kv_shape(cfg), np.float32)
+    pos_spec = jax.ShapeDtypeStruct((), np.int32)
+    print("lowering decode ...", flush=True)
+    lowered = jax.jit(decode_flat).lower(*param_specs, tok_spec, kv_spec, pos_spec)
+    (out_dir / "decode.hlo.txt").write_text(to_hlo_text(lowered))
+    manifest["artifacts"]["decode"] = {
+        "file": "decode.hlo.txt",
+        "inputs": ["params...", "token:i32[1]",
+                   f"kv:f32{list(kv_shape(cfg))}", "pos:i32[]"],
+        "outputs": [f"logits:f32[1,{cfg.vocab}]",
+                    f"kv:f32{list(kv_shape(cfg))}"],
+    }
+
+    # ---- prefill modules (one per bucket) --------------------------------
+    for L in buckets:
+        def prefill_flat(*args, L=L):
+            d = dict(zip(names, args[:n_params]))
+            (tokens,) = args[n_params:]
+            return prefill(d, cfg, tokens)
+
+        tspec = jax.ShapeDtypeStruct((L,), np.int32)
+        print(f"lowering prefill_{L} ...", flush=True)
+        lowered = jax.jit(prefill_flat).lower(*param_specs, tspec)
+        (out_dir / f"prefill_{L}.hlo.txt").write_text(to_hlo_text(lowered))
+        manifest["artifacts"][f"prefill_{L}"] = {
+            "file": f"prefill_{L}.hlo.txt",
+            "inputs": ["params...", f"tokens:i32[{L}]"],
+            "outputs": [f"logits:f32[1,{cfg.vocab}]",
+                        f"kv:f32{list(kv_shape(cfg))}"],
+        }
+
+    # ---- goldens for rust integration tests ------------------------------
+    rng = np.random.default_rng(1234)
+    g_tokens = rng.integers(0, cfg.vocab, size=buckets[0], dtype=np.int32)
+    g_logits_p, g_kv_p = jax.jit(
+        lambda *a: prefill(dict(zip(names, a[:n_params])), cfg, a[n_params])
+    )(*param_args, jnp.asarray(g_tokens))
+    g_tok = np.asarray([int(np.argmax(np.asarray(g_logits_p)[0]))], np.int32)
+    g_pos = np.int32(buckets[0])
+    g_logits_d, g_kv_d = jax.jit(
+        lambda *a: decode_step(dict(zip(names, a[:n_params])), cfg,
+                               a[n_params], a[n_params + 1], a[n_params + 2])
+    )(*param_args, jnp.asarray(g_tok), g_kv_p, g_pos)
+
+    gold = {
+        "prefill_tokens": g_tokens,
+        "prefill_logits": np.asarray(g_logits_p),
+        "prefill_kv": np.asarray(g_kv_p),
+        "decode_token": g_tok,
+        "decode_pos": np.asarray(g_pos),
+        "decode_logits": np.asarray(g_logits_d),
+        "decode_kv": np.asarray(g_kv_d),
+    }
+    gblobs, goffset, gentries = [], 0, []
+    for gname, arr in gold.items():
+        a = np.ascontiguousarray(arr)
+        gentries.append({"name": gname, "dtype": DTYPE_TAG[a.dtype],
+                         "shape": list(a.shape), "offset": goffset,
+                         "nbytes": a.nbytes})
+        gblobs.append(a.tobytes())
+        goffset += a.nbytes
+    (out_dir / "goldens.bin").write_bytes(b"".join(gblobs))
+    manifest["goldens"] = gentries
+    manifest["golden_prefill_bucket"] = buckets[0]
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    total = sum(p["nbytes"] for p in manifest["params"])
+    print(f"artifacts written to {out_dir} "
+          f"({len(manifest['artifacts'])} modules, weights {total/1e6:.2f} MB)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=Path, default=Path("../artifacts"))
+    ap.add_argument("--params", type=Path,
+                    default=Path(__file__).parent / "params_tiny.npz")
+    args = ap.parse_args()
+    build_artifacts(args.out, TINY, args.params)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Table 4 reproduction: perplexity of the tiny model under the paper's
+compression configurations (None / Sparse Attention / Weight Pruning /
+Quantization / All) on the held-out synthetic corpus.
+
+The paper measures LLaMA2-7B / OPT-6.7B on WikiText; we measure the tiny
+trained model on the synthetic held-out split (DESIGN.md §Substitutions).
+The reproduction target is the *structure*: every single technique costs
+little perplexity, the combination costs slightly more, and nothing
+diverges.
+
+Run: python -m compile.eval_ppl [--out ../artifacts/table4.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .corpus import make_corpus, split_corpus
+from .model import (
+    TINY,
+    ModelConfig,
+    compress_params,
+    compressed_forward,
+    dense_forward,
+    init_params,
+)
+from .train import DEFAULT_OUT as PARAMS_FILE
+
+
+def perplexity(forward, tokens: np.ndarray, seq_len: int = 128, max_windows: int = 16) -> float:
+    """Sliding-window next-token perplexity."""
+    nlls = []
+    count = 0
+    n_windows = min(max_windows, (len(tokens) - 1) // seq_len)
+    for w in range(n_windows):
+        chunk = tokens[w * seq_len : w * seq_len + seq_len + 1]
+        logits = forward(jnp.asarray(chunk[:-1]))
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tgt = chunk[1:]
+        nll = -np.asarray(logp)[np.arange(seq_len), tgt]
+        nlls.append(nll.sum())
+        count += seq_len
+    return float(np.exp(np.sum(nlls) / count))
+
+
+def config_variants(base: ModelConfig) -> dict[str, dict]:
+    """The five Table 4 rows, expressed as compression-knob overrides.
+
+    'off' for a technique = lossless settings (N=M keeps all weights,
+    8-bit→identity is not available so quantization-off uses the dense
+    weights directly — handled via masking in `evaluate`).
+    """
+    return {
+        "None": dict(sparse_attn=False, pruning=False, quant=False),
+        "Sparse Attention": dict(sparse_attn=True, pruning=False, quant=False),
+        "Weight Pruning": dict(sparse_attn=False, pruning=True, quant=False),
+        "Quantization": dict(sparse_attn=False, pruning=False, quant=True),
+        "All": dict(sparse_attn=True, pruning=True, quant=True),
+    }
+
+
+def evaluate(params, base_cfg: ModelConfig, holdout: np.ndarray) -> dict[str, float]:
+    results: dict[str, float] = {}
+    for name, knobs in config_variants(base_cfg).items():
+        cfg = dataclasses.replace(
+            base_cfg,
+            # pruning off → keep all (N = M); on → paper-style N = M/2.
+            nm_n=(base_cfg.nm_m if not knobs["pruning"] else base_cfg.nm_m // 2),
+            # sparse attention off → window covering the whole sequence.
+            attn_window=(10_000 if not knobs["sparse_attn"] else base_cfg.attn_window),
+        )
+        if knobs["quant"] or knobs["pruning"] or knobs["sparse_attn"]:
+            cp = compress_params(params, cfg)
+            if not knobs["quant"]:
+                # Undo quantization loss: rebuild exact packed weights is
+                # impossible (int4 is lossy), so for the quant-off rows we
+                # replace the FFN tensors with a fresh quantization at the
+                # tightest group size... no — instead evaluate with the
+                # dense FFN by quantizing with per-column scales at 4 bit
+                # would still be lossy. We instead bypass: use the dense
+                # forward path restricted to the enabled techniques.
+                ppl = perplexity(
+                    lambda t, cp=cp, cfg=cfg: _mixed_forward(
+                        params, cp, cfg, t, use_quant=False,
+                        use_prune=knobs["pruning"], use_sattn=knobs["sparse_attn"],
+                    ),
+                    holdout,
+                )
+                results[name] = ppl
+                continue
+            ppl = perplexity(lambda t, cp=cp, cfg=cfg: compressed_forward(cp, cfg, t), holdout)
+        else:
+            ppl = perplexity(lambda t: dense_forward(params, base_cfg, t), holdout)
+        results[name] = ppl
+    return results
+
+
+def _mixed_forward(params, cp, cfg, tokens, *, use_quant, use_prune, use_sattn):
+    """Forward with an arbitrary subset of techniques enabled, built on
+    dense math: pruning applied by decompressing the N:M weights; sparse
+    attention applied via the block mask; quantization via the packed
+    tensors (when enabled, the caller uses compressed_forward instead).
+    """
+    import dataclasses as dc
+
+    from .kernels.ref import nm_decompress
+    from .kernels import quantize_int4  # noqa: F401
+
+    p2 = dict(params)
+    if use_prune:
+        for k in list(params.keys()):
+            suffix = k.split(".")[-1]
+            if suffix in ("wq", "wk", "wv", "wo"):
+                vals = cp[k + ".vals"]
+                idx = cp[k + ".idx"]
+                p2[k] = np.asarray(
+                    nm_decompress(jnp.asarray(vals), jnp.asarray(idx), cfg.nm_m, params[k].shape[1])
+                )
+    eval_cfg = cfg if use_sattn else dc.replace(cfg, attn_window=10_000)
+    return _dense_with_mask(p2, eval_cfg, tokens, use_sattn)
+
+
+def _dense_with_mask(params, cfg, tokens, use_sattn):
+    from .model import make_block_mask, rope_angles, apply_rope
+    from .kernels.ref import block_mask_to_dense, rmsnorm_ref, silu_ref
+
+    L = tokens.shape[0]
+    x = params["embed"][tokens]
+    pos = jnp.arange(L)
+    cos, sin = rope_angles(cfg, pos)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    if use_sattn:
+        bm = jnp.asarray(make_block_mask(cfg, L))
+        mask = mask & block_mask_to_dense(bm, cfg.attn_block)
+    for i in range(cfg.n_layers):
+        h = rmsnorm_ref(x, params[f"l{i}.norm_attn"], cfg.norm_eps)
+        q = (h @ params[f"l{i}.wq"].T).reshape(L, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[f"l{i}.wk"].T).reshape(L, cfg.n_heads, cfg.head_dim)
+        v = (h @ params[f"l{i}.wv"].T).reshape(L, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        scores = jnp.einsum("qhd,khd->hqk", q, k) / np.sqrt(cfg.head_dim)
+        scores = jnp.where(mask[None], scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("hqk,khd->qhd", att, v).reshape(L, cfg.dim)
+        x = x + o @ params[f"l{i}.wo"].T
+        h = rmsnorm_ref(x, params[f"l{i}.norm_ffn"], cfg.norm_eps)
+        gate = silu_ref(h @ params[f"l{i}.w1"].T)
+        up = h @ params[f"l{i}.w3"].T
+        x = x + (gate * up) @ params[f"l{i}.w2"].T
+    x = rmsnorm_ref(x, params["norm_f"], cfg.norm_eps)
+    return x @ params["head"].T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=Path, default=Path("../artifacts/table4.json"))
+    ap.add_argument("--params", type=Path, default=PARAMS_FILE)
+    args = ap.parse_args()
+    if args.params.exists():
+        with np.load(args.params) as z:
+            params = {k: z[k] for k in z.files}
+        print(f"using trained params {args.params}")
+    else:
+        print("WARNING: random params (run compile.train)")
+        params = init_params(np.random.default_rng(0), TINY)
+    corpus = make_corpus(vocab=TINY.vocab, n_tokens=200_000, seed=0)
+    _, holdout = split_corpus(corpus)
+    results = evaluate(params, TINY, holdout)
+    print(f"{'Compression':<18} {'ppl (held-out)':>14}")
+    for name, ppl in results.items():
+        print(f"{name:<18} {ppl:>14.2f}")
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(results, indent=1))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""L1 Pallas kernels: FlightLLM's compute hot-spots, TPU-adapted.
+
+- nm_sparse:  N:M weight-sparse matmul (CSD-chain SpMM/SpMV path)
+- dequant:    mixed-precision int4 dequantize fused into GEMV/GEMM
+- block_attn: block-sparse flash attention (fused SDDMM/softmax/SpMM)
+- ref:        pure-jnp oracles for all of the above
+"""
+
+from .block_attn import block_attn, make_sliding_block_mask
+from .dequant import dequant_matmul, quantize_int4
+from .nm_sparse import nm_compress, nm_spmm
+
+__all__ = [
+    "block_attn",
+    "make_sliding_block_mask",
+    "dequant_matmul",
+    "quantize_int4",
+    "nm_compress",
+    "nm_spmm",
+]

@@ -1,0 +1,137 @@
+"""Block-sparse attention Pallas kernel — FlightLLM's fused prefill path.
+
+Paper (§4.2): sparse prefill attention is three steps — SDDMM (QK^T under a
+block mask), masked softmax, and SpMM (S·V) — fused so that blocks fully
+covered by the zero mask skip their LD + MM entirely and the S matrix never
+round-trips through off-chip memory.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a flash-attention-style grid
+over 64x64 score blocks.  The query block stays VMEM-resident across the
+whole key loop (always-on-chip), the online-softmax accumulator replaces
+the global buffer, and masked blocks contribute nothing — `where`-masked in
+interpret mode, grid-skipped on real hardware.
+
+Correctness: ref.block_attn_ref via python/tests/test_block_attn.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _block_attn_kernel(
+    q_ref, k_ref, v_ref, mask_ref, o_ref, *, block: int, causal: bool, sm_scale: float
+):
+    """One query block of flash-style block-sparse attention.
+
+    q_ref:    (Bq, d)        this query block
+    k_ref:    (N, d)         all keys   (streamed block-by-block below)
+    v_ref:    (N, d)         all values
+    mask_ref: (1, Nb)        this query block's row of the block mask
+    o_ref:    (Bq, d)
+    """
+    qi = pl.program_id(0)
+    q = q_ref[...] * sm_scale
+    n, d = k_ref.shape
+    nb = n // block
+    # Large-negative instead of finfo.min so that exp(neg - neg) in a fully
+    # masked block can be detected and zeroed rather than becoming exp(0)=1.
+    neg = -1e30
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        k_blk = k_ref[pl.dslice(j * block, block), :]           # (Bk, d)
+        v_blk = v_ref[pl.dslice(j * block, block), :]
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)
+        # Block mask: the SDDMM skip. A masked block contributes -inf scores.
+        keep = mask_ref[0, j]
+        if causal:
+            rows = qi * block + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0
+            )
+            cols = j * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, neg)
+        s = jnp.where(keep, s, neg)
+        # Online softmax update (the fused softmax of §4.2).
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        # Masked entries contribute exactly 0 even when the whole row is
+        # masked (m_cur == neg would make exp(s - m_cur) == 1 otherwise).
+        p = jnp.where(s > 0.5 * neg, jnp.exp(s - m_cur[:, None]), 0.0)
+        l_cur = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32
+        )
+        return acc, m_cur, l_cur
+
+    bq = q.shape[0]
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq,), neg, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    # Causal: key blocks beyond the diagonal are always fully masked — the
+    # compiler's instruction stream simply doesn't emit them.  Here the loop
+    # bound realizes the same skip.
+    upper = (qi + 1) if causal else nb
+    acc, m_fin, l_fin = jax.lax.fori_loop(0, upper, body, (acc0, m0, l0))
+    # Rows with no surviving key (fully masked) produce 0, matching ref.
+    safe_l = jnp.where(l_fin > 0, l_fin, 1.0)
+    out = jnp.where((l_fin > 0)[:, None], acc / safe_l[:, None], 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "causal", "sm_scale"))
+def block_attn(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    block_mask: jnp.ndarray,
+    block: int = 64,
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    """Single-head block-sparse attention, out = softmax(QK^T ∘ M) V.
+
+    q/k/v: (N, d) with N a multiple of `block`;
+    block_mask: (N//block, N//block) bool, True = compute the block.
+    """
+    n, d = q.shape
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    nb = n // block
+    if sm_scale is None:
+        sm_scale = 1.0 / float(np.sqrt(d))
+    grid = (nb,)
+    return pl.pallas_call(
+        functools.partial(
+            _block_attn_kernel, block=block, causal=causal, sm_scale=sm_scale
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, nb), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(q, k, v, block_mask)
+
+
+def make_sliding_block_mask(nb: int, window: int = 4, global_blocks: int = 1):
+    """Build the paper-style sparse-attention block mask (numpy): sliding
+    window of `window` block-diagonals plus `global_blocks` leading global
+    columns/rows (the BigBird/Longformer-style pattern cited in §2.2).
+    """
+    m = np.zeros((nb, nb), dtype=bool)
+    for i in range(nb):
+        lo = max(0, i - window + 1)
+        m[i, lo : i + 1] = True
+    m[:, :global_blocks] = True
+    m[:global_blocks, :] = True
+    # Causal upper triangle is zeroed by the kernel; keep the mask lower.
+    return np.tril(m)

@@ -1,0 +1,104 @@
+"""Mixed-precision dequantize + GEMV/GEMM Pallas kernel.
+
+This is the always-on-chip decode hot path of FlightLLM (§4.3): weights are
+stored packed at low bit-width in off-chip memory, streamed into on-chip
+buffers, expanded to a uniform integer format by the dequantization unit,
+and fed to the MPE while the activation vector stays resident on chip.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the bit-width expansion unit
+becomes an unpack-and-scale prologue *inside* the kernel, before the MXU
+contraction — so HBM traffic is the packed 4-bit stream, not the expanded
+weights, exactly the property that raises effective bandwidth utilization.
+
+Format:
+    packed: (O, K//2) uint8 — two 4-bit codes per byte, low nibble first,
+            code value = stored_nibble - 8 in [-8, 7]
+    scales: (O, K//group) f32 — per-(row, group) quantization scale
+
+Correctness: ref.dequant_matmul_ref via python/tests/test_dequant.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dequant_kernel(x_ref, packed_ref, scales_ref, o_ref, *, group: int):
+    """One O-tile of y = x @ W^T with in-kernel int4 dequantization.
+
+    x_ref:      (B, K)          VMEM-resident activations
+    packed_ref: (O_t, K//2)     packed weight tile (the HBM stream)
+    scales_ref: (O_t, K//group) per-group scales
+    o_ref:      (B, O_t)
+    """
+    x = x_ref[...]
+    packed = packed_ref[...]
+    scales = scales_ref[...]
+    o_t = packed.shape[0]
+    k = x.shape[1]
+    # Bit-width expansion unit: uint8 -> two int4 codes -> int8 lane.
+    lo = (packed & 0x0F).astype(jnp.int32) - 8
+    hi = (packed >> 4).astype(jnp.int32) - 8
+    codes = jnp.stack([lo, hi], axis=-1).reshape(o_t, k).astype(jnp.float32)
+    # Scale expansion (per-group scale broadcast across the group).
+    w = codes.reshape(o_t, k // group, group) * scales[..., None]
+    w = w.reshape(o_t, k)
+    o_ref[...] = jnp.dot(
+        x, w.T, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_o"))
+def dequant_matmul(
+    x: jnp.ndarray,
+    packed: jnp.ndarray,
+    scales: jnp.ndarray,
+    group: int = 64,
+    block_o: int = 128,
+) -> jnp.ndarray:
+    """y = x @ W^T, W stored as int4 codes + per-group scales.
+
+    x: (B, K); packed: (O, K//2) uint8; scales: (O, K//group) f32.
+    """
+    b, k = x.shape
+    o, kp = packed.shape
+    assert kp * 2 == k, f"packed K mismatch: {kp}*2 != {k}"
+    assert k % group == 0
+    assert o % block_o == 0, f"O={o} not a multiple of block_o={block_o}"
+    grid = (o // block_o,)
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((block_o, kp), lambda i: (i, 0)),
+            pl.BlockSpec((block_o, k // group), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, block_o), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        interpret=True,
+    )(x, packed, scales)
+
+
+def quantize_int4(w, group: int = 64):
+    """Symmetric per-group int4 quantization of a dense (O, K) weight
+    (numpy, build-time).  Returns (packed uint8 (O,K//2),
+    scales f32 (O,K//group)).
+    """
+    import numpy as np
+
+    w = np.asarray(w, dtype=np.float32)
+    o, k = w.shape
+    assert k % group == 0 and k % 2 == 0
+    wg = w.reshape(o, k // group, group)
+    amax = np.abs(wg).max(axis=-1)
+    scales = np.where(amax > 0, amax / 7.0, 1.0).astype(np.float32)
+    codes = np.clip(np.round(wg / scales[..., None]), -8, 7).astype(np.int8)
+    codes = codes.reshape(o, k)
+    u = (codes.astype(np.int16) + 8).astype(np.uint8)
+    packed = ((u[:, 1::2] << 4) | u[:, 0::2]).astype(np.uint8)
+    return packed, scales

@@ -1,0 +1,109 @@
+"""N:M sparse matmul Pallas kernel — the MPE SpMM/SpMV path of FlightLLM.
+
+Paper mapping (DESIGN.md §Hardware-Adaptation): the CSD-chain's sparse MUX
+selects, per DSP group, the activation element matching each stored nonzero
+index so the MACs only ever see nonzeros.  On TPU the same property is
+expressed as *gather-then-dense-contract*: the N:M-compressed weight tile
+(vals) is contracted against an activation tile gathered by the stored
+indices, so the MXU-bound contraction has length G*N instead of K.
+
+Format (uniform N:M along K, M a power of two, matching the paper's 16x16
+sparse block with M=16):
+    vals: (O, G, N) f32      nonzero values, G = K // M
+    idx:  (O, G, N) int32    position of each nonzero inside its M-group
+
+The kernel is tiled over the output dimension O; the full activation block
+(B, K) is VMEM-resident, which is exactly the always-on-chip decode
+property for B=1 (x is a vector that never leaves the chip).
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom call the
+CPU PJRT plugin cannot execute.  Correctness is asserted against
+ref.nm_spmm_ref by python/tests/test_nm_sparse.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nm_spmm_kernel(x_ref, vals_ref, idx_ref, o_ref, *, m: int):
+    """One O-tile of y = x @ W^T, W given as (vals, idx) N:M compression.
+
+    x_ref:    (B, K)        full activation block (VMEM resident)
+    vals_ref: (O_t, G, N)   weight-nonzero tile streamed from HBM
+    idx_ref:  (O_t, G, N)   matching in-group indices
+    o_ref:    (B, O_t)      output tile
+    """
+    x = x_ref[...]
+    vals = vals_ref[...]
+    idx = idx_ref[...]
+    b = x.shape[0]
+    o_t, g, n = vals.shape
+    # Regroup activations by M-group: (B, G, M).
+    x_g = x.reshape(b, g, m)
+    # Sparse-MUX equivalent: gather the activation matching each nonzero.
+    # x_sel[b, o, gi, ni] = x_g[b, gi, idx[o, gi, ni]]
+    gi = jax.lax.broadcasted_iota(jnp.int32, (o_t, g, n), 1)
+    x_sel = x_g[:, gi, idx]                       # (B, O_t, G, N)
+    # Dense contraction over the compressed axis (the MXU-friendly part).
+    acc = jnp.einsum(
+        "bogn,ogn->bo", x_sel, vals, preferred_element_type=jnp.float32
+    )
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block_o"))
+def nm_spmm(
+    x: jnp.ndarray,
+    vals: jnp.ndarray,
+    idx: jnp.ndarray,
+    m: int,
+    block_o: int = 128,
+) -> jnp.ndarray:
+    """y = x @ W^T with W N:M sparse along K.
+
+    x: (B, K); vals/idx: (O, G, N) with G = K // M.  Returns (B, O) f32.
+    block_o must divide O (pad O to a multiple upstream; the compiler's
+    shape legalizer guarantees this for real model layers).
+    """
+    b, k = x.shape
+    o, g, n = vals.shape
+    assert g * m == k, f"K mismatch: {g}*{m} != {k}"
+    assert o % block_o == 0, f"O={o} not a multiple of block_o={block_o}"
+    grid = (o // block_o,)
+    return pl.pallas_call(
+        functools.partial(_nm_spmm_kernel, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((block_o, g, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_o, g, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, block_o), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        interpret=True,
+    )(x, vals, idx)
+
+
+def nm_compress(w, m: int, n: int):
+    """Compress a dense (O, K) weight to N:M format, keeping the N
+    largest-magnitude entries per M-group (numpy, build-time only).
+
+    Returns (vals (O,G,N) f32, idx (O,G,N) int32) with idx sorted ascending
+    inside each group — the canonical order the hardware index buffer uses.
+    """
+    import numpy as np
+
+    w = np.asarray(w, dtype=np.float32)
+    o, k = w.shape
+    assert k % m == 0
+    g = k // m
+    wg = w.reshape(o, g, m)
+    order = np.argsort(-np.abs(wg), axis=-1)[..., :n]  # top-N per group
+    idx = np.sort(order, axis=-1).astype(np.int32)
+    vals = np.take_along_axis(wg, idx, axis=-1).astype(np.float32)
+    return vals, idx

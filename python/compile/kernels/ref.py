@@ -1,0 +1,133 @@
+"""Pure-jnp correctness oracles for the FlightLLM Pallas kernels.
+
+Each function here is the mathematical definition of the corresponding
+Pallas kernel (same argument conventions), written with plain jax.numpy so
+that pytest/hypothesis can assert_allclose kernel-vs-ref across shape and
+sparsity sweeps. These oracles are also what the rust integration tests
+compare golden outputs against (dumped by aot.py next to the artifacts).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# N:M sparse matmul (the MPE SpMM / SpMV path)
+# ---------------------------------------------------------------------------
+
+def nm_decompress(vals: jnp.ndarray, idx: jnp.ndarray, m: int, k: int) -> jnp.ndarray:
+    """Expand an N:M-compressed weight back to its dense (O, K) form.
+
+    vals: (O, G, N) nonzero values, G = K // M groups along the K axis.
+    idx:  (O, G, N) int32 position of each nonzero within its M-group.
+    """
+    o, g, n = vals.shape
+    dense = jnp.zeros((o, g, m), vals.dtype)
+    oi = jnp.arange(o)[:, None, None]
+    gi = jnp.arange(g)[None, :, None]
+    dense = dense.at[oi, gi, idx].set(vals)
+    return dense.reshape(o, k)
+
+
+def nm_spmm_ref(x: jnp.ndarray, vals: jnp.ndarray, idx: jnp.ndarray, m: int) -> jnp.ndarray:
+    """y = x @ W^T where W is N:M sparse along K.
+
+    x: (B, K) activations; vals/idx: (O, G, N). Returns (B, O).
+    """
+    k = x.shape[-1]
+    w = nm_decompress(vals, idx, m, k)
+    return x @ w.T
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision dequantization + GEMV/GEMM (always-on-chip decode path)
+# ---------------------------------------------------------------------------
+
+def int4_unpack(packed: jnp.ndarray) -> jnp.ndarray:
+    """Unpack uint8 (…, K//2) into int codes (…, K) in [-8, 7].
+
+    Low nibble first: packed[..., i] = (code[2i+1]+8) << 4 | (code[2i]+8).
+    This is the software model of the paper's bit-width expansion unit.
+    """
+    lo = (packed & 0x0F).astype(jnp.int32) - 8
+    hi = (packed >> 4).astype(jnp.int32) - 8
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+def int4_pack(codes: np.ndarray) -> np.ndarray:
+    """numpy inverse of int4_unpack (used by quantizers and tests)."""
+    u = (np.asarray(codes) + 8).astype(np.uint8)
+    lo = u[..., 0::2]
+    hi = u[..., 1::2]
+    return ((hi << 4) | lo).astype(np.uint8)
+
+
+def dequant_matmul_ref(
+    x: jnp.ndarray, packed: jnp.ndarray, scales: jnp.ndarray, group: int
+) -> jnp.ndarray:
+    """y = x @ W^T with W stored as packed int4 codes + per-group scales.
+
+    x: (B, K); packed: (O, K//2) uint8; scales: (O, K//group) f32.
+    w[o, k] = code[o, k] * scales[o, k // group].
+    """
+    codes = int4_unpack(packed).astype(jnp.float32)  # (O, K)
+    w = codes * jnp.repeat(scales, group, axis=-1)
+    return x @ w.T
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse attention (SDDMM -> masked softmax -> SpMM)
+# ---------------------------------------------------------------------------
+
+def block_mask_to_dense(block_mask: jnp.ndarray, block: int) -> jnp.ndarray:
+    """(Nb, Nb) bool block mask -> (N, N) element mask."""
+    return jnp.repeat(jnp.repeat(block_mask, block, axis=0), block, axis=1)
+
+
+def _softmax(scores: jnp.ndarray) -> jnp.ndarray:
+    m = scores.max(axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def block_attn_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    block_mask: jnp.ndarray,
+    block: int,
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    """Single-head attention under a block-sparse + causal mask.
+
+    q/k/v: (N, d). block_mask: (N//block, N//block) bool, True = keep.
+    Rows with no kept key get all-zero output (matches the kernel, which
+    skips fully-masked rows rather than producing NaNs).
+    """
+    n, d = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / float(np.sqrt(d))
+    scores = (q @ k.T) * sm_scale
+    mask = block_mask_to_dense(block_mask, block)
+    if causal:
+        mask = mask & (jnp.arange(n)[:, None] >= jnp.arange(n)[None, :])
+    neg = jnp.finfo(scores.dtype).min
+    masked = jnp.where(mask, scores, neg)
+    row_has_any = mask.any(axis=1, keepdims=True)
+    p = jnp.where(row_has_any, _softmax(masked), 0.0)
+    return p @ v
+
+
+# ---------------------------------------------------------------------------
+# MISC two-phase ops (the SFU path)
+# ---------------------------------------------------------------------------
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    return x * (1.0 / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)) * w
+
+
+def silu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return x * (1.0 / (1.0 + jnp.exp(-x)))

@@ -1,0 +1,353 @@
+"""L2: LLaMA-architecture transformer whose compressed linears call the L1
+Pallas kernels — FlightLLM's compute graph, authored in JAX at build time.
+
+Two lowering entry points (see aot.py):
+
+- ``prefill(params, tokens)``      — one HLO module per token-length bucket
+  (the length-adaptive compilation of §5.2: lengths inside a bucket share
+  the same instructions / here the same executable).
+- ``decode_step(params, token, kv, pos)`` — a single fused module for one
+  decode iteration: every layer's compute chained with no host round-trip,
+  the *always-on-chip decode* of §4 (activations live in the executable's
+  private buffers; only weights/KV stream in).
+
+Compression mirrors the paper's recipe (§6.2.1): N:M pruning on the
+attention projections (the CSD-chain SpMM path), int4 per-group
+quantization on the FFN matrices (the mixed-precision dequant path), and
+block-sparse attention for prefill (the fused SDDMM path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import block_attn, dequant_matmul, nm_compress, nm_spmm, quantize_int4
+from .kernels.dequant import quantize_int4 as _q4  # noqa: F401 (re-export)
+from .kernels.ref import rmsnorm_ref, silu_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Tiny-LLaMA architecture + compression hyper-parameters.
+
+    The 7B-scale configs (``llama2_7b``/``opt_6_7b`` in rust/src/config/)
+    drive the simulator analytically; this config is the *runnable* model.
+    """
+
+    vocab: int = 512
+    dim: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    ffn_dim: int = 512
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # compression
+    nm_m: int = 16          # N:M sparsity: M (group size along K)
+    nm_n: int = 8           # N kept per group on attention projections
+    quant_group: int = 64   # int4 group size on FFN weights
+    attn_block: int = 16    # block-sparse attention block (paper: 64)
+    attn_window: int = 4    # sliding-window width in blocks
+    attn_global: int = 1    # leading global blocks
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+
+TINY = ModelConfig()
+
+
+# ---------------------------------------------------------------------------
+# Parameter init / dense forward (training + PPL oracle path)
+# ---------------------------------------------------------------------------
+
+def init_params(rng: np.random.Generator, cfg: ModelConfig) -> dict[str, Any]:
+    """Dense fp32 parameters (numpy dict keyed by flat names)."""
+
+    def lin(o, k, scale=None):
+        s = scale if scale is not None else (1.0 / np.sqrt(k))
+        return (rng.standard_normal((o, k)) * s).astype(np.float32)
+
+    p: dict[str, Any] = {
+        "embed": (rng.standard_normal((cfg.vocab, cfg.dim)) * 0.02).astype(
+            np.float32
+        ),
+        "head": lin(cfg.vocab, cfg.dim),
+        "norm_f": np.ones(cfg.dim, np.float32),
+    }
+    for i in range(cfg.n_layers):
+        p[f"l{i}.wq"] = lin(cfg.dim, cfg.dim)
+        p[f"l{i}.wk"] = lin(cfg.dim, cfg.dim)
+        p[f"l{i}.wv"] = lin(cfg.dim, cfg.dim)
+        p[f"l{i}.wo"] = lin(cfg.dim, cfg.dim)
+        p[f"l{i}.w1"] = lin(cfg.ffn_dim, cfg.dim)
+        p[f"l{i}.w3"] = lin(cfg.ffn_dim, cfg.dim)
+        p[f"l{i}.w2"] = lin(cfg.dim, cfg.ffn_dim)
+        p[f"l{i}.norm_attn"] = np.ones(cfg.dim, np.float32)
+        p[f"l{i}.norm_ffn"] = np.ones(cfg.dim, np.float32)
+    return p
+
+
+def rope_angles(cfg: ModelConfig, positions: jnp.ndarray):
+    """cos/sin tables for the given positions: (L, head_dim/2) each.
+
+    inv_freq is a trace-time numpy constant: computing it with jnp.power
+    emits a `power` HLO whose constant folding differs between jax's CPU
+    backend and the xla_extension 0.5.1 runtime the rust side uses —
+    baking the constant keeps the two bit-identical.
+    """
+    hd = cfg.head_dim
+    inv = jnp.asarray(
+        1.0 / (cfg.rope_theta ** (np.arange(0, hd, 2, dtype=np.float64) / hd)),
+        dtype=jnp.float32,
+    )
+    ang = positions[:, None].astype(jnp.float32) * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (L, H, hd) — rotate pairs (even, odd)."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[:, None, :]
+    s = sin[:, None, :]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape)
+
+
+def dense_forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Uncompressed forward over a full sequence. tokens: (L,) int32 ->
+    logits (L, vocab). Used for training and as the PPL 'None' baseline."""
+    L = tokens.shape[0]
+    x = params["embed"][tokens]
+    pos = jnp.arange(L)
+    cos, sin = rope_angles(cfg, pos)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    for i in range(cfg.n_layers):
+        h = rmsnorm_ref(x, params[f"l{i}.norm_attn"], cfg.norm_eps)
+        q = (h @ params[f"l{i}.wq"].T).reshape(L, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[f"l{i}.wk"].T).reshape(L, cfg.n_heads, cfg.head_dim)
+        v = (h @ params[f"l{i}.wv"].T).reshape(L, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        scores = jnp.einsum("qhd,khd->hqk", q, k) / np.sqrt(cfg.head_dim)
+        scores = jnp.where(causal[None], scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("hqk,khd->qhd", att, v).reshape(L, cfg.dim)
+        x = x + o @ params[f"l{i}.wo"].T
+        h = rmsnorm_ref(x, params[f"l{i}.norm_ffn"], cfg.norm_eps)
+        gate = silu_ref(h @ params[f"l{i}.w1"].T)
+        up = h @ params[f"l{i}.w3"].T
+        x = x + (gate * up) @ params[f"l{i}.w2"].T
+    x = rmsnorm_ref(x, params["norm_f"], cfg.norm_eps)
+    return x @ params["head"].T
+
+
+# ---------------------------------------------------------------------------
+# Compression (build-time; mirrors rust/src/{sparse,quant} semantics)
+# ---------------------------------------------------------------------------
+
+NM_KEYS = ("wq", "wk", "wv", "wo")   # CSD-chain SpMM path
+Q4_KEYS = ("w1", "w2", "w3")         # mixed-precision dequant path
+
+
+def compress_params(params: dict, cfg: ModelConfig) -> dict[str, Any]:
+    """Dense params -> compressed params consumed by the kernel model.
+
+    Attention projections become (vals, idx) N:M pairs; FFN matrices become
+    (packed, scales) int4 pairs; everything else passes through fp32.
+    """
+    out: dict[str, Any] = {}
+    for name, w in params.items():
+        suffix = name.split(".")[-1]
+        if suffix in NM_KEYS:
+            vals, idx = nm_compress(w, cfg.nm_m, cfg.nm_n)
+            out[name + ".vals"] = vals
+            out[name + ".idx"] = idx
+        elif suffix in Q4_KEYS:
+            packed, scales = quantize_int4(w, cfg.quant_group)
+            out[name + ".packed"] = packed
+            out[name + ".scales"] = scales
+        else:
+            out[name] = np.asarray(w, np.float32)
+    return out
+
+
+def param_order(cfg: ModelConfig) -> list[str]:
+    """Canonical flattening order of compressed params — the contract
+    between aot.py's manifest/weights.bin and the rust runtime."""
+    names = ["embed", "head", "norm_f"]
+    for i in range(cfg.n_layers):
+        for kk in NM_KEYS:
+            names += [f"l{i}.{kk}.vals", f"l{i}.{kk}.idx"]
+        for kk in Q4_KEYS:
+            names += [f"l{i}.{kk}.packed", f"l{i}.{kk}.scales"]
+        names += [f"l{i}.norm_attn", f"l{i}.norm_ffn"]
+    return names
+
+
+def _lin_nm(cp: dict, name: str, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    o = cp[name + ".vals"].shape[0]
+    return nm_spmm(x, cp[name + ".vals"], cp[name + ".idx"], cfg.nm_m,
+                   block_o=min(128, o))
+
+
+def _lin_q4(cp: dict, name: str, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    o = cp[name + ".packed"].shape[0]
+    return dequant_matmul(x, cp[name + ".packed"], cp[name + ".scales"],
+                          group=cfg.quant_group, block_o=min(128, o))
+
+
+def make_block_mask(cfg: ModelConfig, n: int) -> np.ndarray:
+    from .kernels import make_sliding_block_mask
+
+    nb = n // cfg.attn_block
+    return make_sliding_block_mask(nb, cfg.attn_window, cfg.attn_global)
+
+
+# ---------------------------------------------------------------------------
+# Compressed prefill (one module per token bucket)
+# ---------------------------------------------------------------------------
+
+def prefill(cp: dict, cfg: ModelConfig, tokens: jnp.ndarray):
+    """tokens: (L,) int32, L a bucket length (multiple of attn_block).
+
+    Returns (logits (1, vocab) for the last position,
+             kv (n_layers, 2, max_seq, n_heads, head_dim) zero-padded).
+    """
+    L = tokens.shape[0]
+    x = cp["embed"][tokens]
+    pos = jnp.arange(L)
+    cos, sin = rope_angles(cfg, pos)
+    mask = jnp.asarray(make_block_mask(cfg, L))
+    kv_layers = []
+    for i in range(cfg.n_layers):
+        h = rmsnorm_ref(x, cp[f"l{i}.norm_attn"], cfg.norm_eps)
+        q = _lin_nm(cp, f"l{i}.wq", h, cfg).reshape(L, cfg.n_heads, cfg.head_dim)
+        k = _lin_nm(cp, f"l{i}.wk", h, cfg).reshape(L, cfg.n_heads, cfg.head_dim)
+        v = _lin_nm(cp, f"l{i}.wv", h, cfg).reshape(L, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        # Block-sparse fused attention per head (§4.2 fused prefill path).
+        heads = [
+            block_attn(q[:, hh], k[:, hh], v[:, hh], mask,
+                       block=cfg.attn_block)
+            for hh in range(cfg.n_heads)
+        ]
+        o = jnp.stack(heads, axis=1).reshape(L, cfg.dim)
+        x = x + _lin_nm(cp, f"l{i}.wo", o, cfg)
+        h = rmsnorm_ref(x, cp[f"l{i}.norm_ffn"], cfg.norm_eps)
+        gate = silu_ref(_lin_q4(cp, f"l{i}.w1", h, cfg))
+        up = _lin_q4(cp, f"l{i}.w3", h, cfg)
+        x = x + _lin_q4(cp, f"l{i}.w2", gate * up, cfg)
+        pad = cfg.max_seq - L
+        k_pad = jnp.pad(k, ((0, pad), (0, 0), (0, 0)))
+        v_pad = jnp.pad(v, ((0, pad), (0, 0), (0, 0)))
+        kv_layers.append(jnp.stack([k_pad, v_pad]))
+    kv = jnp.stack(kv_layers)  # (layers, 2, max_seq, heads, hd)
+    x_last = rmsnorm_ref(x[-1:], cp["norm_f"], cfg.norm_eps)
+    logits = x_last @ cp["head"].T
+    return logits, kv
+
+
+# ---------------------------------------------------------------------------
+# Compressed decode step (the always-on-chip fused module)
+# ---------------------------------------------------------------------------
+
+def decode_step(cp: dict, cfg: ModelConfig, token: jnp.ndarray,
+                kv: jnp.ndarray, pos: jnp.ndarray):
+    """One decode iteration.
+
+    token: (1,) int32 — the last generated token.
+    kv:    (n_layers, 2, max_seq, n_heads, head_dim) f32.
+    pos:   () int32 — number of tokens already in the cache.
+
+    Returns (logits (1, vocab), updated kv).  All intermediate activations
+    stay inside this one module: the always-on-chip decode scheme.
+    """
+    x = cp["embed"][token]  # (1, dim)
+    cos, sin = rope_angles(cfg, pos[None].astype(jnp.float32))
+    valid = (jnp.arange(cfg.max_seq) <= pos)[None, :]  # (1, max_seq)
+    new_kv = []
+    for i in range(cfg.n_layers):
+        h = rmsnorm_ref(x, cp[f"l{i}.norm_attn"], cfg.norm_eps)
+        q = _lin_nm(cp, f"l{i}.wq", h, cfg).reshape(1, cfg.n_heads, cfg.head_dim)
+        k = _lin_nm(cp, f"l{i}.wk", h, cfg).reshape(1, cfg.n_heads, cfg.head_dim)
+        v = _lin_nm(cp, f"l{i}.wv", h, cfg).reshape(1, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        k_cache = jax.lax.dynamic_update_slice(
+            kv[i, 0], k, (pos, jnp.int32(0), jnp.int32(0))
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            kv[i, 1], v, (pos, jnp.int32(0), jnp.int32(0))
+        )
+        # MV-mode attention: q (1,H,hd) against the whole cache, masked to
+        # positions <= pos (the MPE GEMV path of §3.2.2).
+        scores = jnp.einsum("qhd,khd->hqk", q, k_cache) / np.sqrt(cfg.head_dim)
+        scores = jnp.where(valid[None], scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("hqk,khd->qhd", att, v_cache).reshape(1, cfg.dim)
+        x = x + _lin_nm(cp, f"l{i}.wo", o, cfg)
+        h = rmsnorm_ref(x, cp[f"l{i}.norm_ffn"], cfg.norm_eps)
+        gate = silu_ref(_lin_q4(cp, f"l{i}.w1", h, cfg))
+        up = _lin_q4(cp, f"l{i}.w3", h, cfg)
+        x = x + _lin_q4(cp, f"l{i}.w2", gate * up, cfg)
+        new_kv.append(jnp.stack([k_cache, v_cache]))
+    kv_out = jnp.stack(new_kv)
+    x = rmsnorm_ref(x, cp["norm_f"], cfg.norm_eps)
+    logits = x @ cp["head"].T
+    return logits, kv_out
+
+
+# ---------------------------------------------------------------------------
+# Compressed full-sequence forward (PPL evaluation of compressed configs)
+# ---------------------------------------------------------------------------
+
+def compressed_forward(cp: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence logits under compression, dense attention math but
+    compressed linears + block-sparse attention mask (Table 4's 'All').
+
+    Sequences are padded to a multiple of attn_block (causality keeps the
+    padding from affecting real positions) and sliced back.
+    """
+    orig_len = tokens.shape[0]
+    pad = (-orig_len) % cfg.attn_block
+    if pad:
+        tokens = jnp.pad(tokens, (0, pad))
+    L = tokens.shape[0]
+    x = cp["embed"][tokens]
+    pos = jnp.arange(L)
+    cos, sin = rope_angles(cfg, pos)
+    from .kernels.ref import block_attn_ref  # noqa: F401
+
+    mask_blocks = jnp.asarray(make_block_mask(cfg, L))
+    from .kernels.ref import block_mask_to_dense
+
+    mask = block_mask_to_dense(mask_blocks, cfg.attn_block)
+    mask = mask & jnp.tril(jnp.ones((L, L), bool))
+    for i in range(cfg.n_layers):
+        h = rmsnorm_ref(x, cp[f"l{i}.norm_attn"], cfg.norm_eps)
+        q = _lin_nm(cp, f"l{i}.wq", h, cfg).reshape(L, cfg.n_heads, cfg.head_dim)
+        k = _lin_nm(cp, f"l{i}.wk", h, cfg).reshape(L, cfg.n_heads, cfg.head_dim)
+        v = _lin_nm(cp, f"l{i}.wv", h, cfg).reshape(L, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        scores = jnp.einsum("qhd,khd->hqk", q, k) / np.sqrt(cfg.head_dim)
+        scores = jnp.where(mask[None], scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("hqk,khd->qhd", att, v).reshape(L, cfg.dim)
+        x = x + _lin_nm(cp, f"l{i}.wo", o, cfg)
+        h = rmsnorm_ref(x, cp[f"l{i}.norm_ffn"], cfg.norm_eps)
+        gate = silu_ref(_lin_q4(cp, f"l{i}.w1", h, cfg))
+        up = _lin_q4(cp, f"l{i}.w3", h, cfg)
+        x = x + _lin_q4(cp, f"l{i}.w2", gate * up, cfg)
+    x = rmsnorm_ref(x, cp["norm_f"], cfg.norm_eps)
+    logits = x @ cp["head"].T
+    return logits[:orig_len]

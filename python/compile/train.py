@@ -1,0 +1,88 @@
+"""Build-time training of the tiny model on the synthetic corpus.
+
+This gives the E2E serving demo a model whose generations are actually
+predictable (low-entropy Markov text) and makes Table 4's perplexity
+comparison meaningful.  Hand-rolled Adam — no optax in this image.
+
+Run: python -m compile.train [--steps N] [--out params_tiny.npz]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .corpus import batches, make_corpus, split_corpus
+from .model import TINY, ModelConfig, dense_forward, init_params
+
+DEFAULT_OUT = Path(__file__).parent / "params_tiny.npz"
+
+
+def loss_fn(params, cfg: ModelConfig, batch: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross-entropy over a (B, L+1) batch."""
+    inp = batch[:, :-1]
+    tgt = batch[:, 1:]
+    logits = jax.vmap(lambda t: dense_forward(params, cfg, t))(inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def adam_step(params, m, v, t, cfg: ModelConfig, batch, lr=3e-3):
+    """One Adam update (b1=0.9, b2=0.99, eps=1e-8)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+    b1, b2, eps = 0.9, 0.99, 1e-8
+    t = t + 1
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    scale = jnp.sqrt(1 - b2**t) / (1 - b1**t)
+    params = jax.tree.map(
+        lambda p, mi, vi: p - lr * scale * mi / (jnp.sqrt(vi) + eps),
+        params, m, v,
+    )
+    return params, m, v, t, loss
+
+
+def train(cfg: ModelConfig = TINY, steps: int = 400, seq_len: int = 128,
+          batch: int = 16, seed: int = 0, log_every: int = 50,
+          corpus_tokens: int = 200_000):
+    rng = np.random.default_rng(seed)
+    corpus = make_corpus(vocab=cfg.vocab, n_tokens=corpus_tokens, seed=seed)
+    train_toks, _ = split_corpus(corpus)
+    params = {k: jnp.asarray(w) for k, w in init_params(rng, cfg).items()}
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    t = jnp.int32(0)
+    it = batches(train_toks, seq_len, batch, rng)
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        params, m, v, t, loss = adam_step(params, m, v, t, cfg, jnp.asarray(next(it)))
+        if step % log_every == 0 or step == steps - 1:
+            lv = float(loss)
+            history.append((step, lv))
+            print(f"step {step:5d}  loss {lv:.4f}  ppl {np.exp(lv):8.2f}  "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    return {k: np.asarray(w) for k, w in params.items()}, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    params, history = train(steps=args.steps, seed=args.seed)
+    np.savez(args.out, **params)
+    print(f"saved {len(params)} tensors to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

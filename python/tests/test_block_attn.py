@@ -1,0 +1,121 @@
+"""Kernel-vs-oracle tests for block-sparse flash attention."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import block_attn, make_sliding_block_mask
+from compile.kernels.ref import block_attn_ref
+
+
+def rand_qkv(rng, n, d):
+    q = rng.standard_normal((n, d)).astype(np.float32)
+    k = rng.standard_normal((n, d)).astype(np.float32)
+    v = rng.standard_normal((n, d)).astype(np.float32)
+    return q, k, v
+
+
+class TestBlockAttnVsRef:
+    @pytest.mark.parametrize("n,block", [(64, 16), (128, 32), (128, 64)])
+    def test_dense_mask_causal(self, n, block):
+        """All-ones block mask == plain causal attention."""
+        rng = np.random.default_rng(0)
+        q, k, v = rand_qkv(rng, n, 32)
+        nb = n // block
+        mask = np.ones((nb, nb), dtype=bool)
+        got = np.asarray(block_attn(q, k, v, mask, block=block))
+        want = np.asarray(block_attn_ref(q, k, v, mask, block))
+        assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_sliding_window_mask(self):
+        rng = np.random.default_rng(1)
+        n, block = 256, 64
+        q, k, v = rand_qkv(rng, n, 32)
+        mask = make_sliding_block_mask(n // block, window=2, global_blocks=1)
+        got = np.asarray(block_attn(q, k, v, mask, block=block))
+        want = np.asarray(block_attn_ref(q, k, v, mask, block))
+        assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_non_causal(self):
+        rng = np.random.default_rng(2)
+        n, block = 128, 32
+        q, k, v = rand_qkv(rng, n, 16)
+        mask = np.ones((4, 4), dtype=bool)
+        got = np.asarray(block_attn(q, k, v, mask, block=block, causal=False))
+        want = np.asarray(block_attn_ref(q, k, v, mask, block, causal=False))
+        assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_fully_masked_rows_are_zero(self):
+        """A query block whose mask row is all False outputs zeros."""
+        rng = np.random.default_rng(3)
+        n, block = 128, 32
+        q, k, v = rand_qkv(rng, n, 16)
+        mask = np.ones((4, 4), dtype=bool)
+        mask[2, :] = False  # third query block sees nothing
+        got = np.asarray(block_attn(q, k, v, mask, block=block))
+        assert_allclose(got[2 * block : 3 * block], 0.0, atol=0)
+        want = np.asarray(block_attn_ref(q, k, v, mask, block))
+        assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_masked_blocks_do_not_influence_output(self):
+        """Perturbing K/V inside masked blocks must not change the result —
+        the SDDMM-skip guarantee."""
+        rng = np.random.default_rng(4)
+        n, block = 128, 64
+        q, k, v = rand_qkv(rng, n, 32)
+        mask = np.array([[True, False], [False, True]])
+        base = np.asarray(block_attn(q, k, v, mask, block=block))
+        k2, v2 = k.copy(), v.copy()
+        # Block column 0 is masked for query block 1: scribble on it.
+        k2[:block] += rng.standard_normal((block, 32)).astype(np.float32) * 100
+        v2[:block] += 1e6
+        got = np.asarray(block_attn(q, k2, v2, mask, block=block))
+        # Query block 1 (rows block..2*block) must be identical.
+        assert_allclose(got[block:], base[block:], rtol=1e-6, atol=1e-6)
+
+    def test_sm_scale_override(self):
+        rng = np.random.default_rng(5)
+        n, block = 64, 32
+        q, k, v = rand_qkv(rng, n, 16)
+        mask = np.ones((2, 2), dtype=bool)
+        got = np.asarray(block_attn(q, k, v, mask, block=block, sm_scale=0.5))
+        want = np.asarray(block_attn_ref(q, k, v, mask, block, sm_scale=0.5))
+        assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestMaskGenerator:
+    def test_sliding_mask_is_causal_lower_triangular(self):
+        m = make_sliding_block_mask(8, window=3, global_blocks=1)
+        assert not np.triu(m, k=1).any()
+
+    def test_diagonal_always_kept(self):
+        m = make_sliding_block_mask(8, window=1, global_blocks=0)
+        assert np.diag(m).all()
+
+    def test_global_blocks_present(self):
+        m = make_sliding_block_mask(8, window=1, global_blocks=2)
+        assert m[:, 0][2:].all() and m[:, 1][2:].all()
+
+    def test_density_decreases_with_smaller_window(self):
+        d1 = make_sliding_block_mask(16, window=2).mean()
+        d2 = make_sliding_block_mask(16, window=8).mean()
+        assert d1 < d2
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nb=st.sampled_from([2, 4]),
+    block=st.sampled_from([16, 32]),
+    d=st.sampled_from([16, 32]),
+    window=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_attn_hypothesis(nb, block, d, window, seed):
+    rng = np.random.default_rng(seed)
+    n = nb * block
+    q, k, v = rand_qkv(rng, n, d)
+    mask = make_sliding_block_mask(nb, window=window, global_blocks=1)
+    got = np.asarray(block_attn(q, k, v, mask, block=block))
+    want = np.asarray(block_attn_ref(q, k, v, mask, block))
+    assert_allclose(got, want, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,103 @@
+"""Kernel-vs-oracle tests for the mixed-precision dequant GEMV/GEMM."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import dequant_matmul, quantize_int4
+from compile.kernels.ref import dequant_matmul_ref, int4_pack, int4_unpack
+
+
+class TestPackUnpack:
+    def test_roundtrip_all_codes(self):
+        codes = np.arange(-8, 8, dtype=np.int8).reshape(1, 16)
+        packed = int4_pack(codes)
+        back = np.asarray(int4_unpack(packed))
+        assert (back == codes).all()
+
+    def test_pack_is_two_codes_per_byte(self):
+        codes = np.zeros((4, 64), dtype=np.int8)
+        assert int4_pack(codes).shape == (4, 32)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip_random(self, seed):
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(-8, 8, size=(8, 32), dtype=np.int8)
+        assert (np.asarray(int4_unpack(int4_pack(codes))) == codes).all()
+
+
+class TestQuantizeInt4:
+    def test_quant_error_bounded_by_scale(self):
+        """|w - dequant(quant(w))| <= scale/2 per element."""
+        rng = np.random.default_rng(0)
+        w = rng.standard_normal((16, 128)).astype(np.float32)
+        packed, scales = quantize_int4(w, group=64)
+        codes = np.asarray(int4_unpack(packed)).astype(np.float32)
+        deq = codes.reshape(16, 2, 64) * scales[..., None]
+        err = np.abs(deq.reshape(16, 128) - w)
+        bound = np.repeat(scales, 64, axis=-1) / 2 + 1e-6
+        assert (err <= bound).all()
+
+    def test_zero_weight_rows(self):
+        packed, scales = quantize_int4(np.zeros((2, 64), np.float32), group=64)
+        assert (np.asarray(int4_unpack(packed)) == 0).all()
+        assert np.isfinite(scales).all()
+
+
+class TestDequantMatmulVsRef:
+    @pytest.mark.parametrize("b", [1, 4])
+    @pytest.mark.parametrize("group", [32, 64])
+    def test_matches_ref(self, b, group):
+        rng = np.random.default_rng(5)
+        o, k = 128, 128
+        x = rng.standard_normal((b, k)).astype(np.float32)
+        codes = rng.integers(-8, 8, size=(o, k), dtype=np.int8)
+        packed = int4_pack(codes)
+        scales = rng.uniform(0.01, 0.2, size=(o, k // group)).astype(np.float32)
+        got = np.asarray(dequant_matmul(x, packed, scales, group=group, block_o=64))
+        want = np.asarray(dequant_matmul_ref(x, packed, scales, group))
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_end_to_end_quantized_linear_close_to_dense(self):
+        """The full quantize→kernel path approximates the fp32 linear."""
+        rng = np.random.default_rng(11)
+        b, o, k = 2, 128, 256
+        w = rng.standard_normal((o, k)).astype(np.float32) * 0.05
+        x = rng.standard_normal((b, k)).astype(np.float32)
+        packed, scales = quantize_int4(w, group=64)
+        got = np.asarray(dequant_matmul(x, packed, scales, group=64))
+        ref = x @ w.T
+        # int4 error budget: rel tolerance driven by scale/2 per element.
+        assert np.abs(got - ref).max() < 0.05 * np.sqrt(k)
+
+    def test_tiling_invariance(self):
+        rng = np.random.default_rng(2)
+        x = rng.standard_normal((1, 128)).astype(np.float32)
+        codes = rng.integers(-8, 8, size=(256, 128), dtype=np.int8)
+        packed = int4_pack(codes)
+        scales = rng.uniform(0.05, 0.1, size=(256, 2)).astype(np.float32)
+        a = np.asarray(dequant_matmul(x, packed, scales, group=64, block_o=64))
+        b_ = np.asarray(dequant_matmul(x, packed, scales, group=64, block_o=256))
+        assert_allclose(a, b_, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2]),
+    kg=st.sampled_from([2, 4]),
+    group=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dequant_hypothesis(b, kg, group, seed):
+    rng = np.random.default_rng(seed)
+    k = kg * group
+    o = 64
+    x = rng.standard_normal((b, k)).astype(np.float32)
+    codes = rng.integers(-8, 8, size=(o, k), dtype=np.int8)
+    packed = int4_pack(codes)
+    scales = rng.uniform(0.01, 0.3, size=(o, k // group)).astype(np.float32)
+    got = np.asarray(dequant_matmul(x, packed, scales, group=group, block_o=64))
+    want = np.asarray(dequant_matmul_ref(x, packed, scales, group))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,110 @@
+"""L2 model tests: decode/prefill consistency, compression sanity."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from numpy.testing import assert_allclose
+
+from compile.model import (
+    ModelConfig,
+    compress_params,
+    compressed_forward,
+    decode_step,
+    dense_forward,
+    init_params,
+    param_order,
+    prefill,
+)
+
+CFG = ModelConfig(
+    vocab=64, dim=64, n_layers=2, n_heads=4, ffn_dim=128, max_seq=64,
+    nm_m=16, nm_n=8, quant_group=32, attn_block=16, attn_window=4,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(np.random.default_rng(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def cp(params):
+    return compress_params(params, CFG)
+
+
+class TestParamContract:
+    def test_param_order_covers_compressed_exactly(self, cp):
+        assert set(param_order(CFG)) == set(cp.keys())
+
+    def test_compressed_attention_is_nm(self, cp):
+        vals = cp["l0.wq.vals"]
+        g = CFG.dim // CFG.nm_m
+        assert vals.shape == (CFG.dim, g, CFG.nm_n)
+        idx = cp["l0.wq.idx"]
+        assert idx.dtype == np.int32
+        assert idx.min() >= 0 and idx.max() < CFG.nm_m
+        # Canonical: ascending unique indices per group.
+        assert (np.diff(idx, axis=-1) > 0).all()
+
+    def test_compressed_ffn_is_packed_int4(self, cp):
+        packed = cp["l0.w1.packed"]
+        assert packed.dtype == np.uint8
+        assert packed.shape == (CFG.ffn_dim, CFG.dim // 2)
+        scales = cp["l0.w1.scales"]
+        assert scales.shape == (CFG.ffn_dim, CFG.dim // CFG.quant_group)
+        assert (scales > 0).all()
+
+
+class TestForwardConsistency:
+    def test_prefill_then_decode_matches_full_forward(self, cp):
+        """prefill(t[:L]) + decode(t[L]) must equal the compressed full
+        forward over t[:L+1] — the KV cache is exact."""
+        rng = np.random.default_rng(1)
+        L = 16
+        toks = rng.integers(0, CFG.vocab, size=L + 1).astype(np.int32)
+        logits_p, kv = prefill(cp, CFG, jnp.asarray(toks[:L]))
+        logits_d, _ = decode_step(
+            cp, CFG, jnp.asarray(toks[L:L + 1]), kv, jnp.int32(L)
+        )
+        full = compressed_forward(cp, CFG, jnp.asarray(toks))
+        # Note: compressed_forward uses the block mask for all L+1 rows;
+        # decode attends densely to cache. With a full window (window=4,
+        # 16-token blocks over 17 tokens) both see every position.
+        assert_allclose(
+            np.asarray(logits_d)[0], np.asarray(full)[L], rtol=2e-3, atol=2e-3
+        )
+
+    def test_decode_steps_are_incremental(self, cp):
+        """Two successive decode steps must match prefill over the longer
+        prompt (cache append is position-exact)."""
+        rng = np.random.default_rng(2)
+        toks = rng.integers(0, CFG.vocab, size=18).astype(np.int32)
+        _, kv16 = prefill(cp, CFG, jnp.asarray(toks[:16]))
+        l17, kv17 = decode_step(cp, CFG, jnp.asarray(toks[16:17]), kv16, jnp.int32(16))
+        l18, _ = decode_step(cp, CFG, jnp.asarray(toks[17:18]), kv17, jnp.int32(17))
+        full = compressed_forward(cp, CFG, jnp.asarray(toks))
+        assert_allclose(np.asarray(l18)[0], np.asarray(full)[17], rtol=2e-3, atol=2e-3)
+
+    def test_prefill_kv_padded_to_max_seq(self, cp):
+        toks = np.zeros(16, np.int32)
+        _, kv = prefill(cp, CFG, jnp.asarray(toks))
+        assert kv.shape == (CFG.n_layers, 2, CFG.max_seq, CFG.n_heads, CFG.dim // CFG.n_heads)
+        # Positions beyond the prompt are zero.
+        assert np.asarray(kv)[:, :, 16:].max() == 0.0
+
+
+class TestCompressionQuality:
+    def test_compressed_close_to_dense_on_logits(self, params, cp):
+        """Compression is lossy but bounded: top-1 agreement on most
+        positions of a random sequence."""
+        rng = np.random.default_rng(3)
+        toks = rng.integers(0, CFG.vocab, size=32).astype(np.int32)
+        dense = np.asarray(dense_forward(params, CFG, jnp.asarray(toks)))
+        comp = np.asarray(compressed_forward(cp, CFG, jnp.asarray(toks)))
+        agree = (dense.argmax(-1) == comp.argmax(-1)).mean()
+        assert agree > 0.5, f"top-1 agreement {agree}"
+
+    def test_all_outputs_finite(self, cp):
+        toks = np.arange(32, dtype=np.int32) % CFG.vocab
+        out = np.asarray(compressed_forward(cp, CFG, jnp.asarray(toks)))
+        assert np.isfinite(out).all()

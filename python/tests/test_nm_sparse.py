@@ -1,0 +1,113 @@
+"""Kernel-vs-oracle tests for the N:M sparse matmul (CSD-chain path)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import nm_compress, nm_spmm
+from compile.kernels.ref import nm_decompress, nm_spmm_ref
+
+
+def rand_nm(rng, o, k, m, n):
+    """Random N:M-compressed weight with canonical (sorted, unique) indices."""
+    g = k // m
+    vals = rng.standard_normal((o, g, n)).astype(np.float32)
+    idx = np.stack(
+        [
+            np.sort(rng.choice(m, size=n, replace=False))
+            for _ in range(o * g)
+        ]
+    ).reshape(o, g, n).astype(np.int32)
+    return vals, idx
+
+
+class TestNmCompressDecompressRoundTrip:
+    def test_exact_roundtrip_when_already_nm(self):
+        """compress(decompress(c)) == c for canonical compressed forms."""
+        rng = np.random.default_rng(0)
+        o, k, m, n = 8, 64, 16, 4
+        vals, idx = rand_nm(rng, o, k, m, n)
+        dense = np.asarray(nm_decompress(vals, idx, m, k))
+        vals2, idx2 = nm_compress(dense, m, n)
+        # Index sets must agree where values are nonzero; values must agree.
+        assert_allclose(
+            np.asarray(nm_decompress(vals2, idx2, m, k)), dense, rtol=0, atol=0
+        )
+
+    def test_compress_keeps_topn_magnitude(self):
+        rng = np.random.default_rng(1)
+        w = rng.standard_normal((4, 32)).astype(np.float32)
+        vals, idx = nm_compress(w, m=16, n=2)
+        wg = w.reshape(4, 2, 16)
+        kept = np.abs(np.take_along_axis(wg, idx, axis=-1))
+        # Every kept magnitude >= every dropped magnitude in its group.
+        for o in range(4):
+            for g in range(2):
+                dropped = np.delete(np.abs(wg[o, g]), idx[o, g])
+                if dropped.size:
+                    assert kept[o, g].min() >= dropped.max() - 1e-6
+
+
+class TestNmSpmmVsRef:
+    @pytest.mark.parametrize("b", [1, 4])
+    @pytest.mark.parametrize("m,n", [(16, 2), (16, 4), (16, 8), (8, 4)])
+    def test_matches_ref(self, b, m, n):
+        rng = np.random.default_rng(42)
+        o, k = 128, 64
+        x = rng.standard_normal((b, k)).astype(np.float32)
+        vals, idx = rand_nm(rng, o, k, m, n)
+        got = np.asarray(nm_spmm(x, vals, idx, m, block_o=64))
+        want = np.asarray(nm_spmm_ref(x, vals, idx, m))
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_dense_case_n_equals_m(self):
+        """N == M degenerates to a dense matmul (the paper's dense mode)."""
+        rng = np.random.default_rng(7)
+        b, o, k, m = 2, 128, 32, 8
+        w = rng.standard_normal((o, k)).astype(np.float32)
+        vals, idx = nm_compress(w, m=m, n=m)
+        x = rng.standard_normal((b, k)).astype(np.float32)
+        got = np.asarray(nm_spmm(x, vals, idx, m))
+        assert_allclose(got, x @ w.T, rtol=1e-5, atol=1e-5)
+
+    def test_gemv_b1_decode_path(self):
+        rng = np.random.default_rng(9)
+        o, k, m, n = 256, 128, 16, 4
+        x = rng.standard_normal((1, k)).astype(np.float32)
+        vals, idx = rand_nm(rng, o, k, m, n)
+        got = np.asarray(nm_spmm(x, vals, idx, m))
+        want = np.asarray(nm_spmm_ref(x, vals, idx, m))
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_block_o_tiling_invariance(self):
+        """Result must not depend on the output tile size."""
+        rng = np.random.default_rng(3)
+        o, k, m, n = 256, 64, 16, 4
+        x = rng.standard_normal((2, k)).astype(np.float32)
+        vals, idx = rand_nm(rng, o, k, m, n)
+        a = np.asarray(nm_spmm(x, vals, idx, m, block_o=64))
+        b_ = np.asarray(nm_spmm(x, vals, idx, m, block_o=256))
+        assert_allclose(a, b_, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 3]),
+    g=st.sampled_from([1, 2, 4]),
+    m=st.sampled_from([8, 16]),
+    n_sel=st.sampled_from([1, 2, 4, 8]),
+    o_tiles=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nm_spmm_hypothesis(b, g, m, n_sel, o_tiles, seed):
+    """Property sweep: kernel == oracle over shape/sparsity space."""
+    n = min(n_sel, m)
+    k = g * m
+    o = 64 * o_tiles
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, k)).astype(np.float32)
+    vals, idx = rand_nm(rng, o, k, m, n)
+    got = np.asarray(nm_spmm(x, vals, idx, m, block_o=64))
+    want = np.asarray(nm_spmm_ref(x, vals, idx, m))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,79 @@
+//! Fig. 11 reproduction: end-to-end latency AND decode throughput of
+//! FlightLLM (U280, VHK158) vs V100S/A100 (naive + vLLM/SmoothQuant) on
+//! OPT-6.7B and LLaMA2-7B over the paper's [prefill, decode] grid.
+//!
+//! Plain-main bench (criterion is not vendored): prints the figure's
+//! series as tables. Run: cargo bench --bench fig11_latency
+
+use flightllm::baselines::{GpuStack, GpuSystem};
+use flightllm::config::Target;
+use flightllm::experiments::flightllm_full;
+use flightllm::metrics::{format_table, geomean, paper_grid};
+
+fn main() {
+    for target in [Target::u280_opt(), Target::u280_llama2()] {
+        let model = &target.model;
+        let vhk = Target { model: model.clone(), ..Target::vhk158_llama2() };
+        let mut rows = Vec::new();
+        let mut speedups_naive = Vec::new();
+        let mut speedups_opt = Vec::new();
+        for pt in paper_grid() {
+            let fl_u280 = flightllm_full(&target, pt);
+            let fl_vhk = flightllm_full(&vhk, pt);
+            let vn = GpuSystem::v100s(GpuStack::Naive).model().measure(model, pt);
+            let vo = GpuSystem::v100s(GpuStack::Opt).model().measure(model, pt);
+            let an = GpuSystem::a100(GpuStack::Naive).model().measure(model, pt);
+            let ao = GpuSystem::a100(GpuStack::Opt).model().measure(model, pt);
+            speedups_naive.push(vn.latency_s / fl_u280.latency_s);
+            speedups_opt.push(vo.latency_s / fl_u280.latency_s);
+            rows.push(vec![
+                pt.label(),
+                format!("{:.2}", vn.latency_s),
+                format!("{:.2}", vo.latency_s),
+                format!("{:.2}", an.latency_s),
+                format!("{:.2}", ao.latency_s),
+                format!("{:.2}", fl_u280.latency_s),
+                format!("{:.2}", fl_vhk.latency_s),
+            ]);
+        }
+        println!(
+            "{}",
+            format_table(
+                &format!("Fig. 11 (latency, s) — {}", model.name),
+                &["[prefill,dec]", "V100S-naive", "V100S-opt", "A100-naive",
+                  "A100-opt", "FL-U280", "FL-VHK158"],
+                &rows
+            )
+        );
+        println!(
+            "geomean speedup of FL-U280: {:.2}x vs V100S-naive (paper 1.5-1.6x), \
+             {:.2}x vs V100S-opt (paper 1.2-1.3x)\n",
+            geomean(&speedups_naive),
+            geomean(&speedups_opt)
+        );
+
+        // Decode-throughput half of the figure.
+        let mut rows = Vec::new();
+        for pt in paper_grid() {
+            let fl_u280 = flightllm_full(&target, pt);
+            let fl_vhk = flightllm_full(&vhk, pt);
+            let vo = GpuSystem::v100s(GpuStack::Opt).model().measure(model, pt);
+            let ao = GpuSystem::a100(GpuStack::Opt).model().measure(model, pt);
+            rows.push(vec![
+                pt.label(),
+                format!("{:.1}", vo.decode_tps),
+                format!("{:.1}", ao.decode_tps),
+                format!("{:.1}", fl_u280.decode_tps),
+                format!("{:.1}", fl_vhk.decode_tps),
+            ]);
+        }
+        println!(
+            "{}",
+            format_table(
+                &format!("Fig. 11 (decode throughput, tokens/s) — {}", model.name),
+                &["[prefill,dec]", "V100S-opt", "A100-opt", "FL-U280", "FL-VHK158"],
+                &rows
+            )
+        );
+    }
+}

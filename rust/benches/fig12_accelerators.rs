@@ -1,0 +1,57 @@
+//! Fig. 12 reproduction: FlightLLM vs the SOTA accelerators DFX, CTA and
+//! FACT (latency and geomean decode throughput) on OPT-6.7B and
+//! LLaMA2-7B. Run: cargo bench --bench fig12_accelerators
+
+use flightllm::baselines::{cta, dfx, fact};
+use flightllm::config::Target;
+use flightllm::experiments::flightllm_full;
+use flightllm::metrics::{format_table, geomean, paper_grid};
+
+fn main() {
+    for target in [Target::u280_opt(), Target::u280_llama2()] {
+        let model = &target.model;
+        let vhk = Target { model: model.clone(), ..Target::vhk158_llama2() };
+        let mut rows = Vec::new();
+        let mut sp_u280 = Vec::new();
+        let mut sp_vhk = Vec::new();
+        let mut tp_u280 = Vec::new();
+        let mut tp_vhk = Vec::new();
+        for pt in paper_grid() {
+            let d = dfx().measure(model, pt);
+            let c = cta().measure(model, pt);
+            let f = fact().measure(model, pt);
+            let u = flightllm_full(&target, pt);
+            let v = flightllm_full(&vhk, pt);
+            sp_u280.push(d.latency_s / u.latency_s);
+            sp_vhk.push(d.latency_s / v.latency_s);
+            tp_u280.push(u.decode_tps / d.decode_tps);
+            tp_vhk.push(v.decode_tps / d.decode_tps);
+            rows.push(vec![
+                pt.label(),
+                format!("{:.2}", d.latency_s),
+                format!("{:.2}", c.latency_s),
+                format!("{:.2}", f.latency_s),
+                format!("{:.2}", u.latency_s),
+                format!("{:.2}", v.latency_s),
+            ]);
+        }
+        println!(
+            "{}",
+            format_table(
+                &format!("Fig. 12(a) latency (s) — {}", model.name),
+                &["[prefill,dec]", "DFX", "CTA", "FACT", "FL-U280", "FL-VHK158"],
+                &rows
+            )
+        );
+        println!(
+            "geomean latency speedup vs DFX: U280 {:.2}x (paper 2.7x), VHK158 {:.2}x (paper 4.6x)",
+            geomean(&sp_u280),
+            geomean(&sp_vhk)
+        );
+        println!(
+            "geomean throughput speedup vs DFX: U280 {:.2}x (paper 2.6x), VHK158 {:.2}x (paper 4.6x)\n",
+            geomean(&tp_u280),
+            geomean(&tp_vhk)
+        );
+    }
+}

@@ -1,0 +1,66 @@
+//! Fig. 13 reproduction: energy efficiency (Token/J) of FlightLLM vs
+//! V100S/A100 at naive and opt stacks, plus the Fig. 1 / §6.2.4 cost
+//! efficiency summary. Run: cargo bench --bench fig13_energy
+
+use flightllm::baselines::{GpuStack, GpuSystem};
+use flightllm::config::Target;
+use flightllm::experiments::flightllm_full;
+use flightllm::metrics::{format_table, geomean, paper_grid};
+
+fn main() {
+    for target in [Target::u280_opt(), Target::u280_llama2()] {
+        let model = &target.model;
+        let mut rows = Vec::new();
+        let mut r_vs = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+        for pt in paper_grid() {
+            let fl = flightllm_full(&target, pt);
+            let systems = [
+                GpuSystem::v100s(GpuStack::Naive).model().measure(model, pt),
+                GpuSystem::v100s(GpuStack::Opt).model().measure(model, pt),
+                GpuSystem::a100(GpuStack::Naive).model().measure(model, pt),
+                GpuSystem::a100(GpuStack::Opt).model().measure(model, pt),
+            ];
+            for (i, s) in systems.iter().enumerate() {
+                r_vs[i].push(fl.tokens_per_joule() / s.tokens_per_joule());
+            }
+            rows.push(vec![
+                pt.label(),
+                format!("{:.3}", systems[0].tokens_per_joule()),
+                format!("{:.3}", systems[1].tokens_per_joule()),
+                format!("{:.3}", systems[2].tokens_per_joule()),
+                format!("{:.3}", systems[3].tokens_per_joule()),
+                format!("{:.3}", fl.tokens_per_joule()),
+            ]);
+        }
+        println!(
+            "{}",
+            format_table(
+                &format!("Fig. 13 energy efficiency (Token/J) — {}", model.name),
+                &["[prefill,dec]", "V100S-naive", "V100S-opt", "A100-naive",
+                  "A100-opt", "FL-U280"],
+                &rows
+            )
+        );
+        println!(
+            "geomean FL-U280 advantage: {:.1}x vs V100S-naive (paper 6.0-6.7x), \
+             {:.1}x vs V100S-opt (paper 5.5-6.0x), {:.1}x vs A100-naive (paper 4.4-4.6x), \
+             {:.1}x vs A100-opt (paper 3.8-4.2x)",
+            geomean(&r_vs[0]),
+            geomean(&r_vs[1]),
+            geomean(&r_vs[2]),
+            geomean(&r_vs[3])
+        );
+
+        // §6.2.4 cost efficiency (Token/s/$).
+        let pt = flightllm::metrics::EvalPoint { prefill: 128, decode: 512 };
+        let fl = flightllm_full(&target, pt);
+        let vo = GpuSystem::v100s(GpuStack::Opt).model().measure(model, pt);
+        let ao = GpuSystem::a100(GpuStack::Opt).model().measure(model, pt);
+        println!(
+            "cost efficiency at {}: {:.2}x vs V100S-opt (paper 1.9-2.3x), {:.2}x vs A100-opt (paper 1.4-1.5x)\n",
+            pt.label(),
+            fl.tokens_per_s_per_dollar() / vo.tokens_per_s_per_dollar(),
+            fl.tokens_per_s_per_dollar() / ao.tokens_per_s_per_dollar()
+        );
+    }
+}

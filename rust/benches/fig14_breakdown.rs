@@ -1,0 +1,45 @@
+//! Fig. 14 reproduction: latency breakdown of FlightLLM — naive U280
+//! port → + configurable sparse DSP chain → + always-on-chip decode —
+//! normalized against V100S like the paper's plot.
+//! Run: cargo bench --bench fig14_breakdown
+
+use flightllm::baselines::{GpuStack, GpuSystem};
+use flightllm::config::Target;
+use flightllm::experiments::fig14_rungs;
+use flightllm::metrics::{format_table, EvalPoint};
+
+fn main() {
+    let pt = EvalPoint { prefill: 128, decode: 128 };
+    for target in [Target::u280_llama2(), Target::u280_opt()] {
+        let model = &target.model;
+        let v100 = GpuSystem::v100s(GpuStack::Opt).model().measure(model, pt);
+        let rungs = fig14_rungs(&target, pt);
+        let naive = rungs[0].1.latency_s;
+        let mut rows = vec![vec![
+            "V100S-opt (normalization)".to_string(),
+            format!("{:.2}", v100.latency_s),
+            format!("{:.2}", naive / v100.latency_s),
+        ]];
+        for (label, m) in &rungs {
+            rows.push(vec![
+                label.clone(),
+                format!("{:.2}", m.latency_s),
+                format!("{:.2}", naive / m.latency_s),
+            ]);
+        }
+        println!(
+            "{}",
+            format_table(
+                &format!("Fig. 14 breakdown — {} @ {}", model.name, pt.label()),
+                &["configuration", "latency (s)", "speedup vs naive"],
+                &rows
+            )
+        );
+        let sparse_gain = rungs[0].1.latency_s / rungs[1].1.latency_s;
+        let full_gain = rungs[0].1.latency_s / rungs[2].1.latency_s;
+        println!(
+            "sparse DSP chain: {sparse_gain:.2}x (paper 1.1-1.2x); \
+             + always-on-chip decode: {full_gain:.2}x (paper 1.6-1.7x)\n"
+        );
+    }
+}

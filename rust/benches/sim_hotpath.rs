@@ -1,0 +1,70 @@
+//! Perf bench for the L3 hot paths (feeds EXPERIMENTS.md §Perf):
+//! - simulator instruction throughput (instructions/s through Engine)
+//! - compiler lowering throughput (instructions/s generated)
+//! - ISA encode/decode throughput
+//! Run: cargo bench --bench sim_hotpath
+
+use std::time::Instant;
+
+use flightllm::compiler::{lower, CompilerOptions, CountSink, VecSink};
+use flightllm::config::Target;
+use flightllm::ir::{passes, Graph, Stage};
+use flightllm::isa::{decode_stream, encode_stream};
+use flightllm::sim::Engine;
+
+fn main() {
+    let t = Target::u280_llama2();
+    let mut g = Graph::from_model(&t.model, &t.compression, Stage::Decode { ctx: 1024 });
+    passes::optimize(&mut g);
+    let mut sink = VecSink::default();
+    lower(&g, &t, CompilerOptions::full(), &mut sink);
+    let insts = sink.0;
+    println!("decode stream: {} instructions", insts.len());
+
+    // --- engine throughput -------------------------------------------
+    let reps = 200;
+    let t0 = Instant::now();
+    let mut total_ns = 0.0;
+    for _ in 0..reps {
+        let rep = Engine::for_target(&t, true).run(&insts);
+        total_ns += rep.total_ns;
+    }
+    let el = t0.elapsed().as_secs_f64();
+    println!(
+        "engine: {:.2} M inst/s ({:.1} µs per simulated decode step; sim total {:.3} ms)",
+        reps as f64 * insts.len() as f64 / el / 1e6,
+        el / reps as f64 * 1e6,
+        total_ns / reps as f64 / 1e6,
+    );
+
+    // --- lowering throughput -----------------------------------------
+    let t0 = Instant::now();
+    let reps2 = 200;
+    let mut n = 0u64;
+    for _ in 0..reps2 {
+        let mut c = CountSink::default();
+        lower(&g, &t, CompilerOptions::full(), &mut c);
+        n += c.count;
+    }
+    let el = t0.elapsed().as_secs_f64();
+    println!(
+        "lowering: {:.2} M inst/s generated ({:.1} µs per decode stream)",
+        n as f64 / el / 1e6,
+        el / reps2 as f64 * 1e6
+    );
+
+    // --- ISA encode/decode --------------------------------------------
+    let bytes = encode_stream(&insts);
+    let t0 = Instant::now();
+    let reps3 = 500;
+    for _ in 0..reps3 {
+        let d = decode_stream(&bytes).unwrap();
+        assert_eq!(d.len(), insts.len());
+    }
+    let el = t0.elapsed().as_secs_f64();
+    println!(
+        "isa decode: {:.2} M inst/s ({:.2} GiB/s)",
+        reps3 as f64 * insts.len() as f64 / el / 1e6,
+        reps3 as f64 * bytes.len() as f64 / el / (1 << 30) as f64
+    );
+}

@@ -1,0 +1,85 @@
+//! Table 5 reproduction: decode-stage bandwidth utilization across
+//! platforms — V100S / A100 (naive + opt) and FlightLLM on U280 /
+//! VHK158 — plus the §4.1 claim (35.6% → 65.9% from the always-on-chip
+//! decode scheme). Run: cargo bench --bench table5_bandwidth
+
+use flightllm::baselines::{GpuStack, GpuSystem};
+use flightllm::config::Target;
+use flightllm::experiments::{flightllm_measure, FlightConfig};
+use flightllm::metrics::{format_table, EvalPoint};
+
+fn main() {
+    let pt = EvalPoint { prefill: 128, decode: 512 };
+    let t_u280 = Target::u280_llama2();
+    let t_vhk = Target::vhk158_llama2();
+
+    let fl_u280 = flightllm_measure(&t_u280, pt, FlightConfig::Full);
+    let fl_vhk = flightllm_measure(&t_vhk, pt, FlightConfig::Full);
+    let naive_u280 = flightllm_measure(&t_u280, pt, FlightConfig::Naive);
+
+    let rows = vec![
+        vec!["V100S".into(), "None".into(),
+             format!("{:.1}%", GpuSystem::v100s(GpuStack::Naive).model().bw_eff * 100.0),
+             "42.5%".into()],
+        vec!["V100S".into(), "Opt.".into(),
+             format!("{:.1}%", GpuSystem::v100s(GpuStack::Opt).model().bw_eff * 100.0),
+             "65.5%".into()],
+        vec!["A100".into(), "None".into(),
+             format!("{:.1}%", GpuSystem::a100(GpuStack::Naive).model().bw_eff * 100.0),
+             "28.6%".into()],
+        vec!["A100".into(), "Opt.".into(),
+             format!("{:.1}%", GpuSystem::a100(GpuStack::Opt).model().bw_eff * 100.0),
+             "57.4%".into()],
+        vec!["U280".into(), "Ours".into(),
+             format!("{:.1}%", fl_u280.bw_util * 100.0), "65.9%".into()],
+        vec!["VHK158".into(), "Ours".into(),
+             format!("{:.1}%", fl_vhk.bw_util * 100.0), "64.8%".into()],
+    ];
+    println!(
+        "{}",
+        format_table(
+            "Table 5: decode bandwidth utilization",
+            &["platform", "solution", "measured", "paper"],
+            &rows
+        )
+    );
+    println!(
+        "compiled-schedule ablation on U280: {:.1}% (naive schedule) → {:.1}% (fused)",
+        naive_u280.bw_util * 100.0,
+        fl_u280.bw_util * 100.0
+    );
+
+    // §4.1's 35.6% → 65.9% is about access *granularity*: without fusing
+    // the decode ops, every operand is fetched in fine-grained bursts
+    // that pay HBM latency per burst. Demonstrate the mechanism at the
+    // memory-model level: stream the same 1 GiB per channel-group in
+    // 1 KiB bursts (per-op operand fetches) vs 512 KiB tiles (fused
+    // weight streaming).
+    use flightllm::config::Platform;
+    use flightllm::isa::MemSpace;
+    use flightllm::sim::MemorySystem;
+
+    let p = Platform::u280();
+    let total: u64 = 1 << 30;
+    let util_for = |burst: u64| -> f64 {
+        let mut mem = MemorySystem::new(p.hbm.clone(), p.ddr.clone());
+        let per_ch = total / 32;
+        let mut done = 0.0f64;
+        for ch in 0..32u8 {
+            let mut off = 0;
+            while off < per_ch {
+                done = done.max(mem.transfer(0.0, MemSpace::Hbm { channel: ch }, burst));
+                off += burst;
+            }
+        }
+        mem.hbm_bw_utilization(mem.quiescent())
+    };
+    let fine = util_for(1 << 10);
+    let fused = util_for(1 << 19);
+    println!(
+        "§4.1 access-granularity mechanism: 1 KiB per-op bursts → {:.1}% vs \
+         512 KiB fused streams → {:.1}% (paper: 35.6% → 65.9%)",
+        fine * 100.0,
+        fused * 100.0
+    );
+}

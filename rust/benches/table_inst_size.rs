@@ -1,0 +1,60 @@
+//! §5.2 reproduction: the instruction-storage progression (the paper's
+//! 1.67 TB → 4.77 GB → 3.25 GB, ~500×), plus per-stream sizes (the
+//! paper's 2.9 MB decode / 282.1 MB prefill per SLR per inference).
+//! Run: cargo bench --bench table_inst_size
+
+use flightllm::compiler::{lower, storage_report, CompilerOptions, CountSink};
+use flightllm::config::Target;
+use flightllm::ir::{passes, Graph, Stage};
+use flightllm::metrics::format_table;
+
+fn stream_kib(t: &Target, stage: Stage, opt: CompilerOptions) -> f64 {
+    let mut g = Graph::from_model(&t.model, &t.compression, stage);
+    passes::optimize(&mut g);
+    let mut sink = CountSink::default();
+    lower(&g, t, opt, &mut sink);
+    sink.bytes() as f64 / 1024.0
+}
+
+fn main() {
+    let t = Target::u280_llama2();
+
+    // Per-inference stream sizes at max length (paper: decode 2.9 MB,
+    // prefill 282.1 MB per SLR, with payload-heavier words than our 16 B).
+    let fine = CompilerOptions::storage_fine();
+    let dec = stream_kib(&t, Stage::Decode { ctx: 2048 }, fine);
+    let pre = stream_kib(&t, Stage::Prefill { n: 2048 }, fine);
+    println!("per-SLR stream size @2048: decode {dec:.0} KiB, prefill {:.1} MiB", pre / 1024.0);
+    println!("(paper: 2.9 MB decode, 282.1 MB prefill; our words are 16 B vs their payload-heavy encoding — ratios below are the target)\n");
+
+    println!("computing the full storage progression...");
+    let r = storage_report(&t);
+    let rows = vec![
+        vec!["naive: all lengths × 3 SLRs, unmerged".into(),
+             format!("{:.2}", r.naive_bytes / 1e9), "1677 (1.67 TB)".into(), "1.0x".into()],
+        vec!["+ length-adaptive buckets".into(),
+             format!("{:.3}", r.bucketed_bytes / 1e9), "—".into(),
+             format!("{:.0}x", r.naive_bytes / r.bucketed_bytes)],
+        vec!["+ shared stream across SLRs".into(),
+             format!("{:.3}", r.shared_bytes / 1e9), "4.77".into(),
+             format!("{:.0}x", r.naive_bytes / r.shared_bytes)],
+        vec!["+ merged multi-channel LD/ST".into(),
+             format!("{:.3}", r.merged_bytes / 1e9), "3.25".into(),
+             format!("{:.0}x", r.total_reduction())],
+    ];
+    println!(
+        "{}",
+        format_table(
+            "§5.2 instruction storage progression",
+            &["rung", "ours (GB)", "paper (GB)", "reduction"],
+            &rows
+        )
+    );
+    println!(
+        "total reduction {:.0}x (paper ~514x); merge rung {:.2}x (paper 1.47x); \
+         final size fits U280 DDR: {}",
+        r.total_reduction(),
+        r.merge_reduction(),
+        r.merged_bytes < 32e9
+    );
+}

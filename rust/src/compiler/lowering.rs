@@ -1,0 +1,501 @@
+//! Instruction generation: optimized IR graph → one SLR's instruction
+//! stream (the accelerator is SLR-symmetric; base-address registers remap
+//! the same file for the other SLRs, §5.2).
+//!
+//! Tiling: a linear layer's per-SLR weight slice is streamed tile-by-tile
+//! into the weight buffer (merged 8-channel LDs), each tile followed by
+//! the MM/MV that consumes it — the double-buffered schedule the engine
+//! overlaps.  Prefill attention lowers per (head, kept-block) at `Fine`
+//! granularity — which is why unbucketed instruction storage explodes and
+//! length-adaptive compilation is needed — or as aggregate block-sparse
+//! MMs at `Coarse` granularity (identical MACs/bytes, fewer instructions)
+//! for fast simulation.
+
+use crate::config::Target;
+use crate::ir::{AttentionKind, Graph, Op, Stage};
+use crate::isa::{Inst, MemSpace, MiscOp, OnChipBuf, Sparsity, SysOp};
+
+/// Where generated instructions go. Streams for storage accounting are
+/// only *counted* (`CountSink`); streams for simulation are materialized
+/// (`VecSink`) or consumed on the fly.
+pub trait InstSink {
+    fn emit(&mut self, inst: Inst);
+}
+
+/// Materializes the stream.
+#[derive(Debug, Default)]
+pub struct VecSink(pub Vec<Inst>);
+
+impl InstSink for VecSink {
+    fn emit(&mut self, inst: Inst) {
+        self.0.push(inst);
+    }
+}
+
+/// Counts instructions and stored bytes without materializing.
+#[derive(Debug, Default)]
+pub struct CountSink {
+    pub count: u64,
+}
+
+impl CountSink {
+    pub fn bytes(&self) -> u64 {
+        self.count * crate::isa::INST_BYTES as u64
+    }
+}
+
+impl InstSink for CountSink {
+    fn emit(&mut self, _inst: Inst) {
+        self.count += 1;
+    }
+}
+
+/// Attention lowering granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnGranularity {
+    /// One MM per (head, kept score block) — the real instruction stream
+    /// (each head/layer has its own sparse pattern, §5.2.1, so none of
+    /// these are reusable).
+    Fine,
+    /// One block-sparse MM per attention step — same MACs and traffic,
+    /// collapsed for fast simulation.
+    Coarse,
+}
+
+/// Fig. 14's ablation knobs + the §5.2 instruction optimizations.
+#[derive(Debug, Clone, Copy)]
+pub struct CompilerOptions {
+    /// Keep decode activations on-chip (§4.1). When false every linear is
+    /// bracketed by activation LD/ST — the naive port.
+    pub onchip_decode: bool,
+    /// Merge per-channel LD/STs into one instruction (§5.2).
+    pub merge_channel_io: bool,
+    /// Attention lowering granularity (see above).
+    pub attn: AttnGranularity,
+    /// Decode batch size (Fig. 15): batch > 1 turns decode MVs into
+    /// skinny MMs so the streamed weights are amortized across sequences.
+    pub batch: u32,
+}
+
+impl CompilerOptions {
+    /// The shipped configuration.
+    pub fn full() -> Self {
+        Self {
+            onchip_decode: true,
+            merge_channel_io: true,
+            attn: AttnGranularity::Coarse,
+            batch: 1,
+        }
+    }
+
+    /// The Fig. 14 "naive" rung (CSD-chain off is an Engine flag).
+    pub fn naive() -> Self {
+        Self { onchip_decode: false, merge_channel_io: false, ..Self::full() }
+    }
+
+    /// Real stored-stream shape (for §5.2 storage accounting).
+    pub fn storage_fine() -> Self {
+        Self { attn: AttnGranularity::Fine, ..Self::full() }
+    }
+
+    pub fn with_batch(batch: u32) -> Self {
+        Self { batch: batch.max(1), ..Self::full() }
+    }
+}
+
+/// HBM channels ganged per merged transfer.
+const MERGE_CHANNELS: u8 = 8;
+
+struct Lowerer<'a, S: InstSink> {
+    t: &'a Target,
+    opt: CompilerOptions,
+    sink: &'a mut S,
+    /// Rotating channel cursor for weight streams.
+    next_channel: u8,
+    /// Rotating HBM address cursor (addresses come from ir::layout in a
+    /// full run; the rotation here only has to keep channels distinct).
+    addr: u64,
+}
+
+impl<'a, S: InstSink> Lowerer<'a, S> {
+    /// Weight-buffer capacity per MPE in bytes (BRAM36 = 4 KiB usable).
+    fn weight_buf_bytes(&self) -> u64 {
+        self.t.accel.weight_buf_bram as u64 * 4096
+    }
+
+    fn emit_weight_load(&mut self, bytes: u64) {
+        let fc = self.next_channel;
+        self.next_channel =
+            (self.next_channel + MERGE_CHANNELS) % self.t.platform.hbm.channels as u8;
+        if self.opt.merge_channel_io {
+            self.sink.emit(Inst::LdMerged {
+                first_channel: fc,
+                channels: MERGE_CHANNELS,
+                dst: OnChipBuf::Weight,
+                addr: self.addr,
+                bytes: (bytes / MERGE_CHANNELS as u64).max(64) as u32,
+            });
+        } else {
+            // Unmerged: one LD per channel leg (the pre-optimization ISA).
+            let leg = (bytes / MERGE_CHANNELS as u64).max(64) as u32;
+            for c in 0..MERGE_CHANNELS {
+                self.sink.emit(Inst::Ld {
+                    src: MemSpace::Hbm { channel: fc + c },
+                    dst: OnChipBuf::Weight,
+                    addr: self.addr + c as u64 * leg as u64,
+                    bytes: leg,
+                });
+            }
+        }
+        self.addr += bytes;
+    }
+
+    /// Activation vector traffic for the non-fused (naive) schedule.
+    fn emit_act_roundtrip(&mut self, bytes: u64, load: bool, store: bool) {
+        if load {
+            self.sink.emit(Inst::Ld {
+                src: MemSpace::Hbm { channel: self.next_channel },
+                dst: OnChipBuf::Activation,
+                addr: self.addr,
+                bytes: bytes as u32,
+            });
+        }
+        if store {
+            self.sink.emit(Inst::St {
+                src: OnChipBuf::Global,
+                dst: MemSpace::Hbm { channel: self.next_channel },
+                addr: self.addr,
+                bytes: bytes as u32,
+            });
+        }
+    }
+
+    fn lower_linear(
+        &mut self,
+        stage: Stage,
+        out_dim: u64,
+        in_dim: u64,
+        sparsity: Sparsity,
+        weight_bits: f64,
+        fused: &[MiscOp],
+    ) {
+        let slr = self.t.platform.slr_count as u64;
+        let out_slr = out_dim.div_ceil(slr);
+        // Stored bytes of this SLR's weight slice (values at weight_bits
+        // + log2(M) index bits per kept value).
+        let idx_bits = match sparsity {
+            Sparsity::Nm { m, .. } => (m as f64).log2(),
+            _ => 0.0,
+        };
+        let bytes = (out_slr as f64
+            * in_dim as f64
+            * sparsity.density()
+            * (weight_bits + idx_bits)
+            / 8.0)
+            .ceil() as u64;
+        let tile_bytes = self.weight_buf_bytes() / 2; // double buffered
+        let tiles = bytes.div_ceil(tile_bytes).max(1);
+        let out_per_tile = out_slr.div_ceil(tiles);
+        let act_bytes = in_dim * (self.t.compression.act_bits as u64 / 8).max(1);
+
+        if !self.opt.onchip_decode {
+            self.emit_act_roundtrip(act_bytes, true, false);
+        }
+        for i in 0..tiles {
+            let this_out = out_per_tile.min(out_slr.saturating_sub(i * out_per_tile));
+            if this_out == 0 {
+                break;
+            }
+            self.emit_weight_load(bytes / tiles);
+            match stage {
+                Stage::Prefill { n } => self.sink.emit(Inst::Mm {
+                    m: n as u32,
+                    k: in_dim as u32,
+                    n: this_out as u32,
+                    sparsity,
+                }),
+                // Batched decode (Fig. 15): B activation rows share the
+                // streamed weight tile — a skinny MM instead of B MVs.
+                Stage::Decode { .. } if self.opt.batch > 1 => {
+                    self.sink.emit(Inst::Mm {
+                        m: self.opt.batch,
+                        k: in_dim as u32,
+                        n: this_out as u32,
+                        sparsity,
+                    })
+                }
+                Stage::Decode { .. } => self.sink.emit(Inst::Mv {
+                    k: in_dim as u32,
+                    n: this_out as u32,
+                    sparsity,
+                }),
+            }
+        }
+        for op in fused {
+            self.sink.emit(Inst::Misc { op: *op, len: out_slr as u32 });
+        }
+        if !self.opt.onchip_decode {
+            self.emit_act_roundtrip(out_slr * 1, false, true);
+        }
+    }
+
+    fn lower_attention(&mut self, stage: Stage, kind: AttentionKind, heads: u64, hd: u64, fused_softmax: bool) {
+        let slr = self.t.platform.slr_count as u64;
+        let heads_slr = heads.div_ceil(slr);
+        let act_bytes_per_elem = (self.t.compression.act_bits as u64 / 8).max(1);
+        match (stage, kind) {
+            (Stage::Decode { ctx }, _) => {
+                // MV against the KV cache: K then V, per head group; each
+                // batched sequence has its OWN cache (no amortization —
+                // this is why the multibatch advantage shrinks, Fig. 15).
+                let b = self.opt.batch.max(1) as u64;
+                let kv_bytes = 2 * ctx * hd * heads_slr * act_bytes_per_elem * b;
+                self.emit_weight_load(kv_bytes.max(MERGE_CHANNELS as u64 * 64));
+                for _ in 0..heads_slr * b {
+                    // q·K^T : (1×hd)·(hd×ctx), then s·V : (1×ctx)·(ctx×hd)
+                    self.sink.emit(Inst::Mv { k: hd as u32, n: ctx as u32, sparsity: Sparsity::Dense });
+                    if fused_softmax {
+                        self.sink.emit(Inst::Misc { op: MiscOp::Softmax, len: ctx as u32 });
+                    }
+                    self.sink.emit(Inst::Mv { k: ctx as u32, n: hd as u32, sparsity: Sparsity::Dense });
+                }
+            }
+            (Stage::Prefill { n }, AttentionKind::Prefill { block_density }) => {
+                let block = self.t.compression.attn_block as u64;
+                let nb = n.div_ceil(block);
+                let causal_blocks = nb * (nb + 1) / 2;
+                let kept = ((causal_blocks as f64 * block_density).ceil() as u64).max(nb);
+                match self.opt.attn {
+                    AttnGranularity::Fine => {
+                        // One MM per (head, kept block) for QK^T and for
+                        // S·V — the true stored stream (§5.2.1: every
+                        // layer and head has its own pattern).
+                        for _ in 0..heads_slr {
+                            for _ in 0..kept {
+                                self.sink.emit(Inst::Mm {
+                                    m: block as u32,
+                                    k: hd as u32,
+                                    n: block as u32,
+                                    sparsity: Sparsity::Dense,
+                                });
+                            }
+                            if fused_softmax {
+                                self.sink.emit(Inst::Misc { op: MiscOp::Softmax, len: n as u32 });
+                            }
+                            for _ in 0..kept {
+                                self.sink.emit(Inst::Mm {
+                                    m: block as u32,
+                                    k: block as u32,
+                                    n: hd as u32,
+                                    sparsity: Sparsity::Dense,
+                                });
+                            }
+                        }
+                    }
+                    AttnGranularity::Coarse => {
+                        let d256 = ((block_density * 256.0) as u8).max(1);
+                        let sp = Sparsity::BlockSparse { density_256: d256 };
+                        for _ in 0..heads_slr {
+                            self.sink.emit(Inst::Mm { m: n as u32, k: hd as u32, n: n as u32, sparsity: sp });
+                            if fused_softmax {
+                                self.sink.emit(Inst::Misc { op: MiscOp::Softmax, len: n as u32 });
+                            }
+                            self.sink.emit(Inst::Mm { m: n as u32, k: n as u32, n: hd as u32, sparsity: sp });
+                        }
+                    }
+                }
+                // Score traffic: prefill streams K/V tiles from HBM.
+                let kv_bytes = 2 * n * hd * heads_slr * act_bytes_per_elem;
+                self.emit_weight_load(kv_bytes.max(MERGE_CHANNELS as u64 * 64));
+            }
+            (Stage::Prefill { .. }, AttentionKind::Decode) => unreachable!(),
+        }
+    }
+
+    fn lower_graph(&mut self, g: &Graph) {
+        let slr = self.t.platform.slr_count as u64;
+        for node in &g.nodes {
+            match &node.op {
+                Op::Embed => {
+                    // Embedding row gather: one small LD per token.
+                    let dim_bytes = 2 * g.stage.m().min(64);
+                    self.sink.emit(Inst::Ld {
+                        src: MemSpace::Hbm { channel: self.next_channel },
+                        dst: OnChipBuf::Activation,
+                        addr: self.addr,
+                        bytes: (dim_bytes * 128) as u32,
+                    });
+                }
+                Op::Linear { out_dim, in_dim, sparsity, weight_bits, fused, .. } => {
+                    self.lower_linear(g.stage, *out_dim, *in_dim, *sparsity, *weight_bits, fused);
+                }
+                Op::Attention { kind, heads, hd, fused_softmax } => {
+                    self.lower_attention(g.stage, *kind, *heads, *hd, *fused_softmax);
+                }
+                Op::Misc { op, len } => {
+                    if *len > 0 {
+                        self.sink.emit(Inst::Misc {
+                            op: *op,
+                            len: (*len).div_ceil(slr) as u32,
+                        });
+                    }
+                }
+                Op::Residual { len } => {
+                    self.sink.emit(Inst::Misc {
+                        op: MiscOp::EltwiseAdd,
+                        len: (*len).div_ceil(slr) as u32,
+                    });
+                }
+                Op::Head { vocab, dim } => {
+                    self.lower_linear(g.stage, *vocab, *dim, Sparsity::Dense, 16.0, &[]);
+                    self.sink.emit(Inst::Sys { op: SysOp::SyncHost });
+                }
+                Op::KvWrite { bytes } => {
+                    let b = (*bytes / slr).max(64);
+                    if self.opt.merge_channel_io && b >= MERGE_CHANNELS as u64 * 64 {
+                        self.sink.emit(Inst::StMerged {
+                            first_channel: self.next_channel,
+                            channels: MERGE_CHANNELS,
+                            src: OnChipBuf::Global,
+                            addr: self.addr,
+                            bytes: (b / MERGE_CHANNELS as u64) as u32,
+                        });
+                    } else {
+                        self.sink.emit(Inst::St {
+                            src: OnChipBuf::Global,
+                            dst: MemSpace::Hbm { channel: self.next_channel },
+                            addr: self.addr,
+                            bytes: b as u32,
+                        });
+                    }
+                }
+                Op::View { .. } => { /* removed by passes; tolerated */ }
+            }
+            // SLR barrier at each layer boundary: after the FFN's down
+            // projection (w2), the last linear of a transformer block.
+            // (Residual nodes are fused into linears by the optimizer, so
+            // they can't carry the barrier.)
+            if matches!(&node.op, Op::Linear { name, .. } if name.ends_with(".w2")) {
+                self.sink.emit(Inst::Sys { op: SysOp::SyncSlr });
+            }
+        }
+    }
+}
+
+/// Lower an optimized IR graph into `sink` for one SLR of `target`.
+pub fn lower<S: InstSink>(g: &Graph, target: &Target, opt: CompilerOptions, sink: &mut S) {
+    let mut l = Lowerer { t: target, opt, sink, next_channel: 0, addr: 0 };
+    l.lower_graph(g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressionConfig, Target};
+    use crate::ir::{passes, Graph, Stage};
+
+    fn graph(stage: Stage) -> (Graph, Target) {
+        let t = Target::u280_llama2();
+        let mut g = Graph::from_model(&t.model, &t.compression, stage);
+        passes::optimize(&mut g);
+        (g, t)
+    }
+
+    #[test]
+    fn decode_stream_is_mostly_mv_and_ld() {
+        let (g, t) = graph(Stage::Decode { ctx: 512 });
+        let mut sink = VecSink::default();
+        lower(&g, &t, CompilerOptions::full(), &mut sink);
+        let insts = sink.0;
+        assert!(!insts.is_empty());
+        let mv = insts.iter().filter(|i| matches!(i, Inst::Mv { .. })).count();
+        let mm = insts.iter().filter(|i| matches!(i, Inst::Mm { .. })).count();
+        assert!(mv > 0, "decode must use MV mode");
+        // Head projection is the only MM-free... head lowers to MV too in
+        // decode; no MMs at all.
+        assert_eq!(mm, 0, "decode stage must not emit MM");
+    }
+
+    #[test]
+    fn prefill_stream_uses_mm() {
+        let (g, t) = graph(Stage::Prefill { n: 256 });
+        let mut sink = VecSink::default();
+        lower(&g, &t, CompilerOptions::full(), &mut sink);
+        let mm = sink.0.iter().filter(|i| matches!(i, Inst::Mm { .. })).count();
+        assert!(mm > 0);
+    }
+
+    #[test]
+    fn naive_options_emit_activation_roundtrips() {
+        let (g, t) = graph(Stage::Decode { ctx: 512 });
+        let mut full = VecSink::default();
+        lower(&g, &t, CompilerOptions::full(), &mut full);
+        let mut naive = VecSink::default();
+        lower(&g, &t, CompilerOptions::naive(), &mut naive);
+        let st = |v: &[Inst]| v.iter().filter(|i| matches!(i, Inst::St { .. })).count();
+        assert!(
+            st(&naive.0) > st(&full.0) + 100,
+            "naive schedule must write activations back: {} vs {}",
+            st(&naive.0),
+            st(&full.0)
+        );
+    }
+
+    #[test]
+    fn merged_io_shrinks_instruction_count() {
+        let (g, t) = graph(Stage::Decode { ctx: 512 });
+        let mut merged = CountSink::default();
+        lower(&g, &t, CompilerOptions::full(), &mut merged);
+        let mut unmerged = CountSink::default();
+        lower(
+            &g,
+            &t,
+            CompilerOptions { merge_channel_io: false, ..CompilerOptions::full() },
+            &mut unmerged,
+        );
+        let ratio = unmerged.count as f64 / merged.count as f64;
+        assert!(ratio > 1.3, "merge should cut stream size, ratio = {ratio}");
+    }
+
+    #[test]
+    fn fine_attention_dominates_prefill_storage() {
+        // §5.2.1: per-head per-block attention instructions are why the
+        // prefill stream is ~100× the decode stream.
+        let (gp, t) = graph(Stage::Prefill { n: 2048 });
+        let mut fine = CountSink::default();
+        lower(&gp, &t, CompilerOptions::storage_fine(), &mut fine);
+        let (gd, _) = graph(Stage::Decode { ctx: 2048 });
+        let mut dec = CountSink::default();
+        lower(&gd, &t, CompilerOptions::storage_fine(), &mut dec);
+        let ratio = fine.count as f64 / dec.count as f64;
+        assert!(ratio > 20.0, "prefill/decode stream ratio = {ratio}");
+    }
+
+    #[test]
+    fn count_sink_matches_vec_sink() {
+        let (g, t) = graph(Stage::Decode { ctx: 256 });
+        let mut v = VecSink::default();
+        lower(&g, &t, CompilerOptions::full(), &mut v);
+        let mut c = CountSink::default();
+        lower(&g, &t, CompilerOptions::full(), &mut c);
+        assert_eq!(v.0.len() as u64, c.count);
+    }
+
+    #[test]
+    fn uncompressed_stream_loads_more_bytes() {
+        let t = Target::u280_llama2();
+        let mk = |c: &CompressionConfig| {
+            let mut g = Graph::from_model(&t.model, c, Stage::Decode { ctx: 512 });
+            passes::optimize(&mut g);
+            let mut sink = VecSink::default();
+            lower(&g, &t, CompilerOptions::full(), &mut sink);
+            sink.0.iter().map(|i| i.offchip_bytes()).sum::<u64>()
+        };
+        let comp = mk(&CompressionConfig::paper_default());
+        let dense = mk(&CompressionConfig::none());
+        assert!(
+            dense as f64 / comp as f64 > 3.0,
+            "compression must cut traffic: dense {dense} vs comp {comp}"
+        );
+    }
+}

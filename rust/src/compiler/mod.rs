@@ -1,0 +1,12 @@
+//! The mapping flow's back end (§5, Fig. 9): IR → per-SLR instruction
+//! streams, with length-adaptive compilation (§5.2) and the multi-channel
+//! LD/ST merge, plus the storage-size model that reproduces the paper's
+//! 1.67 TB → 4.77 GB → 3.25 GB progression.
+
+mod buckets;
+mod lowering;
+mod size_model;
+
+pub use buckets::{decode_bucket, prefill_bucket, BucketPlan};
+pub use lowering::{lower, AttnGranularity, CompilerOptions, CountSink, InstSink, VecSink};
+pub use size_model::{storage_report, StorageReport};

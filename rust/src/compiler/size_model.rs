@@ -1,0 +1,166 @@
+//! Instruction-storage accounting (§5.2): reproduces the paper's
+//! progression from "naive static compilation would need ~TB" to "fits in
+//! DDR" via (1) length-adaptive bucketing, (2) one shared file re-based
+//! per SLR, and (3) multi-channel LD/ST merging.
+//!
+//! Absolute bytes here are smaller than the paper's (their coarse-grained
+//! instruction words carry more micro-op payload than our 16 B encoding;
+//! see EXPERIMENTS.md) — the *ratios* between rungs are the reproduction
+//! target: ~500× total, with merging contributing ~1.5× at the end
+//! (4.77 GB → 3.25 GB in the paper).
+
+use crate::config::Target;
+use crate::ir::{passes, Graph, Stage};
+
+use super::buckets::BucketPlan;
+use super::lowering::{lower, CompilerOptions, CountSink};
+
+/// One rung of the storage progression.
+#[derive(Debug, Clone)]
+pub struct StorageReport {
+    /// All lengths 1..=max_seq, per SLR, unmerged IO — the §5.2.1 blowup.
+    pub naive_bytes: f64,
+    /// Bucketed lengths, still per-SLR copies, unmerged IO.
+    pub bucketed_bytes: f64,
+    /// Bucketed + single file shared across SLRs (base-address regs).
+    pub shared_bytes: f64,
+    /// Bucketed + shared + merged multi-channel LD/ST — what ships.
+    pub merged_bytes: f64,
+    /// Streams stored at the final rung.
+    pub stored_streams: u64,
+}
+
+impl StorageReport {
+    pub fn total_reduction(&self) -> f64 {
+        self.naive_bytes / self.merged_bytes
+    }
+
+    pub fn merge_reduction(&self) -> f64 {
+        self.shared_bytes / self.merged_bytes
+    }
+}
+
+/// Count one stream's stored bytes.
+fn stream_bytes(t: &Target, stage: Stage, opt: CompilerOptions) -> f64 {
+    let mut g = Graph::from_model(&t.model, &t.compression, stage);
+    passes::optimize(&mut g);
+    let mut sink = CountSink::default();
+    lower(&g, t, opt, &mut sink);
+    sink.bytes() as f64
+}
+
+/// Build the §5.2 storage progression for a target.
+///
+/// The naive sum over every length is integrated by sampling: stream size
+/// is piecewise-linear in the token length (tile counts step smoothly),
+/// so sampling every `step` lengths and scaling is accurate to <1%.
+pub fn storage_report(t: &Target) -> StorageReport {
+    let max_seq = t.model.max_seq;
+    let slrs = t.platform.slr_count as u64;
+    let plan = BucketPlan::paper_default(max_seq);
+    let fine = CompilerOptions::storage_fine();
+    let unmerged_fine = CompilerOptions { merge_channel_io: false, ..fine };
+
+    // ---- naive: every length, per SLR, unmerged ----
+    let step = 64u64.min(max_seq);
+    let mut naive = 0.0;
+    let mut sampled = 0u64;
+    let mut l = step;
+    while l <= max_seq {
+        naive += stream_bytes(t, Stage::Prefill { n: l }, unmerged_fine);
+        naive += stream_bytes(t, Stage::Decode { ctx: l }, unmerged_fine);
+        sampled += 1;
+        l += step;
+    }
+    // Scale sample mean to all max_seq lengths, per SLR.
+    let naive_bytes = naive / sampled as f64 * max_seq as f64 * slrs as f64;
+
+    // ---- bucketed, still per-SLR, unmerged ----
+    let mut bucketed = 0.0;
+    for &b in &plan.prefill {
+        bucketed += stream_bytes(t, Stage::Prefill { n: b }, unmerged_fine);
+    }
+    for &b in &plan.decode {
+        bucketed += stream_bytes(t, Stage::Decode { ctx: b }, unmerged_fine);
+    }
+    let bucketed_bytes = bucketed * slrs as f64;
+
+    // ---- shared across SLRs ----
+    let shared_bytes = bucketed;
+
+    // ---- + merged channel IO ----
+    let mut merged = 0.0;
+    for &b in &plan.prefill {
+        merged += stream_bytes(t, Stage::Prefill { n: b }, fine);
+    }
+    for &b in &plan.decode {
+        merged += stream_bytes(t, Stage::Decode { ctx: b }, fine);
+    }
+
+    StorageReport {
+        naive_bytes,
+        bucketed_bytes,
+        shared_bytes,
+        merged_bytes: merged,
+        stored_streams: plan.stored_streams(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Target;
+
+    #[test]
+    fn progression_is_monotone() {
+        let r = storage_report(&Target::u280_llama2());
+        assert!(r.naive_bytes > r.bucketed_bytes);
+        assert!(r.bucketed_bytes > r.shared_bytes);
+        assert!(r.shared_bytes > r.merged_bytes);
+    }
+
+    #[test]
+    fn total_reduction_matches_paper_order() {
+        // Paper: ~1.67 TB → 3.25 GB ≈ 514×. Ours must land in the same
+        // order of magnitude (driven by the same three mechanisms).
+        let r = storage_report(&Target::u280_llama2());
+        let red = r.total_reduction();
+        assert!(
+            (100.0..2000.0).contains(&red),
+            "total reduction = {red:.0}× (naive {:.3e} B, merged {:.3e} B)",
+            r.naive_bytes,
+            r.merged_bytes
+        );
+    }
+
+    #[test]
+    fn merge_contributes_modest_final_factor() {
+        // Paper: 4.77 GB → 3.25 GB = 1.47×. Our LD-heavier decode streams
+        // give the merge a bigger bite; same mechanism, same direction.
+        let r = storage_report(&Target::u280_llama2());
+        let m = r.merge_reduction();
+        assert!((1.1..4.0).contains(&m), "merge reduction = {m:.2}×");
+    }
+
+    #[test]
+    fn final_size_fits_ddr_naive_does_not_scale() {
+        // Our 16 B instruction words make absolute sizes ~150× smaller
+        // than the paper's payload-heavy words (1.67 TB naive there,
+        // ~11 GB here), so the DDR-feasibility claim is checked on the
+        // *ratio*: the shipped streams must be a tiny fraction of DDR
+        // while the naive volume is a material fraction of it.
+        let t = Target::u280_llama2();
+        let r = storage_report(&t);
+        let ddr = t.platform.ddr.capacity_gb * 1e9;
+        assert!(
+            r.merged_bytes < 0.01 * ddr,
+            "stored instructions must be ≪ DDR: {:.2e} vs {ddr:.2e}",
+            r.merged_bytes
+        );
+        assert!(
+            r.naive_bytes > 0.25 * ddr,
+            "naive volume must strain DDR: {:.2e}",
+            r.naive_bytes
+        );
+    }
+}

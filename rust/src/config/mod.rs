@@ -1,0 +1,88 @@
+//! Configuration: hardware platforms (Table 2), accelerator organization
+//! (§5.3 RTL-generator parameters), LLM model architectures, and
+//! compression recipes (§6.2.1).
+//!
+//! The paper's exact setups ship as built-in presets
+//! (`Platform::u280()`, `ModelConfig::llama2_7b()`, ...); experiment
+//! reports are emitted as JSON via `crate::util::json`.
+
+mod accelerator;
+mod compression;
+mod model;
+mod platform;
+
+pub use accelerator::{AcceleratorConfig, ResourceEstimate};
+pub use compression::CompressionConfig;
+pub use model::{FfnKind, ModelConfig};
+pub use platform::{GpuConfig, MemoryConfig, Platform};
+
+/// A fully-specified experiment target: which board, how the accelerator
+/// is organized on it, which model, and which compression recipe.
+#[derive(Debug, Clone)]
+pub struct Target {
+    pub platform: Platform,
+    pub accel: AcceleratorConfig,
+    pub model: ModelConfig,
+    pub compression: CompressionConfig,
+}
+
+impl Target {
+    /// FlightLLM-on-U280 running LLaMA2-7B with the full compression
+    /// recipe — the paper's headline configuration.
+    pub fn u280_llama2() -> Self {
+        Self {
+            platform: Platform::u280(),
+            accel: AcceleratorConfig::for_u280(),
+            model: ModelConfig::llama2_7b(),
+            compression: CompressionConfig::paper_default(),
+        }
+    }
+
+    pub fn u280_opt() -> Self {
+        Self { model: ModelConfig::opt_6_7b(), ..Self::u280_llama2() }
+    }
+
+    pub fn vhk158_llama2() -> Self {
+        Self {
+            platform: Platform::vhk158(),
+            accel: AcceleratorConfig::for_vhk158(),
+            model: ModelConfig::llama2_7b(),
+            compression: CompressionConfig::paper_default(),
+        }
+    }
+
+    pub fn vhk158_opt() -> Self {
+        Self { model: ModelConfig::opt_6_7b(), ..Self::vhk158_llama2() }
+    }
+
+    /// The runnable tiny model (matches python/compile/model.py TINY).
+    pub fn u280_tiny() -> Self {
+        Self { model: ModelConfig::tiny(), ..Self::u280_llama2() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_consistent() {
+        for t in [
+            Target::u280_llama2(),
+            Target::u280_opt(),
+            Target::vhk158_llama2(),
+            Target::u280_tiny(),
+        ] {
+            assert!(t.model.dim % t.model.n_heads == 0);
+            assert!(t.platform.hbm.bandwidth_gbs > 0.0);
+            assert!(t.accel.dsp_total() > 0);
+        }
+    }
+
+    #[test]
+    fn tiny_target_uses_tiny_model() {
+        let t = Target::u280_tiny();
+        assert_eq!(t.model.dim, 256);
+        assert_eq!(t.platform.name, "U280");
+    }
+}

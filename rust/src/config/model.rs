@@ -1,0 +1,184 @@
+//! LLM architecture descriptions. The 7B-scale configs drive the compiler
+//! and simulator analytically (shapes only — weights never materialize);
+//! the tiny config matches the runnable python/compile model exactly.
+
+
+/// Feed-forward network flavor: OPT uses a 2-matrix ReLU FFN, LLaMA a
+/// 3-matrix SwiGLU (gate/up/down).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FfnKind {
+    Relu2,
+    SwiGlu3,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: u64,
+    pub dim: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    pub ffn_dim: u64,
+    pub max_seq: u64,
+    pub ffn: FfnKind,
+}
+
+impl ModelConfig {
+    pub fn llama2_7b() -> Self {
+        Self {
+            name: "LLaMA2-7B".into(),
+            vocab: 32000,
+            dim: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            ffn_dim: 11008,
+            max_seq: 2048,
+            ffn: FfnKind::SwiGlu3,
+        }
+    }
+
+    pub fn opt_6_7b() -> Self {
+        Self {
+            name: "OPT-6.7B".into(),
+            vocab: 50272,
+            dim: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            ffn_dim: 16384,
+            max_seq: 2048,
+            ffn: FfnKind::Relu2,
+        }
+    }
+
+    /// Matches python/compile/model.py `TINY` (the runnable model).
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny-llama".into(),
+            vocab: 512,
+            dim: 256,
+            n_layers: 4,
+            n_heads: 8,
+            ffn_dim: 512,
+            max_seq: 256,
+            ffn: FfnKind::SwiGlu3,
+        }
+    }
+
+    pub fn head_dim(&self) -> u64 {
+        self.dim / self.n_heads
+    }
+
+    /// Number of FFN weight matrices (2 for ReLU FFN, 3 for SwiGLU).
+    pub fn ffn_mats(&self) -> u64 {
+        match self.ffn {
+            FfnKind::Relu2 => 2,
+            FfnKind::SwiGlu3 => 3,
+        }
+    }
+
+    /// Dense parameter count (weights only, incl. embeddings + head).
+    pub fn param_count(&self) -> u64 {
+        let attn = 4 * self.dim * self.dim;
+        let ffn = self.ffn_mats() * self.dim * self.ffn_dim;
+        self.n_layers * (attn + ffn) + 2 * self.vocab * self.dim
+    }
+
+    /// Per-layer linear shapes as (out, in) pairs — what the compiler maps
+    /// to MM/MV instructions.
+    pub fn layer_linears(&self) -> Vec<(String, u64, u64)> {
+        let d = self.dim;
+        let f = self.ffn_dim;
+        let mut v = vec![
+            ("wq".into(), d, d),
+            ("wk".into(), d, d),
+            ("wv".into(), d, d),
+            ("wo".into(), d, d),
+        ];
+        match self.ffn {
+            FfnKind::Relu2 => {
+                v.push(("w1".into(), f, d));
+                v.push(("w2".into(), d, f));
+            }
+            FfnKind::SwiGlu3 => {
+                v.push(("w1".into(), f, d));
+                v.push(("w3".into(), f, d));
+                v.push(("w2".into(), d, f));
+            }
+        }
+        v
+    }
+
+    /// KV-cache bytes for one sequence of length `seq` at `bytes_per_elem`
+    /// precision (2 = fp16, 1 = int8).
+    pub fn kv_bytes(&self, seq: u64, bytes_per_elem: u64) -> u64 {
+        self.n_layers * 2 * seq * self.dim * bytes_per_elem
+    }
+
+    /// Sum of 2·out·in over one layer's linears (MACs×2 per token).
+    fn layer_linear_flops(&self) -> u64 {
+        self.layer_linears().iter().map(|(_, o, i)| 2 * o * i).sum()
+    }
+
+    /// FLOPs for one decode step at context length `ctx` (2*params for
+    /// the matvecs + attention term), the standard decode cost model.
+    pub fn decode_flops(&self, ctx: u64) -> u64 {
+        let lin = self.n_layers * self.layer_linear_flops();
+        // attention: q·K^T and att·V over ctx positions, all heads
+        let attn = self.n_layers * 2 * 2 * ctx * self.dim;
+        let head = 2 * self.vocab * self.dim;
+        lin + attn + head
+    }
+
+    /// FLOPs for a full prefill of length `n` (dense attention).
+    pub fn prefill_flops(&self, n: u64) -> u64 {
+        let lin = self.n_layers * self.layer_linear_flops() * n;
+        let attn = self.n_layers * 2 * 2 * n * n * self.dim;
+        lin + attn + 2 * self.vocab * self.dim * n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama2_7b_param_count_is_about_6_7b() {
+        let c = ModelConfig::llama2_7b();
+        let p = c.param_count();
+        assert!(p > 6_400_000_000 && p < 7_000_000_000, "params = {p}");
+    }
+
+    #[test]
+    fn opt_param_count_is_about_6_9b() {
+        let c = ModelConfig::opt_6_7b();
+        let p = c.param_count();
+        // OPT-6.7B with tied-ish embeddings lands around 6.7-7.1B here.
+        assert!(p > 6_200_000_000 && p < 7_300_000_000, "params = {p}");
+    }
+
+    #[test]
+    fn tiny_matches_python_model() {
+        let c = ModelConfig::tiny();
+        assert_eq!(c.dim, 256);
+        assert_eq!(c.n_layers, 4);
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.layer_linears().len(), 7);
+    }
+
+    #[test]
+    fn kv_cache_scales_linearly() {
+        let c = ModelConfig::llama2_7b();
+        assert_eq!(c.kv_bytes(2048, 2), 2 * c.kv_bytes(1024, 2));
+        // 2048-token fp16 KV cache of LLaMA2-7B ~ 1.07 GB
+        let gb = c.kv_bytes(2048, 2) as f64 / 1e9;
+        assert!(gb > 1.0 && gb < 1.2, "kv = {gb} GB");
+    }
+
+    #[test]
+    fn decode_flops_close_to_2x_params() {
+        let c = ModelConfig::llama2_7b();
+        let f = c.decode_flops(512) as f64;
+        let p = c.param_count() as f64;
+        assert!(f > 1.8 * p && f < 2.4 * p, "flops={f}, 2p={}", 2.0 * p);
+    }
+}

@@ -1,0 +1,209 @@
+//! Hardware platform descriptions — Table 2 of the paper, plus the
+//! memory-system details (§4.4) the simulator needs.
+
+
+/// One off-chip memory system (HBM or DDR).
+#[derive(Debug, Clone)]
+pub struct MemoryConfig {
+    pub capacity_gb: f64,
+    /// Peak aggregate bandwidth, GB/s (Table 2).
+    pub bandwidth_gbs: f64,
+    /// Number of independent channels (U280 HBM: 32 pseudo-channels).
+    pub channels: u32,
+    /// First-word access latency in ns. HBM latency is *higher* than DDR
+    /// (§4.4, citing Shuhai [46]) — that asymmetry is why FlightLLM puts
+    /// small-access data on DDR.
+    pub latency_ns: f64,
+    /// Efficiency of a perfectly-streamed large burst (0..1): row-refresh
+    /// and protocol overhead keep even ideal streams below peak.
+    pub burst_efficiency: f64,
+}
+
+impl MemoryConfig {
+    /// Effective time (ns) to move `bytes` in a single contiguous access.
+    pub fn access_ns(&self, bytes: u64) -> f64 {
+        self.latency_ns + bytes as f64 / (self.bandwidth_gbs * self.burst_efficiency)
+    }
+
+    pub fn per_channel_gbs(&self) -> f64 {
+        self.bandwidth_gbs / self.channels as f64
+    }
+}
+
+/// An FPGA (or, for the GPU baselines, a `GpuConfig` instead).
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: String,
+    pub freq_mhz: f64,
+    pub dsp_total: u32,
+    /// Super Logic Regions (dies). Cross-SLR paths bound the clock; the
+    /// accelerator instantiates one computing core per SLR (§6.1).
+    pub slr_count: u32,
+    pub hbm: MemoryConfig,
+    pub ddr: MemoryConfig,
+    pub bram36_total: u32,
+    pub uram_total: u32,
+    pub lut_total: u32,
+    pub ff_total: u32,
+    /// Board power budget / measured-at-load power, W (xbutil-style).
+    pub power_w: f64,
+    pub price_usd: f64,
+}
+
+impl Platform {
+    /// Xilinx Alveo U280 (16nm): 8 GB HBM @ 460 GB/s + 32 GB DDR @ 38 GB/s.
+    pub fn u280() -> Self {
+        Self {
+            name: "U280".into(),
+            freq_mhz: 225.0,
+            dsp_total: 9024,
+            slr_count: 3,
+            hbm: MemoryConfig {
+                capacity_gb: 8.0,
+                bandwidth_gbs: 460.0,
+                channels: 32,
+                latency_ns: 107.0,
+                burst_efficiency: 0.88,
+            },
+            ddr: MemoryConfig {
+                capacity_gb: 32.0,
+                bandwidth_gbs: 38.0,
+                channels: 2,
+                latency_ns: 63.0,
+                burst_efficiency: 0.90,
+            },
+            bram36_total: 2016,
+            uram_total: 960,
+            lut_total: 1_304_000,
+            ff_total: 2_607_000,
+            power_w: 45.0,
+            price_usd: 8000.0,
+        }
+    }
+
+    /// Xilinx Versal VHK158 (7nm): 32 GB HBM @ 819 GB/s + 32 GB DDR @ 51 GB/s.
+    pub fn vhk158() -> Self {
+        Self {
+            name: "VHK158".into(),
+            freq_mhz: 225.0,
+            dsp_total: 7392,
+            slr_count: 2,
+            hbm: MemoryConfig {
+                capacity_gb: 32.0,
+                bandwidth_gbs: 819.0,
+                channels: 32,
+                latency_ns: 107.0,
+                burst_efficiency: 0.88,
+            },
+            ddr: MemoryConfig {
+                capacity_gb: 32.0,
+                bandwidth_gbs: 51.0,
+                channels: 2,
+                latency_ns: 63.0,
+                burst_efficiency: 0.90,
+            },
+            bram36_total: 5063,
+            uram_total: 1301,
+            lut_total: 1_802_000,
+            ff_total: 3_604_000,
+            power_w: 60.0,
+            price_usd: 14000.0,
+        }
+    }
+}
+
+/// GPU baselines of Table 2. `eff_*` factors are the measured-utilization
+/// coefficients of the roofline model (see baselines::gpu for how the
+/// naive and vLLM+SmoothQuant stacks differ).
+#[derive(Debug, Clone)]
+pub struct GpuConfig {
+    pub name: String,
+    pub freq_mhz: f64,
+    pub tensor_cores: u32,
+    pub mem_gb: f64,
+    pub bandwidth_gbs: f64,
+    /// Peak dense FP16 tensor throughput, TFLOPS.
+    pub peak_fp16_tflops: f64,
+    /// Peak INT8 tensor throughput, TOPS (SmoothQuant path).
+    pub peak_int8_tops: f64,
+    pub tdp_w: f64,
+    pub price_usd: f64,
+}
+
+impl GpuConfig {
+    pub fn v100s() -> Self {
+        Self {
+            name: "V100S".into(),
+            freq_mhz: 1245.0,
+            tensor_cores: 640,
+            mem_gb: 32.0,
+            bandwidth_gbs: 1134.0,
+            peak_fp16_tflops: 130.0,
+            peak_int8_tops: 130.0, // Volta tensor cores have no INT8 double-rate
+            tdp_w: 250.0,
+            price_usd: 12000.0,
+        }
+    }
+
+    pub fn a100() -> Self {
+        Self {
+            name: "A100".into(),
+            freq_mhz: 1065.0,
+            tensor_cores: 432,
+            mem_gb: 80.0,
+            bandwidth_gbs: 1935.0,
+            peak_fp16_tflops: 312.0,
+            peak_int8_tops: 624.0,
+            tdp_w: 400.0,
+            price_usd: 17000.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u280_matches_table2() {
+        let p = Platform::u280();
+        assert_eq!(p.dsp_total, 9024);
+        assert_eq!(p.slr_count, 3);
+        assert!((p.hbm.bandwidth_gbs - 460.0).abs() < 1e-9);
+        assert!((p.ddr.bandwidth_gbs - 38.0).abs() < 1e-9);
+        assert!((p.hbm.capacity_gb - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vhk158_matches_table2() {
+        let p = Platform::vhk158();
+        assert_eq!(p.dsp_total, 7392);
+        assert!((p.hbm.bandwidth_gbs - 819.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hbm_latency_exceeds_ddr_latency() {
+        // The §4.4 asymmetry that motivates the hybrid placement.
+        let p = Platform::u280();
+        assert!(p.hbm.latency_ns > p.ddr.latency_ns);
+    }
+
+    #[test]
+    fn small_access_favors_ddr_large_favors_hbm() {
+        let p = Platform::u280();
+        // ~100 B SFU-style access: DDR wins on latency.
+        assert!(p.ddr.access_ns(128) < p.hbm.access_ns(128));
+        // ~MB MPE-style access: HBM wins on bandwidth.
+        assert!(p.hbm.access_ns(4 << 20) < p.ddr.access_ns(4 << 20));
+    }
+
+    #[test]
+    fn gpu_presets_match_table2() {
+        let v = GpuConfig::v100s();
+        assert!((v.bandwidth_gbs - 1134.0).abs() < 1e-9);
+        assert_eq!(v.tensor_cores, 640);
+        let a = GpuConfig::a100();
+        assert!((a.bandwidth_gbs - 1935.0).abs() < 1e-9);
+        assert_eq!(a.tensor_cores, 432);
+    }
+}

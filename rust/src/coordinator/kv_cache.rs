@@ -1,0 +1,216 @@
+//! Paged KV-cache manager (vLLM-style [31], which the paper uses as its
+//! GPU-opt baseline and whose paging FlightLLM's HBM KV layout mirrors):
+//! fixed-size token pages allocated per sequence, with exact accounting
+//! so the scheduler can admission-control instead of OOMing mid-decode.
+
+use std::collections::HashMap;
+
+/// Errors the pool can raise.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KvError {
+    OutOfPages { need: usize, free: usize },
+    UnknownSeq(u64),
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfPages { need, free } => {
+                write!(f, "KV pool exhausted: need {need} pages, {free} free")
+            }
+            KvError::UnknownSeq(id) => write!(f, "unknown sequence {id}"),
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+/// Pages owned by one sequence.
+#[derive(Debug, Clone, Default)]
+pub struct SeqPages {
+    pub pages: Vec<u32>,
+    pub tokens: usize,
+}
+
+/// A pool of KV pages of `page_tokens` tokens each.
+#[derive(Debug)]
+pub struct PagePool {
+    page_tokens: usize,
+    free: Vec<u32>,
+    seqs: HashMap<u64, SeqPages>,
+    total: usize,
+}
+
+impl PagePool {
+    pub fn new(total_pages: usize, page_tokens: usize) -> Self {
+        assert!(page_tokens > 0 && total_pages > 0);
+        Self {
+            page_tokens,
+            free: (0..total_pages as u32).rev().collect(),
+            seqs: HashMap::new(),
+            total: total_pages,
+        }
+    }
+
+    /// Pool sized for a model: `hbm_kv_bytes` budget, `bytes_per_token`
+    /// of KV per token.
+    pub fn for_budget(hbm_kv_bytes: u64, bytes_per_token: u64, page_tokens: usize) -> Self {
+        let pages = (hbm_kv_bytes / (bytes_per_token * page_tokens as u64)).max(1);
+        Self::new(pages as usize, page_tokens)
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Can `tokens` more tokens be appended to `seq` (or a new seq)?
+    pub fn can_grow(&self, seq: u64, tokens: usize) -> bool {
+        let cur = self.seqs.get(&seq).map(|s| (s.pages.len(), s.tokens)).unwrap_or((0, 0));
+        let need = self.pages_for(cur.1 + tokens).saturating_sub(cur.0);
+        need <= self.free.len()
+    }
+
+    /// Register a sequence and allocate pages for its prompt.
+    pub fn admit(&mut self, seq: u64, prompt_tokens: usize) -> Result<(), KvError> {
+        let need = self.pages_for(prompt_tokens);
+        if need > self.free.len() {
+            return Err(KvError::OutOfPages { need, free: self.free.len() });
+        }
+        let pages = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.seqs.insert(seq, SeqPages { pages, tokens: prompt_tokens });
+        Ok(())
+    }
+
+    /// Append one generated token, growing by a page at boundaries.
+    pub fn append(&mut self, seq: u64) -> Result<(), KvError> {
+        let s = self.seqs.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        let need = (s.tokens + 1).div_ceil(self.page_tokens);
+        if need > s.pages.len() {
+            match self.free.pop() {
+                Some(p) => s.pages.push(p),
+                None => return Err(KvError::OutOfPages { need: 1, free: 0 }),
+            }
+        }
+        s.tokens += 1;
+        Ok(())
+    }
+
+    /// Release a finished sequence's pages.
+    pub fn release(&mut self, seq: u64) -> Result<(), KvError> {
+        let s = self.seqs.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        self.free.extend(s.pages);
+        Ok(())
+    }
+
+    pub fn seq(&self, seq: u64) -> Option<&SeqPages> {
+        self.seqs.get(&seq)
+    }
+
+    /// Invariant: every page is either free or owned by exactly one seq.
+    pub fn check_invariants(&self) -> bool {
+        let mut seen = std::collections::HashSet::new();
+        for &p in &self.free {
+            if !seen.insert(p) {
+                return false;
+            }
+        }
+        for s in self.seqs.values() {
+            for &p in &s.pages {
+                if !seen.insert(p) {
+                    return false;
+                }
+            }
+            // Owned pages must cover the tokens.
+            if s.pages.len() < s.tokens.div_ceil(self.page_tokens) {
+                return false;
+            }
+        }
+        seen.len() == self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn admit_and_release_roundtrip() {
+        let mut p = PagePool::new(16, 16);
+        p.admit(1, 40).unwrap(); // 3 pages
+        assert_eq!(p.used_pages(), 3);
+        p.release(1).unwrap();
+        assert_eq!(p.used_pages(), 0);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn append_grows_at_page_boundary() {
+        let mut p = PagePool::new(4, 4);
+        p.admit(1, 4).unwrap(); // exactly 1 page
+        assert_eq!(p.used_pages(), 1);
+        p.append(1).unwrap(); // token 5 → second page
+        assert_eq!(p.used_pages(), 2);
+        for _ in 0..3 {
+            p.append(1).unwrap(); // fills page 2, no growth
+        }
+        assert_eq!(p.used_pages(), 2);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn exhaustion_is_reported_not_corrupted() {
+        let mut p = PagePool::new(2, 16);
+        p.admit(1, 32).unwrap();
+        assert_eq!(p.admit(2, 1), Err(KvError::OutOfPages { need: 1, free: 0 }));
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn can_grow_predicts_append() {
+        let mut p = PagePool::new(2, 4);
+        p.admit(1, 4).unwrap();
+        assert!(p.can_grow(1, 1));
+        p.admit(2, 4).unwrap();
+        assert!(!p.can_grow(1, 1), "no free page left");
+    }
+
+    #[test]
+    fn property_no_double_allocation() {
+        proptest::check("kv pages never double-allocated", |r| {
+            let mut p = PagePool::new(8, 8);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..64 {
+                match r.below(3) {
+                    0 => {
+                        let id = next_id;
+                        next_id += 1;
+                        if p.admit(id, 1 + r.below(24) as usize).is_ok() {
+                            live.push(id);
+                        }
+                    }
+                    1 if !live.is_empty() => {
+                        let id = *r.choose(&live);
+                        let _ = p.append(id);
+                    }
+                    2 if !live.is_empty() => {
+                        let i = r.range(0, live.len());
+                        let id = live.swap_remove(i);
+                        p.release(id).unwrap();
+                    }
+                    _ => {}
+                }
+                assert!(p.check_invariants(), "invariant broken");
+            }
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 serving coordinator: request queue, prefill/decode scheduling,
+//! paged KV-cache management, sampling, and the serving loop that drives
+//! real token generation through the PJRT runtime.
+//!
+//! FlightLLM's own runtime is single-batch latency-oriented (§1); the
+//! coordinator implements that policy by default and a round-robin
+//! multi-batch mode for the Fig. 15 study.
+
+mod kv_cache;
+mod sampler;
+mod scheduler;
+mod server;
+
+pub use kv_cache::{KvError, PagePool, SeqPages};
+pub use sampler::Sampler;
+pub use scheduler::{Scheduler, SchedulerConfig, SeqState};
+pub use server::{ModelBackend, RequestResult, ServeStats, Server};

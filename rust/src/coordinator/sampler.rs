@@ -1,0 +1,89 @@
+//! Token sampling: greedy (the latency-benchmark default) and
+//! temperature sampling for the interactive demo.
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub enum Sampler {
+    Greedy,
+    Temperature { t: f64, rng: Rng },
+}
+
+impl Sampler {
+    pub fn greedy() -> Self {
+        Sampler::Greedy
+    }
+
+    pub fn temperature(t: f64, seed: u64) -> Self {
+        assert!(t > 0.0);
+        Sampler::Temperature { t, rng: Rng::new(seed) }
+    }
+
+    /// Pick the next token id from logits.
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        match self {
+            Sampler::Greedy => argmax(logits) as u32,
+            Sampler::Temperature { t, rng } => {
+                let m = logits.iter().fold(f32::MIN, |a, &b| a.max(b));
+                let exps: Vec<f64> =
+                    logits.iter().map(|&l| (((l - m) as f64) / *t).exp()).collect();
+                let total: f64 = exps.iter().sum();
+                let mut u = rng.f64() * total;
+                for (i, e) in exps.iter().enumerate() {
+                    u -= e;
+                    if u <= 0.0 {
+                        return i as u32;
+                    }
+                }
+                (logits.len() - 1) as u32
+            }
+        }
+    }
+}
+
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut s = Sampler::greedy();
+        assert_eq!(s.sample(&[0.1, 2.0, -1.0, 1.9]), 1);
+    }
+
+    #[test]
+    fn temperature_prefers_high_logits() {
+        let mut s = Sampler::temperature(0.5, 42);
+        let logits = [0.0f32, 5.0, 0.0, 0.0];
+        let mut hits = 0;
+        for _ in 0..200 {
+            if s.sample(&logits) == 1 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 180, "high-logit token sampled {hits}/200");
+    }
+
+    #[test]
+    fn temperature_is_stochastic_but_valid() {
+        let mut s = Sampler::temperature(2.0, 7);
+        let logits = [1.0f32, 1.1, 0.9, 1.05];
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            let t = s.sample(&logits);
+            assert!((t as usize) < logits.len());
+            seen.insert(t);
+        }
+        assert!(seen.len() >= 3, "high temperature should spread mass");
+    }
+}

@@ -1,0 +1,293 @@
+//! Prefill/decode scheduler.
+//!
+//! Policy (latency-oriented, §1's batch-size-1 regime): admit the oldest
+//! waiting request whenever a batch slot and KV pages are available;
+//! decode running sequences round-robin; a new prefill preempts nothing
+//! (prefill happens when a slot opens).  `max_batch > 1` gives the
+//! Fig. 15 multi-batch mode.
+
+use std::collections::VecDeque;
+
+use crate::workload::Request;
+
+use super::kv_cache::PagePool;
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Concurrent sequences in decode (batch size; paper default 1).
+    pub max_batch: usize,
+    /// KV page pool geometry.
+    pub kv_pages: usize,
+    pub page_tokens: usize,
+    /// Hard cap on context (model max_seq).
+    pub max_seq: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { max_batch: 1, kv_pages: 64, page_tokens: 16, max_seq: 256 }
+    }
+}
+
+/// A running sequence.
+#[derive(Debug)]
+pub struct SeqState {
+    pub req: Request,
+    /// Tokens generated so far.
+    pub generated: Vec<u32>,
+    /// Context length currently in the KV cache.
+    pub ctx: usize,
+    /// Whether prefill has run.
+    pub prefilled: bool,
+    /// Time the request was admitted (set by the server).
+    pub admitted_s: f64,
+}
+
+impl SeqState {
+    pub fn done(&self) -> bool {
+        self.prefilled && self.generated.len() >= self.req.max_new_tokens as usize
+    }
+}
+
+/// What the scheduler wants executed next.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Run prefill for sequence `seq`.
+    Prefill { seq: u64 },
+    /// Run one decode step for sequence `seq`.
+    Decode { seq: u64 },
+    /// Nothing runnable (queue empty or blocked on capacity).
+    Idle,
+}
+
+#[derive(Debug)]
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+    waiting: VecDeque<Request>,
+    running: Vec<SeqState>,
+    pub pool: PagePool,
+    rr_cursor: usize,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        let pool = PagePool::new(cfg.kv_pages, cfg.page_tokens);
+        Self { cfg, waiting: VecDeque::new(), running: Vec::new(), pool, rr_cursor: 0 }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.waiting.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running(&self) -> &[SeqState] {
+        &self.running
+    }
+
+    pub fn seq_mut(&mut self, seq: u64) -> Option<&mut SeqState> {
+        self.running.iter_mut().find(|s| s.req.id == seq)
+    }
+
+    /// Decide the next action. Admission: oldest waiting request enters
+    /// when a batch slot is free and its prompt fits the KV pool.
+    pub fn next_action(&mut self, now_s: f64) -> Action {
+        // Admit if possible.
+        if self.running.len() < self.cfg.max_batch {
+            if let Some(req) = self.waiting.front() {
+                let plen = req.prompt.len().min(self.cfg.max_seq);
+                if self.pool.can_grow(req.id, plen) {
+                    let req = self.waiting.pop_front().unwrap();
+                    self.pool
+                        .admit(req.id, plen)
+                        .expect("can_grow guaranteed admission");
+                    let id = req.id;
+                    self.running.push(SeqState {
+                        req,
+                        generated: Vec::new(),
+                        ctx: plen,
+                        prefilled: false,
+                        admitted_s: now_s,
+                    });
+                    return Action::Prefill { seq: id };
+                }
+            }
+        }
+        // Any admitted-but-not-prefilled sequence (shouldn't linger, but
+        // be robust to callers that interleave).
+        if let Some(s) = self.running.iter().find(|s| !s.prefilled) {
+            return Action::Prefill { seq: s.req.id };
+        }
+        // Round-robin decode across running sequences.
+        if self.running.is_empty() {
+            return Action::Idle;
+        }
+        let n = self.running.len();
+        for k in 0..n {
+            let i = (self.rr_cursor + k) % n;
+            if !self.running[i].done() && self.running[i].ctx < self.cfg.max_seq {
+                self.rr_cursor = (i + 1) % n;
+                return Action::Decode { seq: self.running[i].req.id };
+            }
+        }
+        Action::Idle
+    }
+
+    /// Record a prefill completion (first token produced).
+    pub fn on_prefill_done(&mut self, seq: u64, first_token: u32) {
+        if let Some(s) = self.seq_mut(seq) {
+            s.prefilled = true;
+            s.generated.push(first_token);
+        }
+    }
+
+    /// Record a decode step; returns true if the sequence just finished.
+    pub fn on_decode_done(&mut self, seq: u64, token: u32) -> bool {
+        let page = self.pool.append(seq).is_ok();
+        if let Some(s) = self.seq_mut(seq) {
+            if page {
+                s.ctx += 1;
+            }
+            s.generated.push(token);
+            if s.done() || s.ctx >= self.cfg.max_seq {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Remove a finished sequence, releasing its pages.
+    pub fn retire(&mut self, seq: u64) -> Option<SeqState> {
+        let idx = self.running.iter().position(|s| s.req.id == seq)?;
+        let s = self.running.swap_remove(idx);
+        let _ = self.pool.release(seq);
+        if self.rr_cursor >= self.running.len() {
+            self.rr_cursor = 0;
+        }
+        Some(s)
+    }
+
+    pub fn is_drained(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::workload::{generate_trace, TraceConfig};
+
+    fn req(id: u64, plen: usize, dlen: u32) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            prompt: vec![1; plen],
+            max_new_tokens: dlen,
+        }
+    }
+
+    #[test]
+    fn single_batch_runs_one_request_to_completion() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        s.submit(req(0, 16, 3));
+        s.submit(req(1, 16, 3));
+        assert_eq!(s.next_action(0.0), Action::Prefill { seq: 0 });
+        s.on_prefill_done(0, 7);
+        // batch=1: request 1 must NOT be admitted while 0 runs.
+        assert_eq!(s.next_action(0.0), Action::Decode { seq: 0 });
+        assert!(!s.on_decode_done(0, 8));
+        assert_eq!(s.next_action(0.0), Action::Decode { seq: 0 });
+        assert!(s.on_decode_done(0, 9)); // 3 tokens total → done
+        s.retire(0);
+        assert_eq!(s.next_action(0.0), Action::Prefill { seq: 1 });
+    }
+
+    #[test]
+    fn multibatch_round_robins() {
+        let mut s = Scheduler::new(SchedulerConfig { max_batch: 2, ..Default::default() });
+        s.submit(req(0, 16, 8));
+        s.submit(req(1, 16, 8));
+        assert_eq!(s.next_action(0.0), Action::Prefill { seq: 0 });
+        s.on_prefill_done(0, 1);
+        assert_eq!(s.next_action(0.0), Action::Prefill { seq: 1 });
+        s.on_prefill_done(1, 1);
+        let a = s.next_action(0.0);
+        let b = s.next_action(0.0);
+        assert_ne!(a, b, "round-robin must alternate: {a:?} vs {b:?}");
+    }
+
+    #[test]
+    fn admission_blocked_by_kv_capacity() {
+        let cfg = SchedulerConfig {
+            max_batch: 4,
+            kv_pages: 2,
+            page_tokens: 16,
+            max_seq: 256,
+        };
+        let mut s = Scheduler::new(cfg);
+        s.submit(req(0, 32, 4)); // takes both pages
+        s.submit(req(1, 16, 4));
+        assert_eq!(s.next_action(0.0), Action::Prefill { seq: 0 });
+        s.on_prefill_done(0, 1);
+        // No pages left: request 1 can't be admitted; 0 decodes instead.
+        assert!(matches!(s.next_action(0.0), Action::Decode { seq: 0 }));
+    }
+
+    #[test]
+    fn context_cap_finishes_sequence() {
+        let cfg = SchedulerConfig { max_seq: 18, ..Default::default() };
+        let mut s = Scheduler::new(cfg);
+        s.submit(req(0, 16, 100));
+        s.next_action(0.0);
+        s.on_prefill_done(0, 1);
+        s.next_action(0.0);
+        assert!(!s.on_decode_done(0, 2)); // ctx 17
+        s.next_action(0.0);
+        assert!(s.on_decode_done(0, 3)); // ctx 18 == max_seq → finished
+    }
+
+    #[test]
+    fn property_scheduler_never_starves() {
+        // Every submitted request eventually completes under any
+        // interleaving of batch sizes and lengths.
+        proptest::check_with("scheduler liveness", 64, |r| {
+            let cfg = SchedulerConfig {
+                max_batch: 1 + r.below(4) as usize,
+                kv_pages: 32,
+                page_tokens: 8,
+                max_seq: 64,
+            };
+            let mut s = Scheduler::new(cfg);
+            let trace = generate_trace(&TraceConfig {
+                n_requests: 6,
+                prompt_len_choices: vec![4, 8, 16],
+                decode_len_choices: vec![2, 4, 8],
+                seed: r.next_u64(),
+                ..Default::default()
+            });
+            let total = trace.len();
+            for t in trace {
+                s.submit(t);
+            }
+            let mut finished = 0;
+            for step in 0..10_000 {
+                match s.next_action(step as f64) {
+                    Action::Prefill { seq } => s.on_prefill_done(seq, 1),
+                    Action::Decode { seq } => {
+                        if s.on_decode_done(seq, 2) {
+                            s.retire(seq);
+                            finished += 1;
+                        }
+                    }
+                    Action::Idle => break,
+                }
+            }
+            assert_eq!(finished, total, "all requests must finish");
+            assert!(s.is_drained());
+            assert!(s.pool.check_invariants());
+        });
+    }
+}

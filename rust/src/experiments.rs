@@ -1,0 +1,273 @@
+//! Experiment drivers shared by the benches, examples and CLI: produce
+//! paper-figure measurements from the simulator (FlightLLM) and the
+//! analytical baselines, over the [prefill, decode] grids of §6.
+//!
+//! Decode steps are simulated per length-adaptive *bucket* (one stream
+//! per bucket × steps in that bucket) — exactly how the deployed system
+//! executes (§5.2), and what keeps the grid sweeps fast.
+
+use crate::baselines::AnalyticalModel;
+use crate::compiler::{lower, BucketPlan, CompilerOptions, VecSink};
+use crate::config::{CompressionConfig, Target};
+use crate::ir::{passes, Graph, Stage};
+use crate::metrics::{EvalPoint, Measurement};
+use crate::sim::{Engine, PowerModel, SimReport};
+
+/// Simulate one stream for a target.
+fn run_stage(t: &Target, stage: Stage, opt: CompilerOptions, csd: bool) -> SimReport {
+    let mut g = Graph::from_model(&t.model, &t.compression, stage);
+    passes::optimize(&mut g);
+    let mut sink = VecSink::default();
+    lower(&g, t, opt, &mut sink);
+    Engine::for_target(t, csd).run(&sink.0)
+}
+
+/// FlightLLM configuration under test (ablation rungs of Fig. 14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlightConfig {
+    /// Dense fp16 port, activations round-trip off-chip, no CSD chain.
+    Naive,
+    /// + N:M weight pruning, block-sparse attention, CSD chain.
+    Sparse,
+    /// + always-on-chip decode with mixed-precision (the full system).
+    Full,
+}
+
+impl FlightConfig {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FlightConfig::Naive => "naive U280 port",
+            FlightConfig::Sparse => "+ sparse DSP chain",
+            FlightConfig::Full => "+ always-on-chip decode",
+        }
+    }
+
+    fn compression(&self, full: &CompressionConfig) -> CompressionConfig {
+        match self {
+            // The naive port still stores weights in INT8 — an fp16 7B
+            // model would not fit U280's 8 GB HBM at all (the Fig. 14
+            // baseline runs, so it must be at least W8).
+            FlightConfig::Naive => CompressionConfig {
+                quantization: true,
+                weight_bits: 8.0,
+                act_bits: 8,
+                ..CompressionConfig::none()
+            },
+            FlightConfig::Sparse => CompressionConfig {
+                quantization: true,
+                weight_bits: 8.0,
+                act_bits: 8,
+                ..full.clone()
+            },
+            FlightConfig::Full => full.clone(),
+        }
+    }
+
+    fn options(&self) -> CompilerOptions {
+        match self {
+            FlightConfig::Naive => CompilerOptions::naive(),
+            FlightConfig::Sparse => CompilerOptions {
+                onchip_decode: false,
+                ..CompilerOptions::full()
+            },
+            FlightConfig::Full => CompilerOptions::full(),
+        }
+    }
+
+    fn csd(&self) -> bool {
+        !matches!(self, FlightConfig::Naive)
+    }
+}
+
+/// Measure FlightLLM on one evaluation point.
+pub fn flightllm_measure(target: &Target, pt: EvalPoint, cfg: FlightConfig) -> Measurement {
+    let t = Target { compression: cfg.compression(&target.compression), ..target.clone() };
+    let opt = cfg.options();
+    let plan = BucketPlan::paper_default(t.model.max_seq);
+
+    // Prefill once at its bucket.
+    let pre_bucket = plan.prefill_bucket(pt.prefill.max(1));
+    let pre = run_stage(&t, Stage::Prefill { n: pre_bucket }, opt, cfg.csd());
+
+    // Decode: group steps by their context bucket.
+    let mut decode_ns = 0.0;
+    let mut macs = 0u64;
+    let mut hbm_bytes = 0u64;
+    let mut last: Option<SimReport> = None;
+    let mut i = 0u64;
+    while i < pt.decode {
+        let ctx = pt.prefill + i;
+        let bucket = plan.decode_bucket(ctx.max(1));
+        // All steps whose ctx falls in this bucket share the stream.
+        let steps_in_bucket = (bucket.saturating_sub(ctx) + 1).min(pt.decode - i);
+        let rep = run_stage(&t, Stage::Decode { ctx: bucket }, opt, cfg.csd());
+        decode_ns += rep.total_ns * steps_in_bucket as f64;
+        macs += rep.macs * steps_in_bucket;
+        hbm_bytes += rep.hbm_bytes * steps_in_bucket;
+        last = Some(rep);
+        i += steps_in_bucket;
+    }
+    let decode_rep = last.unwrap_or_default();
+
+    let power = PowerModel::for_platform(&t.platform, t.accel.macs_per_cycle());
+    let combined = SimReport {
+        total_ns: pre.total_ns + decode_ns,
+        macs: pre.macs + macs,
+        hbm_bytes: pre.hbm_bytes + hbm_bytes,
+        ..decode_rep.clone()
+    };
+    Measurement {
+        system: format!("FlightLLM-{} ({})", t.platform.name, cfg.label()),
+        point: pt,
+        latency_s: (pre.total_ns + decode_ns) * 1e-9,
+        decode_tps: if decode_ns > 0.0 {
+            pt.decode as f64 / (decode_ns * 1e-9)
+        } else {
+            0.0
+        },
+        power_w: power.avg_watts(&combined),
+        bw_util: decode_rep.hbm_bw_util,
+        price_usd: t.platform.price_usd,
+    }
+}
+
+/// Convenience: the shipping configuration.
+pub fn flightllm_full(target: &Target, pt: EvalPoint) -> Measurement {
+    flightllm_measure(target, pt, FlightConfig::Full)
+}
+
+/// Multi-batch decode throughput (Fig. 15): aggregate tokens/s when
+/// `batch` sequences decode together at context `ctx`.
+pub fn flightllm_batch_tps(target: &Target, ctx: u64, batch: u32) -> f64 {
+    let opt = crate::compiler::CompilerOptions::with_batch(batch);
+    let rep = run_stage(target, Stage::Decode { ctx }, opt, true);
+    if rep.total_ns <= 0.0 {
+        return 0.0;
+    }
+    batch as f64 * 1e9 / rep.total_ns
+}
+
+/// Fig. 14's three rungs, normalized against a V100S-opt baseline the
+/// way the paper plots them.
+pub fn fig14_rungs(target: &Target, pt: EvalPoint) -> Vec<(String, Measurement)> {
+    [FlightConfig::Naive, FlightConfig::Sparse, FlightConfig::Full]
+        .into_iter()
+        .map(|c| (c.label().to_string(), flightllm_measure(target, pt, c)))
+        .collect()
+}
+
+/// Baseline measurement helper.
+pub fn baseline_measure(b: &AnalyticalModel, target: &Target, pt: EvalPoint) -> Measurement {
+    b.measure(&target.model, pt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{cta, dfx, fact, GpuStack, GpuSystem};
+    use crate::config::Target;
+
+    fn pt() -> EvalPoint {
+        EvalPoint { prefill: 128, decode: 128 }
+    }
+
+    #[test]
+    fn fig14_rungs_are_monotone() {
+        // Each added technique must improve end-to-end latency.
+        let rungs = fig14_rungs(&Target::u280_llama2(), pt());
+        assert_eq!(rungs.len(), 3);
+        assert!(
+            rungs[1].1.latency_s < rungs[0].1.latency_s,
+            "sparse DSP chain must help: {} vs {}",
+            rungs[1].1.latency_s,
+            rungs[0].1.latency_s
+        );
+        assert!(
+            rungs[2].1.latency_s < rungs[1].1.latency_s,
+            "always-on-chip decode must help further"
+        );
+    }
+
+    #[test]
+    fn fig14_total_gain_in_paper_band() {
+        // Paper: naive → full is 1.6-1.7× on U280.
+        let rungs = fig14_rungs(&Target::u280_llama2(), pt());
+        let gain = rungs[0].1.latency_s / rungs[2].1.latency_s;
+        assert!(
+            gain > 1.3 && gain < 4.0,
+            "naive→full gain = {gain:.2} (paper: 1.6-1.7×)"
+        );
+    }
+
+    #[test]
+    fn flightllm_u280_beats_v100s_opt_and_dfx() {
+        // Fig. 11 + Fig. 12 headline orderings at [128, 128].
+        let t = Target::u280_llama2();
+        let fl = flightllm_full(&t, pt());
+        let v100 = GpuSystem::v100s(GpuStack::Opt).model().measure(&t.model, pt());
+        assert!(
+            fl.latency_s < v100.latency_s,
+            "FlightLLM {:.3}s must beat V100S-opt {:.3}s",
+            fl.latency_s,
+            v100.latency_s
+        );
+        let d = dfx().measure(&t.model, pt());
+        let speedup = d.latency_s / fl.latency_s;
+        // Paper geomean is 2.7×; a pure traffic roofline (4.6× fewer
+        // bytes × higher utilization) puts the physics-consistent value
+        // higher — see EXPERIMENTS.md fig12 discussion.
+        assert!(
+            speedup > 2.0 && speedup < 9.0,
+            "FlightLLM vs DFX = {speedup:.2}× (paper geomean 2.7×)"
+        );
+    }
+
+    #[test]
+    fn vhk158_beats_u280() {
+        let u = flightllm_full(&Target::u280_llama2(), pt());
+        let v = flightllm_full(&Target::vhk158_llama2(), pt());
+        assert!(v.latency_s < u.latency_s, "VHK158 (819 GB/s) must lead");
+    }
+
+    #[test]
+    fn energy_efficiency_beats_gpus_by_paper_factor() {
+        // Fig. 13: 6.0× over V100S-opt, 4.2× over A100-opt class.
+        let t = Target::u280_llama2();
+        let fl = flightllm_full(&t, pt());
+        let v = GpuSystem::v100s(GpuStack::Opt).model().measure(&t.model, pt());
+        let ratio = fl.tokens_per_joule() / v.tokens_per_joule();
+        assert!(
+            ratio > 3.0 && ratio < 12.0,
+            "energy efficiency vs V100S-opt = {ratio:.1}× (paper 5.5-6×)"
+        );
+    }
+
+    #[test]
+    fn bandwidth_utilization_in_paper_band() {
+        // Table 5: FlightLLM U280 = 65.9%.
+        let t = Target::u280_llama2();
+        let m = flightllm_full(&t, EvalPoint { prefill: 128, decode: 512 });
+        assert!(
+            m.bw_util > 0.5 && m.bw_util < 0.85,
+            "U280 decode HBM utilization = {:.1}% (paper 65.9%)",
+            m.bw_util * 100.0
+        );
+    }
+
+    #[test]
+    fn accelerator_ordering_matches_fig12() {
+        let t = Target::u280_opt();
+        let p = EvalPoint { prefill: 128, decode: 512 };
+        let fl = flightllm_full(&t, p);
+        for b in [dfx(), cta(), fact()] {
+            let m = b.measure(&t.model, p);
+            assert!(
+                fl.latency_s < m.latency_s,
+                "FlightLLM must lead {}: {:.3} vs {:.3}",
+                m.system,
+                fl.latency_s,
+                m.latency_s
+            );
+        }
+    }
+}

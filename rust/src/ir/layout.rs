@@ -1,0 +1,182 @@
+//! Memory layout assignment (Fig. 9 "address assign" + §4.4 policy):
+//! large streaming tensors go to HBM, partitioned round-robin across
+//! pseudo-channels to keep every channel busy; small-single-access data
+//! (lookup tables, misc params) goes to DDR for its lower latency.
+
+use std::collections::HashMap;
+
+
+use crate::config::Platform;
+
+use super::graph::{Graph, TensorId};
+
+/// Where a tensor landed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// HBM starting at `addr`, striped over `channels` consecutive
+    /// channels beginning at `first_channel`.
+    Hbm { addr: u64, first_channel: u8, channels: u8 },
+    Ddr { addr: u64 },
+}
+
+/// Result of address assignment.
+#[derive(Debug, Clone)]
+pub struct AddressMap {
+    pub placements: HashMap<TensorId, Placement>,
+    pub hbm_used: u64,
+    pub ddr_used: u64,
+}
+
+/// Tensors above this single-access size stream from HBM (§4.4: "~M Bytes"
+/// vs "~100 Bytes").
+const SMALL_ACCESS_BYTES: u64 = 64 * 1024;
+
+/// Channels ganged per large tensor — matches the 8-channel LD/ST merge.
+const STRIPE_CHANNELS: u8 = 8;
+
+pub fn assign_addresses(g: &Graph, platform: &Platform) -> Result<AddressMap, LayoutError> {
+    let mut placements = HashMap::new();
+    let mut hbm_cursor = 0u64;
+    let mut ddr_cursor = 0u64;
+    let mut next_first_channel: u8 = 0;
+    let hbm_cap = (platform.hbm.capacity_gb * 1e9) as u64;
+    let ddr_cap = (platform.ddr.capacity_gb * 1e9) as u64;
+
+    for (id, t) in g.tensors.iter().enumerate() {
+        if t.small_access || t.bytes <= SMALL_ACCESS_BYTES {
+            let addr = ddr_cursor;
+            ddr_cursor += align(t.bytes, 64);
+            if ddr_cursor > ddr_cap {
+                return Err(LayoutError::DdrOverflow { need: ddr_cursor, cap: ddr_cap });
+            }
+            placements.insert(id, Placement::Ddr { addr });
+        } else {
+            let addr = hbm_cursor;
+            hbm_cursor += align(t.bytes, 4096);
+            if hbm_cursor > hbm_cap {
+                return Err(LayoutError::HbmOverflow { need: hbm_cursor, cap: hbm_cap });
+            }
+            let fc = next_first_channel;
+            // Round-robin the stripe start so channels load evenly
+            // ("partitioned into appropriate channels to prevent
+            // inefficient access", §5.4).
+            next_first_channel =
+                (next_first_channel + STRIPE_CHANNELS) % platform.hbm.channels as u8;
+            placements.insert(
+                id,
+                Placement::Hbm { addr, first_channel: fc, channels: STRIPE_CHANNELS },
+            );
+        }
+    }
+    Ok(AddressMap { placements, hbm_used: hbm_cursor, ddr_used: ddr_cursor })
+}
+
+fn align(v: u64, a: u64) -> u64 {
+    v.div_ceil(a) * a
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayoutError {
+    HbmOverflow { need: u64, cap: u64 },
+    DdrOverflow { need: u64, cap: u64 },
+}
+
+impl std::fmt::Display for LayoutError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LayoutError::HbmOverflow { need, cap } =>
+
+                write!(f, "HBM overflow: need {need} B > {cap} B — model too large for always-on-chip decode without (more) compression"),
+            LayoutError::DdrOverflow { need, cap } => {
+                write!(f, "DDR overflow: need {need} B > {cap} B")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LayoutError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressionConfig, ModelConfig};
+    use crate::ir::graph::Stage;
+    use crate::ir::passes;
+
+    fn laid_out(c: &CompressionConfig) -> Result<AddressMap, LayoutError> {
+        let m = ModelConfig::llama2_7b();
+        let mut g = Graph::from_model(&m, c, Stage::Decode { ctx: 2048 });
+        passes::optimize(&mut g);
+        assign_addresses(&g, &Platform::u280())
+    }
+
+    #[test]
+    fn compressed_llama_fits_hbm() {
+        let map = laid_out(&CompressionConfig::paper_default()).unwrap();
+        assert!(map.hbm_used < 8_000_000_000, "hbm = {}", map.hbm_used);
+        assert!(map.ddr_used > 0, "luts should land on DDR");
+    }
+
+    #[test]
+    fn uncompressed_llama_overflows_hbm() {
+        // fp16 LLaMA2-7B (13.5 GB) cannot live in U280's 8 GB HBM — the
+        // motivation for the compression recipe.
+        match laid_out(&CompressionConfig::none()) {
+            Err(LayoutError::HbmOverflow { .. }) => {}
+            other => panic!("expected HBM overflow, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn small_tensors_go_to_ddr() {
+        let m = ModelConfig::tiny();
+        let mut g = Graph::from_model(
+            &m,
+            &CompressionConfig::paper_default(),
+            Stage::Decode { ctx: 64 },
+        );
+        passes::optimize(&mut g);
+        let map = assign_addresses(&g, &Platform::u280()).unwrap();
+        for (id, t) in g.tensors.iter().enumerate() {
+            if t.small_access {
+                assert!(
+                    matches!(map.placements[&id], Placement::Ddr { .. }),
+                    "{} should be on DDR",
+                    t.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hbm_placements_do_not_overlap() {
+        let map = laid_out(&CompressionConfig::paper_default()).unwrap();
+        let mut spans: Vec<(u64, u64)> = map
+            .placements
+            .values()
+            .filter_map(|p| match p {
+                Placement::Hbm { addr, .. } => Some(*addr),
+                _ => None,
+            })
+            .map(|a| (a, a))
+            .collect();
+        spans.sort();
+        for w in spans.windows(2) {
+            assert!(w[0].0 != w[1].0, "duplicate HBM base address");
+        }
+    }
+
+    #[test]
+    fn channel_striping_round_robins() {
+        let map = laid_out(&CompressionConfig::paper_default()).unwrap();
+        let firsts: std::collections::HashSet<u8> = map
+            .placements
+            .values()
+            .filter_map(|p| match p {
+                Placement::Hbm { first_channel, .. } => Some(*first_channel),
+                _ => None,
+            })
+            .collect();
+        assert!(firsts.len() > 1, "stripes should rotate across channel groups");
+    }
+}

@@ -1,0 +1,17 @@
+//! Compiler IR — the customized intermediate representation of the
+//! mapping flow (§5.4, Fig. 9): the model's structure, weights metadata,
+//! sparse indexes and attention masks, exported from the source model and
+//! optimized before instruction generation.
+//!
+//! Pipeline: `Graph::from_model` (stands in for the PyTorch parser) →
+//! `passes::remove_views` → `passes::fuse` → `layout::assign_addresses` →
+//! `compiler::lower` (instruction generation).
+
+mod graph;
+mod layout;
+mod ops;
+pub mod passes;
+
+pub use graph::{Graph, Node, NodeId, Stage, Tensor, TensorId};
+pub use layout::{assign_addresses, AddressMap, Placement};
+pub use ops::{AttentionKind, Op};

@@ -1,0 +1,67 @@
+//! IR operation set. Deliberately close to the source model's layer
+//! vocabulary — fusion happens in passes, tiling happens in the compiler.
+
+
+use crate::isa::{MiscOp, Sparsity};
+
+/// Attention flavor after IR export.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AttentionKind {
+    /// Prefill: QK^T (SDDMM under the block mask), softmax, S·V.
+    Prefill { block_density: f64 },
+    /// Decode: MV against the KV cache at context length `ctx`.
+    Decode,
+}
+
+/// One IR operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Token embedding gather.
+    Embed,
+    /// Linear layer y = x·W^T (+SiLU/eltwise once fused).
+    Linear {
+        name: String,
+        out_dim: u64,
+        in_dim: u64,
+        sparsity: Sparsity,
+        weight_bits: f64,
+        /// MISC ops fused onto the MPE output stream (filled by passes).
+        fused: Vec<MiscOp>,
+    },
+    /// Attention over `heads` heads at head_dim `hd`.
+    Attention { kind: AttentionKind, heads: u64, hd: u64, fused_softmax: bool },
+    /// Standalone MISC op over a `len`-element vector (SFU).
+    Misc { op: MiscOp, len: u64 },
+    /// Data-layout view (reshape/transpose-free): removed by passes
+    /// because it does not change the physical arrangement (§5.4:
+    /// "removing the view() layers that do not impact data arrangement").
+    View { name: String },
+    /// Residual add (eltwise; fusable).
+    Residual { len: u64 },
+    /// LM head projection to vocab.
+    Head { vocab: u64, dim: u64 },
+    /// KV-cache append (decode) or bulk write (prefill).
+    KvWrite { bytes: u64 },
+}
+
+impl Op {
+    pub fn is_view(&self) -> bool {
+        matches!(self, Op::View { .. })
+    }
+
+    /// Is this op eligible to fuse *into* a preceding Linear?
+    pub fn fusable_misc(&self) -> Option<MiscOp> {
+        match self {
+            Op::Misc { op, .. }
+                if matches!(
+                    op,
+                    MiscOp::Silu | MiscOp::Gelu | MiscOp::EltwiseAdd | MiscOp::EltwiseMul
+                ) =>
+            {
+                Some(*op)
+            }
+            Op::Residual { .. } => Some(MiscOp::EltwiseAdd),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! IR optimization passes (§5.4, Fig. 9 "IR optimization"):
+//!
+//! 1. `remove_views` — view() layers don't change physical layout, drop
+//!    them.
+//! 2. `fuse` — attention+softmax fusion and linear+{SiLU, Gelu, Eltwise,
+//!    Residual} fusion, so the fused MISC rides the MPE output stream
+//!    instead of round-tripping through off-chip memory (§4.1).
+
+use crate::isa::MiscOp;
+
+use super::graph::Graph;
+use super::ops::Op;
+
+/// Drop all `View` nodes. Returns how many were removed.
+pub fn remove_views(g: &mut Graph) -> usize {
+    let before = g.nodes.len();
+    g.nodes.retain(|n| !n.op.is_view());
+    for (i, n) in g.nodes.iter_mut().enumerate() {
+        n.id = i;
+    }
+    before - g.nodes.len()
+}
+
+/// Fuse softmax into the preceding attention node and fusable MISC ops
+/// (SiLU/Gelu/Eltwise/Residual) into the preceding linear.  Returns the
+/// number of fused (removed) nodes.
+pub fn fuse(g: &mut Graph) -> usize {
+    let mut out: Vec<super::graph::Node> = Vec::with_capacity(g.nodes.len());
+    let mut fused = 0usize;
+    for node in g.nodes.drain(..) {
+        // softmax directly after attention → fold in.
+        if let Op::Misc { op: MiscOp::Softmax, .. } = node.op {
+            if let Some(prev) = out.last_mut() {
+                if let Op::Attention { fused_softmax, .. } = &mut prev.op {
+                    if !*fused_softmax {
+                        *fused_softmax = true;
+                        fused += 1;
+                        continue;
+                    }
+                }
+            }
+        }
+        // SiLU / Gelu / Eltwise / Residual after a linear → fold in.
+        if let Some(misc) = node.op.fusable_misc() {
+            if let Some(prev) = out.last_mut() {
+                if let Op::Linear { fused: fl, .. } = &mut prev.op {
+                    fl.push(misc);
+                    fused += 1;
+                    continue;
+                }
+            }
+        }
+        out.push(node);
+    }
+    for (i, n) in out.iter_mut().enumerate() {
+        n.id = i;
+    }
+    g.nodes = out;
+    fused
+}
+
+/// The standard pass pipeline.
+pub fn optimize(g: &mut Graph) -> OptStats {
+    let views = remove_views(g);
+    let fused = fuse(g);
+    OptStats { views_removed: views, ops_fused: fused }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OptStats {
+    pub views_removed: usize,
+    pub ops_fused: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressionConfig, ModelConfig};
+    use crate::ir::graph::Stage;
+
+    fn llama_graph() -> Graph {
+        Graph::from_model(
+            &ModelConfig::llama2_7b(),
+            &CompressionConfig::paper_default(),
+            Stage::Decode { ctx: 256 },
+        )
+    }
+
+    #[test]
+    fn remove_views_drops_all_views() {
+        let mut g = llama_graph();
+        let removed = remove_views(&mut g);
+        assert!(removed >= 32, "expected at least one view per layer");
+        assert_eq!(g.count_op(Op::is_view), 0);
+        // ids renumbered consecutively
+        for (i, n) in g.nodes.iter().enumerate() {
+            assert_eq!(n.id, i);
+        }
+    }
+
+    #[test]
+    fn fuse_attaches_softmax_to_attention() {
+        let mut g = llama_graph();
+        remove_views(&mut g);
+        fuse(&mut g);
+        for n in &g.nodes {
+            if let Op::Attention { fused_softmax, .. } = &n.op {
+                assert!(*fused_softmax, "softmax must be fused into attention");
+            }
+            assert!(
+                !matches!(n.op, Op::Misc { op: MiscOp::Softmax, .. }),
+                "standalone softmax must be gone"
+            );
+        }
+    }
+
+    #[test]
+    fn fuse_attaches_silu_and_eltwise_to_linears() {
+        let mut g = llama_graph();
+        remove_views(&mut g);
+        fuse(&mut g);
+        // w1 should carry SiLU, w3 should carry EltwiseMul (SwiGLU).
+        let w1 = g
+            .nodes
+            .iter()
+            .find_map(|n| match &n.op {
+                Op::Linear { name, fused, .. } if name == "l0.w1" => Some(fused.clone()),
+                _ => None,
+            })
+            .unwrap();
+        assert!(w1.contains(&MiscOp::Silu), "w1 fused = {w1:?}");
+        let w3 = g
+            .nodes
+            .iter()
+            .find_map(|n| match &n.op {
+                Op::Linear { name, fused, .. } if name == "l0.w3" => Some(fused.clone()),
+                _ => None,
+            })
+            .unwrap();
+        assert!(w3.contains(&MiscOp::EltwiseMul), "w3 fused = {w3:?}");
+    }
+
+    #[test]
+    fn optimize_reduces_node_count_but_keeps_linears() {
+        let mut g = llama_graph();
+        let lin_before = g.count_op(|o| matches!(o, Op::Linear { .. }));
+        let before = g.nodes.len();
+        let stats = optimize(&mut g);
+        assert!(stats.views_removed > 0 && stats.ops_fused > 0);
+        assert!(g.nodes.len() < before);
+        assert_eq!(g.count_op(|o| matches!(o, Op::Linear { .. })), lin_before);
+    }
+
+    #[test]
+    fn two_phase_norms_stay_standalone() {
+        // RMSNorm/LayerNorm/Softmax need the full vector before they can
+        // run (§3.3 two-phase) — they must NOT fuse into linears.
+        let mut g = llama_graph();
+        optimize(&mut g);
+        assert!(
+            g.count_op(|o| matches!(o, Op::Misc { op: MiscOp::RmsNorm, .. })) > 0,
+            "norms must survive fusion"
+        );
+    }
+}

@@ -1,0 +1,438 @@
+//! Fixed-width binary encoding of the ISA.
+//!
+//! Every instruction occupies 16 bytes (`INST_BYTES`), the coarse-grained
+//! word size the §5.2 storage accounting uses.  Layout (little-endian):
+//!
+//! ```text
+//! byte 0      opcode
+//! byte 1      sub-op / flags   (memspace, buffer, misc-op, sys-op, ...)
+//! byte 2..3   aux              (channel info, sparsity descriptor)
+//! byte 4..7   field0 (u32)     (bytes / m / k / len)
+//! byte 8..11  field1 (u32)     (k / n)
+//! byte 12..15 field2 (u32)     (n / addr-low; addr stored as 32-bit tile
+//!                               index — tiles are >= 64 B aligned)
+//! ```
+
+use super::{Inst, MemSpace, MiscOp, OnChipBuf, Sparsity, SysOp};
+
+/// Bytes per encoded instruction word.
+pub const INST_BYTES: usize = 16;
+
+const OP_LD: u8 = 0x01;
+const OP_ST: u8 = 0x02;
+const OP_MM: u8 = 0x03;
+const OP_MV: u8 = 0x04;
+const OP_MISC: u8 = 0x05;
+const OP_SYS: u8 = 0x06;
+const OP_LD_MERGED: u8 = 0x07;
+const OP_ST_MERGED: u8 = 0x08;
+
+/// Address granularity: addresses are stored as 64-byte tile indices so a
+/// 32-bit field covers 256 GB.
+const ADDR_ALIGN: u64 = 64;
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    BadOpcode(u8),
+    BadSubOp(u8, u8),
+    Truncated { have: usize },
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::BadOpcode(op) => write!(f, "bad opcode {op:#04x}"),
+            DecodeError::BadSubOp(op, sub) => {
+                write!(f, "bad sub-op {sub:#04x} for opcode {op:#04x}")
+            }
+            DecodeError::Truncated { have } => {
+                write!(f, "truncated instruction stream ({have} trailing bytes)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+fn memspace_byte(m: MemSpace) -> (u8, u8) {
+    match m {
+        MemSpace::Hbm { channel } => (0, channel),
+        MemSpace::Ddr => (1, 0),
+    }
+}
+
+fn memspace_from(b: u8, ch: u8) -> Result<MemSpace, DecodeError> {
+    match b {
+        0 => Ok(MemSpace::Hbm { channel: ch }),
+        1 => Ok(MemSpace::Ddr),
+        other => Err(DecodeError::BadSubOp(OP_LD, other)),
+    }
+}
+
+fn buf_byte(b: OnChipBuf) -> u8 {
+    match b {
+        OnChipBuf::Weight => 0,
+        OnChipBuf::Activation => 1,
+        OnChipBuf::Global => 2,
+        OnChipBuf::Index => 3,
+    }
+}
+
+fn buf_from(b: u8) -> Result<OnChipBuf, DecodeError> {
+    match b {
+        0 => Ok(OnChipBuf::Weight),
+        1 => Ok(OnChipBuf::Activation),
+        2 => Ok(OnChipBuf::Global),
+        3 => Ok(OnChipBuf::Index),
+        other => Err(DecodeError::BadSubOp(OP_LD, other)),
+    }
+}
+
+/// Sparsity packs into the 2-byte aux field: tag in the high 2 bits of
+/// byte0, payload split across the rest.
+fn sparsity_bytes(s: Sparsity) -> [u8; 2] {
+    match s {
+        Sparsity::Dense => [0x00, 0],
+        Sparsity::Nm { n, m } => [0x40 | (n & 0x3F), m],
+        Sparsity::BlockSparse { density_256 } => [0x80, density_256],
+    }
+}
+
+fn sparsity_from(b: [u8; 2]) -> Result<Sparsity, DecodeError> {
+    match b[0] & 0xC0 {
+        0x00 => Ok(Sparsity::Dense),
+        0x40 => Ok(Sparsity::Nm { n: b[0] & 0x3F, m: b[1] }),
+        0x80 => Ok(Sparsity::BlockSparse { density_256: b[1] }),
+        other => Err(DecodeError::BadSubOp(OP_MM, other)),
+    }
+}
+
+fn misc_byte(op: MiscOp) -> u8 {
+    match op {
+        MiscOp::LayerNorm => 0,
+        MiscOp::Softmax => 1,
+        MiscOp::Silu => 2,
+        MiscOp::Gelu => 3,
+        MiscOp::EltwiseAdd => 4,
+        MiscOp::EltwiseMul => 5,
+        MiscOp::RmsNorm => 6,
+        MiscOp::Rope => 7,
+    }
+}
+
+fn misc_from(b: u8) -> Result<MiscOp, DecodeError> {
+    Ok(match b {
+        0 => MiscOp::LayerNorm,
+        1 => MiscOp::Softmax,
+        2 => MiscOp::Silu,
+        3 => MiscOp::Gelu,
+        4 => MiscOp::EltwiseAdd,
+        5 => MiscOp::EltwiseMul,
+        6 => MiscOp::RmsNorm,
+        7 => MiscOp::Rope,
+        other => return Err(DecodeError::BadSubOp(OP_MISC, other)),
+    })
+}
+
+/// Encode one instruction into its 16-byte word.
+pub fn encode(inst: &Inst) -> [u8; INST_BYTES] {
+    let mut w = [0u8; INST_BYTES];
+    let put32 = |w: &mut [u8; INST_BYTES], at: usize, v: u32| {
+        w[at..at + 4].copy_from_slice(&v.to_le_bytes());
+    };
+    match inst {
+        Inst::Ld { src, dst, addr, bytes } => {
+            w[0] = OP_LD;
+            let (ms, ch) = memspace_byte(*src);
+            w[1] = (ms << 4) | buf_byte(*dst);
+            w[2] = ch;
+            put32(&mut w, 4, *bytes);
+            put32(&mut w, 12, (addr / ADDR_ALIGN) as u32);
+        }
+        Inst::St { src, dst, addr, bytes } => {
+            w[0] = OP_ST;
+            let (ms, ch) = memspace_byte(*dst);
+            w[1] = (ms << 4) | buf_byte(*src);
+            w[2] = ch;
+            put32(&mut w, 4, *bytes);
+            put32(&mut w, 12, (addr / ADDR_ALIGN) as u32);
+        }
+        Inst::LdMerged { first_channel, channels, dst, addr, bytes } => {
+            w[0] = OP_LD_MERGED;
+            w[1] = buf_byte(*dst);
+            w[2] = *first_channel;
+            w[3] = *channels;
+            put32(&mut w, 4, *bytes);
+            put32(&mut w, 12, (addr / ADDR_ALIGN) as u32);
+        }
+        Inst::StMerged { first_channel, channels, src, addr, bytes } => {
+            w[0] = OP_ST_MERGED;
+            w[1] = buf_byte(*src);
+            w[2] = *first_channel;
+            w[3] = *channels;
+            put32(&mut w, 4, *bytes);
+            put32(&mut w, 12, (addr / ADDR_ALIGN) as u32);
+        }
+        Inst::Mm { m, k, n, sparsity } => {
+            w[0] = OP_MM;
+            let sb = sparsity_bytes(*sparsity);
+            w[2] = sb[0];
+            w[3] = sb[1];
+            put32(&mut w, 4, *m);
+            put32(&mut w, 8, *k);
+            put32(&mut w, 12, *n);
+        }
+        Inst::Mv { k, n, sparsity } => {
+            w[0] = OP_MV;
+            let sb = sparsity_bytes(*sparsity);
+            w[2] = sb[0];
+            w[3] = sb[1];
+            put32(&mut w, 8, *k);
+            put32(&mut w, 12, *n);
+        }
+        Inst::Misc { op, len } => {
+            w[0] = OP_MISC;
+            w[1] = misc_byte(*op);
+            put32(&mut w, 4, *len);
+        }
+        Inst::Sys { op } => {
+            w[0] = OP_SYS;
+            w[1] = match op {
+                SysOp::SyncSlr => 0,
+                SysOp::SyncHost => 1,
+            };
+        }
+    }
+    w
+}
+
+/// Decode one 16-byte word.
+pub fn decode(w: &[u8; INST_BYTES]) -> Result<Inst, DecodeError> {
+    let get32 = |at: usize| u32::from_le_bytes(w[at..at + 4].try_into().unwrap());
+    let addr = || get32(12) as u64 * ADDR_ALIGN;
+    Ok(match w[0] {
+        OP_LD => Inst::Ld {
+            src: memspace_from(w[1] >> 4, w[2])?,
+            dst: buf_from(w[1] & 0x0F)?,
+            addr: addr(),
+            bytes: get32(4),
+        },
+        OP_ST => Inst::St {
+            src: buf_from(w[1] & 0x0F)?,
+            dst: memspace_from(w[1] >> 4, w[2])?,
+            addr: addr(),
+            bytes: get32(4),
+        },
+        OP_LD_MERGED => Inst::LdMerged {
+            first_channel: w[2],
+            channels: w[3],
+            dst: buf_from(w[1])?,
+            addr: addr(),
+            bytes: get32(4),
+        },
+        OP_ST_MERGED => Inst::StMerged {
+            first_channel: w[2],
+            channels: w[3],
+            src: buf_from(w[1])?,
+            addr: addr(),
+            bytes: get32(4),
+        },
+        OP_MM => Inst::Mm {
+            m: get32(4),
+            k: get32(8),
+            n: get32(12),
+            sparsity: sparsity_from([w[2], w[3]])?,
+        },
+        OP_MV => Inst::Mv {
+            k: get32(8),
+            n: get32(12),
+            sparsity: sparsity_from([w[2], w[3]])?,
+        },
+        OP_MISC => Inst::Misc { op: misc_from(w[1])?, len: get32(4) },
+        OP_SYS => Inst::Sys {
+            op: match w[1] {
+                0 => SysOp::SyncSlr,
+                1 => SysOp::SyncHost,
+                other => return Err(DecodeError::BadSubOp(OP_SYS, other)),
+            },
+        },
+        other => return Err(DecodeError::BadOpcode(other)),
+    })
+}
+
+/// Encode a whole instruction stream.
+pub fn encode_stream(insts: &[Inst]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(insts.len() * INST_BYTES);
+    for i in insts {
+        out.extend_from_slice(&encode(i));
+    }
+    out
+}
+
+/// Decode a whole stream; errors on trailing partial words.
+pub fn decode_stream(bytes: &[u8]) -> Result<Vec<Inst>, DecodeError> {
+    if bytes.len() % INST_BYTES != 0 {
+        return Err(DecodeError::Truncated { have: bytes.len() % INST_BYTES });
+    }
+    bytes
+        .chunks_exact(INST_BYTES)
+        .map(|c| decode(c.try_into().unwrap()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+    use super::*;
+
+    fn samples() -> Vec<Inst> {
+        vec![
+            Inst::Ld {
+                src: MemSpace::Hbm { channel: 7 },
+                dst: OnChipBuf::Weight,
+                addr: 0x40_0000,
+                bytes: 65536,
+            },
+            Inst::Ld { src: MemSpace::Ddr, dst: OnChipBuf::Global, addr: 64, bytes: 128 },
+            Inst::St {
+                src: OnChipBuf::Global,
+                dst: MemSpace::Hbm { channel: 31 },
+                addr: 0xFFFF_C0,
+                bytes: 4096,
+            },
+            Inst::LdMerged {
+                first_channel: 0,
+                channels: 8,
+                dst: OnChipBuf::Activation,
+                addr: 1 << 20,
+                bytes: 16384,
+            },
+            Inst::StMerged {
+                first_channel: 16,
+                channels: 8,
+                src: OnChipBuf::Global,
+                addr: 128,
+                bytes: 2048,
+            },
+            Inst::Mm { m: 128, k: 4096, n: 4096, sparsity: Sparsity::Dense },
+            Inst::Mm {
+                m: 64,
+                k: 64,
+                n: 64,
+                sparsity: Sparsity::BlockSparse { density_256: 115 },
+            },
+            Inst::Mv { k: 4096, n: 11008, sparsity: Sparsity::Nm { n: 8, m: 16 } },
+            Inst::Misc { op: MiscOp::Softmax, len: 2048 },
+            Inst::Misc { op: MiscOp::Rope, len: 128 },
+            Inst::Sys { op: SysOp::SyncSlr },
+            Inst::Sys { op: SysOp::SyncHost },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_each_variant() {
+        for inst in samples() {
+            let enc = encode(&inst);
+            let dec = decode(&enc).unwrap();
+            assert_eq!(dec, inst, "roundtrip failed for {inst:?}");
+        }
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let insts = samples();
+        let bytes = encode_stream(&insts);
+        assert_eq!(bytes.len(), insts.len() * INST_BYTES);
+        assert_eq!(decode_stream(&bytes).unwrap(), insts);
+    }
+
+    #[test]
+    fn truncated_stream_rejected() {
+        let mut bytes = encode_stream(&samples());
+        bytes.pop();
+        assert!(matches!(
+            decode_stream(&bytes),
+            Err(DecodeError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_opcode_rejected() {
+        let mut w = [0u8; INST_BYTES];
+        w[0] = 0xEE;
+        assert_eq!(decode(&w), Err(DecodeError::BadOpcode(0xEE)));
+    }
+
+    #[test]
+    fn property_random_instructions_roundtrip() {
+        use crate::util::proptest;
+        proptest::check("isa roundtrip", |r| {
+            let inst = match r.below(8) {
+                0 => Inst::Ld {
+                    src: if r.below(2) == 0 {
+                        MemSpace::Hbm { channel: r.below(32) as u8 }
+                    } else {
+                        MemSpace::Ddr
+                    },
+                    dst: OnChipBuf::Weight,
+                    addr: r.below(1 << 26) * 64,
+                    bytes: r.below(1 << 30) as u32,
+                },
+                1 => Inst::St {
+                    src: OnChipBuf::Global,
+                    dst: MemSpace::Hbm { channel: r.below(32) as u8 },
+                    addr: r.below(1 << 26) * 64,
+                    bytes: r.below(1 << 20) as u32,
+                },
+                2 => Inst::LdMerged {
+                    first_channel: r.below(24) as u8,
+                    channels: 1 + r.below(8) as u8,
+                    dst: OnChipBuf::Activation,
+                    addr: r.below(1 << 26) * 64,
+                    bytes: r.below(1 << 24) as u32,
+                },
+                3 => Inst::StMerged {
+                    first_channel: r.below(24) as u8,
+                    channels: 1 + r.below(8) as u8,
+                    src: OnChipBuf::Index,
+                    addr: r.below(1 << 26) * 64,
+                    bytes: r.below(1 << 24) as u32,
+                },
+                4 => Inst::Mm {
+                    m: r.below(1 << 16) as u32,
+                    k: r.below(1 << 16) as u32,
+                    n: r.below(1 << 16) as u32,
+                    sparsity: Sparsity::Nm {
+                        n: (r.below(63) + 1) as u8,
+                        m: r.below(256) as u8,
+                    },
+                },
+                5 => Inst::Mv {
+                    k: r.below(1 << 20) as u32,
+                    n: r.below(1 << 20) as u32,
+                    sparsity: Sparsity::BlockSparse {
+                        density_256: r.below(256) as u8,
+                    },
+                },
+                6 => Inst::Misc { op: MiscOp::Rope, len: r.below(1 << 24) as u32 },
+                _ => Inst::Sys {
+                    op: if r.below(2) == 0 { SysOp::SyncSlr } else { SysOp::SyncHost },
+                },
+            };
+            assert_eq!(decode(&encode(&inst)).unwrap(), inst);
+        });
+    }
+
+    #[test]
+    fn addresses_align_to_64() {
+        // Addresses are stored as 64-byte tile indices; aligned addresses
+        // must round-trip exactly.
+        let inst = Inst::Ld {
+            src: MemSpace::Hbm { channel: 0 },
+            dst: OnChipBuf::Weight,
+            addr: 64 * 12345,
+            bytes: 64,
+        };
+        assert_eq!(decode(&encode(&inst)).unwrap(), inst);
+    }
+}

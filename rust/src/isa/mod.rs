@@ -1,0 +1,239 @@
+//! The FlightLLM ISA (Table 1): six coarse-grained instructions that
+//! connect the compiled LLM to the accelerator.
+//!
+//! `LD`/`ST` move tiles between off-chip memory (HBM or DDR) and on-chip
+//! buffers; `MM`/`MV` run the MPE in matrix-matrix or matrix-vector mode;
+//! `MISC` drives the SFU (LayerNorm / Softmax / SiLU / Eltwise); `SYS`
+//! synchronizes SLRs with each other or the host.
+//!
+//! The module also implements the §5.2 *merged multi-channel* LD/ST: one
+//! stored instruction that the hardware decoder expands into eight
+//! per-channel micro-instructions launched simultaneously — one of the
+//! two optimizations that shrink the instruction stream from 4.77 GB to
+//! 3.25 GB.
+
+mod encode;
+
+pub use encode::{decode_stream, encode_stream, DecodeError, INST_BYTES};
+
+
+/// Off-chip source/destination of an LD/ST (§4.4 hybrid memory).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemSpace {
+    /// HBM pseudo-channel `channel`. Large streaming data: weights, KV.
+    Hbm { channel: u8 },
+    /// DDR. Small latency-sensitive data: lookup tables, instructions.
+    Ddr,
+}
+
+/// On-chip buffer targeted by an LD/ST or used by compute (§3.1 core).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OnChipBuf {
+    Weight,
+    Activation,
+    Global,
+    Index,
+}
+
+/// Matrix sparsity descriptor carried by MM/MV (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Sparsity {
+    Dense,
+    /// N:M weight sparsity: `n` nonzeros kept per `m`-wide group.
+    Nm { n: u8, m: u8 },
+    /// Block-sparse (SDDMM/attention): fraction of blocks kept, in 1/256
+    /// steps so the descriptor stays one byte.
+    BlockSparse { density_256: u8 },
+}
+
+impl Sparsity {
+    /// Fraction of MACs actually executed relative to dense.
+    pub fn density(&self) -> f64 {
+        match self {
+            Sparsity::Dense => 1.0,
+            Sparsity::Nm { n, m } => *n as f64 / *m as f64,
+            Sparsity::BlockSparse { density_256 } => *density_256 as f64 / 256.0,
+        }
+    }
+}
+
+/// MISC (SFU) operation kinds (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MiscOp {
+    /// Two-phase: reduce for mean/var, then normalize.
+    LayerNorm,
+    /// Two-phase: reduce for max/sum, then scale.
+    Softmax,
+    /// Element-wise activation (lookup-table backed on the SFU).
+    Silu,
+    Gelu,
+    /// Element-wise add / mul (residuals, SwiGLU gating).
+    EltwiseAdd,
+    EltwiseMul,
+    /// RMSNorm (LLaMA) — two-phase like LayerNorm.
+    RmsNorm,
+    /// Rotary position embedding applied in-place.
+    Rope,
+}
+
+impl MiscOp {
+    /// Two-phase ops read the whole vector twice (§3.3).
+    pub fn is_two_phase(&self) -> bool {
+        matches!(self, MiscOp::LayerNorm | MiscOp::Softmax | MiscOp::RmsNorm)
+    }
+}
+
+/// SYS scopes (§5.1): between SLRs after each layer, or with the host
+/// after each inference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SysOp {
+    SyncSlr,
+    SyncHost,
+}
+
+/// One coarse-grained FlightLLM instruction.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Inst {
+    /// Load `bytes` from off-chip `src` at `addr` into `dst`.
+    Ld { src: MemSpace, dst: OnChipBuf, addr: u64, bytes: u32 },
+    /// Merged multi-channel load (§5.2): the decoder expands this into
+    /// `channels` per-channel LDs of `bytes` each, launched concurrently
+    /// from consecutive HBM channels starting at `first_channel`.
+    LdMerged { first_channel: u8, channels: u8, dst: OnChipBuf, addr: u64, bytes: u32 },
+    /// Store from on-chip buffer back to off-chip memory.
+    St { src: OnChipBuf, dst: MemSpace, addr: u64, bytes: u32 },
+    /// Merged multi-channel store (§5.2).
+    StMerged { first_channel: u8, channels: u8, src: OnChipBuf, addr: u64, bytes: u32 },
+    /// Matrix-matrix multiply C = X·W^T + b on the MPE (MM mode).
+    Mm { m: u32, k: u32, n: u32, sparsity: Sparsity },
+    /// Matrix-vector multiply c = x·W^T + b (MV mode, decode stage).
+    Mv { k: u32, n: u32, sparsity: Sparsity },
+    /// SFU operation over a `len`-element vector.
+    Misc { op: MiscOp, len: u32 },
+    /// Synchronization barrier.
+    Sys { op: SysOp },
+}
+
+impl Inst {
+    /// MAC count of a compute instruction (0 for data movement / sync).
+    pub fn macs(&self) -> u64 {
+        match self {
+            Inst::Mm { m, k, n, sparsity } => {
+                ((*m as u64 * *k as u64 * *n as u64) as f64 * sparsity.density())
+                    as u64
+            }
+            Inst::Mv { k, n, sparsity } => {
+                ((*k as u64 * *n as u64) as f64 * sparsity.density()) as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Off-chip bytes moved by this instruction (after decoder expansion).
+    pub fn offchip_bytes(&self) -> u64 {
+        match self {
+            Inst::Ld { bytes, .. } | Inst::St { bytes, .. } => *bytes as u64,
+            Inst::LdMerged { channels, bytes, .. }
+            | Inst::StMerged { channels, bytes, .. } => {
+                *channels as u64 * *bytes as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Expand merged LD/ST into per-channel micro-instructions — the
+    /// hardware decoder of §5.2. Non-merged instructions pass through.
+    pub fn expand(&self) -> Vec<Inst> {
+        match self {
+            Inst::LdMerged { first_channel, channels, dst, addr, bytes } => (0
+                ..*channels)
+                .map(|c| Inst::Ld {
+                    src: MemSpace::Hbm { channel: first_channel + c },
+                    dst: *dst,
+                    addr: addr + c as u64 * *bytes as u64,
+                    bytes: *bytes,
+                })
+                .collect(),
+            Inst::StMerged { first_channel, channels, src, addr, bytes } => (0
+                ..*channels)
+                .map(|c| Inst::St {
+                    src: *src,
+                    dst: MemSpace::Hbm { channel: first_channel + c },
+                    addr: addr + c as u64 * *bytes as u64,
+                    bytes: *bytes,
+                })
+                .collect(),
+            other => vec![other.clone()],
+        }
+    }
+
+    pub fn is_compute(&self) -> bool {
+        matches!(self, Inst::Mm { .. } | Inst::Mv { .. } | Inst::Misc { .. })
+    }
+
+    pub fn is_memory(&self) -> bool {
+        matches!(
+            self,
+            Inst::Ld { .. } | Inst::St { .. } | Inst::LdMerged { .. } | Inst::StMerged { .. }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merged_ld_expands_to_consecutive_channels() {
+        let ld = Inst::LdMerged {
+            first_channel: 8,
+            channels: 8,
+            dst: OnChipBuf::Weight,
+            addr: 0x1000,
+            bytes: 4096,
+        };
+        let ex = ld.expand();
+        assert_eq!(ex.len(), 8);
+        for (i, inst) in ex.iter().enumerate() {
+            match inst {
+                Inst::Ld { src: MemSpace::Hbm { channel }, addr, bytes, .. } => {
+                    assert_eq!(*channel as usize, 8 + i);
+                    assert_eq!(*addr, 0x1000 + i as u64 * 4096);
+                    assert_eq!(*bytes, 4096);
+                }
+                other => panic!("expected Ld, got {other:?}"),
+            }
+        }
+        assert_eq!(ld.offchip_bytes(), 8 * 4096);
+    }
+
+    #[test]
+    fn sparsity_density() {
+        assert_eq!(Sparsity::Dense.density(), 1.0);
+        assert_eq!(Sparsity::Nm { n: 4, m: 16 }.density(), 0.25);
+        assert!((Sparsity::BlockSparse { density_256: 128 }.density() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mv_macs_scale_with_density() {
+        let dense = Inst::Mv { k: 4096, n: 4096, sparsity: Sparsity::Dense };
+        let sparse =
+            Inst::Mv { k: 4096, n: 4096, sparsity: Sparsity::Nm { n: 8, m: 16 } };
+        assert_eq!(dense.macs(), 4096 * 4096);
+        assert_eq!(sparse.macs(), 4096 * 4096 / 2);
+    }
+
+    #[test]
+    fn two_phase_classification() {
+        assert!(MiscOp::Softmax.is_two_phase());
+        assert!(MiscOp::RmsNorm.is_two_phase());
+        assert!(!MiscOp::Silu.is_two_phase());
+        assert!(!MiscOp::EltwiseAdd.is_two_phase());
+    }
+
+    #[test]
+    fn non_merged_expand_is_identity() {
+        let mv = Inst::Mv { k: 16, n: 16, sparsity: Sparsity::Dense };
+        assert_eq!(mv.expand(), vec![mv.clone()]);
+    }
+}

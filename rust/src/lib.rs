@@ -1,0 +1,34 @@
+//! # FlightLLM reproduction
+//!
+//! Efficient LLM inference with a complete mapping flow (FPGA '24),
+//! rebuilt as a three-layer rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the mapping flow (IR → optimization →
+//!   length-adaptive instruction generation), a cycle-approximate model
+//!   of the FlightLLM accelerator (CSD-chain MPE, SFU, HBM+DDR MMU), GPU
+//!   and SOTA-accelerator baselines, and a serving coordinator that
+//!   drives real token generation through AOT-compiled XLA executables.
+//! - **L2 (python/compile/model.py)** — the compressed transformer in
+//!   JAX, lowered once to HLO text artifacts.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels for the paper's
+//!   compute hot-spots (N:M SpMM, mixed-precision dequant GEMV,
+//!   block-sparse attention).
+//!
+//! See DESIGN.md for the experiment index mapping every paper table and
+//! figure to a module + bench target.
+
+pub mod baselines;
+pub mod cli;
+pub mod compiler;
+pub mod experiments;
+pub mod config;
+pub mod coordinator;
+pub mod ir;
+pub mod isa;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,7 @@
+//! FlightLLM CLI — the leader entrypoint. Subcommands are wired up in
+//! `flightllm::cli` (hand-rolled parser; clap is not vendored).
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    std::process::exit(flightllm::cli::run(&args));
+}

@@ -1,0 +1,156 @@
+//! Evaluation metrics (§6.1): end-to-end latency, decode throughput,
+//! energy efficiency (Token/J) and cost efficiency (Token/s/$), plus the
+//! table/figure-shaped report rows the benches print.
+
+/// One [prefill, decode] evaluation point (the x-axis of Figs. 11-13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvalPoint {
+    pub prefill: u64,
+    pub decode: u64,
+}
+
+impl EvalPoint {
+    pub fn label(&self) -> String {
+        format!("[{}, {}]", self.prefill, self.decode)
+    }
+}
+
+/// The paper's evaluation grid (Fig. 11/12/13 x-axes).
+pub fn paper_grid() -> Vec<EvalPoint> {
+    let mut v = Vec::new();
+    for &(p, d) in &[
+        (32u64, 32u64),
+        (64, 64),
+        (128, 128),
+        (128, 512),
+        (512, 128),
+        (512, 512),
+        (1024, 512),
+    ] {
+        v.push(EvalPoint { prefill: p, decode: d });
+    }
+    v
+}
+
+/// An end-to-end measurement of one system on one point.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub system: String,
+    pub point: EvalPoint,
+    /// End-to-end latency for prefill + all decode steps, seconds.
+    pub latency_s: f64,
+    /// Decode throughput, tokens/s.
+    pub decode_tps: f64,
+    /// Average power, W.
+    pub power_w: f64,
+    /// Achieved HBM/DRAM bandwidth utilization (0..1).
+    pub bw_util: f64,
+    /// Hardware price, USD.
+    pub price_usd: f64,
+}
+
+impl Measurement {
+    /// Tokens per joule over the decode phase (Fig. 13 metric).
+    pub fn tokens_per_joule(&self) -> f64 {
+        if self.power_w <= 0.0 {
+            return 0.0;
+        }
+        self.decode_tps / self.power_w
+    }
+
+    /// Tokens/s per dollar (the Fig. 1 cost-efficiency axis).
+    pub fn tokens_per_s_per_dollar(&self) -> f64 {
+        if self.price_usd <= 0.0 {
+            return 0.0;
+        }
+        self.decode_tps / self.price_usd
+    }
+}
+
+/// Geometric mean — the aggregation the paper uses for speedups.
+pub fn geomean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let log_sum: f64 = values.iter().map(|v| v.max(1e-300).ln()).sum();
+    (log_sum / values.len() as f64).exp()
+}
+
+/// Format a paper-style table: header + aligned rows.
+pub fn format_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let hdr: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_of_equal_values() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_is_between_min_and_max() {
+        let g = geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_and_cost_efficiency() {
+        let m = Measurement {
+            system: "test".into(),
+            point: EvalPoint { prefill: 128, decode: 512 },
+            latency_s: 10.0,
+            decode_tps: 50.0,
+            power_w: 25.0,
+            bw_util: 0.6,
+            price_usd: 8000.0,
+        };
+        assert!((m.tokens_per_joule() - 2.0).abs() < 1e-12);
+        assert!((m.tokens_per_s_per_dollar() - 50.0 / 8000.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn table_formatting_aligns() {
+        let t = format_table(
+            "Demo",
+            &["a", "long_header"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("Demo"));
+        assert!(t.lines().count() >= 4);
+    }
+
+    #[test]
+    fn paper_grid_has_seven_points() {
+        assert_eq!(paper_grid().len(), 7);
+    }
+}

@@ -1,0 +1,132 @@
+//! Bit-exact functional model of the dedicated dequantization unit
+//! (§4.3): "a set of parallel bit-width expansion units, which
+//! automatically expand the input data to 8 bits according to the control
+//! signal, scale factor, and sign bit", feeding the MPE a uniform INT8
+//! stream so that 2/3/4-bit multiplications become INT8 multiplications.
+
+use super::mixed::QuantizedTensor;
+use super::packing::BitReader;
+
+/// The hardware unit: expands one packed group at a time to INT8 codes,
+/// tracking the per-group scale that the MPE applies after accumulation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DequantUnit {
+    /// Expansion lanes operating in parallel (hardware: one per MPE input
+    /// lane; only affects the cycle estimate, not the values).
+    pub lanes: u32,
+}
+
+/// One expanded group: INT8 codes + the scale to fold in post-accumulate.
+#[derive(Debug, Clone)]
+pub struct ExpandedGroup {
+    pub codes: Vec<i8>,
+    pub scale: f32,
+}
+
+impl DequantUnit {
+    pub fn new(lanes: u32) -> Self {
+        Self { lanes: lanes.max(1) }
+    }
+
+    /// Expand all groups of a quantized tensor. Bit-exact: the INT8 code
+    /// equals the stored sub-byte code sign-extended (values in
+    /// [-16, 15] for 5-bit, [-8, 7] for 4-bit, [-4, 3] for 3-bit all fit
+    /// INT8 trivially — the point is the *uniform* lane format).
+    pub fn expand(&self, t: &QuantizedTensor) -> Vec<ExpandedGroup> {
+        let groups_per_row = t.cols / t.plan.group;
+        let mut out = Vec::with_capacity(t.plan.bits.len());
+        let mut r = BitReader::new(&t.packed);
+        for gi in 0..t.rows * groups_per_row {
+            let bits = t.plan.bits[gi];
+            let shift = 32 - bits;
+            let codes = (0..t.plan.group)
+                .map(|_| (((r.read(bits) << shift) as i32) >> shift) as i8)
+                .collect();
+            out.push(ExpandedGroup { codes, scale: t.scales[gi] });
+        }
+        out
+    }
+
+    /// Cycles to expand `elems` codes: one code per lane per cycle.
+    pub fn expand_cycles(&self, elems: u64) -> u64 {
+        elems.div_ceil(self.lanes as u64)
+    }
+
+    /// INT8 dot-product of an expanded weight group against INT8
+    /// activations with the two scales folded afterwards — exactly the
+    /// arithmetic the MPE performs after expansion (INT8 MACs into a
+    /// 32-bit accumulator, scale applied once per group).
+    pub fn group_dot(group: &ExpandedGroup, acts: &[i8], act_scale: f32) -> f32 {
+        assert_eq!(acts.len(), group.codes.len());
+        let acc: i32 = group
+            .codes
+            .iter()
+            .zip(acts)
+            .map(|(&w, &a)| w as i32 * a as i32)
+            .sum();
+        acc as f32 * group.scale * act_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mixed::{MixedPrecision, QuantizedTensor};
+    use super::*;
+
+    #[test]
+    fn expansion_is_bit_exact_vs_dequantize() {
+        let w: Vec<f32> =
+            (0..2 * 128).map(|i| ((i * 37 % 101) as f32 - 50.0) / 80.0).collect();
+        let plan = MixedPrecision::uniform(2 * 2, 4, 64);
+        let q = QuantizedTensor::quantize(&w, 2, 128, plan);
+        let unit = DequantUnit::new(32);
+        let groups = unit.expand(&q);
+        let deq = q.dequantize();
+        for (gi, g) in groups.iter().enumerate() {
+            for (i, &c) in g.codes.iter().enumerate() {
+                let want = deq[gi * 64 + i];
+                let got = c as f32 * g.scale;
+                assert!((got - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn expanded_codes_fit_their_width() {
+        let w: Vec<f32> = (0..128).map(|i| (i as f32).sin()).collect();
+        let plan = MixedPrecision::uniform(2, 3, 64);
+        let q = QuantizedTensor::quantize(&w, 1, 128, plan);
+        for g in DequantUnit::new(8).expand(&q) {
+            for &c in &g.codes {
+                assert!((-4..=3).contains(&(c as i32)), "3-bit code {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_dot_matches_float_path() {
+        let w: Vec<f32> = (0..64).map(|i| ((i as f32) * 0.11).cos() * 0.4).collect();
+        let plan = MixedPrecision::uniform(1, 5, 64);
+        let q = QuantizedTensor::quantize(&w, 1, 64, plan);
+        let unit = DequantUnit::new(16);
+        let g = &unit.expand(&q)[0];
+        // INT8 activations with a known scale.
+        let acts: Vec<i8> = (0..64).map(|i| ((i * 7 % 17) as i32 - 8) as i8).collect();
+        let act_scale = 0.05f32;
+        let got = DequantUnit::group_dot(g, &acts, act_scale);
+        let deq = q.dequantize();
+        let want: f32 = deq
+            .iter()
+            .zip(&acts)
+            .map(|(&wv, &a)| wv * a as f32 * act_scale)
+            .sum();
+        assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+    }
+
+    #[test]
+    fn expand_cycles_scale_with_lanes() {
+        assert_eq!(DequantUnit::new(8).expand_cycles(64), 8);
+        assert_eq!(DequantUnit::new(32).expand_cycles(64), 2);
+        assert_eq!(DequantUnit::new(32).expand_cycles(65), 3);
+    }
+}

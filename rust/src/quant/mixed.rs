@@ -1,0 +1,216 @@
+//! Mixed-precision weight quantization (§4.3 + §6.2.1): gradient-proxy
+//! importance assigns 3, 4 or 5 bits per weight group, averaging ~3.5
+//! bits; activations stay INT8.
+
+
+use super::packing::{BitReader, BitWriter};
+
+/// Allowed weight bit-widths (paper: 3/4/5-bit mix → 3.5-bit average).
+pub const WIDTHS: [u32; 3] = [3, 4, 5];
+
+/// Per-group bit-width plan for one weight tensor.
+#[derive(Debug, Clone)]
+pub struct MixedPrecision {
+    /// Quantization group size (elements per scale, paper-style 64..128).
+    pub group: usize,
+    /// Bit-width of each group.
+    pub bits: Vec<u32>,
+}
+
+impl MixedPrecision {
+    pub fn uniform(groups: usize, bits: u32, group: usize) -> Self {
+        Self { group, bits: vec![bits; groups] }
+    }
+
+    /// Average bits per weight (the paper's headline 3.5).
+    pub fn avg_bits(&self) -> f64 {
+        if self.bits.is_empty() {
+            return 0.0;
+        }
+        self.bits.iter().map(|&b| b as f64).sum::<f64>() / self.bits.len() as f64
+    }
+}
+
+/// Assign per-group widths from importance scores to hit `target_avg`
+/// bits: important groups get 5 bits, unimportant get 3.
+pub fn assign_bitwidths(scores: &[f64], group: usize, target_avg: f64) -> MixedPrecision {
+    let g = scores.len();
+    let mut bits = vec![3u32; g];
+    let mut order: Vec<usize> = (0..g).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    // Budget in excess bits over the 3-bit floor.
+    let mut budget = ((target_avg - 3.0) * g as f64).round() as i64;
+    // First pass: upgrade the most important to 4; second pass to 5.
+    for &i in &order {
+        if budget <= 0 {
+            break;
+        }
+        bits[i] = 4;
+        budget -= 1;
+    }
+    for &i in &order {
+        if budget <= 0 {
+            break;
+        }
+        if bits[i] == 4 {
+            bits[i] = 5;
+            budget -= 1;
+        }
+    }
+    MixedPrecision { group, bits }
+}
+
+/// A quantized tensor: packed codes + per-group scales + the plan.
+/// This is the off-chip layout the MMU streams and the dequant unit
+/// expands (see `DequantUnit`).
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub plan: MixedPrecision,
+    /// Densely bit-packed codes, row-major, group-by-group.
+    pub packed: Vec<u8>,
+    /// One f32 scale per group.
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedTensor {
+    /// Symmetric per-group quantization of a dense row-major tensor under
+    /// the given plan (plan.bits.len() must equal the group count).
+    pub fn quantize(w: &[f32], rows: usize, cols: usize, plan: MixedPrecision) -> Self {
+        assert_eq!(w.len(), rows * cols);
+        assert_eq!(cols % plan.group, 0, "cols must be a multiple of group");
+        let groups_per_row = cols / plan.group;
+        assert_eq!(plan.bits.len(), rows * groups_per_row, "plan size mismatch");
+        let mut writer = BitWriter::new();
+        let mut scales = Vec::with_capacity(plan.bits.len());
+        for r in 0..rows {
+            for g in 0..groups_per_row {
+                let gi = r * groups_per_row + g;
+                let bits = plan.bits[gi];
+                let qmax = (1i32 << (bits - 1)) - 1;
+                let base = r * cols + g * plan.group;
+                let amax = w[base..base + plan.group]
+                    .iter()
+                    .fold(0f32, |m, &v| m.max(v.abs()));
+                let scale = if amax > 0.0 { amax / qmax as f32 } else { 1.0 };
+                scales.push(scale);
+                for &v in &w[base..base + plan.group] {
+                    let q = (v / scale).round().clamp(-(qmax as f32) - 1.0, qmax as f32)
+                        as i32;
+                    writer.push(q as u32, bits);
+                }
+            }
+        }
+        Self { rows, cols, plan, packed: writer.finish(), scales }
+    }
+
+    /// Dequantize back to f32 (row-major) — reference inverse used by
+    /// tests and by the golden path; hardware uses `DequantUnit`.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let groups_per_row = self.cols / self.plan.group;
+        let mut out = vec![0f32; self.rows * self.cols];
+        let mut r = BitReader::new(&self.packed);
+        for row in 0..self.rows {
+            for g in 0..groups_per_row {
+                let gi = row * groups_per_row + g;
+                let bits = self.plan.bits[gi];
+                let shift = 32 - bits;
+                let scale = self.scales[gi];
+                let base = row * self.cols + g * self.plan.group;
+                for i in 0..self.plan.group {
+                    let code = ((r.read(bits) << shift) as i32) >> shift;
+                    out[base + i] = code as f32 * scale;
+                }
+            }
+        }
+        out
+    }
+
+    /// Stored bytes (codes + scales) — the off-chip footprint.
+    pub fn stored_bytes(&self) -> usize {
+        self.packed.len() + self.scales.len() * 4
+    }
+
+    /// Compression ratio vs fp16.
+    pub fn ratio_vs_fp16(&self) -> f64 {
+        (self.rows * self.cols * 2) as f64 / self.stored_bytes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_weights(rows: usize, cols: usize) -> Vec<f32> {
+        (0..rows * cols)
+            .map(|i| ((i as f32 * 0.7).sin() + 0.1 * (i as f32 * 3.1).cos()) * 0.3)
+            .collect()
+    }
+
+    #[test]
+    fn avg_bits_hits_target() {
+        let scores: Vec<f64> = (0..1000).map(|i| (i % 97) as f64).collect();
+        let mp = assign_bitwidths(&scores, 64, 3.5);
+        assert!((mp.avg_bits() - 3.5).abs() < 0.01, "avg = {}", mp.avg_bits());
+        assert!(mp.bits.iter().all(|b| WIDTHS.contains(b)));
+    }
+
+    #[test]
+    fn important_groups_get_more_bits() {
+        let mut scores = vec![0.0f64; 10];
+        scores[2] = 5.0;
+        scores[9] = 9.0;
+        let mp = assign_bitwidths(&scores, 64, 3.2);
+        assert!(mp.bits[9] >= mp.bits[2]);
+        assert!(mp.bits[2] > mp.bits[0]);
+    }
+
+    #[test]
+    fn quantize_dequantize_error_bounded() {
+        let w = test_weights(8, 128);
+        let plan = MixedPrecision::uniform(8 * 2, 4, 64);
+        let q = QuantizedTensor::quantize(&w, 8, 128, plan);
+        let d = q.dequantize();
+        for (gi, chunk) in w.chunks(64).enumerate() {
+            let scale = q.scales[gi];
+            for (i, &v) in chunk.iter().enumerate() {
+                let err = (v - d[gi * 64 + i]).abs();
+                assert!(err <= scale / 2.0 + 1e-6, "err {err} > {}", scale / 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_plan_roundtrips() {
+        let w = test_weights(4, 192);
+        let scores: Vec<f64> = (0..4 * 3).map(|i| i as f64).collect();
+        let plan = assign_bitwidths(&scores, 64, 4.0);
+        let q = QuantizedTensor::quantize(&w, 4, 192, plan);
+        let d = q.dequantize();
+        assert_eq!(d.len(), w.len());
+        // Wider groups should have smaller max error than narrow ones at
+        // the same data distribution (statistically; check budget holds).
+        let err: f32 = w.iter().zip(&d).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        assert!(err < 0.1);
+    }
+
+    #[test]
+    fn storage_matches_3_5_bit_claim() {
+        // 3.5-bit average + scales ≈ 4.2× smaller than fp16.
+        let w = test_weights(64, 1024);
+        let scores: Vec<f64> = (0..64 * 16).map(|i| (i % 13) as f64).collect();
+        let plan = assign_bitwidths(&scores, 64, 3.5);
+        let q = QuantizedTensor::quantize(&w, 64, 1024, plan);
+        let r = q.ratio_vs_fp16();
+        assert!(r > 3.5 && r < 4.6, "ratio = {r}");
+    }
+
+    #[test]
+    fn zero_tensor_is_stable() {
+        let w = vec![0f32; 2 * 64];
+        let plan = MixedPrecision::uniform(2, 3, 64);
+        let q = QuantizedTensor::quantize(&w, 2, 64, plan);
+        assert!(q.dequantize().iter().all(|&v| v == 0.0));
+    }
+}

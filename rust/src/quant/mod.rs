@@ -1,0 +1,12 @@
+//! Mixed-precision quantization substrate (§4.3): per-group bit-width
+//! assignment (3/4/5-bit averaging 3.5), compact bit-packing of the
+//! off-chip weight stream, and a bit-exact functional model of the
+//! dequantization unit (bit-width expansion to INT8).
+
+mod dequant_unit;
+mod mixed;
+mod packing;
+
+pub use dequant_unit::DequantUnit;
+pub use mixed::{assign_bitwidths, MixedPrecision, QuantizedTensor};
+pub use packing::{pack_bits, unpack_bits, BitReader, BitWriter};

@@ -1,0 +1,170 @@
+//! Bit-level packing of sub-byte weight codes — the compact storage
+//! format the MMU streams from HBM (§4.3: "compactly stored
+//! mixed-precision data in the buffer").
+//!
+//! Codes of any width 1..=8 bits are written LSB-first into a contiguous
+//! byte stream with no per-element padding; that is what makes the
+//! 3-bit stream 3/16 the size of fp16, not 8/16.
+
+/// Streaming bit writer (LSB-first within each byte).
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits already used in the final byte (0..8).
+    bit_pos: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `bits` bits of `v`.
+    pub fn push(&mut self, v: u32, bits: u32) {
+        debug_assert!(bits >= 1 && bits <= 32);
+        let mut v = v & if bits == 32 { u32::MAX } else { (1 << bits) - 1 };
+        let mut remaining = bits;
+        while remaining > 0 {
+            if self.bit_pos == 0 {
+                self.buf.push(0);
+            }
+            let free = 8 - self.bit_pos;
+            let take = free.min(remaining);
+            let byte = self.buf.last_mut().unwrap();
+            *byte |= ((v & ((1u32 << take) - 1)) as u8) << self.bit_pos;
+            v >>= take;
+            self.bit_pos = (self.bit_pos + take) % 8;
+            remaining -= take;
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn bit_len(&self) -> usize {
+        if self.bit_pos == 0 {
+            self.buf.len() * 8
+        } else {
+            (self.buf.len() - 1) * 8 + self.bit_pos as usize
+        }
+    }
+}
+
+/// Streaming bit reader matching `BitWriter`'s layout.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // absolute bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Read the next `bits` bits (LSB-first).
+    pub fn read(&mut self, bits: u32) -> u32 {
+        debug_assert!(bits >= 1 && bits <= 32);
+        let mut out = 0u32;
+        let mut got = 0u32;
+        while got < bits {
+            let byte = self.buf[self.pos / 8];
+            let off = (self.pos % 8) as u32;
+            let avail = 8 - off;
+            let take = avail.min(bits - got);
+            let v = ((byte >> off) as u32) & ((1u32 << take) - 1);
+            out |= v << got;
+            got += take;
+            self.pos += take as usize;
+        }
+        out
+    }
+
+    pub fn bits_left(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+}
+
+/// Pack signed codes at uniform `bits` width (two's complement inside the
+/// field).
+pub fn pack_bits(codes: &[i32], bits: u32) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    for &c in codes {
+        w.push(c as u32, bits);
+    }
+    w.finish()
+}
+
+/// Unpack `count` signed codes of `bits` width (sign-extended).
+pub fn unpack_bits(buf: &[u8], bits: u32, count: usize) -> Vec<i32> {
+    let mut r = BitReader::new(buf);
+    let shift = 32 - bits;
+    (0..count)
+        .map(|_| ((r.read(bits) << shift) as i32) >> shift)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_3bit() {
+        let codes: Vec<i32> = (-4..4).collect();
+        let buf = pack_bits(&codes, 3);
+        assert_eq!(buf.len(), 3); // 8 codes × 3 bits = 24 bits
+        assert_eq!(unpack_bits(&buf, 3, 8), codes);
+    }
+
+    #[test]
+    fn roundtrip_4bit() {
+        let codes: Vec<i32> = (-8..8).collect();
+        let buf = pack_bits(&codes, 4);
+        assert_eq!(buf.len(), 8);
+        assert_eq!(unpack_bits(&buf, 4, 16), codes);
+    }
+
+    #[test]
+    fn roundtrip_5bit() {
+        let codes: Vec<i32> = (-16..16).collect();
+        assert_eq!(unpack_bits(&pack_bits(&codes, 5), 5, 32), codes);
+    }
+
+    #[test]
+    fn mixed_width_stream() {
+        // The real stream interleaves widths group by group.
+        let mut w = BitWriter::new();
+        w.push(0b101, 3);
+        w.push(0b1111, 4);
+        w.push(0b10001, 5);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read(3), 0b101);
+        assert_eq!(r.read(4), 0b1111);
+        assert_eq!(r.read(5), 0b10001);
+    }
+
+    #[test]
+    fn bit_len_tracks_pushes() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.push(1, 3);
+        assert_eq!(w.bit_len(), 3);
+        w.push(1, 8);
+        assert_eq!(w.bit_len(), 11);
+    }
+
+    #[test]
+    fn packing_is_dense() {
+        // 1000 3-bit codes = 375 bytes exactly (no padding waste).
+        let codes = vec![-1i32; 1000];
+        assert_eq!(pack_bits(&codes, 3).len(), 375);
+    }
+
+    #[test]
+    fn sign_extension() {
+        let codes = vec![-4i32, 3, -1];
+        assert_eq!(unpack_bits(&pack_bits(&codes, 3), 3, 3), codes);
+    }
+}

@@ -1,0 +1,244 @@
+//! The model runtime: compiled PJRT executables + resident parameters.
+//!
+//! Parameter literals are loaded once and passed to `execute` per call
+//! (the xla crate's literal path; `execute_b` with pre-uploaded buffers
+//! trips a size check inside xla_extension 0.5.1's buffer-donation path,
+//! see DESIGN.md §Perf).  The per-token cost is the param hand-over plus
+//! the KV literal round trip — measured and attacked in the perf pass.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::Manifest;
+use super::weights::load_param_literals;
+
+/// Output of one decode step.
+pub struct DecodeOutput {
+    pub logits: Vec<f32>,
+    /// KV cache literal; hand it to the next step (the executable root is
+    /// a packed (logits, kv) tuple, so outputs surface as literals).
+    pub kv: Literal,
+}
+
+/// Output of a prefill call.
+pub struct PrefillOutput {
+    pub logits: Vec<f32>,
+    pub kv: Literal,
+}
+
+/// Parse the ENTRY computation's parameter ordinals from HLO text and
+/// verify they match the `Arg_N` logical indices — the contract that lets
+/// the runtime pass arguments in manifest order.  (The HLO text parser
+/// preserves ordinals; this check catches a regression in that
+/// assumption at load time instead of with a garbage execution.)
+fn verify_entry_arg_order(hlo_text: &str) -> Result<usize> {
+    let entry_at = hlo_text
+        .find("\nENTRY ")
+        .or_else(|| hlo_text.starts_with("ENTRY ").then_some(0))
+        .ok_or_else(|| anyhow!("no ENTRY computation in HLO text"))?;
+    let mut count = 0usize;
+    for line in hlo_text[entry_at..].lines().skip(1) {
+        if line.starts_with('}') {
+            break;
+        }
+        if !line.contains("= ") || !line.contains(" parameter(") {
+            continue;
+        }
+        // e.g. "  %Arg_67.1 = s32[16]{0} parameter(67)"
+        let name = line.trim_start().split(" = ").next().unwrap_or("");
+        let name = name.trim_start_matches('%');
+        let Some(num) = name.strip_prefix("Arg_") else {
+            bail!("unexpected entry parameter name {name:?}");
+        };
+        let arg: String = num.chars().take_while(|c| c.is_ascii_digit()).collect();
+        let ord: String = line
+            .split(" parameter(")
+            .nth(1)
+            .unwrap_or("")
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        if arg != ord {
+            bail!("parameter ordinal mismatch: Arg_{arg} has ordinal {ord}");
+        }
+        count += 1;
+    }
+    if count == 0 {
+        bail!("ENTRY computation has no parameters");
+    }
+    Ok(count)
+}
+
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    #[allow(dead_code)]
+    client: PjRtClient,
+    decode_exe: PjRtLoadedExecutable,
+    prefill_exes: HashMap<u64, PjRtLoadedExecutable>,
+    /// Parameter literals, manifest order (the executables' Arg_0..k-1).
+    params: Vec<Literal>,
+}
+
+impl ModelRuntime {
+    /// Load artifacts from `dir`: manifest, weights, all HLO modules.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(to_anyhow)?;
+        let n_params = manifest.params.len();
+        let compile = |name: &str, extra: usize| -> Result<PjRtLoadedExecutable> {
+            let path = manifest.artifact_path(name);
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let arity = verify_entry_arg_order(&text)
+                .with_context(|| format!("argument order of {}", path.display()))?;
+            if arity != n_params + extra {
+                bail!(
+                    "{name}: module arity {arity} != {} params + {extra} inputs",
+                    n_params
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(to_anyhow)
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(to_anyhow)
+        };
+        let decode_exe = compile("decode", 3)?;
+        let mut prefill_exes = HashMap::new();
+        for &b in &manifest.prefill_buckets {
+            prefill_exes.insert(b, compile(&format!("prefill_{b}"), 1)?);
+        }
+        let params = load_param_literals(&manifest)?;
+        Ok(Self { manifest, client, decode_exe, prefill_exes, params })
+    }
+
+    /// Smallest bucket that fits `len` prompt tokens.
+    pub fn bucket_for(&self, len: usize) -> Result<u64> {
+        self.manifest
+            .prefill_buckets
+            .iter()
+            .copied()
+            .find(|&b| len as u64 <= b)
+            .ok_or_else(|| {
+                anyhow!(
+                    "prompt of {len} tokens exceeds largest bucket {:?}",
+                    self.manifest.prefill_buckets.last()
+                )
+            })
+    }
+
+    /// Run prefill on a prompt (padded to its bucket by repeating the
+    /// last token — the length-adaptive reuse of §5.2).
+    ///
+    /// NOTE: logits come from the bucket's last row, so callers pass
+    /// prompts that exactly fill a bucket for golden-exact results, or
+    /// accept bucket semantics (the tiny serving demo rounds prompts up).
+    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefillOutput> {
+        let bucket = self.bucket_for(prompt.len())?;
+        let exe = &self.prefill_exes[&bucket];
+        let mut padded = prompt.to_vec();
+        padded.resize(bucket as usize, *prompt.last().unwrap_or(&0));
+        let tokens = Literal::vec1(&padded);
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        args.push(&tokens);
+        let result = exe.execute::<&Literal>(&args).map_err(to_anyhow)?;
+        let (logits, kv) = split_outputs(result)?;
+        Ok(PrefillOutput { logits, kv })
+    }
+
+    /// One decode step: token + KV literal from the previous step + pos.
+    pub fn decode(&self, token: i32, kv: &Literal, pos: i32) -> Result<DecodeOutput> {
+        let tok = Literal::vec1(&[token]);
+        let pos_lit = Literal::scalar(pos);
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        args.push(&tok);
+        args.push(kv);
+        args.push(&pos_lit);
+        let result = self.decode_exe.execute::<&Literal>(&args).map_err(to_anyhow)?;
+        let (logits, kv) = split_outputs(result)?;
+        Ok(DecodeOutput { logits, kv })
+    }
+
+    /// Greedy argmax over logits.
+    pub fn argmax(logits: &[f32]) -> i32 {
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.manifest.config.vocab as usize
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+/// The runtime IS the serving backend: prefill/decode through PJRT.
+impl crate::coordinator::ModelBackend for ModelRuntime {
+    type KvState = Literal;
+
+    fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Literal)> {
+        let out = ModelRuntime::prefill(self, prompt)?;
+        Ok((out.logits, out.kv))
+    }
+
+    fn decode(&self, token: i32, kv: &Literal, pos: i32) -> Result<(Vec<f32>, Literal)> {
+        let out = ModelRuntime::decode(self, token, kv, pos)?;
+        Ok((out.logits, out.kv))
+    }
+}
+
+/// The modules are lowered with return_tuple=True: the root is a packed
+/// (logits, kv) tuple surfaced as ONE output buffer (see
+/// /opt/xla-example/load_hlo.rs) — fetch and decompose it.
+fn split_outputs(mut result: Vec<Vec<PjRtBuffer>>) -> Result<(Vec<f32>, Literal)> {
+    let outs = result.pop().ok_or_else(|| anyhow!("empty execution result"))?;
+    match outs.len() {
+        1 => {
+            let root = outs[0].to_literal_sync().map_err(to_anyhow)?;
+            let (logits, kv) = root.to_tuple2().map_err(to_anyhow)?;
+            Ok((logits.to_vec::<f32>().map_err(to_anyhow)?, kv))
+        }
+        2 => {
+            // Some PJRT builds untuple the root — handle that too.
+            let mut it = outs.into_iter();
+            let logits = it.next().unwrap().to_literal_sync().map_err(to_anyhow)?;
+            let kv = it.next().unwrap().to_literal_sync().map_err(to_anyhow)?;
+            Ok((logits.to_vec::<f32>().map_err(to_anyhow)?, kv))
+        }
+        n => bail!("expected 1 packed or 2 untupled outputs, got {n}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verify_arg_order_accepts_matching_ordinals() {
+        let hlo = "HloModule m\n\nENTRY main {\n  %Arg_0.1 = f32[2]{0} parameter(0)\n  %Arg_1.2 = f32[2]{0} parameter(1)\n  ROOT %t = (f32[2]{0}) tuple(%Arg_0.1)\n}\n";
+        assert_eq!(verify_entry_arg_order(hlo).unwrap(), 2);
+    }
+
+    #[test]
+    fn verify_arg_order_rejects_permuted_ordinals() {
+        let hlo = "HloModule m\n\nENTRY main {\n  %Arg_1.1 = f32[2]{0} parameter(0)\n  ROOT %t = (f32[2]{0}) tuple(%Arg_1.1)\n}\n";
+        assert!(verify_entry_arg_order(hlo).is_err());
+    }
+
+    #[test]
+    fn verify_arg_order_requires_entry() {
+        assert!(verify_entry_arg_order("HloModule m\n").is_err());
+    }
+}

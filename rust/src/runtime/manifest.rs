@@ -1,0 +1,177 @@
+//! manifest.json loader — the contract between aot.py and the runtime:
+//! parameter order/shape/dtype/offsets into weights.bin, artifact module
+//! signatures, model config, and golden tensor descriptors.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// Model architecture as recorded by aot.py (mirrors python TINY config).
+#[derive(Debug, Clone)]
+pub struct RuntimeModelConfig {
+    pub vocab: u64,
+    pub dim: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    pub ffn_dim: u64,
+    pub max_seq: u64,
+    pub nm_m: u64,
+    pub nm_n: u64,
+    pub quant_group: u64,
+    pub attn_block: u64,
+}
+
+/// One tensor in weights.bin (or goldens.bin).
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    /// "f32" | "i32" | "u8"
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+fn parse_entry(j: &Json) -> Result<ParamEntry> {
+    Ok(ParamEntry {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("param missing name"))?
+            .to_string(),
+        dtype: j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("param missing dtype"))?
+            .to_string(),
+        shape: j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("param missing shape"))?
+            .iter()
+            .map(|v| v.as_u64().unwrap_or(0) as usize)
+            .collect(),
+        offset: j.get("offset").and_then(Json::as_u64).unwrap_or(0) as usize,
+        nbytes: j.get("nbytes").and_then(Json::as_u64).unwrap_or(0) as usize,
+    })
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: RuntimeModelConfig,
+    pub params: Vec<ParamEntry>,
+    pub goldens: Vec<ParamEntry>,
+    pub prefill_buckets: Vec<u64>,
+    pub golden_prefill_bucket: u64,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let cfg = j.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
+        let g = |k: &str| -> Result<u64> {
+            cfg.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("config missing {k}"))
+        };
+        let config = RuntimeModelConfig {
+            vocab: g("vocab")?,
+            dim: g("dim")?,
+            n_layers: g("n_layers")?,
+            n_heads: g("n_heads")?,
+            ffn_dim: g("ffn_dim")?,
+            max_seq: g("max_seq")?,
+            nm_m: g("nm_m")?,
+            nm_n: g("nm_n")?,
+            quant_group: g("quant_group")?,
+            attn_block: g("attn_block")?,
+        };
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .iter()
+            .map(parse_entry)
+            .collect::<Result<Vec<_>>>()?;
+        if params.is_empty() {
+            bail!("manifest has no params");
+        }
+        let goldens = j
+            .get("goldens")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().map(parse_entry).collect::<Result<Vec<_>>>())
+            .transpose()?
+            .unwrap_or_default();
+        let prefill_buckets = j
+            .get("prefill_buckets")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_u64).collect())
+            .unwrap_or_default();
+        let golden_prefill_bucket =
+            j.get("golden_prefill_bucket").and_then(Json::as_u64).unwrap_or(0);
+        Ok(Self { dir: dir.to_path_buf(), config, params, goldens, prefill_buckets, golden_prefill_bucket })
+    }
+
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// KV-cache dims: (layers, 2, max_seq, heads, head_dim).
+    pub fn kv_dims(&self) -> [usize; 5] {
+        let c = &self.config;
+        [
+            c.n_layers as usize,
+            2,
+            c.max_seq as usize,
+            c.n_heads as usize,
+            (c.dim / c.n_heads) as usize,
+        ]
+    }
+
+    pub fn golden(&self, name: &str) -> Result<&ParamEntry> {
+        self.goldens
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no golden named {name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipped: artifacts/ not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.dim, 256);
+        assert!(!m.params.is_empty());
+        assert!(m.artifact_path("decode").exists());
+        for b in &m.prefill_buckets {
+            assert!(m.artifact_path(&format!("prefill_{b}")).exists());
+        }
+        // Param table must tile weights.bin exactly.
+        let total: usize = m.params.iter().map(|p| p.nbytes).sum();
+        let file_len = std::fs::metadata(dir.join("weights.bin")).unwrap().len();
+        assert_eq!(total as u64, file_len);
+        let mut cursor = 0usize;
+        for p in &m.params {
+            assert_eq!(p.offset, cursor, "params must be contiguous: {}", p.name);
+            cursor += p.nbytes;
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime (the L3↔L2 bridge): load the HLO-text artifacts emitted
+//! by `python/compile/aot.py`, compile them once on the PJRT CPU client,
+//! and execute prefill / decode steps from the serving hot path.  Python
+//! never runs here — the rust binary is self-contained once
+//! `make artifacts` has produced `artifacts/`.
+
+mod manifest;
+mod weights;
+mod executor;
+
+pub use executor::{DecodeOutput, ModelRuntime, PrefillOutput};
+pub use manifest::{Manifest, ParamEntry, RuntimeModelConfig};
+pub use weights::load_param_literals;

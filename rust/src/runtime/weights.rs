@@ -1,0 +1,116 @@
+//! weights.bin → xla Literals, one per parameter in manifest order.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+use super::manifest::{Manifest, ParamEntry};
+
+pub fn element_type_of(dtype: &str) -> Result<ElementType> {
+    Ok(match dtype {
+        "f32" => ElementType::F32,
+        "i32" => ElementType::S32,
+        "u8" => ElementType::U8,
+        other => bail!("unsupported dtype {other}"),
+    })
+}
+
+/// Build one literal from its raw little-endian bytes.
+pub fn literal_from_bytes(entry: &ParamEntry, bytes: &[u8]) -> Result<Literal> {
+    let ty = element_type_of(&entry.dtype)?;
+    let lit = Literal::create_from_shape_and_untyped_data(ty, &entry.shape, bytes)
+        .with_context(|| format!("literal for {}", entry.name))?;
+    Ok(lit)
+}
+
+/// Load every parameter literal in manifest order (the aot.py contract:
+/// executables take params first, in exactly this order).
+pub fn load_param_literals(m: &Manifest) -> Result<Vec<Literal>> {
+    let blob = std::fs::read(m.dir.join("weights.bin"))
+        .with_context(|| format!("reading {}/weights.bin", m.dir.display()))?;
+    m.params
+        .iter()
+        .map(|p| {
+            let end = p.offset + p.nbytes;
+            if end > blob.len() {
+                bail!("weights.bin too short for {} ({} > {})", p.name, end, blob.len());
+            }
+            literal_from_bytes(p, &blob[p.offset..end])
+        })
+        .collect()
+}
+
+/// Load the golden tensors (same format, goldens.bin).
+pub fn load_golden_bytes(m: &Manifest) -> Result<Vec<u8>> {
+    std::fs::read(m.dir.join("goldens.bin"))
+        .with_context(|| format!("reading {}/goldens.bin", m.dir.display()))
+}
+
+/// Extract one golden as f32s.
+pub fn golden_f32(m: &Manifest, blob: &[u8], name: &str) -> Result<Vec<f32>> {
+    let e = m.golden(name)?;
+    if e.dtype != "f32" {
+        bail!("golden {name} is {}, not f32", e.dtype);
+    }
+    let raw = &blob[e.offset..e.offset + e.nbytes];
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Extract one golden as i32s.
+pub fn golden_i32(m: &Manifest, blob: &[u8], name: &str) -> Result<Vec<i32>> {
+    let e = m.golden(name)?;
+    if e.dtype != "i32" {
+        bail!("golden {name} is {}, not i32", e.dtype);
+    }
+    let raw = &blob[e.offset..e.offset + e.nbytes];
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_types_map() {
+        assert!(matches!(element_type_of("f32").unwrap(), ElementType::F32));
+        assert!(matches!(element_type_of("i32").unwrap(), ElementType::S32));
+        assert!(matches!(element_type_of("u8").unwrap(), ElementType::U8));
+        assert!(element_type_of("f64").is_err());
+    }
+
+    #[test]
+    fn literal_from_bytes_roundtrip_f32() {
+        let entry = ParamEntry {
+            name: "t".into(),
+            dtype: "f32".into(),
+            shape: vec![2, 2],
+            offset: 0,
+            nbytes: 16,
+        };
+        let vals = [1.0f32, -2.5, 3.25, 0.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = literal_from_bytes(&entry, &bytes).unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+    }
+
+    #[test]
+    fn literal_from_bytes_u8() {
+        let entry = ParamEntry {
+            name: "packed".into(),
+            dtype: "u8".into(),
+            shape: vec![4],
+            offset: 0,
+            nbytes: 4,
+        };
+        let lit = literal_from_bytes(&entry, &[0x12, 0x34, 0xAB, 0xFF]).unwrap();
+        assert_eq!(lit.element_count(), 4);
+    }
+}

@@ -1,0 +1,278 @@
+//! Bit-true functional + cycle model of the Configurable Sparse DSP chain
+//! (CSD-Chain, §3.2.1, Fig. 5(d)/6).
+//!
+//! A VPU is one CSD-chain: a sequence of DSP groups (DGs), each holding
+//! `dsp_per_group` DSP48 cores cascaded in a fixed path.  Between DGs the
+//! cascade is *configurable*:
+//!
+//! - **Sparse MUX** — selects, for each DSP input, the activation matching
+//!   the weight's stored in-group index, so only nonzeros enter the MACs.
+//! - **Reduction Node (RN)** — can break the chain after a DG so the chain
+//!   produces N partial outputs per pass (N:M mode) instead of one.
+//! - **Overflow Adjust Unit (OAU)** — splits the running 18-bit cascade
+//!   accumulation into MSP/LSP so long chains never overflow; the MSP is
+//!   recombined at the next RN.  Skipped for chains of ≤ 8 DSPs.
+//!
+//! The functional model here is integer-exact (INT8 × INT8 → 18-bit
+//! accumulate with MSP/LSP splitting) and verified against a plain i64
+//! dot product — this is the architectural claim of Fig. 6: dense and
+//! sparse modes both use every DSP every cycle.
+
+/// One DSP48: two packed INT8 MACs per cycle (wp486 packing).
+pub const MACS_PER_DSP: u64 = 2;
+
+/// Max DSPs on a chain before the OAU must be active (18-bit guard: a
+/// 18-bit accumulator never overflows when ≤ 8 16-bit products are summed).
+pub const OAU_FREE_CHAIN: usize = 8;
+
+/// 18-bit accumulator limits of the DSP48 cascade path we model.
+const ACC_BITS: u32 = 18;
+const ACC_MAX: i32 = (1 << (ACC_BITS - 1)) - 1;
+const ACC_MIN: i32 = -(1 << (ACC_BITS - 1));
+
+/// Configurable sparse DSP chain.
+#[derive(Debug, Clone)]
+pub struct CsdChain {
+    /// DSP48 cores per DSP group (paper: 2).
+    pub dsp_per_group: usize,
+    /// DSP groups on the chain.
+    pub groups: usize,
+}
+
+/// Result of driving the chain for one pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChainOutput {
+    /// Partial-sum outputs produced at reduction nodes (1 in dense mode,
+    /// N in N:M sparse mode).
+    pub outputs: Vec<i64>,
+    /// DSP-cycles consumed (all DSPs active every cycle — the Fig. 6
+    /// full-utilization property; checked by tests).
+    pub dsp_cycles: u64,
+    /// Whether the OAU was engaged (chain longer than OAU_FREE_CHAIN).
+    pub oau_active: bool,
+}
+
+impl CsdChain {
+    pub fn new(dsp_per_group: usize, groups: usize) -> Self {
+        assert!(dsp_per_group >= 1 && groups >= 1);
+        Self { dsp_per_group, groups }
+    }
+
+    /// Total DSP48 cores on the chain.
+    pub fn dsps(&self) -> usize {
+        self.dsp_per_group * self.groups
+    }
+
+    /// MAC slots per pass (2 INT8 MACs per DSP).
+    pub fn mac_slots(&self) -> usize {
+        self.dsps() * MACS_PER_DSP as usize
+    }
+
+    /// Dense mode: one dot product of length `mac_slots()`.
+    ///
+    /// weights/acts: exactly `mac_slots()` INT8 values. The chain
+    /// cascades group to group; the OAU splits the accumulation into
+    /// MSP/LSP when the chain exceeds `OAU_FREE_CHAIN` DSPs and the final
+    /// RN recombines — returning the exact sum.
+    pub fn run_dense(&self, weights: &[i8], acts: &[i8]) -> ChainOutput {
+        assert_eq!(weights.len(), self.mac_slots());
+        assert_eq!(acts.len(), self.mac_slots());
+        let oau = self.dsps() > OAU_FREE_CHAIN;
+        let mut lsp: i32 = 0; // cascaded low part (stays in 18 bits)
+        let mut msp: i64 = 0; // accumulated high part (recombined at RN)
+        let per_group = self.dsp_per_group * MACS_PER_DSP as usize;
+        for g in 0..self.groups {
+            for s in 0..per_group {
+                let i = g * per_group + s;
+                lsp += weights[i] as i32 * acts[i] as i32;
+            }
+            if oau {
+                // OAU: keep the low ACC_BITS on the cascade, push the
+                // overflowed part to the MSP path.
+                while lsp > ACC_MAX {
+                    lsp -= 1 << ACC_BITS;
+                    msp += 1;
+                }
+                while lsp < ACC_MIN {
+                    lsp += 1 << ACC_BITS;
+                    msp -= 1;
+                }
+            }
+        }
+        let total = msp * (1i64 << ACC_BITS) + lsp as i64;
+        ChainOutput {
+            outputs: vec![total],
+            dsp_cycles: self.dsps() as u64,
+            oau_active: oau,
+        }
+    }
+
+    /// N:M sparse mode (Fig. 6(b)): the chain is split by reduction nodes
+    /// into `n_outputs` segments; each segment computes an independent
+    /// MAC over its own gathered activations (the sparse MUX gathers
+    /// `acts[idx]`), producing `n_outputs` results in one pass.
+    ///
+    /// `weights[o]`/`idx[o]` hold segment o's kept values and in-group
+    /// activation indices; `acts` is the shared M-wide activation window.
+    pub fn run_sparse(
+        &self,
+        weights: &[Vec<i8>],
+        idx: &[Vec<usize>],
+        acts: &[i8],
+    ) -> ChainOutput {
+        let n_outputs = weights.len();
+        assert_eq!(idx.len(), n_outputs);
+        assert!(n_outputs >= 1 && self.groups % n_outputs == 0,
+            "reduction nodes must split the chain evenly: {} groups / {} outputs",
+            self.groups, n_outputs);
+        let seg_slots = self.mac_slots() / n_outputs;
+        let seg_dsps = self.dsps() / n_outputs;
+        let oau = seg_dsps > OAU_FREE_CHAIN;
+        let mut outputs = Vec::with_capacity(n_outputs);
+        for o in 0..n_outputs {
+            assert!(
+                weights[o].len() <= seg_slots,
+                "segment {o} holds {} > {} slots",
+                weights[o].len(),
+                seg_slots
+            );
+            let mut lsp: i32 = 0;
+            let mut msp: i64 = 0;
+            for (k, &w) in weights[o].iter().enumerate() {
+                // Sparse MUX: route the indexed activation to this MAC.
+                lsp += w as i32 * acts[idx[o][k]] as i32;
+                if oau && (lsp > ACC_MAX || lsp < ACC_MIN) {
+                    while lsp > ACC_MAX {
+                        lsp -= 1 << ACC_BITS;
+                        msp += 1;
+                    }
+                    while lsp < ACC_MIN {
+                        lsp += 1 << ACC_BITS;
+                        msp -= 1;
+                    }
+                }
+            }
+            outputs.push(msp * (1i64 << ACC_BITS) + lsp as i64);
+        }
+        ChainOutput { outputs, dsp_cycles: self.dsps() as u64, oau_active: oau }
+    }
+
+    /// Runtime DSP utilization of a pass that performed `useful_macs`
+    /// MACs: the Fig. 6 claim is that both dense and N:M passes keep this
+    /// at 1.0 when the segments are fully packed.
+    pub fn utilization(&self, useful_macs: u64) -> f64 {
+        useful_macs as f64 / self.mac_slots() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn i64_dot(w: &[i8], a: &[i8]) -> i64 {
+        w.iter().zip(a).map(|(&x, &y)| x as i64 * y as i64).sum()
+    }
+
+    #[test]
+    fn dense_matches_exact_dot_short_chain() {
+        // 4 DSPs (≤ 8): OAU skipped.
+        let c = CsdChain::new(2, 2);
+        let w: Vec<i8> = vec![127, -128, 100, -5, 33, 7, -90, 55];
+        let a: Vec<i8> = vec![-128, 127, 99, 2, -1, 13, 44, -66];
+        let out = c.run_dense(&w, &a);
+        assert!(!out.oau_active);
+        assert_eq!(out.outputs, vec![i64_dot(&w, &a)]);
+    }
+
+    #[test]
+    fn dense_long_chain_engages_oau_and_stays_exact() {
+        // 32 DSPs: worst-case accumulation far exceeds 18 bits; the
+        // MSP/LSP split must still recombine to the exact value.
+        let c = CsdChain::new(2, 16);
+        let w: Vec<i8> = vec![127; c.mac_slots()];
+        let a: Vec<i8> = vec![-128; c.mac_slots()];
+        let out = c.run_dense(&w, &a);
+        assert!(out.oau_active);
+        assert_eq!(out.outputs, vec![i64_dot(&w, &a)]);
+    }
+
+    #[test]
+    fn sparse_mode_produces_n_exact_outputs() {
+        // 8 groups split by RNs into 4 segments (2:4-style for 4 outputs).
+        let c = CsdChain::new(2, 8);
+        let acts: Vec<i8> = (0..16).map(|i| (i * 7 - 50) as i8).collect();
+        let weights: Vec<Vec<i8>> = (0..4)
+            .map(|o| (0..8).map(|k| ((o * 13 + k * 5) % 120) as i8).collect())
+            .collect();
+        let idx: Vec<Vec<usize>> =
+            (0..4).map(|o| (0..8).map(|k| (o + k * 2) % 16).collect()).collect();
+        let out = c.run_sparse(&weights, &idx, &acts);
+        assert_eq!(out.outputs.len(), 4);
+        for o in 0..4 {
+            let want: i64 = weights[o]
+                .iter()
+                .zip(&idx[o])
+                .map(|(&w, &i)| w as i64 * acts[i] as i64)
+                .sum();
+            assert_eq!(out.outputs[o], want, "output {o}");
+        }
+    }
+
+    #[test]
+    fn dense_and_sparse_use_all_dsps() {
+        // The headline Fig. 6 property: same dsp_cycles either way.
+        let c = CsdChain::new(2, 8);
+        let w: Vec<i8> = vec![1; c.mac_slots()];
+        let a: Vec<i8> = vec![1; c.mac_slots()];
+        let dense = c.run_dense(&w, &a);
+        let seg = c.mac_slots() / 4;
+        let ws: Vec<Vec<i8>> = (0..4).map(|_| vec![1i8; seg]).collect();
+        let idx: Vec<Vec<usize>> = (0..4).map(|_| (0..seg).collect()).collect();
+        let sparse = c.run_sparse(&ws, &idx, &vec![1i8; seg]);
+        assert_eq!(dense.dsp_cycles, sparse.dsp_cycles);
+        assert_eq!(c.utilization(c.mac_slots() as u64), 1.0);
+    }
+
+    #[test]
+    fn property_dense_exactness() {
+        proptest::check("csd dense == i64 dot", |r| {
+            let groups = [2usize, 4, 8, 16][r.below(4) as usize];
+            let c = CsdChain::new(2, groups);
+            let w: Vec<i8> =
+                (0..c.mac_slots()).map(|_| (r.below(256) as i64 - 128) as i8).collect();
+            let a: Vec<i8> =
+                (0..c.mac_slots()).map(|_| (r.below(256) as i64 - 128) as i8).collect();
+            assert_eq!(c.run_dense(&w, &a).outputs[0], i64_dot(&w, &a));
+        });
+    }
+
+    #[test]
+    fn property_sparse_exactness() {
+        proptest::check("csd sparse == gathered dot", |r| {
+            let n_out = [1usize, 2, 4][r.below(3) as usize];
+            let c = CsdChain::new(2, 8);
+            let m = 16usize;
+            let acts: Vec<i8> =
+                (0..m).map(|_| (r.below(256) as i64 - 128) as i8).collect();
+            let seg = c.mac_slots() / n_out;
+            let weights: Vec<Vec<i8>> = (0..n_out)
+                .map(|_| {
+                    (0..seg).map(|_| (r.below(256) as i64 - 128) as i8).collect()
+                })
+                .collect();
+            let idx: Vec<Vec<usize>> = (0..n_out)
+                .map(|_| (0..seg).map(|_| r.below(m as u64) as usize).collect())
+                .collect();
+            let out = c.run_sparse(&weights, &idx, &acts);
+            for o in 0..n_out {
+                let want: i64 = weights[o]
+                    .iter()
+                    .zip(&idx[o])
+                    .map(|(&w, &i)| w as i64 * acts[i] as i64)
+                    .sum();
+                assert_eq!(out.outputs[o], want);
+            }
+        });
+    }
+}

@@ -1,0 +1,290 @@
+//! Instruction-driven execution engine.
+//!
+//! Executes one SLR's instruction stream in order against three resource
+//! timelines — memory channels (`MemorySystem`), the MPE, and the SFU.
+//! Because LD/ST advance the memory timeline independently of compute,
+//! the double-buffer overlap of §3.2.2 emerges naturally: while MM(i)
+//! runs, LD(i+1) streams, and the end-to-end time converges to
+//! max(T_mem, T_cmp) per tile, +fills.
+//!
+//! The accelerator is SLR-symmetric (model parallelism, §3.1): the
+//! compiler emits the stream for one SLR covering 1/SLR of every output
+//! dimension; `Sys(SyncSlr)` charges the synchronization that stitches
+//! layers back together.
+
+use crate::config::Target;
+use crate::isa::{Inst, MiscOp, SysOp};
+
+use super::memory::MemorySystem;
+use super::mpe::MpeModel;
+use super::sfu::SfuModel;
+
+/// Cycles charged per SLR barrier (cross-die handshake + pipeline drain).
+const SYNC_SLR_CYCLES: u64 = 64;
+/// Cycles for a host round-trip (PCIe doorbell) at inference end.
+const SYNC_HOST_CYCLES: u64 = 2_000;
+
+#[derive(Debug, Clone)]
+pub struct Engine {
+    pub mem: MemorySystem,
+    pub mpe: MpeModel,
+    pub sfu: SfuModel,
+    pub slr_count: u32,
+    freq_mhz: f64,
+}
+
+impl Engine {
+    /// The stream describes ONE SLR's share of the work; the other SLRs
+    /// run the same stream concurrently (base-address-register reuse,
+    /// §5.2).  HBM channels are shared board-wide, so every memory leg is
+    /// inflated by the SLR count; the MPE/SFU timelines are per-SLR (the
+    /// MpeModel below is configured with one SLR's resources).
+    fn mem_scale(&self) -> u64 {
+        self.slr_count.max(1) as u64
+    }
+}
+
+/// What one stream execution produced.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    /// End-to-end time, ns.
+    pub total_ns: f64,
+    /// Busy time per resource, ns.
+    pub mpe_busy_ns: f64,
+    pub sfu_busy_ns: f64,
+    /// Off-chip traffic.
+    pub hbm_bytes: u64,
+    pub ddr_bytes: u64,
+    /// Useful MACs executed.
+    pub macs: u64,
+    /// Achieved HBM bandwidth / peak (Table 5 metric).
+    pub hbm_bw_util: f64,
+    /// Useful MACs / (cycles × peak MACs-per-cycle) — runtime DSP
+    /// utilization (the §3.2 computation-efficiency metric).
+    pub compute_eff: f64,
+    /// Instruction count executed (after merge expansion: stored count).
+    pub inst_count: u64,
+}
+
+impl SimReport {
+    /// Tokens/s when this report covers one decode step.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.total_ns <= 0.0 {
+            return 0.0;
+        }
+        1e9 / self.total_ns
+    }
+}
+
+impl Engine {
+    /// Build an engine for a target, optionally disabling the CSD chain
+    /// (Fig. 14's "naive" rung).
+    pub fn for_target(t: &Target, csd_chain: bool) -> Self {
+        let freq = t.platform.freq_mhz;
+        // Per-SLR compute resources: the instruction stream covers one
+        // SLR's share (see mem_scale()).
+        let slr = t.platform.slr_count.max(1);
+        let accel_slr = crate::config::AcceleratorConfig {
+            mpe: (t.accel.mpe / slr).max(1),
+            ..t.accel.clone()
+        };
+        Self {
+            mem: MemorySystem::new(t.platform.hbm.clone(), t.platform.ddr.clone()),
+            mpe: MpeModel::new(accel_slr, freq, csd_chain),
+            sfu: SfuModel { freq_mhz: freq, ..SfuModel::for_u280() },
+            slr_count: t.platform.slr_count,
+            freq_mhz: freq,
+        }
+    }
+
+    fn ns(&self, cycles: u64) -> f64 {
+        cycles as f64 * 1e3 / self.freq_mhz
+    }
+
+    /// Execute one instruction stream; the engine is consumed per run
+    /// (fresh channel state per inference).
+    pub fn run(mut self, insts: &[Inst]) -> SimReport {
+        let mut report = SimReport { inst_count: insts.len() as u64, ..Default::default() };
+        // Resource-ready times (ns).
+        let mut mpe_ready = 0.0f64;
+        let mut sfu_ready = 0.0f64;
+        // Completion time of the latest LD whose data compute consumes.
+        let mut data_ready = 0.0f64;
+        // Stream-issue cursor for memory ops (double buffering: memory
+        // runs ahead of compute, bounded by one tile of lookahead which
+        // the per-channel serialization already enforces).
+        let mut mem_issue = 0.0f64;
+
+        for inst in insts {
+            match inst {
+                Inst::Ld { .. } | Inst::LdMerged { .. } => {
+                    let done = self.mem.issue_scaled(mem_issue, inst, self.mem_scale());
+                    // Issue rate: one LD dispatched per cycle; transfers
+                    // queue per channel inside MemorySystem, so loads on
+                    // different channel groups overlap (double buffering).
+                    mem_issue += self.ns(1);
+                    data_ready = data_ready.max(done);
+                }
+                Inst::St { .. } | Inst::StMerged { .. } => {
+                    // Stores wait for the producing compute.
+                    let start = mem_issue.max(mpe_ready).max(sfu_ready);
+                    let done = self.mem.issue_scaled(start, inst, self.mem_scale());
+                    mem_issue = mem_issue.max(done - self.ns(1));
+                }
+                Inst::Mm { m, k, n, sparsity } => {
+                    let dur = self.mpe.mm_ns(*m as u64, *k as u64, *n as u64, *sparsity);
+                    let start = mpe_ready.max(data_ready);
+                    mpe_ready = start + dur;
+                    report.mpe_busy_ns += dur;
+                    report.macs += inst.macs();
+                }
+                Inst::Mv { k, n, sparsity } => {
+                    let dur = self.mpe.mv_ns(*k as u64, *n as u64, *sparsity);
+                    let start = mpe_ready.max(data_ready);
+                    mpe_ready = start + dur;
+                    report.mpe_busy_ns += dur;
+                    report.macs += inst.macs();
+                }
+                Inst::Misc { op, len } => {
+                    let dur = self.sfu.misc_ns(*op, *len as u64);
+                    // Two-phase ops need the producing vector complete;
+                    // element-wise ops stream behind the MPE (fine-grained
+                    // hiding, §3.3) — charge only the issue overhead on
+                    // the critical path.
+                    if op.is_two_phase() {
+                        let start = sfu_ready.max(mpe_ready);
+                        sfu_ready = start + dur;
+                        mpe_ready = mpe_ready.max(sfu_ready);
+                    } else {
+                        let start = sfu_ready.max(mpe_ready);
+                        sfu_ready = start + dur;
+                        mpe_ready = mpe_ready.max(start + self.ns(self.sfu.issue_cycles as u64));
+                    }
+                    report.sfu_busy_ns += dur;
+                }
+                Inst::Sys { op } => {
+                    let everyone = mpe_ready.max(sfu_ready).max(mem_issue).max(data_ready);
+                    let pause = match op {
+                        SysOp::SyncSlr => self.ns(SYNC_SLR_CYCLES),
+                        SysOp::SyncHost => self.ns(SYNC_HOST_CYCLES),
+                    };
+                    mpe_ready = everyone + pause;
+                    sfu_ready = everyone + pause;
+                    mem_issue = everyone + pause;
+                    data_ready = everyone + pause;
+                }
+            }
+        }
+        let total = mpe_ready
+            .max(sfu_ready)
+            .max(self.mem.quiescent());
+        report.total_ns = total;
+        report.hbm_bytes = self.mem.hbm_bytes;
+        report.ddr_bytes = self.mem.ddr_bytes;
+        report.hbm_bw_util = self.mem.hbm_bw_utilization(total);
+        // Per-SLR MACs against the per-SLR MPE model == board efficiency;
+        // scale MACs afterwards so totals are board-wide.
+        report.compute_eff = self.mpe.compute_efficiency(report.macs, total);
+        report.macs *= self.mem_scale();
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Target;
+    use crate::isa::{MemSpace, OnChipBuf, Sparsity};
+
+    fn engine() -> Engine {
+        Engine::for_target(&Target::u280_llama2(), true)
+    }
+
+    fn weight_stream(tiles: u32, bytes_per_tile: u32, k: u32, n: u32) -> Vec<Inst> {
+        let mut v = Vec::new();
+        for i in 0..tiles {
+            v.push(Inst::LdMerged {
+                first_channel: ((i * 8) % 32) as u8,
+                channels: 8,
+                dst: OnChipBuf::Weight,
+                addr: i as u64 * bytes_per_tile as u64,
+                bytes: bytes_per_tile / 8,
+            });
+            v.push(Inst::Mv { k, n, sparsity: Sparsity::Dense });
+        }
+        v
+    }
+
+    #[test]
+    fn empty_stream_is_zero() {
+        let r = engine().run(&[]);
+        assert_eq!(r.total_ns, 0.0);
+    }
+
+    #[test]
+    fn load_compute_overlap_is_max_not_sum() {
+        // Memory-bound MV stream: total ≈ T_mem, not T_mem + T_cmp.
+        let insts = weight_stream(64, 1 << 20, 4096, 256);
+        let r = engine().run(&insts);
+        let mem_only: Vec<Inst> = insts
+            .iter()
+            .filter(|i| i.is_memory())
+            .cloned()
+            .collect();
+        let r_mem = engine().run(&mem_only);
+        let compute_only: Vec<Inst> =
+            insts.iter().filter(|i| i.is_compute()).cloned().collect();
+        let r_cmp = engine().run(&compute_only);
+        let lower = r_mem.total_ns.max(r_cmp.total_ns);
+        assert!(r.total_ns >= lower * 0.99);
+        assert!(
+            r.total_ns < 1.25 * lower,
+            "overlap broken: total {} vs max(mem {}, cmp {})",
+            r.total_ns,
+            r_mem.total_ns,
+            r_cmp.total_ns
+        );
+    }
+
+    #[test]
+    fn sync_slr_serializes() {
+        let mut insts = weight_stream(4, 1 << 18, 1024, 256);
+        let r_nosync = engine().run(&insts);
+        for i in (2..insts.len() + insts.len() / 2).step_by(3).rev() {
+            if i < insts.len() {
+                insts.insert(i, Inst::Sys { op: SysOp::SyncSlr });
+            }
+        }
+        let r_sync = engine().run(&insts);
+        assert!(r_sync.total_ns > r_nosync.total_ns);
+    }
+
+    #[test]
+    fn two_phase_misc_on_critical_path_eltwise_hidden() {
+        let base = weight_stream(8, 1 << 18, 1024, 1024);
+        let mut with_softmax = base.clone();
+        let mut with_eltwise = base.clone();
+        for i in (0..8).rev() {
+            with_softmax.insert(i * 2 + 2, Inst::Misc { op: MiscOp::Softmax, len: 4096 });
+            with_eltwise.insert(i * 2 + 2, Inst::Misc { op: MiscOp::EltwiseAdd, len: 4096 });
+        }
+        let r_base = engine().run(&base);
+        let r_soft = engine().run(&with_softmax);
+        let r_elt = engine().run(&with_eltwise);
+        let soft_cost = r_soft.total_ns - r_base.total_ns;
+        let elt_cost = r_elt.total_ns - r_base.total_ns;
+        assert!(
+            soft_cost > 1.5 * elt_cost,
+            "softmax (two-phase) must hurt more: {soft_cost} vs {elt_cost}"
+        );
+    }
+
+    #[test]
+    fn report_accounts_traffic_and_macs() {
+        // The stream is one SLR's share; totals are board-wide (×3 SLRs).
+        let r = engine().run(&weight_stream(4, 1 << 20, 4096, 256));
+        assert_eq!(r.hbm_bytes, 3 * 4 * (1 << 20) as u64);
+        assert_eq!(r.macs, 3 * 4 * 4096 * 256);
+        assert!(r.hbm_bw_util > 0.0 && r.hbm_bw_util <= 1.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Off-chip memory timing model: HBM pseudo-channels + DDR (§4.4).
+//!
+//! Each LD/ST is charged `latency + bytes / effective_channel_bw` on the
+//! channels it touches.  Merged multi-channel transfers run their legs
+//! concurrently (the §5.2 decoder expansion), which is exactly how the
+//! instruction optimization recovers HBM bandwidth.  The model also
+//! tracks totals so the engine can report end-to-end bandwidth
+//! utilization (Table 5) and the memory-busy fraction.
+
+use crate::config::MemoryConfig;
+use crate::isa::{Inst, MemSpace};
+
+/// Timing + accounting for one platform's HBM + DDR.
+#[derive(Debug, Clone)]
+pub struct MemorySystem {
+    pub hbm: MemoryConfig,
+    pub ddr: MemoryConfig,
+    /// Ready time per HBM channel (ns) — transfers on different channels
+    /// overlap; transfers on one channel serialize.
+    hbm_channel_ready: Vec<f64>,
+    ddr_ready: f64,
+    /// Totals.
+    pub hbm_bytes: u64,
+    pub ddr_bytes: u64,
+    pub hbm_accesses: u64,
+    pub ddr_accesses: u64,
+}
+
+impl MemorySystem {
+    pub fn new(hbm: MemoryConfig, ddr: MemoryConfig) -> Self {
+        let ch = hbm.channels as usize;
+        Self {
+            hbm,
+            ddr,
+            hbm_channel_ready: vec![0.0; ch],
+            ddr_ready: 0.0,
+            hbm_bytes: 0,
+            ddr_bytes: 0,
+            hbm_accesses: 0,
+            ddr_accesses: 0,
+        }
+    }
+
+    fn hbm_channel_bw(&self) -> f64 {
+        self.hbm.per_channel_gbs() * self.hbm.burst_efficiency
+    }
+
+    /// Issue a single-channel transfer at `now`; returns completion time.
+    pub fn transfer(&mut self, now: f64, space: MemSpace, bytes: u64) -> f64 {
+        match space {
+            MemSpace::Hbm { channel } => {
+                let ch = (channel as usize) % self.hbm_channel_ready.len();
+                let start = now.max(self.hbm_channel_ready[ch]);
+                let dur = self.hbm.latency_ns + bytes as f64 / self.hbm_channel_bw();
+                self.hbm_channel_ready[ch] = start + dur;
+                self.hbm_bytes += bytes;
+                self.hbm_accesses += 1;
+                start + dur
+            }
+            MemSpace::Ddr => {
+                let start = now.max(self.ddr_ready);
+                let dur = self.ddr.latency_ns
+                    + bytes as f64
+                        / (self.ddr.bandwidth_gbs * self.ddr.burst_efficiency);
+                self.ddr_ready = start + dur;
+                self.ddr_bytes += bytes;
+                self.ddr_accesses += 1;
+                start + dur
+            }
+        }
+    }
+
+    /// Issue any LD/ST instruction (merged forms expand to concurrent
+    /// per-channel legs); returns completion time of the slowest leg.
+    pub fn issue(&mut self, now: f64, inst: &Inst) -> f64 {
+        self.issue_scaled(now, inst, 1)
+    }
+
+    /// Issue with a traffic multiplier: `scale` SLRs run the same stream
+    /// concurrently over the shared channels, so each leg carries
+    /// `scale×` the bytes (engine::mem_scale).
+    ///
+    /// Merged forms are walked channel-by-channel inline rather than via
+    /// `Inst::expand()` — this is the simulator's hottest loop and the
+    /// per-instruction Vec allocation was its top cost (§Perf).
+    pub fn issue_scaled(&mut self, now: f64, inst: &Inst, scale: u64) -> f64 {
+        match *inst {
+            Inst::Ld { src, bytes, .. } => self.transfer(now, src, bytes as u64 * scale),
+            Inst::St { dst, bytes, .. } => self.transfer(now, dst, bytes as u64 * scale),
+            Inst::LdMerged { first_channel, channels, bytes, .. }
+            | Inst::StMerged { first_channel, channels, bytes, .. } => {
+                // Legs all start at `now` on distinct channels —
+                // concurrency is captured by per-channel ready times.
+                let mut done = now;
+                for c in 0..channels {
+                    done = done.max(self.transfer(
+                        now,
+                        MemSpace::Hbm { channel: first_channel + c },
+                        bytes as u64 * scale,
+                    ));
+                }
+                done
+            }
+            _ => now,
+        }
+    }
+
+    /// Earliest time every channel is idle.
+    pub fn quiescent(&self) -> f64 {
+        self.hbm_channel_ready
+            .iter()
+            .fold(self.ddr_ready, |m, &t| m.max(t))
+    }
+
+    /// Achieved HBM bandwidth over a window of `total_ns`, as a fraction
+    /// of peak (Table 5's metric).
+    pub fn hbm_bw_utilization(&self, total_ns: f64) -> f64 {
+        if total_ns <= 0.0 {
+            return 0.0;
+        }
+        let achieved = self.hbm_bytes as f64 / total_ns; // GB/s
+        achieved / self.hbm.bandwidth_gbs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Platform;
+    use crate::isa::OnChipBuf;
+
+    fn mem() -> MemorySystem {
+        let p = Platform::u280();
+        MemorySystem::new(p.hbm, p.ddr)
+    }
+
+    #[test]
+    fn large_transfer_time_tracks_bandwidth() {
+        let mut m = mem();
+        let bytes = 1 << 20; // 1 MiB on one channel
+        let done = m.transfer(0.0, MemSpace::Hbm { channel: 0 }, bytes);
+        let bw = m.hbm.per_channel_gbs() * m.hbm.burst_efficiency;
+        let expect = m.hbm.latency_ns + bytes as f64 / bw;
+        assert!((done - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn same_channel_serializes_different_channels_overlap() {
+        let mut m = mem();
+        let b = 1 << 20;
+        let t1 = m.transfer(0.0, MemSpace::Hbm { channel: 0 }, b);
+        let t2 = m.transfer(0.0, MemSpace::Hbm { channel: 0 }, b);
+        assert!(t2 > t1 * 1.9, "same channel must serialize");
+        let mut m2 = mem();
+        let u1 = m2.transfer(0.0, MemSpace::Hbm { channel: 0 }, b);
+        let u2 = m2.transfer(0.0, MemSpace::Hbm { channel: 1 }, b);
+        assert!((u1 - u2).abs() < 1e-9, "different channels overlap");
+    }
+
+    #[test]
+    fn merged_ld_is_faster_than_serial_lds() {
+        // The §5.2 optimization: 8 concurrent channel legs vs 8 serial
+        // accesses on one channel.
+        let total = 8 * (1 << 18);
+        let mut m1 = mem();
+        let merged = Inst::LdMerged {
+            first_channel: 0,
+            channels: 8,
+            dst: OnChipBuf::Weight,
+            addr: 0,
+            bytes: (total / 8) as u32,
+        };
+        let t_merged = m1.issue(0.0, &merged);
+        let mut m2 = mem();
+        let mut t_serial = 0.0;
+        for _ in 0..8 {
+            let ld = Inst::Ld {
+                src: MemSpace::Hbm { channel: 3 },
+                dst: OnChipBuf::Weight,
+                addr: 0,
+                bytes: (total / 8) as u32,
+            };
+            t_serial = m2.issue(t_serial, &ld);
+        }
+        assert!(
+            t_merged < t_serial / 6.0,
+            "merged {t_merged:.0} ns vs serial {t_serial:.0} ns"
+        );
+    }
+
+    #[test]
+    fn small_access_prefers_ddr() {
+        // §4.4: at ~128 B the DDR (lower latency) beats HBM.
+        let mut m = mem();
+        let t_hbm = m.transfer(0.0, MemSpace::Hbm { channel: 0 }, 128);
+        let mut m2 = mem();
+        let t_ddr = m2.transfer(0.0, MemSpace::Ddr, 128);
+        assert!(t_ddr < t_hbm);
+    }
+
+    #[test]
+    fn bandwidth_utilization_bounded() {
+        let mut m = mem();
+        let done = m.issue(
+            0.0,
+            &Inst::LdMerged {
+                first_channel: 0,
+                channels: 32,
+                dst: OnChipBuf::Weight,
+                addr: 0,
+                bytes: 1 << 20,
+            },
+        );
+        let util = m.hbm_bw_utilization(done);
+        assert!(util > 0.5 && util <= 1.0, "util = {util}");
+    }
+
+    #[test]
+    fn accounting_accumulates() {
+        let mut m = mem();
+        m.transfer(0.0, MemSpace::Hbm { channel: 0 }, 1000);
+        m.transfer(0.0, MemSpace::Ddr, 500);
+        assert_eq!(m.hbm_bytes, 1000);
+        assert_eq!(m.ddr_bytes, 500);
+        assert_eq!(m.hbm_accesses, 1);
+        assert_eq!(m.ddr_accesses, 1);
+    }
+}

@@ -1,0 +1,32 @@
+//! Cycle-approximate simulator of the FlightLLM accelerator (§3, §4).
+//!
+//! The simulator executes the same ISA the compiler emits, against the
+//! platform + accelerator organization from `config`.  It is the stand-in
+//! for the U280 board / VHK158 RTL-verified simulator of §6.1 (see
+//! DESIGN.md §Substitutions): absolute nanoseconds are approximate, the
+//! *relationships* (who wins, ablation deltas, bandwidth utilization) are
+//! what it is calibrated to reproduce.
+//!
+//! Structure:
+//! - `csd_chain` — bit-true functional + cycle model of the configurable
+//!   sparse DSP chain (sparse MUX, reduction nodes, overflow adjust).
+//! - `mpe` — MM/MV timing on the Matrix Processing Engine.
+//! - `sfu` — MISC timing (two-phase reductions, element-wise ops).
+//! - `memory` — HBM/DDR channel model (§4.4 hybrid placement).
+//! - `engine` — in-order instruction execution with double-buffer overlap
+//!   (§3.2.2) and SLR synchronization.
+//! - `power` — xbutil-style power model for the energy-efficiency plots.
+
+pub mod csd_chain;
+pub mod engine;
+pub mod memory;
+pub mod mpe;
+pub mod power;
+pub mod sfu;
+
+pub use csd_chain::CsdChain;
+pub use engine::{Engine, SimReport};
+pub use memory::MemorySystem;
+pub use mpe::MpeModel;
+pub use power::PowerModel;
+pub use sfu::SfuModel;

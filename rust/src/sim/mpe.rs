@@ -1,0 +1,152 @@
+//! MPE timing model (§3.2): MM and MV mode cycle counts for the unified
+//! Matrix Processing Engine, including the CSD-chain sparse efficiency
+//! and the §3.2.2 MV-mode reparallelization.
+
+use crate::config::AcceleratorConfig;
+use crate::isa::Sparsity;
+
+/// Timing model of one accelerator's worth of MPEs.
+#[derive(Debug, Clone)]
+pub struct MpeModel {
+    pub accel: AcceleratorConfig,
+    pub freq_mhz: f64,
+    /// Whether the configurable sparse DSP chain is present.  Without it
+    /// (the Fig. 14 "naive" rung) sparse matrices are computed at dense
+    /// cost — the GPU-like behaviour the paper contrasts against.
+    pub csd_chain: bool,
+}
+
+/// Efficiency knobs calibrated once against the paper's utilization data.
+/// Dense MM keeps ~95% of peak (pipeline fill, edge tiles); the CSD-chain
+/// keeps ~88% under N:M (DG mismatch, RN overhead) — the residual loss
+/// the paper attributes to data mismatch between DGs.
+const DENSE_EFF: f64 = 0.95;
+const SPARSE_EFF: f64 = 0.88;
+/// MV mode cannot use the p_m dimension (§3.2.2): utilization of the
+/// compute array is p_k·p_n / (p_m·p_k·p_n), but the re-tiled [p_k', p_n']
+/// recovers most lanes for weight-parallel work; the decode stage is
+/// memory-bound anyway. This factor is the fraction of peak MACs usable
+/// in MV mode after re-parallelization.
+const MV_ARRAY_FRACTION: f64 = 0.5;
+
+impl MpeModel {
+    pub fn new(accel: AcceleratorConfig, freq_mhz: f64, csd_chain: bool) -> Self {
+        Self { accel, freq_mhz, csd_chain }
+    }
+
+    fn ns_per_cycle(&self) -> f64 {
+        1e3 / self.freq_mhz
+    }
+
+    /// Dense-equivalent MACs/cycle of the whole device.
+    fn peak_macs_per_cycle(&self) -> f64 {
+        self.accel.macs_per_cycle() as f64
+    }
+
+    /// Effective density: without the CSD chain, sparsity gives no
+    /// speedup (unstructured-sparsity-on-GPU effect from §1).
+    fn effective_density(&self, s: Sparsity) -> (f64, f64) {
+        match s {
+            Sparsity::Dense => (1.0, DENSE_EFF),
+            _ if !self.csd_chain => (1.0, DENSE_EFF),
+            Sparsity::Nm { .. } => (s.density(), SPARSE_EFF),
+            Sparsity::BlockSparse { .. } => (s.density(), SPARSE_EFF),
+        }
+    }
+
+    /// ns of compute for an MM of shape (m × k) · (k × n).
+    pub fn mm_ns(&self, m: u64, k: u64, n: u64, sparsity: Sparsity) -> f64 {
+        let (density, eff) = self.effective_density(sparsity);
+        let macs = (m * k * n) as f64 * density;
+        let cycles = macs / (self.peak_macs_per_cycle() * eff);
+        // Pipeline fill: one pass of the systolic-ish MPU per output tile.
+        let fill = (k as f64 / self.accel.p_k as f64).ceil();
+        (cycles + fill) * self.ns_per_cycle()
+    }
+
+    /// ns of compute for an MV of shape (1 × k) · (k × n) (§3.2.2).
+    pub fn mv_ns(&self, k: u64, n: u64, sparsity: Sparsity) -> f64 {
+        let (density, eff) = self.effective_density(sparsity);
+        let macs = (k * n) as f64 * density;
+        let peak = self.peak_macs_per_cycle() * MV_ARRAY_FRACTION;
+        let cycles = macs / (peak * eff);
+        (cycles + self.accel.p_k as f64) * self.ns_per_cycle()
+    }
+
+    /// Useful MACs per ns in MV mode — used by the engine to decide
+    /// whether a layer is memory- or compute-bound.
+    pub fn mv_macs_per_ns(&self) -> f64 {
+        self.peak_macs_per_cycle() * MV_ARRAY_FRACTION * self.freq_mhz * 1e-3
+    }
+
+    /// Achieved-vs-peak compute efficiency for a workload of
+    /// `useful_macs` that took `ns` (runtime DSP utilization, the §3.2
+    /// metric improved 1.6× by the CSD chain).
+    pub fn compute_efficiency(&self, useful_macs: u64, ns: f64) -> f64 {
+        if ns <= 0.0 {
+            return 0.0;
+        }
+        let cycles = ns / self.ns_per_cycle();
+        useful_macs as f64 / (cycles * self.peak_macs_per_cycle())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+
+    fn model(csd: bool) -> MpeModel {
+        MpeModel::new(AcceleratorConfig::for_u280(), 225.0, csd)
+    }
+
+    #[test]
+    fn dense_mm_near_peak() {
+        let m = model(true);
+        let ns = m.mm_ns(512, 4096, 4096, Sparsity::Dense);
+        let macs = 512u64 * 4096 * 4096;
+        let eff = m.compute_efficiency(macs, ns);
+        assert!(eff > 0.85 && eff <= 1.0, "eff = {eff}");
+    }
+
+    #[test]
+    fn nm_sparsity_cuts_mm_time_with_csd_chain() {
+        let m = model(true);
+        let dense = m.mm_ns(512, 4096, 4096, Sparsity::Dense);
+        let sparse = m.mm_ns(512, 4096, 4096, Sparsity::Nm { n: 8, m: 16 });
+        let speedup = dense / sparse;
+        assert!(
+            speedup > 1.6 && speedup < 2.1,
+            "8:16 should give ~1.8x, got {speedup}"
+        );
+    }
+
+    #[test]
+    fn without_csd_chain_sparsity_gives_nothing() {
+        // The §1 observation: 75% unstructured sparsity → no end-to-end
+        // speedup on architectures without sparse datapaths.
+        let m = model(false);
+        let dense = m.mm_ns(512, 4096, 4096, Sparsity::Dense);
+        let sparse = m.mm_ns(512, 4096, 4096, Sparsity::Nm { n: 4, m: 16 });
+        assert!((dense - sparse).abs() / dense < 1e-9);
+    }
+
+    #[test]
+    fn mv_mode_slower_per_mac_than_mm() {
+        let m = model(true);
+        let k = 4096u64;
+        let n = 4096u64;
+        let mm = m.mm_ns(128, k, n, Sparsity::Dense) / 128.0;
+        let mv = m.mv_ns(k, n, Sparsity::Dense);
+        assert!(mv > mm, "per-token MV {mv} should exceed amortized MM {mm}");
+    }
+
+    #[test]
+    fn block_sparse_scales_sddmm() {
+        let m = model(true);
+        let full = m.mm_ns(2048, 128, 2048, Sparsity::Dense);
+        let half = m.mm_ns(2048, 128, 2048, Sparsity::BlockSparse { density_256: 128 });
+        let ratio = full / half;
+        assert!(ratio > 1.7 && ratio < 2.2, "ratio = {ratio}");
+    }
+}

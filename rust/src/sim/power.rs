@@ -1,0 +1,111 @@
+//! Power model (xbutil-style, §6.1): board power decomposed into static,
+//! compute-proportional, and memory-traffic-proportional parts.
+//!
+//! Calibrated so a U280 at full decode load draws ≈ 45 W (the class of
+//! numbers xbutil reports for this design) and energy efficiency lands in
+//! the Token/J regime of Fig. 13.
+
+use crate::config::Platform;
+
+use super::engine::SimReport;
+
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    /// Idle/static board power, W.
+    pub static_w: f64,
+    /// Dynamic power at 100% DSP activity, W.
+    pub compute_w: f64,
+    /// Dynamic power at 100% HBM bandwidth, W.
+    pub memory_w: f64,
+    /// Peak MACs/ns of the configuration (to normalize compute activity).
+    peak_macs_per_ns: f64,
+    hbm_peak_gbs: f64,
+}
+
+impl PowerModel {
+    pub fn for_platform(p: &Platform, macs_per_cycle: u64) -> Self {
+        // FPGA split: roughly 40% static + IO, 35% DSP/logic, 25% HBM at
+        // full load, scaled to the board's power envelope.
+        Self {
+            static_w: 0.40 * p.power_w,
+            compute_w: 0.35 * p.power_w,
+            memory_w: 0.25 * p.power_w,
+            peak_macs_per_ns: macs_per_cycle as f64 * p.freq_mhz * 1e-3,
+            hbm_peak_gbs: p.hbm.bandwidth_gbs,
+        }
+    }
+
+    /// Average power over a simulated window, W.
+    pub fn avg_watts(&self, r: &SimReport) -> f64 {
+        if r.total_ns <= 0.0 {
+            return self.static_w;
+        }
+        let compute_act =
+            (r.macs as f64 / r.total_ns) / self.peak_macs_per_ns;
+        let mem_act = (r.hbm_bytes as f64 / r.total_ns) / self.hbm_peak_gbs;
+        self.static_w
+            + self.compute_w * compute_act.min(1.0)
+            + self.memory_w * mem_act.min(1.0)
+    }
+
+    /// Energy for the window, joules.
+    pub fn energy_j(&self, r: &SimReport) -> f64 {
+        self.avg_watts(r) * r.total_ns * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AcceleratorConfig, Platform};
+
+    fn model() -> PowerModel {
+        let p = Platform::u280();
+        let a = AcceleratorConfig::for_u280();
+        PowerModel::for_platform(&p, a.macs_per_cycle())
+    }
+
+    fn report(macs: u64, bytes: u64, ns: f64) -> SimReport {
+        SimReport { total_ns: ns, macs, hbm_bytes: bytes, ..Default::default() }
+    }
+
+    #[test]
+    fn idle_draws_static_only() {
+        let m = model();
+        let w = m.avg_watts(&report(0, 0, 1e6));
+        assert!((w - m.static_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_load_approaches_board_power() {
+        let m = model();
+        // 1 ms at peak compute and peak bandwidth.
+        let ns = 1e6;
+        let macs = (m.peak_macs_per_ns * ns) as u64;
+        let bytes = (m.hbm_peak_gbs * ns) as u64;
+        let w = m.avg_watts(&report(macs, bytes, ns));
+        let total = m.static_w + m.compute_w + m.memory_w;
+        assert!((w - total).abs() / total < 0.01, "w = {w}, envelope = {total}");
+        assert!((total - 45.0).abs() < 1.0, "U280 envelope ≈ 45 W");
+    }
+
+    #[test]
+    fn energy_scales_with_time() {
+        let m = model();
+        let e1 = m.energy_j(&report(0, 0, 1e6));
+        let e2 = m.energy_j(&report(0, 0, 2e6));
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_bound_decode_power_below_envelope() {
+        // Decode is bandwidth-heavy, compute-light: power should sit
+        // between static and full load.
+        let m = model();
+        let ns = 1e6;
+        let bytes = (0.66 * m.hbm_peak_gbs * ns) as u64; // 66% BW util
+        let macs = (0.10 * m.peak_macs_per_ns * ns) as u64; // 10% compute
+        let w = m.avg_watts(&report(macs, bytes, ns));
+        assert!(w > m.static_w && w < 0.9 * (m.static_w + m.compute_w + m.memory_w));
+    }
+}

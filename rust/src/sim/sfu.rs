@@ -1,0 +1,109 @@
+//! SFU timing model (§3.3): MISC operations on the Special Function Unit.
+//!
+//! Element-wise ops stream one element per lane per cycle; two-phase ops
+//! (softmax, layer/rms-norm) read the whole vector twice (reduce, then
+//! normalize).  The remote-SFU path (sharing partial results between
+//! SLRs without an HBM round-trip) is modeled as a fixed inter-SLR hop.
+
+use crate::isa::MiscOp;
+
+#[derive(Debug, Clone)]
+pub struct SfuModel {
+    pub freq_mhz: f64,
+    /// Element lanes per SFU (fp16 ALUs).
+    pub lanes: u32,
+    /// Fixed issue overhead per MISC instruction, cycles.
+    pub issue_cycles: u32,
+    /// Inter-SLR hop for remote-SFU sharing, cycles.
+    pub remote_hop_cycles: u32,
+}
+
+impl SfuModel {
+    /// Calibrated to the Table 3 SFU (201 DSPs ≈ 64 fp16 lanes at 225 MHz).
+    pub fn for_u280() -> Self {
+        Self { freq_mhz: 225.0, lanes: 64, issue_cycles: 4, remote_hop_cycles: 24 }
+    }
+
+    fn ns_per_cycle(&self) -> f64 {
+        1e3 / self.freq_mhz
+    }
+
+    /// ns for one MISC op over `len` elements.
+    pub fn misc_ns(&self, op: MiscOp, len: u64) -> f64 {
+        let passes = if op.is_two_phase() { 2 } else { 1 };
+        let cycles = passes * len.div_ceil(self.lanes as u64)
+            + self.issue_cycles as u64;
+        cycles as f64 * self.ns_per_cycle()
+    }
+
+    /// ns for the remote-SFU broadcast of a `len`-element partial vector
+    /// to `slrs` peers (§3.3: "the result could be sent to all other PEs
+    /// without writing back to HBM").
+    pub fn remote_share_ns(&self, len: u64, slrs: u32) -> f64 {
+        if slrs <= 1 {
+            return 0.0;
+        }
+        let cycles = self.remote_hop_cycles as u64
+            + len.div_ceil(self.lanes as u64);
+        // Broadcast is pipelined across SLRs: one hop extra per peer.
+        (cycles + (slrs as u64 - 2) * self.remote_hop_cycles as u64 / 2) as f64
+            * self.ns_per_cycle()
+    }
+
+    /// The §3.3 fine-granularity trick: a MISC op after a single-head MV
+    /// is broken into `chunks` sub-vectors so it hides under compute;
+    /// the visible (non-hidden) time is one sub-vector's worth.
+    pub fn misc_visible_ns(&self, op: MiscOp, len: u64, chunks: u64) -> f64 {
+        self.misc_ns(op, len.div_ceil(chunks.max(1)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_phase_costs_two_passes() {
+        let s = SfuModel::for_u280();
+        let ew = s.misc_ns(MiscOp::EltwiseAdd, 4096);
+        let sm = s.misc_ns(MiscOp::Softmax, 4096);
+        assert!(sm > 1.8 * ew && sm < 2.2 * ew, "softmax {sm} vs eltwise {ew}");
+    }
+
+    #[test]
+    fn misc_scales_with_length() {
+        let s = SfuModel::for_u280();
+        let a = s.misc_ns(MiscOp::Silu, 1024);
+        let b = s.misc_ns(MiscOp::Silu, 4096);
+        assert!(b > 3.0 * a && b < 4.5 * a);
+    }
+
+    #[test]
+    fn remote_share_cheaper_than_hbm_roundtrip() {
+        // The §3.3 claim: SFU-to-SFU sharing beats writing the vector to
+        // HBM and reading it back on the peer SLR.
+        let s = SfuModel::for_u280();
+        let p = crate::config::Platform::u280();
+        let len = 4096u64;
+        let share = s.remote_share_ns(len, 3);
+        // A vector write-back + read-back crosses one HBM pseudo-channel.
+        let ch_bw = p.hbm.per_channel_gbs() * p.hbm.burst_efficiency;
+        let hbm_roundtrip =
+            2.0 * (p.hbm.latency_ns + (len * 2) as f64 / ch_bw);
+        assert!(share < hbm_roundtrip, "{share} vs {hbm_roundtrip}");
+    }
+
+    #[test]
+    fn chunked_visible_time_is_fraction() {
+        let s = SfuModel::for_u280();
+        let full = s.misc_ns(MiscOp::EltwiseMul, 4096);
+        let visible = s.misc_visible_ns(MiscOp::EltwiseMul, 4096, 8);
+        assert!(visible < full / 4.0);
+    }
+
+    #[test]
+    fn single_slr_share_is_free() {
+        let s = SfuModel::for_u280();
+        assert_eq!(s.remote_share_ns(1024, 1), 0.0);
+    }
+}

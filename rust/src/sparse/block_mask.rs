@@ -1,0 +1,136 @@
+//! Block-sparse attention masks (§4.2): the 64×64-block masks the fused
+//! prefill attention consumes.  A `true` block is computed; a `false`
+//! block's LD + MM are skipped entirely by the compiler.
+
+
+#[derive(Debug, Clone)]
+pub struct BlockMask {
+    /// Blocks per side (sequence_len / block_edge).
+    pub nb: usize,
+    /// Block edge in tokens (paper: 64).
+    pub block: usize,
+    /// Row-major keep flags, lower-triangular for causal attention.
+    pub keep: Vec<bool>,
+}
+
+impl BlockMask {
+    /// Dense causal mask: every block at or below the diagonal kept.
+    pub fn dense_causal(nb: usize, block: usize) -> Self {
+        let mut keep = vec![false; nb * nb];
+        for i in 0..nb {
+            for j in 0..=i {
+                keep[i * nb + j] = true;
+            }
+        }
+        Self { nb, block, keep }
+    }
+
+    /// Sliding-window + global-column pattern (BigBird/Longformer style,
+    /// the sparse-attention family the paper builds on [4, 9, 53]).
+    pub fn sliding_global(nb: usize, block: usize, window: usize, global: usize) -> Self {
+        let mut m = Self { nb, block, keep: vec![false; nb * nb] };
+        for i in 0..nb {
+            let lo = i.saturating_sub(window.saturating_sub(1));
+            for j in lo..=i {
+                m.set(i, j, true);
+            }
+            for j in 0..global.min(i + 1) {
+                m.set(i, j, true);
+            }
+        }
+        m
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        self.keep[i * self.nb + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: bool) {
+        self.keep[i * self.nb + j] = v;
+    }
+
+    /// Kept blocks.
+    pub fn kept_blocks(&self) -> usize {
+        self.keep.iter().filter(|&&k| k).count()
+    }
+
+    /// Blocks in the full causal lower triangle.
+    pub fn causal_blocks(&self) -> usize {
+        self.nb * (self.nb + 1) / 2
+    }
+
+    /// Density relative to the causal triangle — what scales the SDDMM
+    /// compute and score-memory in the simulator.
+    pub fn density(&self) -> f64 {
+        self.kept_blocks() as f64 / self.causal_blocks() as f64
+    }
+
+    /// MACs for the masked QK^T (SDDMM) at head dim `hd`, all `heads`.
+    /// Diagonal blocks are half-utilized under the causal constraint.
+    pub fn sddmm_macs(&self, hd: u64, heads: u64) -> u64 {
+        let b = self.block as u64;
+        let mut macs = 0u64;
+        for i in 0..self.nb {
+            for j in 0..self.nb {
+                if self.get(i, j) {
+                    let full = b * b * hd;
+                    macs += if i == j { full / 2 } else { full };
+                }
+            }
+        }
+        macs * heads
+    }
+
+    /// Per-row kept-key counts (tokens) — the S·V work distribution.
+    pub fn row_kept_tokens(&self) -> Vec<usize> {
+        (0..self.nb)
+            .map(|i| (0..self.nb).filter(|&j| self.get(i, j)).count() * self.block)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_causal_density_is_one() {
+        let m = BlockMask::dense_causal(8, 64);
+        assert_eq!(m.kept_blocks(), 36);
+        assert!((m.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sliding_window_is_causal() {
+        let m = BlockMask::sliding_global(8, 64, 2, 1);
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert!(!m.get(i, j), "upper triangle must be empty");
+            }
+            assert!(m.get(i, i), "diagonal must be kept");
+        }
+    }
+
+    #[test]
+    fn window_bounds_density() {
+        let tight = BlockMask::sliding_global(16, 64, 1, 0);
+        let wide = BlockMask::sliding_global(16, 64, 8, 2);
+        assert!(tight.density() < wide.density());
+        assert!(wide.density() <= 1.0);
+    }
+
+    #[test]
+    fn sddmm_macs_scale_with_mask() {
+        let dense = BlockMask::dense_causal(4, 64);
+        let sparse = BlockMask::sliding_global(4, 64, 1, 0);
+        assert!(sparse.sddmm_macs(128, 32) < dense.sddmm_macs(128, 32));
+        // 1-wide window = diagonal only: 4 half blocks.
+        assert_eq!(sparse.sddmm_macs(128, 1), 4 * (64 * 64 * 128 / 2));
+    }
+
+    #[test]
+    fn row_kept_tokens_monotone_for_dense_causal() {
+        let m = BlockMask::dense_causal(4, 64);
+        assert_eq!(m.row_kept_tokens(), vec![64, 128, 192, 256]);
+    }
+}

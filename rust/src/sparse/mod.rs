@@ -1,0 +1,11 @@
+//! Sparsity substrates: the N:M weight format the CSD-chain consumes
+//! (§3.2.1) and the 64×64 block-sparse attention masks (§4.2), plus the
+//! gradient-proxy importance analysis that assigns per-block N (§6.2.1).
+
+mod block_mask;
+mod importance;
+mod nm;
+
+pub use block_mask::BlockMask;
+pub use importance::{assign_block_n, importance_scores};
+pub use nm::{NmMatrix, NmBlockPattern};

@@ -1,0 +1,280 @@
+//! N:M sparse weight format (§3.2.1).
+//!
+//! The paper's scheme: the weight matrix is tiled into 16×16 blocks; each
+//! block gets an N ∈ {0, 2, 4, 8, 16} (M = 16, N a partial factor of M)
+//! assigned by importance analysis, keeping N nonzeros per M-wide group
+//! row.  The CSD-chain consumes exactly this: per kept element a value
+//! and a log2(M)-bit in-group index (the sparse-MUX select).
+
+
+/// Per-block N assignment for a matrix tiled into (M×M) blocks.
+#[derive(Debug, Clone)]
+pub struct NmBlockPattern {
+    /// Block rows × block cols.
+    pub rows: usize,
+    pub cols: usize,
+    /// M (group width; paper: 16).
+    pub m: u8,
+    /// N per block, row-major; each must divide M and be a power of two
+    /// or zero.
+    pub n: Vec<u8>,
+}
+
+impl NmBlockPattern {
+    /// Uniform N:M across the whole matrix.
+    pub fn uniform(rows: usize, cols: usize, n: u8, m: u8) -> Self {
+        assert!(valid_n(n, m), "invalid N={n} for M={m}");
+        Self { rows, cols, m, n: vec![n; rows * cols] }
+    }
+
+    pub fn n_at(&self, br: usize, bc: usize) -> u8 {
+        self.n[br * self.cols + bc]
+    }
+
+    /// Mean density N/M over all blocks.
+    pub fn density(&self) -> f64 {
+        let total: u64 = self.n.iter().map(|&n| n as u64).sum();
+        total as f64 / (self.n.len() as f64 * self.m as f64)
+    }
+
+    /// Kept nonzeros for an (rows*M) × (cols*M) matrix.
+    pub fn nnz(&self) -> u64 {
+        // Each block contributes M rows × N kept per row.
+        self.n.iter().map(|&n| self.m as u64 * n as u64).sum()
+    }
+}
+
+/// Valid N for a given M: zero or a power-of-two factor of M (paper §3.2.1:
+/// "M is an integer power of 2, and N is the partial factor of M").
+pub fn valid_n(n: u8, m: u8) -> bool {
+    n == 0 || (n <= m && m % n == 0 && n.is_power_of_two())
+}
+
+/// A dense matrix compressed to N:M form — the host-side mirror of what
+/// the MMU's index buffer + weight buffer hold.
+#[derive(Debug, Clone)]
+pub struct NmMatrix {
+    /// Logical shape (out, in) of the dense matrix.
+    pub out_dim: usize,
+    pub in_dim: usize,
+    pub m: u8,
+    /// Kept values, row-major by (row, group) — variable count per row
+    /// when blocks have different N.
+    pub vals: Vec<f32>,
+    /// In-group index of each kept value (0..M).
+    pub idx: Vec<u8>,
+    /// Start offset of each row's (vals, idx) run; len = out_dim + 1.
+    pub row_ptr: Vec<u32>,
+    /// The block pattern that produced this compression.
+    pub pattern: NmBlockPattern,
+}
+
+impl NmMatrix {
+    /// Compress `w` (out × in, row-major) keeping, per M-group, the
+    /// largest-|w| N elements where N comes from `pattern`'s block.
+    pub fn compress(w: &[f32], out_dim: usize, in_dim: usize, pattern: NmBlockPattern) -> Self {
+        let m = pattern.m as usize;
+        assert_eq!(w.len(), out_dim * in_dim);
+        assert_eq!(out_dim.div_ceil(m), pattern.rows, "block rows mismatch");
+        assert_eq!(in_dim.div_ceil(m), pattern.cols, "block cols mismatch");
+        let mut vals = Vec::new();
+        let mut idx = Vec::new();
+        let mut row_ptr = Vec::with_capacity(out_dim + 1);
+        row_ptr.push(0u32);
+        let groups = in_dim / m;
+        let mut order: Vec<usize> = Vec::with_capacity(m);
+        for r in 0..out_dim {
+            let br = r / m;
+            for g in 0..groups {
+                let n = pattern.n_at(br, g) as usize;
+                let base = r * in_dim + g * m;
+                order.clear();
+                order.extend(0..m);
+                order.sort_by(|&a, &b| {
+                    w[base + b].abs().partial_cmp(&w[base + a].abs()).unwrap()
+                });
+                let mut kept: Vec<usize> = order[..n].to_vec();
+                kept.sort_unstable(); // canonical ascending index order
+                for &j in &kept {
+                    vals.push(w[base + j]);
+                    idx.push(j as u8);
+                }
+            }
+            row_ptr.push(vals.len() as u32);
+        }
+        Self { out_dim, in_dim, m: pattern.m, vals, idx, row_ptr, pattern }
+    }
+
+    /// Expand back to dense (out × in, row-major).
+    pub fn decompress(&self) -> Vec<f32> {
+        let m = self.m as usize;
+        let groups = self.in_dim / m;
+        let mut w = vec![0f32; self.out_dim * self.in_dim];
+        for r in 0..self.out_dim {
+            let br = r / m;
+            let mut cursor = self.row_ptr[r] as usize;
+            for g in 0..groups {
+                let n = self.pattern.n_at(br, g) as usize;
+                for _ in 0..n {
+                    let j = self.idx[cursor] as usize;
+                    w[r * self.in_dim + g * m + j] = self.vals[cursor];
+                    cursor += 1;
+                }
+            }
+            debug_assert_eq!(cursor, self.row_ptr[r + 1] as usize);
+        }
+        w
+    }
+
+    /// y = W·x (SpMV) — the functional model of the MV-mode MPE.
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_dim);
+        let m = self.m as usize;
+        let groups = self.in_dim / m;
+        let mut y = vec![0f32; self.out_dim];
+        for r in 0..self.out_dim {
+            let br = r / m;
+            let mut cursor = self.row_ptr[r] as usize;
+            let mut acc = 0f32;
+            for g in 0..groups {
+                let n = self.pattern.n_at(br, g) as usize;
+                let base = g * m;
+                for _ in 0..n {
+                    // The sparse MUX: select x[index] for each kept value.
+                    acc += self.vals[cursor] * x[base + self.idx[cursor] as usize];
+                    cursor += 1;
+                }
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.out_dim * self.in_dim) as f64
+    }
+
+    /// Stored bytes at `value_bits` per value (index costs log2(M) bits).
+    pub fn stored_bytes(&self, value_bits: f64) -> f64 {
+        let idx_bits = (self.m as f64).log2();
+        self.nnz() as f64 * (value_bits + idx_bits) / 8.0
+            + self.row_ptr.len() as f64 * 4.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense(out: usize, inp: usize, seed: u64) -> Vec<f32> {
+        // Simple deterministic pseudo-random fill.
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..out * inp)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s % 2000) as f32 - 1000.0) / 250.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn valid_n_matches_paper() {
+        // M=16 → N ∈ {0, 2, 4, 8, 16} (and 1, a trivial factor).
+        for n in [0u8, 1, 2, 4, 8, 16] {
+            assert!(valid_n(n, 16), "N={n} should be valid");
+        }
+        for n in [3u8, 5, 6, 7, 12, 17] {
+            assert!(!valid_n(n, 16), "N={n} should be invalid");
+        }
+    }
+
+    #[test]
+    fn compress_decompress_preserves_kept_values() {
+        let w = dense(32, 32, 7);
+        let p = NmBlockPattern::uniform(2, 2, 4, 16);
+        let c = NmMatrix::compress(&w, 32, 32, p);
+        assert_eq!(c.nnz(), 32 * 2 * 4); // rows × groups × N
+        let d = c.decompress();
+        // Every kept value matches the original exactly.
+        for (i, (&orig, &dec)) in w.iter().zip(d.iter()).enumerate() {
+            if dec != 0.0 {
+                assert_eq!(orig, dec, "mismatch at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn compress_keeps_largest_magnitude() {
+        let w = dense(16, 16, 3);
+        let p = NmBlockPattern::uniform(1, 1, 2, 16);
+        let c = NmMatrix::compress(&w, 16, 16, p);
+        let d = c.decompress();
+        for r in 0..16 {
+            let row = &w[r * 16..(r + 1) * 16];
+            let kept: Vec<f32> =
+                d[r * 16..(r + 1) * 16].iter().copied().filter(|&v| v != 0.0).collect();
+            let mut sorted: Vec<f32> = row.iter().map(|v| v.abs()).collect();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let min_kept = kept.iter().map(|v| v.abs()).fold(f32::MAX, f32::min);
+            assert!(min_kept >= sorted[1] - 1e-6);
+        }
+    }
+
+    #[test]
+    fn spmv_matches_dense_matvec() {
+        let w = dense(32, 48, 11);
+        let p = NmBlockPattern::uniform(2, 3, 8, 16);
+        let c = NmMatrix::compress(&w, 32, 48, p);
+        let wd = c.decompress();
+        let x: Vec<f32> = (0..48).map(|i| (i as f32 * 0.3).sin()).collect();
+        let y = c.spmv(&x);
+        for r in 0..32 {
+            let want: f32 =
+                (0..48).map(|j| wd[r * 48 + j] * x[j]).sum();
+            assert!((y[r] - want).abs() < 1e-4, "row {r}: {} vs {want}", y[r]);
+        }
+    }
+
+    #[test]
+    fn dense_mode_n_equals_m_roundtrips_exactly() {
+        let w = dense(16, 16, 5);
+        let p = NmBlockPattern::uniform(1, 1, 16, 16);
+        let c = NmMatrix::compress(&w, 16, 16, p);
+        assert_eq!(c.decompress(), w);
+        assert_eq!(c.density(), 1.0);
+    }
+
+    #[test]
+    fn variable_block_pattern_density() {
+        let mut p = NmBlockPattern::uniform(2, 2, 16, 16);
+        p.n = vec![16, 8, 4, 0];
+        assert!((p.density() - (16.0 + 8.0 + 4.0 + 0.0) / 64.0).abs() < 1e-12);
+        let w = dense(32, 32, 9);
+        let c = NmMatrix::compress(&w, 32, 32, p);
+        // Block (1,1) has N=0: bottom-right 16×16 must be all zero.
+        let d = c.decompress();
+        for r in 16..32 {
+            for j in 16..32 {
+                assert_eq!(d[r * 32 + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn stored_bytes_reflect_compression() {
+        let w = dense(64, 64, 1);
+        let half = NmMatrix::compress(
+            &w, 64, 64, NmBlockPattern::uniform(4, 4, 8, 16),
+        );
+        let full = NmMatrix::compress(
+            &w, 64, 64, NmBlockPattern::uniform(4, 4, 16, 16),
+        );
+        assert!(half.stored_bytes(4.0) < full.stored_bytes(4.0));
+    }
+}

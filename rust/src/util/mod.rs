@@ -1,0 +1,11 @@
+//! Small self-contained utilities replacing crates that are not vendored
+//! in this offline image: a JSON parser/writer (serde_json), a fast
+//! deterministic RNG (rand), and a mini property-testing harness
+//! (proptest).
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,53 @@
+//! Mini property-testing harness (proptest replacement): run a predicate
+//! over many seeded-random cases; on failure report the failing seed so
+//! the case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: u64 = 256;
+
+/// Run `prop` over `cases` seeded RNGs; panics with the failing seed.
+pub fn check_with<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed ^ 0xF11C_4711);
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Run with the default case count.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, prop: F) {
+    check_with(name, DEFAULT_CASES, prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", |r| {
+            let a = r.below(1000) as i64;
+            let b = r.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn failing_property_reports_seed() {
+        check("always fails eventually", |r| {
+            assert!(r.below(10) != 3, "hit the bad value");
+        });
+    }
+}

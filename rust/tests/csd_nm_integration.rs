@@ -1,0 +1,139 @@
+//! Integration: the N:M sparse format (§3.2.1) driven through the
+//! bit-true CSD-chain datapath with INT8-quantized values — proving the
+//! three hardware claims end to end:
+//!   1. the sparse MUX + index buffer reproduce the exact SpMV result,
+//!   2. dense and sparse passes keep every DSP busy (equal dsp_cycles),
+//!   3. the OAU's MSP/LSP split loses no precision on long chains.
+
+use flightllm::quant::{MixedPrecision, QuantizedTensor};
+use flightllm::sim::CsdChain;
+use flightllm::sparse::{NmBlockPattern, NmMatrix};
+use flightllm::util::Rng;
+
+/// Quantize f32 → int8 codes with a shared scale (activation path).
+fn quantize_i8(v: &[f32]) -> (Vec<i8>, f32) {
+    let amax = v.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+    (v.iter().map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8).collect(), scale)
+}
+
+#[test]
+fn nm_matrix_through_csd_chain_matches_spmv() {
+    let mut rng = Rng::new(11);
+    let m = 16usize;
+    let (out_dim, in_dim) = (32usize, 64usize);
+    let dense: Vec<f32> = (0..out_dim * in_dim).map(|_| rng.f32_sym()).collect();
+    let pattern = NmBlockPattern::uniform(2, 4, 4, 16); // 4:16 sparsity
+    let nm = NmMatrix::compress(&dense, out_dim, in_dim, pattern);
+    let x: Vec<f32> = (0..in_dim).map(|_| rng.f32_sym()).collect();
+
+    // Quantize both sides to INT8 (what the MPE datapath sees).
+    let (xq, xs) = quantize_i8(&x);
+    let wq: Vec<i8> = nm.vals.iter().map(|&v| (v * 127.0).round().clamp(-127.0, 127.0) as i8).collect();
+    let ws = 1.0 / 127.0;
+
+    // Drive each output row's groups through a 4-output CSD chain pass:
+    // chain of 8 DGs (16 DSPs), split by RNs into 4 segments of 4 slots
+    // — each segment computes one M-group's N=4 MACs.
+    let chain = CsdChain::new(2, 8);
+    let groups = in_dim / m;
+    for r in 0..out_dim {
+        let mut acc = 0f32;
+        let row_start = nm.row_ptr[r] as usize;
+        for gpair in (0..groups).step_by(4) {
+            // 4 groups per pass (4 segments).
+            let mut weights = Vec::new();
+            let mut idx = Vec::new();
+            let mut acts = vec![0i8; 4 * m];
+            for seg in 0..4 {
+                let g = gpair + seg;
+                let base = row_start + g * 4; // N=4 kept per group
+                weights.push(wq[base..base + 4].to_vec());
+                idx.push(
+                    nm.idx[base..base + 4]
+                        .iter()
+                        .map(|&j| seg * m + j as usize)
+                        .collect::<Vec<_>>(),
+                );
+                acts[seg * m..(seg + 1) * m]
+                    .copy_from_slice(&xq[g * m..(g + 1) * m]);
+            }
+            let out = chain.run_sparse(&weights, &idx, &acts);
+            for &o in &out.outputs {
+                acc += o as f32 * ws * xs;
+            }
+        }
+        // Compare against the f32 SpMV of the quantized operands.
+        let want: f32 = {
+            let mut s = 0f32;
+            let mut cursor = row_start;
+            for g in 0..groups {
+                for _ in 0..4 {
+                    s += (wq[cursor] as f32 * ws)
+                        * (xq[g * m + nm.idx[cursor] as usize] as f32 * xs);
+                    cursor += 1;
+                }
+            }
+            s
+        };
+        assert!(
+            (acc - want).abs() < 1e-4,
+            "row {r}: chain {acc} vs reference {want}"
+        );
+    }
+}
+
+#[test]
+fn dense_and_sparse_passes_have_equal_dsp_utilization() {
+    // Fig. 6's headline: the configurable cascade keeps all DSPs busy in
+    // both modes. 16-DSP chain: dense = one 32-MAC dot; 2:4-style sparse
+    // = 4 independent 8-MAC dots. Same cycles, same slot count.
+    let chain = CsdChain::new(2, 8);
+    let w: Vec<i8> = (0..chain.mac_slots()).map(|i| (i as i8).wrapping_mul(3)).collect();
+    let a: Vec<i8> = (0..chain.mac_slots()).map(|i| (i as i8).wrapping_sub(7)).collect();
+    let dense = chain.run_dense(&w, &a);
+
+    let seg = chain.mac_slots() / 4;
+    let ws: Vec<Vec<i8>> = (0..4).map(|s| w[s * seg..(s + 1) * seg].to_vec()).collect();
+    let idx: Vec<Vec<usize>> = (0..4).map(|_| (0..seg).collect()).collect();
+    let sparse = chain.run_sparse(&ws, &idx, &a[..seg]);
+
+    assert_eq!(dense.dsp_cycles, sparse.dsp_cycles);
+    assert_eq!(sparse.outputs.len(), 4);
+    assert_eq!(chain.utilization(chain.mac_slots() as u64), 1.0);
+}
+
+#[test]
+fn mixed_precision_dequant_feeds_chain_exactly() {
+    // 3/4/5-bit groups expand to INT8 (DequantUnit) and accumulate on the
+    // chain with zero loss relative to the dequantized f32 reference.
+    use flightllm::quant::DequantUnit;
+
+    let mut rng = Rng::new(5);
+    let w: Vec<f32> = (0..128).map(|_| rng.f32_sym() * 0.3).collect();
+    let plan = MixedPrecision { group: 32, bits: vec![3, 4, 5, 4] };
+    let q = QuantizedTensor::quantize(&w, 1, 128, plan);
+    let unit = DequantUnit::new(16);
+    let groups = unit.expand(&q);
+    let acts: Vec<i8> = (0..32).map(|_| (rng.below(200) as i64 - 100) as i8).collect();
+
+    let chain = CsdChain::new(2, 16); // 32 DSPs = 64 slots ≥ 32-wide group
+    let deq = q.dequantize();
+    for (gi, g) in groups.iter().enumerate() {
+        let mut w8 = g.codes.clone();
+        w8.resize(chain.mac_slots(), 0);
+        let mut a8 = acts.clone();
+        a8.resize(chain.mac_slots(), 0);
+        let out = chain.run_dense(&w8, &a8);
+        let got = out.outputs[0] as f32 * g.scale;
+        let want: f32 = deq[gi * 32..(gi + 1) * 32]
+            .iter()
+            .zip(&acts)
+            .map(|(&wv, &a)| wv * a as f32)
+            .sum();
+        assert!(
+            (got - want).abs() < want.abs().max(1.0) * 1e-4,
+            "group {gi}: {got} vs {want}"
+        );
+    }
+}

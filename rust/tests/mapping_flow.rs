@@ -1,0 +1,144 @@
+//! Integration: the complete mapping flow (Fig. 9) over the full
+//! model × platform × stage matrix — IR export → optimization → memory
+//! assignment → instruction generation → simulation — asserting the
+//! cross-cutting invariants that unit tests can't see.
+
+use flightllm::compiler::{lower, CompilerOptions, VecSink};
+use flightllm::config::{CompressionConfig, ModelConfig, Platform, Target};
+use flightllm::ir::{assign_addresses, passes, Graph, Stage};
+use flightllm::isa::Inst;
+use flightllm::sim::Engine;
+
+fn targets() -> Vec<Target> {
+    vec![
+        Target::u280_llama2(),
+        Target::u280_opt(),
+        Target::vhk158_llama2(),
+        Target::u280_tiny(),
+    ]
+}
+
+fn pipeline(t: &Target, stage: Stage) -> (Graph, Vec<Inst>) {
+    let mut g = Graph::from_model(&t.model, &t.compression, stage);
+    passes::optimize(&mut g);
+    let mut sink = VecSink::default();
+    lower(&g, t, CompilerOptions::full(), &mut sink);
+    (g, sink.0)
+}
+
+#[test]
+fn full_flow_runs_for_every_target_and_stage() {
+    for t in targets() {
+        for stage in [Stage::Decode { ctx: 256 }, Stage::Prefill { n: 128 }] {
+            let (g, insts) = pipeline(&t, stage);
+            assert!(!insts.is_empty(), "{}: empty stream", t.model.name);
+            // Memory assignment must succeed for compressed models.
+            let map = assign_addresses(&g, &t.platform).unwrap_or_else(|e| {
+                panic!("{} on {}: {e}", t.model.name, t.platform.name)
+            });
+            assert!(map.hbm_used > 0);
+            // Simulate: finite, positive, utilization bounded.
+            let rep = Engine::for_target(&t, true).run(&insts);
+            assert!(rep.total_ns.is_finite() && rep.total_ns > 0.0);
+            assert!(rep.hbm_bw_util >= 0.0 && rep.hbm_bw_util <= 1.0,
+                "bw util {}", rep.hbm_bw_util);
+            assert!(rep.compute_eff >= 0.0 && rep.compute_eff <= 1.0,
+                "compute eff {}", rep.compute_eff);
+        }
+    }
+}
+
+#[test]
+fn decode_time_grows_with_context() {
+    let t = Target::u280_llama2();
+    let mut last = 0.0;
+    for ctx in [128u64, 512, 1024, 2048] {
+        let (_, insts) = pipeline(&t, Stage::Decode { ctx });
+        let rep = Engine::for_target(&t, true).run(&insts);
+        assert!(
+            rep.total_ns > last,
+            "ctx {ctx}: {} should exceed {last}",
+            rep.total_ns
+        );
+        last = rep.total_ns;
+    }
+}
+
+#[test]
+fn prefill_time_superlinear_in_length() {
+    let t = Target::u280_llama2();
+    let time = |n| {
+        let (_, insts) = pipeline(&t, Stage::Prefill { n });
+        Engine::for_target(&t, true).run(&insts).total_ns
+    };
+    let t256 = time(256);
+    let t1024 = time(1024);
+    // 4× tokens → > 4× time (attention quadratic term).
+    assert!(t1024 > 4.0 * t256, "{t1024} vs {t256}");
+}
+
+#[test]
+fn compression_reduces_simulated_decode_latency() {
+    let base = Target::u280_llama2();
+    let time = |c: CompressionConfig| {
+        let t = Target { compression: c, ..base.clone() };
+        let (_, insts) = pipeline(&t, Stage::Decode { ctx: 512 });
+        Engine::for_target(&t, true).run(&insts).total_ns
+    };
+    // Weights at 8-bit dense vs the full recipe: traffic ratio > 1.5.
+    let dense8 = time(CompressionConfig {
+        quantization: true,
+        weight_bits: 8.0,
+        act_bits: 8,
+        ..CompressionConfig::none()
+    });
+    let full = time(CompressionConfig::paper_default());
+    assert!(
+        dense8 / full > 1.5,
+        "compression must speed decode: {dense8} vs {full}"
+    );
+}
+
+#[test]
+fn vhk158_outpaces_u280_on_same_stream_shape() {
+    let u = Target::u280_llama2();
+    let v = Target::vhk158_llama2();
+    let (_, iu) = pipeline(&u, Stage::Decode { ctx: 512 });
+    let (_, iv) = pipeline(&v, Stage::Decode { ctx: 512 });
+    let ru = Engine::for_target(&u, true).run(&iu);
+    let rv = Engine::for_target(&v, true).run(&iv);
+    assert!(rv.total_ns < ru.total_ns, "819 GB/s must beat 460 GB/s");
+}
+
+#[test]
+fn stream_bytes_match_compression_accounting() {
+    // Bytes the instruction stream moves ≈ the CompressionConfig's
+    // analytic weight footprint (within tile padding slack).
+    let t = Target::u280_llama2();
+    let (_, insts) = pipeline(&t, Stage::Decode { ctx: 1 });
+    let streamed: u64 = insts.iter().map(|i| i.offchip_bytes()).sum();
+    let slr = t.platform.slr_count as u64;
+    let expect =
+        t.compression.model_weight_bytes(t.model.param_count()) / slr as f64;
+    let ratio = streamed as f64 / expect;
+    assert!(
+        (0.8..1.6).contains(&ratio),
+        "stream {streamed} vs analytic {expect:.0} (ratio {ratio:.2})"
+    );
+}
+
+#[test]
+fn sync_instructions_present_per_layer() {
+    let t = Target::u280_llama2();
+    let (_, insts) = pipeline(&t, Stage::Decode { ctx: 128 });
+    let syncs = insts
+        .iter()
+        .filter(|i| matches!(i, Inst::Sys { .. }))
+        .count();
+    // One SLR barrier per layer + host sync at the end.
+    assert!(
+        syncs as u64 >= t.model.n_layers,
+        "expected ≥{} syncs, got {syncs}",
+        t.model.n_layers
+    );
+}

@@ -1,0 +1,114 @@
+//! Integration test: the PJRT runtime must reproduce, to fp32 tolerance,
+//! the golden outputs python/compile/aot.py computed with the same
+//! compressed parameters — proving the HLO-text round trip
+//! (jax → text → xla_extension parser → PJRT CPU) preserves numerics.
+//!
+//! Requires `make artifacts`; self-skips when artifacts are absent so
+//! `cargo test` stays green on a fresh checkout.
+//!
+//! All checks live in ONE test fn: loading the runtime compiles five HLO
+//! modules (~70 s) and concurrent PJRT CPU clients in one process can
+//! race inside xla_extension — one client, one load, sequential checks.
+
+use std::path::PathBuf;
+
+use flightllm::runtime::ModelRuntime;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+mod goldens {
+    use flightllm::runtime::Manifest;
+
+    pub fn blob(m: &Manifest) -> Vec<u8> {
+        std::fs::read(m.dir.join("goldens.bin")).expect("goldens.bin")
+    }
+
+    pub fn f32s(m: &Manifest, blob: &[u8], name: &str) -> Vec<f32> {
+        let e = m.golden(name).unwrap();
+        blob[e.offset..e.offset + e.nbytes]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    pub fn i32s(m: &Manifest, blob: &[u8], name: &str) -> Vec<i32> {
+        let e = m.golden(name).unwrap();
+        blob[e.offset..e.offset + e.nbytes]
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+}
+
+#[test]
+fn runtime_reproduces_python_goldens() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let rt = ModelRuntime::load(&dir).expect("load runtime");
+    let blob = goldens::blob(&rt.manifest);
+
+    // ---- bucket selection (§5.2 length-adaptive reuse) ----------------
+    assert_eq!(rt.bucket_for(1).unwrap(), 16);
+    assert_eq!(rt.bucket_for(16).unwrap(), 16);
+    assert_eq!(rt.bucket_for(17).unwrap(), 32);
+    assert_eq!(rt.bucket_for(100).unwrap(), 128);
+    assert!(rt.bucket_for(1000).is_err());
+
+    // ---- prefill vs golden ---------------------------------------------
+    let tokens = goldens::i32s(&rt.manifest, &blob, "prefill_tokens");
+    let want_logits = goldens::f32s(&rt.manifest, &blob, "prefill_logits");
+    let want_kv = goldens::f32s(&rt.manifest, &blob, "prefill_kv");
+    let p = rt.prefill(&tokens).expect("prefill");
+    let d = max_abs_diff(&p.logits, &want_logits);
+    assert!(d < 1e-3, "prefill logits diverge: max abs diff {d}");
+    let kv = p.kv.to_vec::<f32>().expect("kv to_vec");
+    let dkv = max_abs_diff(&kv, &want_kv);
+    assert!(dkv < 1e-3, "prefill kv diverges: max abs diff {dkv}");
+    eprintln!("prefill golden: logits diff {d:.2e}, kv diff {dkv:.2e}");
+
+    // ---- decode vs golden ----------------------------------------------
+    let want_dl = goldens::f32s(&rt.manifest, &blob, "decode_logits");
+    let want_dkv = goldens::f32s(&rt.manifest, &blob, "decode_kv");
+    let dec_token = goldens::i32s(&rt.manifest, &blob, "decode_token")[0];
+    let pos = goldens::i32s(&rt.manifest, &blob, "decode_pos")
+        .first()
+        .copied()
+        .unwrap_or(rt.manifest.golden_prefill_bucket as i32);
+    let greedy = ModelRuntime::argmax(&p.logits);
+    assert_eq!(greedy, dec_token, "greedy continuation must match python");
+    let dout = rt.decode(dec_token, &p.kv, pos).expect("decode");
+    let dl = max_abs_diff(&dout.logits, &want_dl);
+    assert!(dl < 1e-3, "decode logits diverge: max abs diff {dl}");
+    let dkv2 = max_abs_diff(&dout.kv.to_vec::<f32>().unwrap(), &want_dkv);
+    assert!(dkv2 < 1e-3, "decode kv diverges: max abs diff {dkv2}");
+    eprintln!("decode golden: logits diff {dl:.2e}, kv diff {dkv2:.2e}");
+
+    // ---- multi-step generation stability --------------------------------
+    let prompt: Vec<i32> = (0..16).map(|i| (i * 3) % 512).collect();
+    let p = rt.prefill(&prompt).expect("prefill");
+    let mut tok = ModelRuntime::argmax(&p.logits);
+    let mut kv = p.kv;
+    let mut pos = 16i32;
+    let mut toks = vec![tok];
+    for _ in 0..24 {
+        let out = rt.decode(tok, &kv, pos).expect("decode step");
+        assert!(out.logits.iter().all(|v| v.is_finite()), "logits must stay finite");
+        tok = ModelRuntime::argmax(&out.logits);
+        assert!((tok as usize) < rt.vocab());
+        kv = out.kv;
+        pos += 1;
+        toks.push(tok);
+    }
+    let distinct: std::collections::HashSet<i32> = toks.iter().copied().collect();
+    assert!(distinct.len() > 3, "generation collapsed: {toks:?}");
+}
