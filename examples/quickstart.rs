@@ -10,7 +10,6 @@
 use flightllm::config::Target;
 use flightllm::experiments::{flightllm_full, FlightConfig};
 use flightllm::metrics::EvalPoint;
-use flightllm::runtime::ModelRuntime;
 
 fn main() -> anyhow::Result<()> {
     // ---- 1. analytical/simulated path -------------------------------
@@ -25,6 +24,15 @@ fn main() -> anyhow::Result<()> {
     let _ = FlightConfig::Full; // see fig14_breakdown for the ablation
 
     // ---- 2. real numerics through PJRT (if artifacts exist) ---------
+    generate_demo()?;
+    println!("quickstart OK");
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
+fn generate_demo() -> anyhow::Result<()> {
+    use flightllm::runtime::ModelRuntime;
+
     let dir = std::path::Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("\n(artifacts/ not built — run `make artifacts` to enable");
@@ -47,6 +55,12 @@ fn main() -> anyhow::Result<()> {
         pos += 1;
     }
     println!();
-    println!("quickstart OK");
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn generate_demo() -> anyhow::Result<()> {
+    println!("\n(built without the `xla` feature — rebuild with `--features xla`");
+    println!(" for the real tiny-model generation demo)");
     Ok(())
 }

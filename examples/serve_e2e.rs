@@ -2,18 +2,18 @@
 //! all three layers compose on a real workload.
 //!
 //! Loads the trained tiny model (L2/L1 artifacts) through the PJRT
-//! runtime, serves a Poisson request trace through the L3 coordinator
-//! (scheduler + paged KV manager + sampler), reports real latency /
-//! throughput, and prints the paper-metric estimates the simulator gives
-//! for the same workload on the U280.
+//! runtime, serves a Poisson request trace through the L3 coordinator's
+//! continuous-batching engine (batched scheduler + paged KV manager +
+//! sampler), reports measured latency / throughput — then serves the
+//! SAME trace shape through the `SimBackend` so the deterministic
+//! FlightLLM-on-U280 numbers (virtual TTFT / latency / tokens-per-s)
+//! print next to the real ones.
 //!
-//! Run: make artifacts && cargo run --release --example serve_e2e
+//! Run: make artifacts && cargo run --release --features xla --example serve_e2e
 
 use flightllm::config::Target;
-use flightllm::coordinator::{Sampler, SchedulerConfig, Server};
-use flightllm::experiments::flightllm_full;
-use flightllm::metrics::EvalPoint;
-use flightllm::runtime::ModelRuntime;
+use flightllm::coordinator::{Sampler, SchedulerConfig, Server, SimBackend};
+use flightllm::runtime::{ModelRuntime, RuntimeBackend};
 use flightllm::workload::{generate_trace, TraceConfig};
 
 fn main() -> anyhow::Result<()> {
@@ -25,13 +25,14 @@ fn main() -> anyhow::Result<()> {
     println!("loading runtime (compiling HLO modules)...");
     let rt = ModelRuntime::load(dir)?;
     let max_seq = rt.manifest.config.max_seq as usize;
+    let vocab = rt.vocab() as u32;
 
     let trace_cfg = TraceConfig {
         rate_per_s: 4.0,
         n_requests: 12,
         prompt_len_choices: vec![16, 32, 64],
         decode_len_choices: vec![16, 32],
-        vocab: rt.vocab() as u32,
+        vocab,
         seed: 7,
     };
     let trace = generate_trace(&trace_cfg);
@@ -43,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut server = Server::new(
-        rt,
+        RuntimeBackend::new(rt),
         SchedulerConfig {
             max_batch: 1,
             kv_pages: 128,
@@ -52,15 +53,11 @@ fn main() -> anyhow::Result<()> {
         },
         Sampler::greedy(),
     );
-    let stats = server.run_trace(trace)?;
+    let stats = server.run_trace(trace.clone())?;
 
-    println!("\n== E2E serving results (tiny model, PJRT CPU) ==");
-    println!("requests completed   {}", stats.results.len());
-    println!("wall time            {:.2} s", stats.wall_s);
-    println!("decode steps         {}", stats.decode_steps);
-    println!("decode throughput    {:.1} tokens/s", stats.decode_tps());
-    println!("mean TTFT            {:.1} ms", stats.mean_ttft_s() * 1e3);
-    println!("mean request latency {:.1} ms", stats.mean_latency_s() * 1e3);
+    println!("\n== E2E serving results (tiny model, PJRT CPU, measured clock) ==");
+    println!("{}", stats.summary("measured"));
+    println!("host wall time {:.2} s", stats.wall_s);
     for r in stats.results.iter().take(3) {
         println!(
             "  req {:>2}: prompt {:>3} tokens → {:?}...",
@@ -70,12 +67,23 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // What the same workload costs on the simulated U280 at 7B scale.
+    // The same trace served by the simulated U280 at 7B scale: identical
+    // scheduling, deterministic accelerator latencies on the virtual clock.
     let t = Target::u280_llama2();
-    let m = flightllm_full(&t, EvalPoint { prefill: 64, decode: 32 });
-    println!("\n== simulator estimate: same shape on U280 / LLaMA2-7B ==");
-    println!("latency {:.3} s   decode {:.1} tok/s   bw util {:.1}%",
-        m.latency_s, m.decode_tps, m.bw_util * 100.0);
+    let sim_max_seq = t.model.max_seq as usize;
+    let mut sim_server = Server::new(
+        SimBackend::with_vocab(t, vocab as usize),
+        SchedulerConfig {
+            max_batch: 1,
+            kv_pages: 512,
+            page_tokens: 16,
+            max_seq: sim_max_seq,
+        },
+        Sampler::greedy(),
+    );
+    let sim_stats = sim_server.run_trace(trace)?;
+    println!("\n== same trace on simulated U280 / LLaMA2-7B (virtual clock) ==");
+    println!("{}", sim_stats.summary("virtual"));
     println!("serve_e2e OK");
     Ok(())
 }

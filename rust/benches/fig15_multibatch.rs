@@ -1,24 +1,34 @@
 //! Fig. 15 reproduction: multi-batch decode throughput on LLaMA2-7B —
 //! FlightLLM's advantage over GPU-opt shrinks as the batch grows because
 //! the GPU's bigger bandwidth/compute pool absorbs batches better.
+//!
+//! Two FlightLLM columns: the analytic single-stream number
+//! (`flightllm_batch_tps`) and the same point pushed through the
+//! continuous-batching serving engine over the sim backend
+//! (`flightllm_serve_batch_tps`) — scheduling, KV admission and bucket
+//! drift included, on the deterministic virtual clock.
+//!
 //! Run: cargo bench --bench fig15_multibatch
 
 use flightllm::baselines::{GpuStack, GpuSystem};
 use flightllm::config::Target;
-use flightllm::experiments::flightllm_batch_tps;
+use flightllm::experiments::{flightllm_batch_tps, flightllm_serve_batch_tps};
 use flightllm::metrics::format_table;
 
 fn main() {
     let target = Target::u280_llama2();
     let vhk = Target::vhk158_llama2();
     let ctx = 256u64;
+    let decode = 32u32;
     let v100 = GpuSystem::v100s(GpuStack::Opt).model();
     let a100 = GpuSystem::a100(GpuStack::Opt).model();
     let mut rows = Vec::new();
     let mut first_ratio = None;
     let mut last_ratio = None;
+    let mut served_tps = Vec::new();
     for batch in [1u32, 2, 4, 8] {
         let fl = flightllm_batch_tps(&target, ctx, batch);
+        let served = flightllm_serve_batch_tps(&target, ctx, decode, batch);
         let fv = flightllm_batch_tps(&vhk, ctx, batch);
         let gv = v100.batch_tps(&target.model, ctx, batch);
         let ga = a100.batch_tps(&target.model, ctx, batch);
@@ -27,11 +37,13 @@ fn main() {
             first_ratio = Some(ratio);
         }
         last_ratio = Some(ratio);
+        served_tps.push(served.decode_tps());
         rows.push(vec![
             format!("{batch}"),
             format!("{:.1}", gv),
             format!("{:.1}", ga),
             format!("{:.1}", fl),
+            format!("{:.1}", served.decode_tps()),
             format!("{:.1}", fv),
             format!("{:.2}x", ratio),
         ]);
@@ -40,7 +52,7 @@ fn main() {
         "{}",
         format_table(
             &format!("Fig. 15: multi-batch decode throughput (tokens/s) — LLaMA2-7B @ctx={ctx}"),
-            &["batch", "V100S-opt", "A100-opt", "FL-U280", "FL-VHK158", "U280/V100S"],
+            &["batch", "V100S-opt", "A100-opt", "FL-U280", "FL-served", "FL-VHK158", "U280/V100S"],
             &rows
         )
     );
@@ -53,5 +65,9 @@ fn main() {
     assert!(
         last_ratio.unwrap() < first_ratio.unwrap(),
         "advantage must shrink with batch"
+    );
+    assert!(
+        served_tps.windows(2).all(|w| w[1] > w[0]),
+        "served tokens/s must rise with batch: {served_tps:?}"
     );
 }

@@ -1,18 +1,24 @@
 //! Command-line interface (hand-rolled; clap is not vendored).
 //!
 //! ```text
-//! flightllm serve    [--artifacts DIR] [--requests N] [--batch N] [--temp T]
+//! flightllm serve    [--backend runtime|sim] [--artifacts DIR] [--requests N]
+//!                    [--batch N] [--temp T] [--model llama2|opt|tiny]
+//!                    [--platform u280|vhk158]
 //! flightllm simulate [--model llama2|opt] [--platform u280|vhk158]
 //!                    [--prefill N] [--decode N]
 //! flightllm report   [--what storage|resources|efficiency]
 //! ```
+//!
+//! `serve --backend sim` needs no artifacts: the trace is served by the
+//! continuous-batching engine against the cycle-approximate simulator,
+//! reporting the deterministic TTFT/latency/tokens-per-second FlightLLM
+//! would deliver on the chosen platform.
 
 use crate::baselines::{GpuStack, GpuSystem};
 use crate::config::{ModelConfig, Target};
-use crate::coordinator::{Sampler, SchedulerConfig, Server};
+use crate::coordinator::{Sampler, SchedulerConfig, Server, SimBackend};
 use crate::experiments::flightllm_full;
 use crate::metrics::{format_table, EvalPoint};
-use crate::runtime::ModelRuntime;
 use crate::workload::{generate_trace, TraceConfig};
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -28,7 +34,8 @@ fn flag_u64(args: &[String], key: &str, default: u64) -> u64 {
 }
 
 const USAGE: &str = "usage: flightllm <serve|simulate|report> [flags]
-  serve    --artifacts DIR --requests N --batch N --temp T
+  serve    --backend runtime|sim --artifacts DIR --requests N --batch N --temp T
+           --model llama2|opt|tiny --platform u280|vhk158
   simulate --model llama2|opt --platform u280|vhk158 --prefill N --decode N
   report   --what storage|resources|efficiency";
 
@@ -55,6 +62,7 @@ pub fn run(args: &[String]) -> i32 {
 fn target_for(args: &[String]) -> Target {
     let model = match flag(args, "--model").unwrap_or("llama2") {
         "opt" => ModelConfig::opt_6_7b(),
+        "tiny" => ModelConfig::tiny(),
         _ => ModelConfig::llama2_7b(),
     };
     let base = match flag(args, "--platform").unwrap_or("u280") {
@@ -62,6 +70,13 @@ fn target_for(args: &[String]) -> Target {
         _ => Target::u280_llama2(),
     };
     Target { model, ..base }
+}
+
+fn sampler_for(args: &[String]) -> Sampler {
+    match flag(args, "--temp").and_then(|v| v.parse::<f64>().ok()) {
+        Some(t) if t > 0.0 => Sampler::temperature(t, 0),
+        _ => Sampler::greedy(),
+    }
 }
 
 fn cmd_simulate(args: &[String]) -> i32 {
@@ -85,6 +100,53 @@ fn cmd_simulate(args: &[String]) -> i32 {
 }
 
 fn cmd_serve(args: &[String]) -> i32 {
+    match flag(args, "--backend").unwrap_or("runtime") {
+        "sim" => cmd_serve_sim(args),
+        "runtime" => cmd_serve_runtime(args),
+        other => {
+            eprintln!("unknown backend {other} (want runtime|sim)\n{USAGE}");
+            2
+        }
+    }
+}
+
+fn cmd_serve_sim(args: &[String]) -> i32 {
+    let t = target_for(args);
+    let n = flag_u64(args, "--requests", 8) as usize;
+    let batch = flag_u64(args, "--batch", 1) as usize;
+    let max_seq = t.model.max_seq as usize;
+    let vocab = (t.model.vocab as u32).min(512);
+    let trace = generate_trace(&TraceConfig {
+        n_requests: n,
+        vocab,
+        prompt_len_choices: vec![16, 32, 64],
+        decode_len_choices: vec![16, 32],
+        ..Default::default()
+    });
+    let name = format!("{} on {}", t.model.name, t.platform.name);
+    let sampler = sampler_for(args);
+    let mut server = Server::new(
+        SimBackend::with_vocab(t, vocab as usize),
+        SchedulerConfig { max_batch: batch.max(1), kv_pages: 512, page_tokens: 16, max_seq },
+        sampler,
+    );
+    match server.run_trace(trace) {
+        Ok(stats) => {
+            println!("sim-served {name} (virtual accelerator clock):");
+            println!("{}", stats.summary("virtual"));
+            0
+        }
+        Err(e) => {
+            eprintln!("serving failed: {e:#}");
+            1
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+fn cmd_serve_runtime(args: &[String]) -> i32 {
+    use crate::runtime::{ModelRuntime, RuntimeBackend};
+
     let dir = std::path::PathBuf::from(flag(args, "--artifacts").unwrap_or("artifacts"));
     let rt = match ModelRuntime::load(&dir) {
         Ok(rt) => rt,
@@ -97,10 +159,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let vocab = rt.vocab() as u32;
     let n = flag_u64(args, "--requests", 8) as usize;
     let batch = flag_u64(args, "--batch", 1) as usize;
-    let sampler = match flag(args, "--temp").and_then(|v| v.parse::<f64>().ok()) {
-        Some(t) if t > 0.0 => Sampler::temperature(t, 0),
-        _ => Sampler::greedy(),
-    };
+    let sampler = sampler_for(args);
     let trace = generate_trace(&TraceConfig {
         n_requests: n,
         vocab,
@@ -109,15 +168,14 @@ fn cmd_serve(args: &[String]) -> i32 {
         ..Default::default()
     });
     let mut server = Server::new(
-        rt,
-        SchedulerConfig { max_batch: batch, kv_pages: 128, page_tokens: 16, max_seq },
+        RuntimeBackend::new(rt),
+        SchedulerConfig { max_batch: batch.max(1), kv_pages: 128, page_tokens: 16, max_seq },
         sampler,
     );
     match server.run_trace(trace) {
         Ok(stats) => {
-            println!("completed {} requests in {:.2}s", stats.results.len(), stats.wall_s);
-            println!("decode throughput {:.1} tok/s, mean latency {:.0} ms",
-                stats.decode_tps(), stats.mean_latency_s() * 1e3);
+            println!("{}", stats.summary("measured"));
+            println!("host wall time {:.2}s", stats.wall_s);
             0
         }
         Err(e) => {
@@ -125,6 +183,15 @@ fn cmd_serve(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_serve_runtime(_args: &[String]) -> i32 {
+    eprintln!(
+        "this build has no PJRT runtime (compiled without the `xla` feature) — \
+         use `serve --backend sim`, or rebuild with `--features xla`"
+    );
+    1
 }
 
 fn cmd_report(args: &[String]) -> i32 {
@@ -186,6 +253,22 @@ mod tests {
             run(&s(&["flightllm", "simulate", "--prefill", "32", "--decode", "32"])),
             0
         );
+    }
+
+    #[test]
+    fn serve_sim_backend_runs_without_artifacts() {
+        assert_eq!(
+            run(&s(&[
+                "flightllm", "serve", "--backend", "sim", "--model", "tiny",
+                "--requests", "3", "--batch", "2",
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn serve_unknown_backend_fails() {
+        assert_eq!(run(&s(&["flightllm", "serve", "--backend", "gpu"])), 2);
     }
 
     #[test]

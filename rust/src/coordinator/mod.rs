@@ -1,17 +1,24 @@
-//! L3 serving coordinator: request queue, prefill/decode scheduling,
-//! paged KV-cache management, sampling, and the serving loop that drives
-//! real token generation through the PJRT runtime.
+//! L3 serving coordinator: request queue, continuous-batching scheduling
+//! against a virtual clock, paged KV-cache management, sampling, and the
+//! batched serving loop that drives token generation through a
+//! `ModelBackend` — the PJRT runtime for real numerics, or the
+//! `sim::Engine`-backed `SimBackend` for deterministic FlightLLM
+//! latencies.
 //!
 //! FlightLLM's own runtime is single-batch latency-oriented (§1); the
-//! coordinator implements that policy by default and a round-robin
-//! multi-batch mode for the Fig. 15 study.
+//! coordinator serves that policy with `max_batch = 1` and the Fig. 15
+//! multi-batch mode with larger batches.
 
 mod kv_cache;
 mod sampler;
 mod scheduler;
 mod server;
+mod sim_backend;
 
 pub use kv_cache::{KvError, PagePool, SeqPages};
 pub use sampler::Sampler;
-pub use scheduler::{Scheduler, SchedulerConfig, SeqState};
-pub use server::{ModelBackend, RequestResult, ServeStats, Server};
+pub use scheduler::{DecodeOutcome, Scheduler, SchedulerConfig, SeqState};
+pub use server::{
+    ModelBackend, RequestResult, SeqSlot, SeqWork, ServeStats, Server, StepOutput,
+};
+pub use sim_backend::SimBackend;

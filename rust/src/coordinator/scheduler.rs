@@ -1,10 +1,16 @@
-//! Prefill/decode scheduler.
+//! Continuous-batching scheduler.
 //!
-//! Policy (latency-oriented, §1's batch-size-1 regime): admit the oldest
-//! waiting request whenever a batch slot and KV pages are available;
-//! decode running sequences round-robin; a new prefill preempts nothing
-//! (prefill happens when a slot opens).  `max_batch > 1` gives the
-//! Fig. 15 multi-batch mode.
+//! Every engine iteration the scheduler admits newly-arrived requests
+//! (oldest first, while a batch slot and KV pages are free) and returns
+//! the whole runnable set — unprefilled sequences run their prompt,
+//! prefilled ones take one decode step.  `max_batch = 1` degenerates to
+//! the paper's latency-oriented batch-size-1 regime (§1); larger values
+//! give the Fig. 15 multi-batch mode.
+//!
+//! Accounting invariant (checked by `check_accounting` and the property
+//! test below): for every running sequence, `SeqState.ctx` equals the KV
+//! pool's token count — the scheduler never believes in KV the pool does
+//! not hold.
 
 use std::collections::VecDeque;
 
@@ -14,7 +20,7 @@ use super::kv_cache::PagePool;
 
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
-    /// Concurrent sequences in decode (batch size; paper default 1).
+    /// Concurrent sequences in flight (batch size; paper default 1).
     pub max_batch: usize,
     /// KV page pool geometry.
     pub kv_pages: usize,
@@ -35,11 +41,11 @@ pub struct SeqState {
     pub req: Request,
     /// Tokens generated so far.
     pub generated: Vec<u32>,
-    /// Context length currently in the KV cache.
+    /// Context length currently in the KV cache (== pool tokens).
     pub ctx: usize,
     /// Whether prefill has run.
     pub prefilled: bool,
-    /// Time the request was admitted (set by the server).
+    /// Virtual time the request was admitted.
     pub admitted_s: f64,
 }
 
@@ -47,17 +53,29 @@ impl SeqState {
     pub fn done(&self) -> bool {
         self.prefilled && self.generated.len() >= self.req.max_new_tokens as usize
     }
+
+    /// The KV cache holds `max_seq` tokens: no further decode possible.
+    pub fn context_capped(&self, max_seq: usize) -> bool {
+        self.ctx >= max_seq
+    }
+
+    /// Still has work to run this iteration.
+    pub fn runnable(&self, max_seq: usize) -> bool {
+        !self.prefilled || (!self.done() && !self.context_capped(max_seq))
+    }
 }
 
-/// What the scheduler wants executed next.
-#[derive(Debug, PartialEq, Eq)]
-pub enum Action {
-    /// Run prefill for sequence `seq`.
-    Prefill { seq: u64 },
-    /// Run one decode step for sequence `seq`.
-    Decode { seq: u64 },
-    /// Nothing runnable (queue empty or blocked on capacity).
-    Idle,
+/// What one decode step did to a sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeOutcome {
+    /// Still generating.
+    Running,
+    /// Reached its token budget or the context cap.
+    Finished,
+    /// The KV pool could not grow: the sequence must be retired now.
+    /// `ctx` was NOT advanced, so scheduler context and pool tokens stay
+    /// in sync (the produced token is still recorded).
+    EvictedKvFull,
 }
 
 #[derive(Debug)]
@@ -66,16 +84,20 @@ pub struct Scheduler {
     waiting: VecDeque<Request>,
     running: Vec<SeqState>,
     pub pool: PagePool,
-    rr_cursor: usize,
 }
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig) -> Self {
         let pool = PagePool::new(cfg.kv_pages, cfg.page_tokens);
-        Self { cfg, waiting: VecDeque::new(), running: Vec::new(), pool, rr_cursor: 0 }
+        Self { cfg, waiting: VecDeque::new(), running: Vec::new(), pool }
     }
 
-    pub fn submit(&mut self, req: Request) {
+    /// Queue a request.  Prompts longer than `max_seq` are truncated HERE
+    /// so admission accounting, the backend's prefill, and the KV pool
+    /// all see the same length (an oversized prompt can otherwise never
+    /// be served — its KV would not fit the model's cache).
+    pub fn submit(&mut self, mut req: Request) {
+        req.prompt.truncate(self.cfg.max_seq);
         self.waiting.push_back(req);
     }
 
@@ -87,52 +109,52 @@ impl Scheduler {
         &self.running
     }
 
+    pub fn seq(&self, seq: u64) -> Option<&SeqState> {
+        self.running.iter().find(|s| s.req.id == seq)
+    }
+
     pub fn seq_mut(&mut self, seq: u64) -> Option<&mut SeqState> {
         self.running.iter_mut().find(|s| s.req.id == seq)
     }
 
-    /// Decide the next action. Admission: oldest waiting request enters
-    /// when a batch slot is free and its prompt fits the KV pool.
-    pub fn next_action(&mut self, now_s: f64) -> Action {
-        // Admit if possible.
-        if self.running.len() < self.cfg.max_batch {
-            if let Some(req) = self.waiting.front() {
-                let plen = req.prompt.len().min(self.cfg.max_seq);
-                if self.pool.can_grow(req.id, plen) {
-                    let req = self.waiting.pop_front().unwrap();
-                    self.pool
-                        .admit(req.id, plen)
-                        .expect("can_grow guaranteed admission");
-                    let id = req.id;
-                    self.running.push(SeqState {
-                        req,
-                        generated: Vec::new(),
-                        ctx: plen,
-                        prefilled: false,
-                        admitted_s: now_s,
-                    });
-                    return Action::Prefill { seq: id };
-                }
+    /// Arrival time of the oldest waiting request (the serving loop
+    /// fast-forwards its virtual clock to this when idle).
+    pub fn next_arrival_s(&self) -> Option<f64> {
+        self.waiting.front().map(|r| r.arrival_s)
+    }
+
+    /// Admit arrived requests while capacity allows, then return the ids
+    /// runnable this iteration (admission order; unprefilled sequences
+    /// run prefill, the rest one decode step each).
+    pub fn schedule(&mut self, now_s: f64) -> Vec<u64> {
+        while self.running.len() < self.cfg.max_batch {
+            let Some(req) = self.waiting.front() else { break };
+            if req.arrival_s > now_s || !self.pool.can_grow(req.id, req.prompt.len()) {
+                break;
             }
+            let req = self.waiting.pop_front().unwrap();
+            let plen = req.prompt.len();
+            self.pool.admit(req.id, plen).expect("can_grow guaranteed admission");
+            self.running.push(SeqState {
+                req,
+                generated: Vec::new(),
+                ctx: plen,
+                prefilled: false,
+                admitted_s: now_s,
+            });
         }
-        // Any admitted-but-not-prefilled sequence (shouldn't linger, but
-        // be robust to callers that interleave).
-        if let Some(s) = self.running.iter().find(|s| !s.prefilled) {
-            return Action::Prefill { seq: s.req.id };
-        }
-        // Round-robin decode across running sequences.
-        if self.running.is_empty() {
-            return Action::Idle;
-        }
-        let n = self.running.len();
-        for k in 0..n {
-            let i = (self.rr_cursor + k) % n;
-            if !self.running[i].done() && self.running[i].ctx < self.cfg.max_seq {
-                self.rr_cursor = (i + 1) % n;
-                return Action::Decode { seq: self.running[i].req.id };
-            }
-        }
-        Action::Idle
+        self.running
+            .iter()
+            .filter(|s| s.runnable(self.cfg.max_seq))
+            .map(|s| s.req.id)
+            .collect()
+    }
+
+    /// Pop the oldest waiting request without admitting it.  The serving
+    /// loop uses this to reject a request that cannot fit the KV pool
+    /// even on an empty machine.
+    pub fn reject_front(&mut self) -> Option<Request> {
+        self.waiting.pop_front()
     }
 
     /// Record a prefill completion (first token produced).
@@ -143,19 +165,32 @@ impl Scheduler {
         }
     }
 
-    /// Record a decode step; returns true if the sequence just finished.
-    pub fn on_decode_done(&mut self, seq: u64, token: u32) -> bool {
-        let page = self.pool.append(seq).is_ok();
-        if let Some(s) = self.seq_mut(seq) {
-            if page {
-                s.ctx += 1;
+    /// Record a decode step.  The KV pool grows first; on exhaustion the
+    /// sequence is reported for eviction instead of silently desyncing
+    /// `ctx` from the pool's token count.
+    pub fn on_decode_done(&mut self, seq: u64, token: u32) -> DecodeOutcome {
+        match self.pool.append(seq) {
+            Ok(()) => {
+                let max_seq = self.cfg.max_seq;
+                if let Some(s) = self.seq_mut(seq) {
+                    s.ctx += 1;
+                    s.generated.push(token);
+                    if s.done() || s.context_capped(max_seq) {
+                        return DecodeOutcome::Finished;
+                    }
+                }
+                DecodeOutcome::Running
             }
-            s.generated.push(token);
-            if s.done() || s.ctx >= self.cfg.max_seq {
-                return true;
+            Err(_) => {
+                // The token was produced; record it, but leave ctx equal
+                // to the pool's token count and hand the sequence back
+                // for retirement.
+                if let Some(s) = self.seq_mut(seq) {
+                    s.generated.push(token);
+                }
+                DecodeOutcome::EvictedKvFull
             }
         }
-        false
     }
 
     /// Remove a finished sequence, releasing its pages.
@@ -163,14 +198,20 @@ impl Scheduler {
         let idx = self.running.iter().position(|s| s.req.id == seq)?;
         let s = self.running.swap_remove(idx);
         let _ = self.pool.release(seq);
-        if self.rr_cursor >= self.running.len() {
-            self.rr_cursor = 0;
-        }
         Some(s)
     }
 
     pub fn is_drained(&self) -> bool {
         self.waiting.is_empty() && self.running.is_empty()
+    }
+
+    /// The scheduler↔pool accounting invariant: every running sequence's
+    /// `ctx` equals its pool token count, and the pool itself is sound.
+    pub fn check_accounting(&self) -> bool {
+        self.running
+            .iter()
+            .all(|s| self.pool.seq(s.req.id).is_some_and(|p| p.tokens == s.ctx))
+            && self.pool.check_invariants()
     }
 }
 
@@ -194,29 +235,38 @@ mod tests {
         let mut s = Scheduler::new(SchedulerConfig::default());
         s.submit(req(0, 16, 3));
         s.submit(req(1, 16, 3));
-        assert_eq!(s.next_action(0.0), Action::Prefill { seq: 0 });
+        assert_eq!(s.schedule(0.0), vec![0], "batch=1 admits only request 0");
         s.on_prefill_done(0, 7);
-        // batch=1: request 1 must NOT be admitted while 0 runs.
-        assert_eq!(s.next_action(0.0), Action::Decode { seq: 0 });
-        assert!(!s.on_decode_done(0, 8));
-        assert_eq!(s.next_action(0.0), Action::Decode { seq: 0 });
-        assert!(s.on_decode_done(0, 9)); // 3 tokens total → done
+        assert_eq!(s.schedule(0.0), vec![0]);
+        assert_eq!(s.on_decode_done(0, 8), DecodeOutcome::Running);
+        assert_eq!(s.on_decode_done(0, 9), DecodeOutcome::Finished); // 3 tokens
         s.retire(0);
-        assert_eq!(s.next_action(0.0), Action::Prefill { seq: 1 });
+        assert_eq!(s.schedule(0.0), vec![1]);
+        assert!(!s.seq(1).unwrap().prefilled);
     }
 
     #[test]
-    fn multibatch_round_robins() {
+    fn multibatch_runs_all_sequences_every_iteration() {
         let mut s = Scheduler::new(SchedulerConfig { max_batch: 2, ..Default::default() });
         s.submit(req(0, 16, 8));
         s.submit(req(1, 16, 8));
-        assert_eq!(s.next_action(0.0), Action::Prefill { seq: 0 });
+        assert_eq!(s.schedule(0.0), vec![0, 1], "both admitted in one iteration");
         s.on_prefill_done(0, 1);
-        assert_eq!(s.next_action(0.0), Action::Prefill { seq: 1 });
         s.on_prefill_done(1, 1);
-        let a = s.next_action(0.0);
-        let b = s.next_action(0.0);
-        assert_ne!(a, b, "round-robin must alternate: {a:?} vs {b:?}");
+        // Continuous batching: every iteration decodes the whole batch.
+        assert_eq!(s.schedule(0.0), vec![0, 1]);
+    }
+
+    #[test]
+    fn admission_gated_by_arrival_time() {
+        let mut s = Scheduler::new(SchedulerConfig { max_batch: 2, ..Default::default() });
+        let mut r = req(0, 8, 2);
+        r.arrival_s = 5.0;
+        s.submit(r);
+        assert!(s.schedule(0.0).is_empty(), "not arrived yet");
+        assert_eq!(s.next_arrival_s(), Some(5.0));
+        assert_eq!(s.schedule(5.0), vec![0]);
+        assert_eq!(s.seq(0).unwrap().admitted_s, 5.0);
     }
 
     #[test]
@@ -230,10 +280,11 @@ mod tests {
         let mut s = Scheduler::new(cfg);
         s.submit(req(0, 32, 4)); // takes both pages
         s.submit(req(1, 16, 4));
-        assert_eq!(s.next_action(0.0), Action::Prefill { seq: 0 });
+        assert_eq!(s.schedule(0.0), vec![0]);
         s.on_prefill_done(0, 1);
-        // No pages left: request 1 can't be admitted; 0 decodes instead.
-        assert!(matches!(s.next_action(0.0), Action::Decode { seq: 0 }));
+        // No pages left: request 1 can't be admitted; 0 keeps decoding.
+        assert_eq!(s.schedule(0.0), vec![0]);
+        assert_eq!(s.pending(), 1);
     }
 
     #[test]
@@ -241,12 +292,54 @@ mod tests {
         let cfg = SchedulerConfig { max_seq: 18, ..Default::default() };
         let mut s = Scheduler::new(cfg);
         s.submit(req(0, 16, 100));
-        s.next_action(0.0);
+        s.schedule(0.0);
         s.on_prefill_done(0, 1);
-        s.next_action(0.0);
-        assert!(!s.on_decode_done(0, 2)); // ctx 17
-        s.next_action(0.0);
-        assert!(s.on_decode_done(0, 3)); // ctx 18 == max_seq → finished
+        assert_eq!(s.on_decode_done(0, 2), DecodeOutcome::Running); // ctx 17
+        assert_eq!(s.on_decode_done(0, 3), DecodeOutcome::Finished); // ctx 18
+    }
+
+    /// Regression (KV desync): when the pool cannot grow, the sequence is
+    /// evicted and `ctx` stays equal to the pool's token count — the old
+    /// code pushed the token anyway and stalled with ctx != pool tokens.
+    #[test]
+    fn kv_exhaustion_evicts_instead_of_desyncing() {
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            kv_pages: 2,
+            page_tokens: 4,
+            max_seq: 64,
+        };
+        let mut s = Scheduler::new(cfg);
+        s.submit(req(0, 7, 100)); // 2 pages, 1 token of slack
+        assert_eq!(s.schedule(0.0), vec![0]);
+        s.on_prefill_done(0, 1);
+        assert_eq!(s.on_decode_done(0, 2), DecodeOutcome::Running); // token 8 fills page 2
+        assert!(s.check_accounting());
+        assert_eq!(s.on_decode_done(0, 3), DecodeOutcome::EvictedKvFull);
+        let seq = s.seq(0).unwrap();
+        assert_eq!(seq.ctx, 8, "ctx must not advance past the pool");
+        assert_eq!(s.pool.seq(0).unwrap().tokens, 8);
+        assert_eq!(seq.generated.len(), 3, "produced tokens are kept");
+        assert!(s.check_accounting());
+        s.retire(0);
+        assert_eq!(s.pool.used_pages(), 0);
+    }
+
+    /// Regression (truncation mismatch): an oversized prompt is truncated
+    /// once at submit, so admission accounting, the prompt the backend
+    /// prefills, and the pool token count all agree.
+    #[test]
+    fn oversized_prompt_truncated_consistently() {
+        let cfg = SchedulerConfig { max_seq: 16, ..Default::default() };
+        let mut s = Scheduler::new(cfg);
+        s.submit(req(0, 40, 4));
+        assert_eq!(s.schedule(0.0), vec![0]);
+        let seq = s.seq(0).unwrap();
+        assert_eq!(seq.req.prompt.len(), 16, "prompt truncated to max_seq");
+        assert_eq!(seq.ctx, 16);
+        assert_eq!(s.pool.seq(0).unwrap().tokens, 16);
+        assert!(seq.context_capped(16), "full-context prompt caps immediately");
+        assert!(s.check_accounting());
     }
 
     #[test]
@@ -273,17 +366,36 @@ mod tests {
                 s.submit(t);
             }
             let mut finished = 0;
-            for step in 0..10_000 {
-                match s.next_action(step as f64) {
-                    Action::Prefill { seq } => s.on_prefill_done(seq, 1),
-                    Action::Decode { seq } => {
-                        if s.on_decode_done(seq, 2) {
-                            s.retire(seq);
-                            finished += 1;
+            let mut now = 0.0f64;
+            for _ in 0..10_000 {
+                let batch = s.schedule(now);
+                if batch.is_empty() {
+                    if s.is_drained() {
+                        break;
+                    }
+                    let t = s.next_arrival_s().expect("no arrivals but not drained");
+                    assert!(t > now, "stalled with arrived work");
+                    now = t;
+                    continue;
+                }
+                for id in batch {
+                    let prefilled = s.seq(id).unwrap().prefilled;
+                    if !prefilled {
+                        s.on_prefill_done(id, 1);
+                    } else {
+                        match s.on_decode_done(id, 2) {
+                            DecodeOutcome::Running => {}
+                            DecodeOutcome::Finished | DecodeOutcome::EvictedKvFull => {
+                                s.retire(id);
+                                finished += 1;
+                            }
                         }
                     }
-                    Action::Idle => break,
+                    // The satellite property: scheduler ctx == pool
+                    // tokens after EVERY step, for every sequence.
+                    assert!(s.check_accounting(), "ctx/pool desync");
                 }
+                now += 0.01;
             }
             assert_eq!(finished, total, "all requests must finish");
             assert!(s.is_drained());

@@ -1,55 +1,102 @@
-//! The serving loop: drain a request trace through a `ModelBackend`
-//! under the scheduler's policy, producing real tokens and per-request
-//! latency statistics.
+//! The serving loop: a continuous-batching engine on a virtual clock.
 //!
-//! `ModelBackend` abstracts the execution engine so the loop is testable
-//! without artifacts; the real implementation is `runtime::ModelRuntime`
-//! (PJRT executables) wired up in the serve example / CLI.
+//! Every iteration the scheduler admits arrived requests and hands back
+//! the runnable set; the backend executes ONE batched step over it
+//! (prefilling new sequences, decoding the rest) and reports how many
+//! seconds of model time the step took.  The virtual clock advances by
+//! that amount, which makes admission, TTFT and per-request latency
+//! deterministic functions of the trace and the backend's timing model:
+//! the `sim::Engine`-backed backend reports the FlightLLM accelerator's
+//! latencies, while the PJRT runtime backend reports measured host time.
+//!
+//! TTFT and latency are measured from request ARRIVAL, so queueing delay
+//! is included (the paper's serving scenario, §1).
 
 use std::collections::HashMap;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
 
 use crate::workload::Request;
 
 use super::sampler::Sampler;
-use super::scheduler::{Action, Scheduler, SchedulerConfig};
+use super::scheduler::{DecodeOutcome, Scheduler, SchedulerConfig};
 
-/// Opaque per-sequence model state (the KV cache handle).
-pub trait ModelBackend {
-    type KvState;
-
-    /// Run prefill; returns (logits, kv).
-    fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Self::KvState)>;
-
-    /// One decode step; returns (logits, new kv).
-    fn decode(&self, token: i32, kv: &Self::KvState, pos: i32)
-        -> Result<(Vec<f32>, Self::KvState)>;
+/// One sequence's share of a batched engine iteration.
+#[derive(Debug, Clone)]
+pub enum SeqWork {
+    /// First iteration: run the whole prompt through the model.
+    Prefill { prompt: Vec<i32> },
+    /// One decode step: feed the last sampled token at position `pos`.
+    Decode { last: i32, pos: i32 },
 }
 
-/// Completed-request record.
+/// A slot in a batched step.
+#[derive(Debug, Clone)]
+pub struct SeqSlot {
+    pub seq: u64,
+    pub work: SeqWork,
+}
+
+/// What one batched step produced.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// Per-slot logits, same order as the input batch.
+    pub logits: Vec<Vec<f32>>,
+    /// Seconds of model time the step took (virtual for the simulator,
+    /// measured wall time for the PJRT runtime).
+    pub step_s: f64,
+}
+
+/// The execution engine behind the serving loop.  Implementations keep
+/// their own per-sequence KV state, keyed by `SeqSlot::seq`.
+pub trait ModelBackend {
+    /// Run one engine iteration over `batch` (mixed prefill/decode).
+    fn step(&mut self, batch: &[SeqSlot]) -> Result<StepOutput>;
+
+    /// Drop any per-sequence state held for a retired sequence.
+    fn release(&mut self, _seq: u64) {}
+}
+
+/// Completed-request record.  All times are on the serving clock
+/// (virtual seconds for simulated backends).
 #[derive(Debug, Clone)]
 pub struct RequestResult {
     pub id: u64,
     pub prompt_len: usize,
     pub tokens: Vec<u32>,
-    /// Wall-clock seconds from admission to completion.
+    /// Seconds from request arrival to last token.
     pub latency_s: f64,
-    /// Time to first token (prefill), seconds.
+    /// Seconds from request arrival to first token (includes queueing).
     pub ttft_s: f64,
+    /// Seconds the request waited in the queue before admission.
+    pub queue_s: f64,
+    /// True if the sequence was cut short by KV-pool exhaustion.
+    pub evicted: bool,
 }
 
 /// Aggregate serving statistics.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
     pub results: Vec<RequestResult>,
+    /// Serving-clock seconds to drain the trace.
+    pub served_s: f64,
+    /// Host wall seconds actually spent.
     pub wall_s: f64,
+    /// Batched engine iterations executed.
+    pub steps: u64,
+    /// Decode slot-executions in PURE decode steps (no prefill slot in
+    /// the batch).  Mixed steps are excluded so `decode_tps` samples
+    /// steady-state decode throughput instead of absorbing prefill cost.
     pub decode_steps: u64,
+    /// Serving-clock seconds of those pure decode steps.
     pub decode_time_s: f64,
+    /// Requests rejected at admission (prompt cannot fit the KV pool).
+    pub rejected: u64,
 }
 
 impl ServeStats {
+    /// Aggregate decode throughput, tokens/s on the serving clock.
     pub fn decode_tps(&self) -> f64 {
         if self.decode_time_s <= 0.0 {
             return 0.0;
@@ -58,17 +105,54 @@ impl ServeStats {
     }
 
     pub fn mean_latency_s(&self) -> f64 {
-        if self.results.is_empty() {
-            return 0.0;
-        }
-        self.results.iter().map(|r| r.latency_s).sum::<f64>() / self.results.len() as f64
+        mean(self.results.iter().map(|r| r.latency_s))
     }
 
     pub fn mean_ttft_s(&self) -> f64 {
-        if self.results.is_empty() {
-            return 0.0;
+        mean(self.results.iter().map(|r| r.ttft_s))
+    }
+
+    pub fn mean_queue_s(&self) -> f64 {
+        mean(self.results.iter().map(|r| r.queue_s))
+    }
+
+    /// Human-readable summary (one printer for the CLI and examples).
+    /// `clock_label` names the serving clock: "virtual" or "measured".
+    pub fn summary(&self, clock_label: &str) -> String {
+        let mut out = format!(
+            "completed {} requests in {:.3}s {clock_label} ({} engine steps)\n",
+            self.results.len(),
+            self.served_s,
+            self.steps
+        );
+        if self.rejected > 0 {
+            out.push_str(&format!(
+                "rejected {} requests (prompt cannot fit the KV pool)\n",
+                self.rejected
+            ));
         }
-        self.results.iter().map(|r| r.ttft_s).sum::<f64>() / self.results.len() as f64
+        out.push_str(&format!(
+            "decode throughput {:.1} tok/s, mean TTFT {:.1} ms (queue {:.1} ms), \
+             mean latency {:.1} ms",
+            self.decode_tps(),
+            self.mean_ttft_s() * 1e3,
+            self.mean_queue_s() * 1e3,
+            self.mean_latency_s() * 1e3
+        ));
+        out
+    }
+}
+
+fn mean(it: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut n) = (0.0, 0u64);
+    for v in it {
+        sum += v;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
     }
 }
 
@@ -84,93 +168,162 @@ impl<B: ModelBackend> Server<B> {
         Self { backend, scheduler: Scheduler::new(cfg), sampler }
     }
 
+    /// The scheduler (inspection; the serving loop owns mutation).
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.scheduler
+    }
+
     /// Run a whole trace to completion (offline replay: all requests are
-    /// available; arrival times order admission).
+    /// known upfront; `arrival_s` gates admission against the serving
+    /// clock, so a request submitted late still queues realistically).
     pub fn run_trace(&mut self, mut trace: Vec<Request>) -> Result<ServeStats> {
         trace.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let arrivals: HashMap<u64, f64> = trace.iter().map(|r| (r.id, r.arrival_s)).collect();
         for r in trace {
             self.scheduler.submit(r);
         }
         let mut stats = ServeStats::default();
-        let t0 = Instant::now();
-        // Live per-sequence model state.
-        let mut kv: HashMap<u64, B::KvState> = HashMap::new();
-        let mut starts: HashMap<u64, (Instant, Instant)> = HashMap::new(); // (admit, first_token)
+        let host_t0 = Instant::now();
+        let mut clock = 0.0f64; // serving-clock seconds
+        let mut first_token_s: HashMap<u64, f64> = HashMap::new();
 
         loop {
-            match self.scheduler.next_action(t0.elapsed().as_secs_f64()) {
-                Action::Prefill { seq } => {
-                    let admit_t = Instant::now();
-                    let (prompt, _plen) = {
-                        let s = self
-                            .scheduler
-                            .seq_mut(seq)
-                            .expect("scheduled sequence exists");
-                        let p: Vec<i32> = s.req.prompt.iter().map(|&t| t as i32).collect();
-                        (p, s.ctx)
-                    };
-                    let (logits, state) = self.backend.prefill(&prompt)?;
-                    let tok = self.sampler.sample(&logits);
-                    kv.insert(seq, state);
-                    starts.insert(seq, (admit_t, Instant::now()));
-                    self.scheduler.on_prefill_done(seq, tok);
+            let batch = self.scheduler.schedule(clock);
+            if batch.is_empty() {
+                if self.scheduler.is_drained() {
+                    break;
                 }
-                Action::Decode { seq } => {
-                    let (last, ctx) = {
-                        let s = self.scheduler.seq_mut(seq).unwrap();
-                        (*s.generated.last().unwrap() as i32, s.ctx)
-                    };
-                    let t = Instant::now();
-                    let state = &kv[&seq];
-                    let (logits, new_state) = self.backend.decode(last, state, ctx as i32)?;
-                    stats.decode_time_s += t.elapsed().as_secs_f64();
-                    stats.decode_steps += 1;
-                    let tok = self.sampler.sample(&logits);
-                    kv.insert(seq, new_state);
-                    if self.scheduler.on_decode_done(seq, tok) {
-                        self.finish(seq, &mut kv, &mut starts, &mut stats);
-                    }
-                }
-                Action::Idle => {
-                    if self.scheduler.is_drained() {
-                        break;
-                    }
-                    // Blocked sequences at context cap: retire them.
-                    let stuck: Vec<u64> = self
-                        .scheduler
-                        .running()
-                        .iter()
-                        .map(|s| s.req.id)
-                        .collect();
-                    if stuck.is_empty() {
-                        break;
-                    }
+                // Residents that are genuinely finished (done or at the
+                // context cap) are retired — and ONLY those.
+                let stuck: Vec<u64> = self
+                    .scheduler
+                    .running()
+                    .iter()
+                    .filter(|s| s.done() || s.context_capped(self.scheduler.cfg.max_seq))
+                    .map(|s| s.req.id)
+                    .collect();
+                if !stuck.is_empty() {
                     for seq in stuck {
-                        self.finish(seq, &mut kv, &mut starts, &mut stats);
+                        self.finish(seq, false, clock, &arrivals, &mut first_token_s, &mut stats);
+                    }
+                    continue;
+                }
+                if self.scheduler.running().is_empty() {
+                    if let Some(t) = self.scheduler.next_arrival_s() {
+                        if t > clock {
+                            // Machine idle: fast-forward to the next arrival.
+                            clock = t;
+                            continue;
+                        }
+                        // Arrived, machine empty, still unadmittable: the
+                        // prompt can never fit the KV pool. Reject it
+                        // explicitly instead of looping forever.
+                        let _ = self.scheduler.reject_front();
+                        stats.rejected += 1;
+                        continue;
+                    }
+                }
+                bail!("scheduler stalled: nothing runnable but trace not drained");
+            }
+
+            // Build the batched step from scheduler state.
+            let slots: Vec<SeqSlot> = batch
+                .iter()
+                .map(|&id| {
+                    let s = self.scheduler.seq(id).expect("scheduled sequence exists");
+                    let work = if !s.prefilled {
+                        SeqWork::Prefill {
+                            prompt: s.req.prompt.iter().map(|&t| t as i32).collect(),
+                        }
+                    } else {
+                        SeqWork::Decode {
+                            last: *s.generated.last().expect("prefilled seq has a token")
+                                as i32,
+                            pos: s.ctx as i32,
+                        }
+                    };
+                    SeqSlot { seq: id, work }
+                })
+                .collect();
+
+            let out = self.backend.step(&slots)?;
+            ensure!(
+                out.logits.len() == slots.len(),
+                "backend returned {} logit rows for a batch of {}",
+                out.logits.len(),
+                slots.len()
+            );
+            clock += out.step_s.max(0.0);
+            stats.steps += 1;
+            let n_decode = slots
+                .iter()
+                .filter(|s| matches!(s.work, SeqWork::Decode { .. }))
+                .count() as u64;
+            // Only pure decode steps sample throughput: a mixed step's
+            // cost is dominated by its prefills and would deflate tok/s.
+            if n_decode == slots.len() as u64 {
+                stats.decode_steps += n_decode;
+                stats.decode_time_s += out.step_s.max(0.0);
+            }
+
+            // Sample each slot's token and record it with the scheduler.
+            let mut finished: Vec<(u64, bool)> = Vec::new();
+            for (slot, logits) in slots.iter().zip(&out.logits) {
+                let tok = self.sampler.sample(logits);
+                match slot.work {
+                    SeqWork::Prefill { .. } => {
+                        self.scheduler.on_prefill_done(slot.seq, tok);
+                        first_token_s.insert(slot.seq, clock);
+                    }
+                    SeqWork::Decode { .. } => {
+                        if self.scheduler.on_decode_done(slot.seq, tok)
+                            == DecodeOutcome::EvictedKvFull
+                        {
+                            finished.push((slot.seq, true));
+                        }
                     }
                 }
             }
+            // Sweep completed sequences (token budget reached, or context
+            // cap hit — including prompts that fill the context at prefill).
+            let max_seq = self.scheduler.cfg.max_seq;
+            finished.extend(
+                self.scheduler
+                    .running()
+                    .iter()
+                    .filter(|s| s.done() || s.context_capped(max_seq))
+                    .map(|s| (s.req.id, false)),
+            );
+            for (seq, evicted) in finished {
+                self.finish(seq, evicted, clock, &arrivals, &mut first_token_s, &mut stats);
+            }
         }
-        stats.wall_s = t0.elapsed().as_secs_f64();
+        stats.served_s = clock;
+        stats.wall_s = host_t0.elapsed().as_secs_f64();
         Ok(stats)
     }
 
     fn finish(
         &mut self,
         seq: u64,
-        kv: &mut HashMap<u64, B::KvState>,
-        starts: &mut HashMap<u64, (Instant, Instant)>,
+        evicted: bool,
+        clock: f64,
+        arrivals: &HashMap<u64, f64>,
+        first_token_s: &mut HashMap<u64, f64>,
         stats: &mut ServeStats,
     ) {
         if let Some(s) = self.scheduler.retire(seq) {
-            kv.remove(&seq);
-            let (admit, first) = starts.remove(&seq).unwrap_or((Instant::now(), Instant::now()));
+            self.backend.release(seq);
+            let arrival = arrivals.get(&seq).copied().unwrap_or(0.0);
+            let first = first_token_s.remove(&seq).unwrap_or(clock);
             stats.results.push(RequestResult {
                 id: seq,
                 prompt_len: s.req.prompt.len(),
                 tokens: s.generated,
-                latency_s: admit.elapsed().as_secs_f64(),
-                ttft_s: first.duration_since(admit).as_secs_f64(),
+                latency_s: clock - arrival,
+                ttft_s: first - arrival,
+                queue_s: s.admitted_s - arrival,
+                evicted,
             });
         }
     }
@@ -182,32 +335,63 @@ mod tests {
     use crate::workload::{generate_trace, TraceConfig};
 
     /// A deterministic toy backend: logits favor (last_token + 1) % V.
+    /// Step cost is flat per phase — prefills charge `prefill_s` each,
+    /// any number of decode slots share one `decode_s` (so batching
+    /// visibly improves aggregate throughput).
     struct EchoBackend {
         vocab: usize,
+        prefill_s: f64,
+        decode_s: f64,
+    }
+
+    impl EchoBackend {
+        fn new(vocab: usize) -> Self {
+            Self { vocab, prefill_s: 2e-3, decode_s: 1e-3 }
+        }
     }
 
     impl ModelBackend for EchoBackend {
-        type KvState = u32; // pretend-kv: the running checksum
-
-        fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, u32)> {
-            let last = *prompt.last().unwrap_or(&0) as usize;
-            let mut logits = vec![0.0f32; self.vocab];
-            logits[(last + 1) % self.vocab] = 10.0;
-            Ok((logits, prompt.len() as u32))
+        fn step(&mut self, batch: &[SeqSlot]) -> Result<StepOutput> {
+            let mut step_s = 0.0;
+            let mut any_decode = false;
+            let logits = batch
+                .iter()
+                .map(|slot| {
+                    let last = match &slot.work {
+                        SeqWork::Prefill { prompt } => {
+                            step_s += self.prefill_s;
+                            *prompt.last().unwrap_or(&0)
+                        }
+                        SeqWork::Decode { last, .. } => {
+                            any_decode = true;
+                            *last
+                        }
+                    } as usize;
+                    let mut l = vec![0.0f32; self.vocab];
+                    l[(last + 1) % self.vocab] = 10.0;
+                    l
+                })
+                .collect();
+            if any_decode {
+                step_s += self.decode_s;
+            }
+            Ok(StepOutput { logits, step_s })
         }
+    }
 
-        fn decode(&self, token: i32, kv: &u32, _pos: i32) -> Result<(Vec<f32>, u32)> {
-            let mut logits = vec![0.0f32; self.vocab];
-            logits[(token as usize + 1) % self.vocab] = 10.0;
-            Ok((logits, kv + 1))
+    fn req(id: u64, arrival_s: f64, plen: usize, dlen: u32) -> Request {
+        Request {
+            id,
+            arrival_s,
+            prompt: (0..plen as u32).collect(),
+            max_new_tokens: dlen,
         }
     }
 
     #[test]
     fn serves_trace_to_completion_with_correct_tokens() {
-        let backend = EchoBackend { vocab: 64 };
         let mut server = Server::new(
-            backend,
+            EchoBackend::new(64),
             SchedulerConfig { max_seq: 128, ..Default::default() },
             Sampler::greedy(),
         );
@@ -232,27 +416,174 @@ mod tests {
                 assert_eq!(w[1], (w[0] + 1) % 64);
             }
             assert_eq!(r.tokens.len(), 4);
+            assert!(!r.evicted);
         }
         assert!(stats.decode_steps >= 5 * 3);
+        assert!(stats.served_s > 0.0);
     }
 
     #[test]
-    fn multibatch_interleaves_but_completes_all() {
-        let backend = EchoBackend { vocab: 32 };
-        let mut server = Server::new(
-            backend,
-            SchedulerConfig { max_batch: 4, max_seq: 64, ..Default::default() },
-            Sampler::greedy(),
-        );
-        let trace = generate_trace(&TraceConfig {
+    fn multibatch_completes_all_and_raises_throughput() {
+        let trace_cfg = TraceConfig {
             n_requests: 12,
             vocab: 32,
             prompt_len_choices: vec![4],
             decode_len_choices: vec![8],
+            rate_per_s: 1e6, // near-simultaneous arrivals: batching matters
             ..Default::default()
-        });
+        };
+        let run = |max_batch: usize| {
+            let mut server = Server::new(
+                EchoBackend::new(32),
+                SchedulerConfig { max_batch, max_seq: 64, ..Default::default() },
+                Sampler::greedy(),
+            );
+            server.run_trace(generate_trace(&trace_cfg)).unwrap()
+        };
+        let s1 = run(1);
+        let s4 = run(4);
+        assert_eq!(s1.results.len(), 12);
+        assert_eq!(s4.results.len(), 12);
+        // Four sequences share each decode step: aggregate tokens/s and
+        // end-to-end drain time must both improve.
+        assert!(s4.decode_tps() > 2.0 * s1.decode_tps());
+        assert!(s4.served_s < s1.served_s);
+    }
+
+    /// Regression (TTFT): time-to-first-token is measured from request
+    /// arrival, so a queued request's TTFT includes its queueing delay.
+    #[test]
+    fn ttft_includes_queueing_delay() {
+        let mut server = Server::new(
+            EchoBackend::new(16),
+            SchedulerConfig { max_batch: 1, max_seq: 64, ..Default::default() },
+            Sampler::greedy(),
+        );
+        let trace = vec![req(0, 0.0, 4, 4), req(1, 0.0, 4, 4)];
         let stats = server.run_trace(trace).unwrap();
-        assert_eq!(stats.results.len(), 12);
-        assert!(stats.decode_tps() > 0.0);
+        let a = stats.results.iter().find(|r| r.id == 0).unwrap();
+        let b = stats.results.iter().find(|r| r.id == 1).unwrap();
+        // A: prefill at 2ms, 3 decode steps → done at 5ms.
+        assert!((a.ttft_s - 0.002).abs() < 1e-9, "A ttft = {}", a.ttft_s);
+        assert!((a.latency_s - 0.005).abs() < 1e-9);
+        assert!((a.queue_s - 0.0).abs() < 1e-9);
+        // B waits for A (5ms), prefills by 7ms, finishes at 10ms.
+        assert!((b.queue_s - 0.005).abs() < 1e-9, "B queued = {}", b.queue_s);
+        assert!((b.ttft_s - 0.007).abs() < 1e-9, "B ttft = {}", b.ttft_s);
+        assert!((b.latency_s - 0.010).abs() < 1e-9);
+        assert!((stats.served_s - 0.010).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_machine_fast_forwards_to_arrival() {
+        let mut server = Server::new(
+            EchoBackend::new(16),
+            SchedulerConfig::default(),
+            Sampler::greedy(),
+        );
+        let stats = server.run_trace(vec![req(0, 3.0, 4, 4)]).unwrap();
+        let r = &stats.results[0];
+        assert!((r.ttft_s - 0.002).abs() < 1e-9, "no queueing when idle");
+        assert!((r.latency_s - 0.005).abs() < 1e-9);
+        assert!((stats.served_s - 3.005).abs() < 1e-9, "clock jumped to arrival");
+    }
+
+    /// Regression (idle retirement): a context-capped sequence is retired
+    /// alone — other running sequences keep decoding to completion. The
+    /// old Idle branch retired EVERY running sequence.
+    #[test]
+    fn context_capped_sequence_retires_without_killing_others() {
+        let mut server = Server::new(
+            EchoBackend::new(32),
+            SchedulerConfig { max_batch: 2, max_seq: 16, ..Default::default() },
+            Sampler::greedy(),
+        );
+        // A's prompt fills the whole context (truncated 24 → 16): it caps
+        // right after prefill with one token. B decodes its full budget.
+        let trace = vec![req(0, 0.0, 24, 8), req(1, 0.0, 4, 8)];
+        let stats = server.run_trace(trace).unwrap();
+        let a = stats.results.iter().find(|r| r.id == 0).unwrap();
+        let b = stats.results.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(a.prompt_len, 16, "prompt truncated consistently");
+        assert_eq!(a.tokens.len(), 1, "capped after prefill");
+        assert_eq!(b.tokens.len(), 8, "B must NOT be retired early");
+    }
+
+    /// Regression (KV desync): pool exhaustion evicts the sequence with
+    /// its tokens intact, and the freed pages serve the next request.
+    #[test]
+    fn kv_exhaustion_evicts_and_frees_pages() {
+        let mut server = Server::new(
+            EchoBackend::new(32),
+            SchedulerConfig {
+                max_batch: 1,
+                kv_pages: 2,
+                page_tokens: 4,
+                max_seq: 64,
+            },
+            Sampler::greedy(),
+        );
+        let trace = vec![req(0, 0.0, 4, 100), req(1, 0.0, 4, 100)];
+        let stats = server.run_trace(trace).unwrap();
+        assert_eq!(stats.results.len(), 2, "both requests produce results");
+        for r in &stats.results {
+            assert!(r.evicted, "pool of 8 tokens cannot hold 104");
+            // prefill 4 tokens + first token + 4 appended before the
+            // 9th token fails to fit.
+            assert_eq!(r.tokens.len(), 6);
+        }
+        assert_eq!(stats.rejected, 0);
+    }
+
+    #[test]
+    fn oversized_for_pool_is_rejected_not_looped() {
+        let mut server = Server::new(
+            EchoBackend::new(32),
+            SchedulerConfig {
+                max_batch: 1,
+                kv_pages: 2,
+                page_tokens: 4,
+                max_seq: 64,
+            },
+            Sampler::greedy(),
+        );
+        // 32-token prompt needs 8 pages; the pool has 2. The request
+        // behind it must still be served.
+        let trace = vec![req(0, 0.0, 32, 4), req(1, 0.1, 4, 2)];
+        let stats = server.run_trace(trace).unwrap();
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.results.len(), 1);
+        assert_eq!(stats.results[0].id, 1);
+        assert_eq!(stats.results[0].tokens.len(), 2);
+    }
+
+    #[test]
+    fn serving_is_deterministic_across_runs() {
+        let trace_cfg = TraceConfig {
+            n_requests: 10,
+            vocab: 64,
+            prompt_len_choices: vec![4, 8, 16],
+            decode_len_choices: vec![4, 8],
+            seed: 3,
+            ..Default::default()
+        };
+        let run = || {
+            let mut server = Server::new(
+                EchoBackend::new(64),
+                SchedulerConfig { max_batch: 3, max_seq: 64, ..Default::default() },
+                Sampler::greedy(),
+            );
+            server.run_trace(generate_trace(&trace_cfg)).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.results.len(), b.results.len());
+        assert_eq!(a.served_s.to_bits(), b.served_s.to_bits());
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.ttft_s.to_bits(), y.ttft_s.to_bits());
+            assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+        }
     }
 }

@@ -13,13 +13,15 @@ use crate::ir::{passes, Graph, Stage};
 use crate::metrics::{EvalPoint, Measurement};
 use crate::sim::{Engine, PowerModel, SimReport};
 
-/// Simulate one stream for a target.
-fn run_stage(t: &Target, stage: Stage, opt: CompilerOptions, csd: bool) -> SimReport {
+/// Lower and simulate one stream for a target — the single source of
+/// stage timings for the figure sweeps AND the serving-path
+/// `coordinator::SimBackend`.
+pub fn sim_stage(t: &Target, stage: Stage, opt: CompilerOptions, csd: bool) -> SimReport {
     let mut g = Graph::from_model(&t.model, &t.compression, stage);
     passes::optimize(&mut g);
     let mut sink = VecSink::default();
     lower(&g, t, opt, &mut sink);
-    Engine::for_target(t, csd).run(&sink.0)
+    Engine::for_target(t, csd).run_ref(&sink.0)
 }
 
 /// FlightLLM configuration under test (ablation rungs of Fig. 14).
@@ -87,7 +89,7 @@ pub fn flightllm_measure(target: &Target, pt: EvalPoint, cfg: FlightConfig) -> M
 
     // Prefill once at its bucket.
     let pre_bucket = plan.prefill_bucket(pt.prefill.max(1));
-    let pre = run_stage(&t, Stage::Prefill { n: pre_bucket }, opt, cfg.csd());
+    let pre = sim_stage(&t, Stage::Prefill { n: pre_bucket }, opt, cfg.csd());
 
     // Decode: group steps by their context bucket.
     let mut decode_ns = 0.0;
@@ -100,7 +102,7 @@ pub fn flightllm_measure(target: &Target, pt: EvalPoint, cfg: FlightConfig) -> M
         let bucket = plan.decode_bucket(ctx.max(1));
         // All steps whose ctx falls in this bucket share the stream.
         let steps_in_bucket = (bucket.saturating_sub(ctx) + 1).min(pt.decode - i);
-        let rep = run_stage(&t, Stage::Decode { ctx: bucket }, opt, cfg.csd());
+        let rep = sim_stage(&t, Stage::Decode { ctx: bucket }, opt, cfg.csd());
         decode_ns += rep.total_ns * steps_in_bucket as f64;
         macs += rep.macs * steps_in_bucket;
         hbm_bytes += rep.hbm_bytes * steps_in_bucket;
@@ -140,11 +142,42 @@ pub fn flightllm_full(target: &Target, pt: EvalPoint) -> Measurement {
 /// `batch` sequences decode together at context `ctx`.
 pub fn flightllm_batch_tps(target: &Target, ctx: u64, batch: u32) -> f64 {
     let opt = crate::compiler::CompilerOptions::with_batch(batch);
-    let rep = run_stage(target, Stage::Decode { ctx }, opt, true);
+    let rep = sim_stage(target, Stage::Decode { ctx }, opt, true);
     if rep.total_ns <= 0.0 {
         return 0.0;
     }
     batch as f64 * 1e9 / rep.total_ns
+}
+
+/// Fig. 15 through the serving stack: `batch` simultaneous requests at
+/// context `ctx` decode `decode` tokens each through the
+/// continuous-batching engine over the sim backend.  Aggregate decode
+/// tokens/s comes off the virtual clock (`ServeStats::decode_tps`), so
+/// the number reflects scheduling + KV admission, not just the stream
+/// time the analytic `flightllm_batch_tps` prices.
+pub fn flightllm_serve_batch_tps(
+    target: &Target,
+    ctx: u64,
+    decode: u32,
+    batch: u32,
+) -> crate::coordinator::ServeStats {
+    use crate::coordinator::{Sampler, SchedulerConfig, Server, SimBackend};
+    use crate::workload::generate_burst_trace;
+
+    let vocab = 512u32.min(target.model.vocab as u32).max(2);
+    let page_tokens = 16usize;
+    let per_seq = (ctx as usize + decode as usize).div_ceil(page_tokens) + 1;
+    let cfg = SchedulerConfig {
+        max_batch: batch.max(1) as usize,
+        kv_pages: per_seq * batch.max(1) as usize,
+        page_tokens,
+        max_seq: target.model.max_seq as usize,
+    };
+    let trace = generate_burst_trace(batch.max(1) as usize, ctx as usize, decode, vocab, 15);
+    let backend = SimBackend::with_vocab(target.clone(), vocab as usize);
+    Server::new(backend, cfg, Sampler::greedy())
+        .run_trace(trace)
+        .expect("sim serving is infallible")
 }
 
 /// Fig. 14's three rungs, normalized against a V100S-opt baseline the
@@ -251,6 +284,25 @@ mod tests {
             m.bw_util > 0.5 && m.bw_util < 0.85,
             "U280 decode HBM utilization = {:.1}% (paper 65.9%)",
             m.bw_util * 100.0
+        );
+    }
+
+    #[test]
+    fn fig15_serving_path_tracks_analytic_batching() {
+        // The served tokens/s must rise with batch and sit in the same
+        // band as the analytic single-stream number (the serving path
+        // adds prefill scheduling and bucket drift, nothing more).
+        let t = Target::u280_llama2();
+        let s1 = flightllm_serve_batch_tps(&t, 256, 8, 1);
+        let s8 = flightllm_serve_batch_tps(&t, 256, 8, 8);
+        assert_eq!(s1.results.len(), 1);
+        assert_eq!(s8.results.len(), 8);
+        assert!(s8.decode_tps() > s1.decode_tps(), "batching must amortize");
+        let analytic = flightllm_batch_tps(&t, 256, 1);
+        let served = s1.decode_tps();
+        assert!(
+            served > 0.33 * analytic && served < 3.0 * analytic,
+            "served {served:.1} tok/s vs analytic {analytic:.1} tok/s"
         );
     }
 

@@ -27,6 +27,10 @@ pub mod ir;
 pub mod isa;
 pub mod metrics;
 pub mod quant;
+/// The PJRT runtime needs the `xla` crate (xla_extension bindings);
+/// everything else — simulator, compiler, coordinator with the
+/// `SimBackend`, baselines — builds without it.
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sim;
 pub mod sparse;

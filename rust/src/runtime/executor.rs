@@ -184,18 +184,60 @@ fn to_anyhow(e: xla::Error) -> anyhow::Error {
     anyhow!("{e}")
 }
 
-/// The runtime IS the serving backend: prefill/decode through PJRT.
-impl crate::coordinator::ModelBackend for ModelRuntime {
-    type KvState = Literal;
+/// The runtime as a serving backend: executes batched coordinator steps
+/// slot-by-slot through PJRT (the CPU client runs one executable at a
+/// time) and reports measured wall seconds as the step cost — so served
+/// traces carry real host latencies on the serving clock.  Per-sequence
+/// KV literals live here, keyed by sequence id.
+pub struct RuntimeBackend {
+    rt: ModelRuntime,
+    kv: HashMap<u64, Literal>,
+}
 
-    fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, Literal)> {
-        let out = ModelRuntime::prefill(self, prompt)?;
-        Ok((out.logits, out.kv))
+impl RuntimeBackend {
+    pub fn new(rt: ModelRuntime) -> Self {
+        Self { rt, kv: HashMap::new() }
     }
 
-    fn decode(&self, token: i32, kv: &Literal, pos: i32) -> Result<(Vec<f32>, Literal)> {
-        let out = ModelRuntime::decode(self, token, kv, pos)?;
-        Ok((out.logits, out.kv))
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.rt
+    }
+}
+
+impl crate::coordinator::ModelBackend for RuntimeBackend {
+    fn step(
+        &mut self,
+        batch: &[crate::coordinator::SeqSlot],
+    ) -> Result<crate::coordinator::StepOutput> {
+        use crate::coordinator::SeqWork;
+        let t0 = std::time::Instant::now();
+        let mut logits = Vec::with_capacity(batch.len());
+        for slot in batch {
+            match &slot.work {
+                SeqWork::Prefill { prompt } => {
+                    let out = self.rt.prefill(prompt)?;
+                    self.kv.insert(slot.seq, out.kv);
+                    logits.push(out.logits);
+                }
+                SeqWork::Decode { last, pos } => {
+                    let kv = self
+                        .kv
+                        .get(&slot.seq)
+                        .ok_or_else(|| anyhow!("no KV state for sequence {}", slot.seq))?;
+                    let out = self.rt.decode(*last, kv, *pos)?;
+                    self.kv.insert(slot.seq, out.kv);
+                    logits.push(out.logits);
+                }
+            }
+        }
+        Ok(crate::coordinator::StepOutput {
+            logits,
+            step_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn release(&mut self, seq: u64) {
+        self.kv.remove(&seq);
     }
 }
 

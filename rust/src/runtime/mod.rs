@@ -8,6 +8,6 @@ mod manifest;
 mod weights;
 mod executor;
 
-pub use executor::{DecodeOutput, ModelRuntime, PrefillOutput};
+pub use executor::{DecodeOutput, ModelRuntime, PrefillOutput, RuntimeBackend};
 pub use manifest::{Manifest, ParamEntry, RuntimeModelConfig};
 pub use weights::load_param_literals;

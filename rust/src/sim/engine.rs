@@ -101,6 +101,13 @@ impl Engine {
         cycles as f64 * 1e3 / self.freq_mhz
     }
 
+    /// Execute a stream without consuming the engine: clones for fresh
+    /// per-run channel state.  The serving backend replays memoised
+    /// streams through this repeatedly.
+    pub fn run_ref(&self, insts: &[Inst]) -> SimReport {
+        self.clone().run(insts)
+    }
+
     /// Execute one instruction stream; the engine is consumed per run
     /// (fresh channel state per inference).
     pub fn run(mut self, insts: &[Inst]) -> SimReport {
@@ -277,6 +284,18 @@ mod tests {
             soft_cost > 1.5 * elt_cost,
             "softmax (two-phase) must hurt more: {soft_cost} vs {elt_cost}"
         );
+    }
+
+    #[test]
+    fn run_ref_is_repeatable_and_matches_run() {
+        let insts = weight_stream(4, 1 << 18, 1024, 256);
+        let e = engine();
+        let a = e.run_ref(&insts);
+        let b = e.run_ref(&insts);
+        let c = engine().run(&insts);
+        assert_eq!(a.total_ns.to_bits(), b.total_ns.to_bits());
+        assert_eq!(a.total_ns.to_bits(), c.total_ns.to_bits());
+        assert_eq!(a.hbm_bytes, c.hbm_bytes);
     }
 
     #[test]

@@ -61,9 +61,44 @@ pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
         .collect()
 }
 
+/// A burst: `n` identical-shape requests all arriving at t = 0 — the
+/// Fig. 15 multibatch scenario pushed through the serving path, and the
+/// worst-case admission pressure for the continuous-batching engine.
+pub fn generate_burst_trace(
+    n: usize,
+    prompt_len: usize,
+    max_new_tokens: u32,
+    vocab: u32,
+    seed: u64,
+) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            arrival_s: 0.0,
+            prompt: (0..prompt_len).map(|_| rng.below(vocab as u64) as u32).collect(),
+            max_new_tokens,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn burst_trace_arrives_at_once_with_fixed_shape() {
+        let t = generate_burst_trace(4, 32, 8, 64, 3);
+        assert_eq!(t.len(), 4);
+        for r in &t {
+            assert_eq!(r.arrival_s, 0.0);
+            assert_eq!(r.prompt.len(), 32);
+            assert_eq!(r.max_new_tokens, 8);
+            assert!(r.prompt.iter().all(|&x| x < 64));
+        }
+        let again = generate_burst_trace(4, 32, 8, 64, 3);
+        assert_eq!(t[2].prompt, again[2].prompt, "seeded: reproducible");
+    }
 
     #[test]
     fn trace_is_deterministic_per_seed() {

@@ -10,6 +10,9 @@
 //! modules (~70 s) and concurrent PJRT CPU clients in one process can
 //! race inside xla_extension — one client, one load, sequential checks.
 
+// The whole test crate needs the PJRT runtime.
+#![cfg(feature = "xla")]
+
 use std::path::PathBuf;
 
 use flightllm::runtime::ModelRuntime;
