@@ -3,7 +3,7 @@
 //! ```text
 //! flightllm serve    [--backend runtime|sim] [--artifacts DIR] [--requests N]
 //!                    [--batch N] [--temp T] [--model llama2|opt|tiny]
-//!                    [--platform u280|vhk158]
+//!                    [--platform u280|vhk158] [--prefix-cache]
 //! flightllm simulate [--model llama2|opt] [--platform u280|vhk158]
 //!                    [--prefill N] [--decode N]
 //! flightllm report   [--what storage|resources|efficiency]
@@ -13,6 +13,12 @@
 //! continuous-batching engine against the cycle-approximate simulator,
 //! reporting the deterministic TTFT/latency/tokens-per-second FlightLLM
 //! would deliver on the chosen platform.
+//!
+//! `serve --backend sim --prefix-cache` switches to a shared-prefix
+//! trace (N system prompts × per-request tails) and serves it TWICE —
+//! prefix caching off, then on — printing both summaries plus the
+//! hit-rate / TTFT / peak-KV deltas, so the CoW paged-KV win is visible
+//! from one command.
 
 use crate::baselines::{GpuStack, GpuSystem};
 use crate::config::{ModelConfig, Target};
@@ -33,9 +39,14 @@ fn flag_u64(args: &[String], key: &str, default: u64) -> u64 {
     flag(args, key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Presence flag (no value): `--prefix-cache`.
+fn has_flag(args: &[String], key: &str) -> bool {
+    args.iter().any(|a| a == key)
+}
+
 const USAGE: &str = "usage: flightllm <serve|simulate|report> [flags]
   serve    --backend runtime|sim --artifacts DIR --requests N --batch N --temp T
-           --model llama2|opt|tiny --platform u280|vhk158
+           --model llama2|opt|tiny --platform u280|vhk158 [--prefix-cache]
   simulate --model llama2|opt --platform u280|vhk158 --prefill N --decode N
   report   --what storage|resources|efficiency";
 
@@ -116,6 +127,16 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
     let batch = flag_u64(args, "--batch", 1) as usize;
     let max_seq = t.model.max_seq as usize;
     let vocab = (t.model.vocab as u32).min(512);
+    if has_flag(args, "--prefix-cache") {
+        if flag(args, "--temp").is_some() {
+            // Greedy sampling is load-bearing here: with a stateful
+            // temperature sampler the on/off runs would consume the RNG
+            // in different orders and the token-identity check would
+            // compare different generations.
+            eprintln!("note: --temp is ignored with --prefix-cache (comparison is greedy)");
+        }
+        return cmd_serve_sim_prefix_cache(&t, n, batch, vocab);
+    }
     let trace = generate_trace(&TraceConfig {
         n_requests: n,
         vocab,
@@ -127,7 +148,13 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
     let sampler = sampler_for(args);
     let mut server = Server::new(
         SimBackend::with_vocab(t, vocab as usize),
-        SchedulerConfig { max_batch: batch.max(1), kv_pages: 512, page_tokens: 16, max_seq },
+        SchedulerConfig {
+            max_batch: batch.max(1),
+            kv_pages: 512,
+            page_tokens: 16,
+            max_seq,
+            ..Default::default()
+        },
         sampler,
     );
     match server.run_trace(trace) {
@@ -141,6 +168,45 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+/// The `--prefix-cache` mode: one shared-prefix trace, served twice
+/// (cache off, then on) so the deltas are a controlled comparison.
+fn cmd_serve_sim_prefix_cache(t: &Target, n: usize, batch: usize, vocab: u32) -> i32 {
+    use crate::experiments::flightllm_serve_prefix;
+    use crate::workload::SharedPrefixConfig;
+
+    let cfg = SharedPrefixConfig {
+        n_requests: n.max(2),
+        vocab,
+        rate_per_s: 32.0,
+        ..Default::default()
+    };
+    let name = format!("{} on {}", t.model.name, t.platform.name);
+    println!(
+        "sim-serving a shared-prefix trace ({} groups x {}-token prefixes, \
+         {} requests, batch {}) on {name}:",
+        cfg.n_groups,
+        cfg.prefix_len,
+        cfg.n_requests,
+        batch.max(1)
+    );
+    let off = flightllm_serve_prefix(t, &cfg, batch, false);
+    let on = flightllm_serve_prefix(t, &cfg, batch, true);
+    println!("-- prefix cache OFF --");
+    println!("{}", off.summary("virtual"));
+    println!("-- prefix cache ON --");
+    println!("{}", on.summary("virtual"));
+    println!(
+        "prefix caching: {:.0}% hit rate, mean TTFT {:.1} -> {:.1} ms, \
+         peak KV {} -> {} pages",
+        on.prefix_hit_rate() * 100.0,
+        off.mean_ttft_s() * 1e3,
+        on.mean_ttft_s() * 1e3,
+        off.peak_kv_pages,
+        on.peak_kv_pages
+    );
+    0
 }
 
 #[cfg(feature = "xla")]
@@ -169,7 +235,13 @@ fn cmd_serve_runtime(args: &[String]) -> i32 {
     });
     let mut server = Server::new(
         RuntimeBackend::new(rt),
-        SchedulerConfig { max_batch: batch.max(1), kv_pages: 128, page_tokens: 16, max_seq },
+        SchedulerConfig {
+            max_batch: batch.max(1),
+            kv_pages: 128,
+            page_tokens: 16,
+            max_seq,
+            ..Default::default()
+        },
         sampler,
     );
     match server.run_trace(trace) {
@@ -269,6 +341,17 @@ mod tests {
     #[test]
     fn serve_unknown_backend_fails() {
         assert_eq!(run(&s(&["flightllm", "serve", "--backend", "gpu"])), 2);
+    }
+
+    #[test]
+    fn serve_sim_prefix_cache_comparison_runs() {
+        assert_eq!(
+            run(&s(&[
+                "flightllm", "serve", "--backend", "sim", "--model", "tiny",
+                "--requests", "6", "--batch", "2", "--prefix-cache",
+            ])),
+            0
+        );
     }
 
     #[test]

@@ -1,15 +1,33 @@
 //! Paged KV-cache manager (vLLM-style [31], which the paper uses as its
 //! GPU-opt baseline and whose paging FlightLLM's HBM KV layout mirrors):
-//! fixed-size token pages allocated per sequence, with exact accounting
-//! so the scheduler can admission-control instead of OOMing mid-decode.
+//! fixed-size token pages with exact accounting, ref-counted
+//! copy-on-write sharing, and a prompt-prefix index.
+//!
+//! Sharing model: a page holding a FULL page of prompt tokens is entered
+//! into the prefix index under the chained content hash of the prompt up
+//! to and including that page.  A later `admit` whose prompt starts with
+//! the same full-page prefix shares those pages (refcount bump) instead
+//! of allocating and recomputing them; `AdmitOutcome::cached_tokens`
+//! tells the serving layer how much prefill it may skip.  Sequences can
+//! also `fork` (parallel sampling / beam search), sharing every page
+//! including a partial tail; the first `append` through a shared tail
+//! page copies it first (copy-on-write), so writers never mutate pages
+//! other sequences still reference.
+//!
+//! Released pages that are still indexed are RETAINED (refcount 0, not
+//! free, still serving cache hits) and evicted in LRU order only under
+//! allocation pressure — the paged-KV analogue of keeping warm prefixes
+//! on-chip for as long as capacity allows (§4.4).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 /// Errors the pool can raise.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum KvError {
     OutOfPages { need: usize, free: usize },
     UnknownSeq(u64),
+    /// Pool geometry that cannot hold a single page.
+    BadGeometry(String),
 }
 
 impl std::fmt::Display for KvError {
@@ -19,94 +37,365 @@ impl std::fmt::Display for KvError {
                 write!(f, "KV pool exhausted: need {need} pages, {free} free")
             }
             KvError::UnknownSeq(id) => write!(f, "unknown sequence {id}"),
+            KvError::BadGeometry(msg) => write!(f, "bad KV pool geometry: {msg}"),
         }
     }
 }
 
 impl std::error::Error for KvError {}
 
-/// Pages owned by one sequence.
+/// Pages referenced by one sequence.  With prefix caching or forking the
+/// pages are not necessarily exclusive: consult the pool's refcounts.
 #[derive(Debug, Clone, Default)]
 pub struct SeqPages {
     pub pages: Vec<u32>,
     pub tokens: usize,
 }
 
+/// What `admit` did for a prompt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmitOutcome {
+    /// Prompt tokens served from already-materialized shared pages; the
+    /// backend only needs to prefill the remaining suffix.  Always less
+    /// than the prompt length (the last token is always recomputed so
+    /// prefill has something to produce logits from).
+    pub cached_tokens: usize,
+}
+
+/// Cumulative pool counters (monotone; survive seq churn).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Sequences admitted.
+    pub admits: u64,
+    /// Admits that reused at least one cached prefix page.
+    pub prefix_hits: u64,
+    /// Prompt tokens served from cache across all admits.
+    pub cached_tokens_served: u64,
+    /// Retained (refcount-0) pages evicted under allocation pressure.
+    pub retained_evicted: u64,
+}
+
+/// Seed for the chained prefix hash (any odd constant works).
+const PREFIX_HASH_SEED: u64 = 0x5151_7EAD_F11C_4711;
+
+/// Extend the running prefix hash with one full page of tokens.  The
+/// chain makes the hash position-dependent: equal hashes mean equal
+/// prompt prefixes (up to 64-bit collision odds), not just equal pages.
+fn chain_hash(prev: u64, page: &[u32]) -> u64 {
+    let mut h = prev ^ 0x9E37_79B9_7F4A_7C15;
+    for &t in page {
+        h ^= t as u64;
+        h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h ^= h >> 29;
+    }
+    h.wrapping_mul(0x94D0_49BB_1331_11EB)
+}
+
 /// A pool of KV pages of `page_tokens` tokens each.
 #[derive(Debug)]
 pub struct PagePool {
     page_tokens: usize,
-    free: Vec<u32>,
-    seqs: HashMap<u64, SeqPages>,
     total: usize,
+    /// Never-referenced / fully-recycled pages, ready to hand out.
+    free: Vec<u32>,
+    /// Per-page reference count (sequences holding the page).
+    refcnt: Vec<u32>,
+    /// Chained prefix hash for indexed pages (full prompt pages only).
+    page_hash: Vec<Option<u64>>,
+    /// Prefix index: chained hash of pages[0..=i] → the page holding
+    /// page i of that prompt.  Entries point at live OR retained pages.
+    index: HashMap<u64, u32>,
+    /// Refcount-0 pages kept alive for the index, LRU order (front =
+    /// oldest, evicted first).
+    retained: VecDeque<u32>,
+    seqs: HashMap<u64, SeqPages>,
+    /// Whether admits consult and feed the prefix index.
+    prefix_caching: bool,
+    stats: PoolStats,
 }
 
 impl PagePool {
+    /// A pool with prefix caching OFF: released pages return straight to
+    /// the free list and every page is uniquely owned (the PR-1
+    /// behavior).
     pub fn new(total_pages: usize, page_tokens: usize) -> Self {
+        Self::build(total_pages, page_tokens, false)
+    }
+
+    /// A pool with prefix caching ON: full prompt pages are indexed and
+    /// shared across sequences, released pages are retained for reuse.
+    pub fn with_prefix_cache(total_pages: usize, page_tokens: usize) -> Self {
+        Self::build(total_pages, page_tokens, true)
+    }
+
+    fn build(total_pages: usize, page_tokens: usize, prefix_caching: bool) -> Self {
         assert!(page_tokens > 0 && total_pages > 0);
         Self {
             page_tokens,
-            free: (0..total_pages as u32).rev().collect(),
-            seqs: HashMap::new(),
             total: total_pages,
+            free: (0..total_pages as u32).rev().collect(),
+            refcnt: vec![0; total_pages],
+            page_hash: vec![None; total_pages],
+            index: HashMap::new(),
+            retained: VecDeque::new(),
+            seqs: HashMap::new(),
+            prefix_caching,
+            stats: PoolStats::default(),
         }
     }
 
     /// Pool sized for a model: `hbm_kv_bytes` budget, `bytes_per_token`
-    /// of KV per token.
-    pub fn for_budget(hbm_kv_bytes: u64, bytes_per_token: u64, page_tokens: usize) -> Self {
-        let pages = (hbm_kv_bytes / (bytes_per_token * page_tokens as u64)).max(1);
-        Self::new(pages as usize, page_tokens)
+    /// of KV per token.  Errors (instead of panicking or silently
+    /// rounding) when the geometry cannot hold even one page.
+    pub fn for_budget(
+        hbm_kv_bytes: u64,
+        bytes_per_token: u64,
+        page_tokens: usize,
+    ) -> Result<Self, KvError> {
+        if page_tokens == 0 {
+            return Err(KvError::BadGeometry("page_tokens must be > 0".into()));
+        }
+        if bytes_per_token == 0 {
+            return Err(KvError::BadGeometry("bytes_per_token must be > 0".into()));
+        }
+        let page_bytes = bytes_per_token.saturating_mul(page_tokens as u64);
+        let pages = hbm_kv_bytes / page_bytes;
+        if pages == 0 {
+            return Err(KvError::BadGeometry(format!(
+                "budget of {hbm_kv_bytes} B holds no {page_bytes}-B page \
+                 ({page_tokens} tokens x {bytes_per_token} B)"
+            )));
+        }
+        Ok(Self::new(pages as usize, page_tokens))
     }
 
+    /// Pages that an allocation could use: truly free plus retained
+    /// (cache-warm) pages, which are evicted on demand.
     pub fn free_pages(&self) -> usize {
-        self.free.len()
+        self.free.len() + self.retained.len()
     }
 
+    /// Pages holding live sequence data (shared pages count once).
+    /// Retained cache pages are excluded: they are reclaimable.
     pub fn used_pages(&self) -> usize {
-        self.total - self.free.len()
+        self.total - self.free.len() - self.retained.len()
+    }
+
+    /// Refcount-0 pages kept only for the prefix index.
+    pub fn retained_pages(&self) -> usize {
+        self.retained.len()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
     }
 
     fn pages_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.page_tokens)
     }
 
-    /// Can `tokens` more tokens be appended to `seq` (or a new seq)?
-    pub fn can_grow(&self, seq: u64, tokens: usize) -> bool {
-        let cur = self.seqs.get(&seq).map(|s| (s.pages.len(), s.tokens)).unwrap_or((0, 0));
-        let need = self.pages_for(cur.1 + tokens).saturating_sub(cur.0);
-        need <= self.free.len()
-    }
-
-    /// Register a sequence and allocate pages for its prompt.
-    pub fn admit(&mut self, seq: u64, prompt_tokens: usize) -> Result<(), KvError> {
-        let need = self.pages_for(prompt_tokens);
-        if need > self.free.len() {
-            return Err(KvError::OutOfPages { need, free: self.free.len() });
+    /// Chained hashes of the prompt's full pages (partial tail
+    /// excluded).  Empty with prefix caching off: nothing consults the
+    /// index, so admission stays O(1) in the prompt length.
+    fn full_page_hashes(&self, prompt: &[u32]) -> Vec<u64> {
+        if !self.prefix_caching {
+            return Vec::new();
         }
-        let pages = (0..need).map(|_| self.free.pop().unwrap()).collect();
-        self.seqs.insert(seq, SeqPages { pages, tokens: prompt_tokens });
-        Ok(())
+        let mut h = PREFIX_HASH_SEED;
+        prompt
+            .chunks_exact(self.page_tokens)
+            .map(|page| {
+                h = chain_hash(h, page);
+                h
+            })
+            .collect()
     }
 
-    /// Append one generated token, growing by a page at boundaries.
-    pub fn append(&mut self, seq: u64) -> Result<(), KvError> {
-        let s = self.seqs.get_mut(&seq).ok_or(KvError::UnknownSeq(seq))?;
-        let need = (s.tokens + 1).div_ceil(self.page_tokens);
-        if need > s.pages.len() {
-            match self.free.pop() {
-                Some(p) => s.pages.push(p),
-                None => return Err(KvError::OutOfPages { need: 1, free: 0 }),
+    /// The longest indexed run of full prompt pages, capped so at least
+    /// one prompt token is always left for the backend to prefill.
+    fn cached_prefix_pages(&self, hashes: &[u64], prompt_len: usize) -> Vec<u32> {
+        if !self.prefix_caching {
+            return Vec::new();
+        }
+        let mut pages = Vec::new();
+        for h in hashes {
+            match self.index.get(h) {
+                Some(&p) => pages.push(p),
+                None => break,
             }
         }
+        if pages.len() * self.page_tokens >= prompt_len {
+            pages.pop();
+        }
+        pages
+    }
+
+    /// Prompt tokens an `admit` of this prompt would serve from cache.
+    pub fn cached_prefix_tokens(&self, prompt: &[u32]) -> usize {
+        let hashes = self.full_page_hashes(prompt);
+        self.cached_prefix_pages(&hashes, prompt.len()).len() * self.page_tokens
+    }
+
+    /// Retained pages that could be evicted without losing pages the
+    /// given cached-prefix claim is about to resurrect.
+    fn evictable_beside(&self, cached: &[u32]) -> usize {
+        let reclaimed = cached.iter().filter(|&&p| self.refcnt[p as usize] == 0).count();
+        self.retained.len() - reclaimed
+    }
+
+    /// Can this prompt be admitted right now?  Charges only the uncached
+    /// suffix against free + evictable pages.
+    pub fn can_admit(&self, prompt: &[u32]) -> bool {
+        let hashes = self.full_page_hashes(prompt);
+        let cached = self.cached_prefix_pages(&hashes, prompt.len());
+        let need = self.pages_for(prompt.len()) - cached.len();
+        need <= self.free.len() + self.evictable_beside(&cached)
+    }
+
+    /// Can `tokens` more tokens be appended to `seq` (or a new seq)?
+    /// (Prefix-blind: use `can_admit` for prompt admission.)  A shared
+    /// partial tail (forked sequence) is charged one extra page: the
+    /// first append through it copies the page before writing.
+    pub fn can_grow(&self, seq: u64, tokens: usize) -> bool {
+        let Some(s) = self.seqs.get(&seq) else {
+            return self.pages_for(tokens) <= self.free.len() + self.retained.len();
+        };
+        let cow_tail = tokens > 0
+            && s.tokens % self.page_tokens != 0
+            && s.pages.last().is_some_and(|&p| self.refcnt[p as usize] > 1);
+        let need = self.pages_for(s.tokens + tokens).saturating_sub(s.pages.len())
+            + usize::from(cow_tail);
+        need <= self.free.len() + self.retained.len()
+    }
+
+    /// Hand out one page, evicting the LRU retained page if the free
+    /// list is empty.
+    fn alloc_page(&mut self) -> Option<u32> {
+        if let Some(p) = self.free.pop() {
+            return Some(p);
+        }
+        let p = self.retained.pop_front()?;
+        debug_assert_eq!(self.refcnt[p as usize], 0, "retained page must be unreferenced");
+        if let Some(h) = self.page_hash[p as usize].take() {
+            if self.index.get(&h) == Some(&p) {
+                self.index.remove(&h);
+            }
+        }
+        self.stats.retained_evicted += 1;
+        Some(p)
+    }
+
+    /// Register a sequence: share every indexed full-page prefix page,
+    /// allocate pages for the uncached suffix, and index the newly
+    /// materialized full prompt pages.  Returns how many prompt tokens
+    /// were served from cache (0 with prefix caching off).
+    pub fn admit(&mut self, seq: u64, prompt: &[u32]) -> Result<AdmitOutcome, KvError> {
+        debug_assert!(!self.seqs.contains_key(&seq), "sequence {seq} admitted twice");
+        let hashes = self.full_page_hashes(prompt);
+        let cached = self.cached_prefix_pages(&hashes, prompt.len());
+        let total_pages = self.pages_for(prompt.len());
+        let need = total_pages - cached.len();
+        let avail = self.free.len() + self.evictable_beside(&cached);
+        if need > avail {
+            return Err(KvError::OutOfPages { need, free: avail });
+        }
+        // Claim the shared prefix first so eviction can never reclaim it.
+        for &p in &cached {
+            if self.refcnt[p as usize] == 0 {
+                self.retained.retain(|&q| q != p);
+            }
+            self.refcnt[p as usize] += 1;
+        }
+        let mut pages = cached.clone();
+        for i in cached.len()..total_pages {
+            let p = self.alloc_page().expect("availability checked above");
+            self.refcnt[p as usize] = 1;
+            // Newly materialized FULL prompt pages join the prefix index
+            // (unless the hash is already served by another page, e.g.
+            // the always-recomputed last page of a fully-cached prompt).
+            if self.prefix_caching && i < hashes.len() && !self.index.contains_key(&hashes[i]) {
+                self.index.insert(hashes[i], p);
+                self.page_hash[p as usize] = Some(hashes[i]);
+            }
+            pages.push(p);
+        }
+        let cached_tokens = cached.len() * self.page_tokens;
+        self.stats.admits += 1;
+        if !cached.is_empty() {
+            self.stats.prefix_hits += 1;
+            self.stats.cached_tokens_served += cached_tokens as u64;
+        }
+        self.seqs.insert(seq, SeqPages { pages, tokens: prompt.len() });
+        Ok(AdmitOutcome { cached_tokens })
+    }
+
+    /// Append one generated token.  Grows by a page at boundaries; a
+    /// shared partial tail page (forked sequence) is copied first
+    /// (copy-on-write) so the other referents never see the write.
+    pub fn append(&mut self, seq: u64) -> Result<(), KvError> {
+        let (tokens, last) = {
+            let s = self.seqs.get(&seq).ok_or(KvError::UnknownSeq(seq))?;
+            (s.tokens, s.pages.last().copied())
+        };
+        if tokens % self.page_tokens == 0 {
+            // Page boundary: the token opens a fresh page.
+            let Some(p) = self.alloc_page() else {
+                return Err(KvError::OutOfPages { need: 1, free: 0 });
+            };
+            self.refcnt[p as usize] = 1;
+            let s = self.seqs.get_mut(&seq).expect("checked above");
+            s.pages.push(p);
+            s.tokens += 1;
+            return Ok(());
+        }
+        let last = last.expect("a seq with a partial tail owns at least one page");
+        if self.refcnt[last as usize] > 1 {
+            // Copy-on-write: someone else still references the tail page.
+            let Some(p) = self.alloc_page() else {
+                return Err(KvError::OutOfPages { need: 1, free: 0 });
+            };
+            self.refcnt[p as usize] = 1;
+            self.refcnt[last as usize] -= 1;
+            let s = self.seqs.get_mut(&seq).expect("checked above");
+            *s.pages.last_mut().expect("tail page exists") = p;
+        }
+        let s = self.seqs.get_mut(&seq).expect("checked above");
         s.tokens += 1;
         Ok(())
     }
 
-    /// Release a finished sequence's pages.
+    /// Fork `src` into a new sequence `dst` sharing every page (parallel
+    /// sampling / beam search).  Writes through either sequence's shared
+    /// tail copy-on-write in `append`.
+    pub fn fork(&mut self, src: u64, dst: u64) -> Result<(), KvError> {
+        debug_assert!(!self.seqs.contains_key(&dst), "fork onto live sequence {dst}");
+        let (pages, tokens) = {
+            let s = self.seqs.get(&src).ok_or(KvError::UnknownSeq(src))?;
+            (s.pages.clone(), s.tokens)
+        };
+        for &p in &pages {
+            self.refcnt[p as usize] += 1;
+        }
+        self.seqs.insert(dst, SeqPages { pages, tokens });
+        Ok(())
+    }
+
+    /// Release a finished sequence.  Unreferenced pages return to the
+    /// free list — except indexed prefix pages, which are RETAINED for
+    /// future cache hits (and push to the back of the LRU queue).
     pub fn release(&mut self, seq: u64) -> Result<(), KvError> {
         let s = self.seqs.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
-        self.free.extend(s.pages);
+        for p in s.pages {
+            debug_assert!(self.refcnt[p as usize] > 0, "releasing unreferenced page {p}");
+            self.refcnt[p as usize] -= 1;
+            if self.refcnt[p as usize] == 0 {
+                if self.page_hash[p as usize].is_some() {
+                    self.retained.push_back(p);
+                } else {
+                    self.free.push(p);
+                }
+            }
+        }
         Ok(())
     }
 
@@ -114,22 +403,63 @@ impl PagePool {
         self.seqs.get(&seq)
     }
 
-    /// Invariant: every page is either free or owned by exactly one seq.
+    /// Invariant: every page is exactly one of (a) free with refcount 0
+    /// and no index entry, (b) retained with refcount 0 and a live index
+    /// entry, or (c) referenced by >= 1 sequences with a refcount that
+    /// EXACTLY matches the number of referencing sequences; and every
+    /// sequence's pages cover its tokens exactly.
     pub fn check_invariants(&self) -> bool {
         let mut seen = std::collections::HashSet::new();
         for &p in &self.free {
-            if !seen.insert(p) {
+            if !seen.insert(p)
+                || self.refcnt[p as usize] != 0
+                || self.page_hash[p as usize].is_some()
+            {
                 return false;
             }
         }
-        for s in self.seqs.values() {
-            for &p in &s.pages {
-                if !seen.insert(p) {
-                    return false;
-                }
+        for &p in &self.retained {
+            if !seen.insert(p) || self.refcnt[p as usize] != 0 {
+                return false;
             }
-            // Owned pages must cover the tokens.
-            if s.pages.len() < s.tokens.div_ceil(self.page_tokens) {
+            // Retained pages exist only to serve the prefix index.
+            let Some(h) = self.page_hash[p as usize] else { return false };
+            if self.index.get(&h) != Some(&p) {
+                return false;
+            }
+        }
+        // Count actual references per page across sequences.
+        let mut refs: HashMap<u32, u32> = HashMap::new();
+        for s in self.seqs.values() {
+            if s.pages.len() != self.pages_for(s.tokens) {
+                return false;
+            }
+            let mut in_seq = std::collections::HashSet::new();
+            for &p in &s.pages {
+                if !in_seq.insert(p) {
+                    return false; // a seq must not list a page twice
+                }
+                *refs.entry(p).or_insert(0) += 1;
+            }
+        }
+        for (&p, &n) in &refs {
+            if self.refcnt[p as usize] != n || !seen.insert(p) {
+                return false;
+            }
+        }
+        // No phantom refcounts on pages nothing references.
+        for (p, &c) in self.refcnt.iter().enumerate() {
+            if c > 0 && !refs.contains_key(&(p as u32)) {
+                return false;
+            }
+        }
+        // Index entries point at pages that carry that hash and are
+        // either live or retained (never free).
+        for (&h, &p) in &self.index {
+            if self.page_hash[p as usize] != Some(h) {
+                return false;
+            }
+            if self.refcnt[p as usize] == 0 && !self.retained.contains(&p) {
                 return false;
             }
         }
@@ -145,7 +475,7 @@ mod tests {
     #[test]
     fn admit_and_release_roundtrip() {
         let mut p = PagePool::new(16, 16);
-        p.admit(1, 40).unwrap(); // 3 pages
+        p.admit(1, &[7; 40]).unwrap(); // 3 pages
         assert_eq!(p.used_pages(), 3);
         p.release(1).unwrap();
         assert_eq!(p.used_pages(), 0);
@@ -155,7 +485,7 @@ mod tests {
     #[test]
     fn append_grows_at_page_boundary() {
         let mut p = PagePool::new(4, 4);
-        p.admit(1, 4).unwrap(); // exactly 1 page
+        p.admit(1, &[1; 4]).unwrap(); // exactly 1 page
         assert_eq!(p.used_pages(), 1);
         p.append(1).unwrap(); // token 5 → second page
         assert_eq!(p.used_pages(), 2);
@@ -169,18 +499,144 @@ mod tests {
     #[test]
     fn exhaustion_is_reported_not_corrupted() {
         let mut p = PagePool::new(2, 16);
-        p.admit(1, 32).unwrap();
-        assert_eq!(p.admit(2, 1), Err(KvError::OutOfPages { need: 1, free: 0 }));
+        p.admit(1, &[3; 32]).unwrap();
+        assert_eq!(p.admit(2, &[4]), Err(KvError::OutOfPages { need: 1, free: 0 }));
         assert!(p.check_invariants());
     }
 
     #[test]
     fn can_grow_predicts_append() {
         let mut p = PagePool::new(2, 4);
-        p.admit(1, 4).unwrap();
+        p.admit(1, &[1; 4]).unwrap();
         assert!(p.can_grow(1, 1));
-        p.admit(2, 4).unwrap();
+        p.admit(2, &[2; 4]).unwrap();
         assert!(!p.can_grow(1, 1), "no free page left");
+    }
+
+    #[test]
+    fn for_budget_rejects_degenerate_geometry() {
+        assert!(matches!(
+            PagePool::for_budget(1 << 20, 0, 16),
+            Err(KvError::BadGeometry(_))
+        ));
+        assert!(matches!(
+            PagePool::for_budget(1 << 20, 512, 0),
+            Err(KvError::BadGeometry(_))
+        ));
+        // Budget smaller than one page: descriptive error, no panic.
+        assert!(matches!(
+            PagePool::for_budget(100, 512, 16),
+            Err(KvError::BadGeometry(_))
+        ));
+        let p = PagePool::for_budget(1 << 20, 512, 16).unwrap();
+        assert_eq!(p.free_pages(), (1 << 20) / (512 * 16));
+    }
+
+    /// Two sequences with the same prompt share its full prefix pages;
+    /// the last page is always recomputed so prefill has a suffix.
+    #[test]
+    fn admit_shares_cached_prefix_pages() {
+        let mut p = PagePool::with_prefix_cache(8, 16);
+        let prompt: Vec<u32> = (0..32).collect();
+        let a = p.admit(1, &prompt).unwrap();
+        assert_eq!(a.cached_tokens, 0, "cold cache");
+        assert_eq!(p.used_pages(), 2);
+        let b = p.admit(2, &prompt).unwrap();
+        assert_eq!(b.cached_tokens, 16, "first page shared, last recomputed");
+        assert_eq!(p.used_pages(), 3, "3 distinct pages serve 4 page-refs");
+        assert_eq!(p.seq(1).unwrap().pages[0], p.seq(2).unwrap().pages[0]);
+        assert_ne!(p.seq(1).unwrap().pages[1], p.seq(2).unwrap().pages[1]);
+        assert!(p.check_invariants());
+        assert_eq!(p.stats().prefix_hits, 1);
+        assert_eq!(p.stats().cached_tokens_served, 16);
+    }
+
+    /// A released prompt's indexed pages are retained and serve a later
+    /// admit of the same prompt without recomputation.
+    #[test]
+    fn retained_pages_serve_later_admits() {
+        let mut p = PagePool::with_prefix_cache(4, 16);
+        let prompt: Vec<u32> = (100..132).collect();
+        p.admit(1, &prompt).unwrap();
+        p.release(1).unwrap();
+        assert_eq!(p.used_pages(), 0);
+        assert_eq!(p.retained_pages(), 2, "both full pages stay indexed");
+        let out = p.admit(2, &prompt).unwrap();
+        assert_eq!(out.cached_tokens, 16);
+        assert_eq!(p.retained_pages(), 1, "page 0 resurrected, page 1 still warm");
+        assert!(p.check_invariants());
+    }
+
+    /// Under allocation pressure the LRU retained page is evicted (and
+    /// unindexed) instead of failing the admit.
+    #[test]
+    fn retained_pages_are_lru_evicted_under_pressure() {
+        let mut p = PagePool::with_prefix_cache(2, 4);
+        p.admit(1, &[9; 8]).unwrap(); // 2 full pages, both indexed
+        p.release(1).unwrap();
+        assert_eq!(p.retained_pages(), 2);
+        // A different prompt needs both pages: retained cache is evicted.
+        let out = p.admit(2, &[5; 8]).unwrap();
+        assert_eq!(out.cached_tokens, 0);
+        assert_eq!(p.retained_pages(), 0);
+        assert_eq!(p.stats().retained_evicted, 2);
+        assert!(p.check_invariants());
+        // The old prompt is gone from the index: no stale hits.
+        p.release(2).unwrap();
+        assert_eq!(p.cached_prefix_tokens(&[9; 8]), 0);
+    }
+
+    /// A forked sequence shares its parent's partial tail page until one
+    /// of them appends — which copies the page (CoW) first.
+    #[test]
+    fn append_through_shared_tail_copies_on_write() {
+        let mut p = PagePool::with_prefix_cache(8, 4);
+        p.admit(1, &[2; 6]).unwrap(); // 1 full page + partial tail (2 tokens)
+        p.fork(1, 2).unwrap();
+        assert_eq!(p.used_pages(), 2, "fork shares, allocates nothing");
+        assert!(p.check_invariants());
+        let tail_before = *p.seq(2).unwrap().pages.last().unwrap();
+        p.append(2).unwrap();
+        let tail_after = *p.seq(2).unwrap().pages.last().unwrap();
+        assert_ne!(tail_before, tail_after, "shared tail copied on write");
+        assert_eq!(*p.seq(1).unwrap().pages.last().unwrap(), tail_before);
+        assert_eq!(p.seq(2).unwrap().tokens, 7);
+        assert_eq!(p.used_pages(), 3);
+        assert!(p.check_invariants());
+        // The parent's tail is now exclusive again: appends in place.
+        p.append(1).unwrap();
+        assert_eq!(p.used_pages(), 3);
+        assert!(p.check_invariants());
+    }
+
+    /// `can_grow` charges the CoW copy: a forked sequence's shared
+    /// partial tail needs one extra page on its first append, so an
+    /// exhausted pool must answer false (and append must agree).
+    #[test]
+    fn can_grow_accounts_for_cow_tail_copy() {
+        let mut p = PagePool::with_prefix_cache(2, 4);
+        p.admit(1, &[1; 6]).unwrap(); // both pages: 1 full + partial tail
+        p.fork(1, 2).unwrap(); // tail shared, pool exhausted
+        assert!(!p.can_grow(2, 1), "CoW copy needs a page the pool lacks");
+        assert_eq!(p.append(2), Err(KvError::OutOfPages { need: 1, free: 0 }));
+        p.release(1).unwrap(); // tail now exclusive to seq 2
+        assert!(p.can_grow(2, 1), "exclusive tail appends in place");
+        p.append(2).unwrap();
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn fully_cached_prompt_keeps_a_prefill_suffix() {
+        let mut p = PagePool::with_prefix_cache(8, 8);
+        let prompt: Vec<u32> = (0..16).collect();
+        p.admit(1, &prompt).unwrap();
+        let out = p.admit(2, &prompt).unwrap();
+        assert!(
+            out.cached_tokens < prompt.len(),
+            "at least one token must remain for prefill"
+        );
+        assert_eq!(out.cached_tokens, 8);
+        assert!(p.check_invariants());
     }
 
     #[test]
@@ -194,7 +650,9 @@ mod tests {
                     0 => {
                         let id = next_id;
                         next_id += 1;
-                        if p.admit(id, 1 + r.below(24) as usize).is_ok() {
+                        let plen = 1 + r.below(24) as usize;
+                        let prompt: Vec<u32> = (0..plen as u32).collect();
+                        if p.admit(id, &prompt).is_ok() {
                             live.push(id);
                         }
                     }
@@ -211,6 +669,59 @@ mod tests {
                 }
                 assert!(p.check_invariants(), "invariant broken");
             }
+        });
+    }
+
+    /// The extended sharing property: random admit (with shared
+    /// prefixes), append, fork and release keep every refcount accurate
+    /// and every page accounted for, on every step.
+    #[test]
+    fn property_refcounts_accurate_under_sharing() {
+        proptest::check("CoW pool refcount invariant", |r| {
+            let mut p = PagePool::with_prefix_cache(24, 4);
+            // A small family of shared prefixes drives real cache hits.
+            let prefixes: Vec<Vec<u32>> = (0..3u32)
+                .map(|g| (0..8).map(|i| g * 100 + i).collect())
+                .collect();
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..96 {
+                match r.below(4) {
+                    0 => {
+                        let id = next_id;
+                        next_id += 1;
+                        let mut prompt = r.choose(&prefixes).clone();
+                        let tail = r.below(6);
+                        prompt.extend((0..tail).map(|t| 1000 + t as u32));
+                        if p.admit(id, &prompt).is_ok() {
+                            live.push(id);
+                        }
+                    }
+                    1 if !live.is_empty() => {
+                        let id = *r.choose(&live);
+                        let _ = p.append(id);
+                    }
+                    2 if !live.is_empty() => {
+                        let src = *r.choose(&live);
+                        let id = next_id;
+                        next_id += 1;
+                        p.fork(src, id).unwrap();
+                        live.push(id);
+                    }
+                    3 if !live.is_empty() => {
+                        let i = r.range(0, live.len());
+                        let id = live.swap_remove(i);
+                        p.release(id).unwrap();
+                    }
+                    _ => {}
+                }
+                assert!(p.check_invariants(), "refcount invariant broken");
+            }
+            for id in live {
+                p.release(id).unwrap();
+            }
+            assert!(p.check_invariants());
+            assert_eq!(p.used_pages(), 0, "all pages free or retained after drain");
         });
     }
 }

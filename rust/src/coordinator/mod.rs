@@ -1,9 +1,24 @@
-//! L3 serving coordinator: request queue, continuous-batching scheduling
-//! against a virtual clock, paged KV-cache management, sampling, and the
-//! batched serving loop that drives token generation through a
-//! `ModelBackend` — the PJRT runtime for real numerics, or the
-//! `sim::Engine`-backed `SimBackend` for deterministic FlightLLM
-//! latencies.
+//! L3 serving coordinator — the serving stack, bottom to top:
+//!
+//! 1. **Page pool** (`kv_cache`): vLLM-style paged KV accounting with
+//!    ref-counted copy-on-write sharing.  Full-page prompt prefixes are
+//!    indexed by chained content hash; a later admit of the same prefix
+//!    shares the pages instead of recomputing them, released prefix
+//!    pages are retained (LRU-evicted under pressure), and a shared
+//!    partial tail is copied the first time a writer appends through it.
+//! 2. **Scheduler** (`scheduler`): continuous-batching admission against
+//!    a virtual clock.  Admission charges only the uncached prompt
+//!    suffix; `SeqState::cached_ctx` tells the engine how much prefill
+//!    the backend may skip.  Invariant: scheduler `ctx` == pool tokens
+//!    for every running sequence, shared pages included.
+//! 3. **Engine loop** (`server`): one batched `ModelBackend::step` per
+//!    iteration (mixed prefill/decode), sampling, retirement, and
+//!    `ServeStats` (TTFT/latency means + P50/P99, prefix-hit counters,
+//!    peak KV-page footprint).
+//! 4. **Backends**: the PJRT `runtime::RuntimeBackend` for real numerics
+//!    (monolithic KV literals — recomputes cached prefixes but reports
+//!    them), and the `sim::Engine`-backed `SimBackend` for deterministic
+//!    FlightLLM latencies (prices prefill by the uncached suffix).
 //!
 //! FlightLLM's own runtime is single-batch latency-oriented (§1); the
 //! coordinator serves that policy with `max_batch = 1` and the Fig. 15
@@ -15,7 +30,7 @@ mod scheduler;
 mod server;
 mod sim_backend;
 
-pub use kv_cache::{KvError, PagePool, SeqPages};
+pub use kv_cache::{AdmitOutcome, KvError, PagePool, PoolStats, SeqPages};
 pub use sampler::Sampler;
 pub use scheduler::{DecodeOutcome, Scheduler, SchedulerConfig, SeqState};
 pub use server::{

@@ -7,10 +7,16 @@
 //! the paper's latency-oriented batch-size-1 regime (§1); larger values
 //! give the Fig. 15 multi-batch mode.
 //!
+//! With `prefix_cache` on, admission consults the pool's prefix index:
+//! a prompt whose full-page prefix is already materialized shares those
+//! pages and is charged only its uncached suffix against free pages.
+//! `SeqState::cached_ctx` records how many prompt tokens the backend may
+//! skip at prefill.
+//!
 //! Accounting invariant (checked by `check_accounting` and the property
-//! test below): for every running sequence, `SeqState.ctx` equals the KV
-//! pool's token count — the scheduler never believes in KV the pool does
-//! not hold.
+//! tests below): for every running sequence, `SeqState.ctx` equals the
+//! KV pool's token count — the scheduler never believes in KV the pool
+//! does not hold, cached or not.
 
 use std::collections::VecDeque;
 
@@ -27,11 +33,19 @@ pub struct SchedulerConfig {
     pub page_tokens: usize,
     /// Hard cap on context (model max_seq).
     pub max_seq: usize,
+    /// Share full-page prompt prefixes across sequences (CoW paged KV).
+    pub prefix_cache: bool,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { max_batch: 1, kv_pages: 64, page_tokens: 16, max_seq: 256 }
+        Self {
+            max_batch: 1,
+            kv_pages: 64,
+            page_tokens: 16,
+            max_seq: 256,
+            prefix_cache: false,
+        }
     }
 }
 
@@ -43,6 +57,9 @@ pub struct SeqState {
     pub generated: Vec<u32>,
     /// Context length currently in the KV cache (== pool tokens).
     pub ctx: usize,
+    /// Prompt tokens served from the prefix cache at admission: the
+    /// backend only prefills the remaining suffix.
+    pub cached_ctx: usize,
     /// Whether prefill has run.
     pub prefilled: bool,
     /// Virtual time the request was admitted.
@@ -88,7 +105,11 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig) -> Self {
-        let pool = PagePool::new(cfg.kv_pages, cfg.page_tokens);
+        let pool = if cfg.prefix_cache {
+            PagePool::with_prefix_cache(cfg.kv_pages, cfg.page_tokens)
+        } else {
+            PagePool::new(cfg.kv_pages, cfg.page_tokens)
+        };
         Self { cfg, waiting: VecDeque::new(), running: Vec::new(), pool }
     }
 
@@ -125,20 +146,26 @@ impl Scheduler {
 
     /// Admit arrived requests while capacity allows, then return the ids
     /// runnable this iteration (admission order; unprefilled sequences
-    /// run prefill, the rest one decode step each).
+    /// run prefill, the rest one decode step each).  Admission charges
+    /// only the uncached prompt suffix: a cached full-page prefix is
+    /// shared, not reallocated.
     pub fn schedule(&mut self, now_s: f64) -> Vec<u64> {
         while self.running.len() < self.cfg.max_batch {
             let Some(req) = self.waiting.front() else { break };
-            if req.arrival_s > now_s || !self.pool.can_grow(req.id, req.prompt.len()) {
+            if req.arrival_s > now_s || !self.pool.can_admit(&req.prompt) {
                 break;
             }
             let req = self.waiting.pop_front().unwrap();
             let plen = req.prompt.len();
-            self.pool.admit(req.id, plen).expect("can_grow guaranteed admission");
+            let outcome = self
+                .pool
+                .admit(req.id, &req.prompt)
+                .expect("can_admit guaranteed admission");
             self.running.push(SeqState {
                 req,
                 generated: Vec::new(),
                 ctx: plen,
+                cached_ctx: outcome.cached_tokens,
                 prefilled: false,
                 admitted_s: now_s,
             });
@@ -193,11 +220,17 @@ impl Scheduler {
         }
     }
 
-    /// Remove a finished sequence, releasing its pages.
+    /// Remove a finished sequence, releasing its pages.  A failed
+    /// release means the scheduler and pool disagree about who exists —
+    /// a page-leak bug, so it must not pass silently.
     pub fn retire(&mut self, seq: u64) -> Option<SeqState> {
         let idx = self.running.iter().position(|s| s.req.id == seq)?;
         let s = self.running.swap_remove(idx);
-        let _ = self.pool.release(seq);
+        let released = self.pool.release(seq);
+        debug_assert!(
+            released.is_ok(),
+            "retire({seq}): KV release failed: {released:?}"
+        );
         Some(s)
     }
 
@@ -206,7 +239,8 @@ impl Scheduler {
     }
 
     /// The scheduler↔pool accounting invariant: every running sequence's
-    /// `ctx` equals its pool token count, and the pool itself is sound.
+    /// `ctx` equals its pool token count, and the pool itself is sound
+    /// (every page free, retained, or shared with an accurate refcount).
     pub fn check_accounting(&self) -> bool {
         self.running
             .iter()
@@ -219,7 +253,9 @@ impl Scheduler {
 mod tests {
     use super::*;
     use crate::util::proptest;
-    use crate::workload::{generate_trace, TraceConfig};
+    use crate::workload::{
+        generate_shared_prefix_trace, generate_trace, SharedPrefixConfig, TraceConfig,
+    };
 
     fn req(id: u64, plen: usize, dlen: u32) -> Request {
         Request {
@@ -276,6 +312,7 @@ mod tests {
             kv_pages: 2,
             page_tokens: 16,
             max_seq: 256,
+            ..Default::default()
         };
         let mut s = Scheduler::new(cfg);
         s.submit(req(0, 32, 4)); // takes both pages
@@ -298,6 +335,23 @@ mod tests {
         assert_eq!(s.on_decode_done(0, 3), DecodeOutcome::Finished); // ctx 18
     }
 
+    /// Satellite: `reject_front` pops exactly the head request, touches
+    /// no pool state, and leaves the queue serving the next request.
+    #[test]
+    fn reject_front_pops_head_without_touching_pool() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        s.submit(req(0, 8, 2));
+        s.submit(req(1, 8, 2));
+        let rejected = s.reject_front().expect("head exists");
+        assert_eq!(rejected.id, 0);
+        assert_eq!(s.pending(), 1);
+        assert!(s.running().is_empty());
+        assert_eq!(s.pool.used_pages(), 0, "rejection allocates nothing");
+        assert!(s.check_accounting());
+        assert_eq!(s.schedule(0.0), vec![1], "queue moves on to the next request");
+        assert!(s.reject_front().is_none() || s.pending() == 0);
+    }
+
     /// Regression (KV desync): when the pool cannot grow, the sequence is
     /// evicted and `ctx` stays equal to the pool's token count — the old
     /// code pushed the token anyway and stalled with ctx != pool tokens.
@@ -308,6 +362,7 @@ mod tests {
             kv_pages: 2,
             page_tokens: 4,
             max_seq: 64,
+            ..Default::default()
         };
         let mut s = Scheduler::new(cfg);
         s.submit(req(0, 7, 100)); // 2 pages, 1 token of slack
@@ -342,6 +397,32 @@ mod tests {
         assert!(s.check_accounting());
     }
 
+    /// With prefix caching on, a second admission of the same prompt
+    /// charges only the uncached suffix and records `cached_ctx` — while
+    /// ctx still equals the pool's full token count.
+    #[test]
+    fn admission_charges_only_uncached_suffix() {
+        let cfg = SchedulerConfig {
+            max_batch: 4,
+            kv_pages: 3,
+            page_tokens: 16,
+            max_seq: 256,
+            prefix_cache: true,
+        };
+        let mut s = Scheduler::new(cfg);
+        let prompt: Vec<u32> = (0..32).collect();
+        s.submit(Request { id: 0, arrival_s: 0.0, prompt: prompt.clone(), max_new_tokens: 4 });
+        s.submit(Request { id: 1, arrival_s: 0.0, prompt, max_new_tokens: 4 });
+        // 3 pages serve both 2-page prompts: seq 1 shares seq 0's first
+        // page, so only one fresh page is charged.
+        assert_eq!(s.schedule(0.0), vec![0, 1]);
+        assert_eq!(s.seq(0).unwrap().cached_ctx, 0, "cold cache");
+        assert_eq!(s.seq(1).unwrap().cached_ctx, 16, "first page served from cache");
+        assert_eq!(s.seq(1).unwrap().ctx, 32, "ctx counts the WHOLE prompt");
+        assert_eq!(s.pool.seq(1).unwrap().tokens, 32);
+        assert!(s.check_accounting());
+    }
+
     #[test]
     fn property_scheduler_never_starves() {
         // Every submitted request eventually completes under any
@@ -352,6 +433,7 @@ mod tests {
                 kv_pages: 32,
                 page_tokens: 8,
                 max_seq: 64,
+                ..Default::default()
             };
             let mut s = Scheduler::new(cfg);
             let trace = generate_trace(&TraceConfig {
@@ -365,41 +447,81 @@ mod tests {
             for t in trace {
                 s.submit(t);
             }
-            let mut finished = 0;
-            let mut now = 0.0f64;
-            for _ in 0..10_000 {
-                let batch = s.schedule(now);
-                if batch.is_empty() {
-                    if s.is_drained() {
-                        break;
-                    }
-                    let t = s.next_arrival_s().expect("no arrivals but not drained");
-                    assert!(t > now, "stalled with arrived work");
-                    now = t;
-                    continue;
+            drive_to_drain(&mut s, total);
+        });
+    }
+
+    /// The ctx == pool-tokens property, extended to SHARING: a
+    /// shared-prefix trace through a prefix-cached scheduler keeps the
+    /// accounting invariant (now covering refcounts and retained pages)
+    /// on every step, and every request still completes.
+    #[test]
+    fn property_accounting_holds_under_prefix_sharing() {
+        proptest::check_with("prefix-cache scheduler accounting", 64, |r| {
+            let cfg = SchedulerConfig {
+                max_batch: 1 + r.below(4) as usize,
+                kv_pages: 24 + r.below(24) as usize,
+                page_tokens: 8,
+                max_seq: 128,
+                prefix_cache: true,
+            };
+            let mut s = Scheduler::new(cfg);
+            let trace = generate_shared_prefix_trace(&SharedPrefixConfig {
+                n_groups: 2,
+                prefix_len: 24,
+                tail_len_choices: vec![2, 6, 10],
+                decode_len_choices: vec![2, 4],
+                n_requests: 6,
+                rate_per_s: 50.0,
+                vocab: 64,
+                seed: r.next_u64(),
+            });
+            let total = trace.len();
+            for t in trace {
+                s.submit(t);
+            }
+            drive_to_drain(&mut s, total);
+        });
+    }
+
+    /// Shared driver for the liveness/accounting properties: run the
+    /// scheduler to drain, checking `check_accounting` after EVERY step.
+    fn drive_to_drain(s: &mut Scheduler, total: usize) {
+        let mut finished = 0;
+        let mut now = 0.0f64;
+        for _ in 0..10_000 {
+            let batch = s.schedule(now);
+            assert!(s.check_accounting(), "desync right after admission");
+            if batch.is_empty() {
+                if s.is_drained() {
+                    break;
                 }
-                for id in batch {
-                    let prefilled = s.seq(id).unwrap().prefilled;
-                    if !prefilled {
-                        s.on_prefill_done(id, 1);
-                    } else {
-                        match s.on_decode_done(id, 2) {
-                            DecodeOutcome::Running => {}
-                            DecodeOutcome::Finished | DecodeOutcome::EvictedKvFull => {
-                                s.retire(id);
-                                finished += 1;
-                            }
+                let t = s.next_arrival_s().expect("no arrivals but not drained");
+                assert!(t > now, "stalled with arrived work");
+                now = t;
+                continue;
+            }
+            for id in batch {
+                let prefilled = s.seq(id).unwrap().prefilled;
+                if !prefilled {
+                    s.on_prefill_done(id, 1);
+                } else {
+                    match s.on_decode_done(id, 2) {
+                        DecodeOutcome::Running => {}
+                        DecodeOutcome::Finished | DecodeOutcome::EvictedKvFull => {
+                            s.retire(id);
+                            finished += 1;
                         }
                     }
-                    // The satellite property: scheduler ctx == pool
-                    // tokens after EVERY step, for every sequence.
-                    assert!(s.check_accounting(), "ctx/pool desync");
                 }
-                now += 0.01;
+                // The core property: scheduler ctx == pool tokens after
+                // EVERY step, for every sequence — shared pages included.
+                assert!(s.check_accounting(), "ctx/pool desync");
             }
-            assert_eq!(finished, total, "all requests must finish");
-            assert!(s.is_drained());
-            assert!(s.pool.check_invariants());
-        });
+            now += 0.01;
+        }
+        assert_eq!(finished, total, "all requests must finish");
+        assert!(s.is_drained());
+        assert!(s.pool.check_invariants());
     }
 }

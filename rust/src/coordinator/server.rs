@@ -9,6 +9,11 @@
 //! the `sim::Engine`-backed backend reports the FlightLLM accelerator's
 //! latencies, while the PJRT runtime backend reports measured host time.
 //!
+//! Prefix caching: a `Prefill` slot carries `cached_ctx`, the prompt
+//! tokens already materialized in shared KV pages — a backend only has
+//! to run the remaining suffix.  `ServeStats` reports the hit counters
+//! and the peak page footprint so cache-on/off runs can be compared.
+//!
 //! TTFT and latency are measured from request ARRIVAL, so queueing delay
 //! is included (the paper's serving scenario, §1).
 
@@ -25,8 +30,11 @@ use super::scheduler::{DecodeOutcome, Scheduler, SchedulerConfig};
 /// One sequence's share of a batched engine iteration.
 #[derive(Debug, Clone)]
 pub enum SeqWork {
-    /// First iteration: run the whole prompt through the model.
-    Prefill { prompt: Vec<i32> },
+    /// First iteration: run the prompt through the model.  The first
+    /// `cached_ctx` tokens are already in (shared) KV pages: the backend
+    /// only needs to compute the suffix, but sees the full prompt for
+    /// positioning and (on recompute-everything backends) parity.
+    Prefill { prompt: Vec<i32>, cached_ctx: usize },
     /// One decode step: feed the last sampled token at position `pos`.
     Decode { last: i32, pos: i32 },
 }
@@ -93,6 +101,13 @@ pub struct ServeStats {
     pub decode_time_s: f64,
     /// Requests rejected at admission (prompt cannot fit the KV pool).
     pub rejected: u64,
+    /// Admissions that reused at least one cached prefix page.
+    pub prefix_hits: u64,
+    /// Prompt tokens served from the prefix cache (prefill skipped).
+    pub prefix_cached_tokens: u64,
+    /// Peak pages holding live sequence data (shared pages count once;
+    /// retained cache pages excluded) — the KV-capacity figure of merit.
+    pub peak_kv_pages: usize,
 }
 
 impl ServeStats {
@@ -116,6 +131,42 @@ impl ServeStats {
         mean(self.results.iter().map(|r| r.queue_s))
     }
 
+    /// The `q`-th percentile (nearest-rank on the sorted sample) of a
+    /// per-request metric; 0.0 when no requests completed.
+    fn percentile(&self, q: f64, f: impl Fn(&RequestResult) -> f64) -> f64 {
+        if self.results.is_empty() {
+            return 0.0;
+        }
+        let mut vals: Vec<f64> = self.results.iter().map(f).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let idx = ((q / 100.0) * (vals.len() - 1) as f64).round() as usize;
+        vals[idx.min(vals.len() - 1)]
+    }
+
+    pub fn p50_ttft_s(&self) -> f64 {
+        self.percentile(50.0, |r| r.ttft_s)
+    }
+
+    pub fn p99_ttft_s(&self) -> f64 {
+        self.percentile(99.0, |r| r.ttft_s)
+    }
+
+    pub fn p50_latency_s(&self) -> f64 {
+        self.percentile(50.0, |r| r.latency_s)
+    }
+
+    pub fn p99_latency_s(&self) -> f64 {
+        self.percentile(99.0, |r| r.latency_s)
+    }
+
+    /// Fraction of completed requests that hit the prefix cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.results.is_empty() {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.results.len() as f64
+    }
+
     /// Human-readable summary (one printer for the CLI and examples).
     /// `clock_label` names the serving clock: "virtual" or "measured".
     pub fn summary(&self, clock_label: &str) -> String {
@@ -133,12 +184,30 @@ impl ServeStats {
         }
         out.push_str(&format!(
             "decode throughput {:.1} tok/s, mean TTFT {:.1} ms (queue {:.1} ms), \
-             mean latency {:.1} ms",
+             mean latency {:.1} ms\n",
             self.decode_tps(),
             self.mean_ttft_s() * 1e3,
             self.mean_queue_s() * 1e3,
             self.mean_latency_s() * 1e3
         ));
+        out.push_str(&format!(
+            "TTFT P50/P99 {:.1}/{:.1} ms, latency P50/P99 {:.1}/{:.1} ms, \
+             peak KV {} pages",
+            self.p50_ttft_s() * 1e3,
+            self.p99_ttft_s() * 1e3,
+            self.p50_latency_s() * 1e3,
+            self.p99_latency_s() * 1e3,
+            self.peak_kv_pages
+        ));
+        if self.prefix_hits > 0 {
+            out.push_str(&format!(
+                "\nprefix cache: {} hits ({:.0}% of requests), {} prompt tokens \
+                 served from cache",
+                self.prefix_hits,
+                self.prefix_hit_rate() * 100.0,
+                self.prefix_cached_tokens
+            ));
+        }
         out
     }
 }
@@ -189,6 +258,8 @@ impl<B: ModelBackend> Server<B> {
 
         loop {
             let batch = self.scheduler.schedule(clock);
+            // Admission just allocated prompt pages: sample the footprint.
+            stats.peak_kv_pages = stats.peak_kv_pages.max(self.scheduler.pool.used_pages());
             if batch.is_empty() {
                 if self.scheduler.is_drained() {
                     break;
@@ -234,6 +305,7 @@ impl<B: ModelBackend> Server<B> {
                     let work = if !s.prefilled {
                         SeqWork::Prefill {
                             prompt: s.req.prompt.iter().map(|&t| t as i32).collect(),
+                            cached_ctx: s.cached_ctx,
                         }
                     } else {
                         SeqWork::Decode {
@@ -284,6 +356,8 @@ impl<B: ModelBackend> Server<B> {
                     }
                 }
             }
+            // Decode appends may have opened (or CoW-copied) pages.
+            stats.peak_kv_pages = stats.peak_kv_pages.max(self.scheduler.pool.used_pages());
             // Sweep completed sequences (token budget reached, or context
             // cap hit — including prompts that fill the context at prefill).
             let max_seq = self.scheduler.cfg.max_seq;
@@ -300,6 +374,9 @@ impl<B: ModelBackend> Server<B> {
         }
         stats.served_s = clock;
         stats.wall_s = host_t0.elapsed().as_secs_f64();
+        let pool = self.scheduler.pool.stats();
+        stats.prefix_hits = pool.prefix_hits;
+        stats.prefix_cached_tokens = pool.cached_tokens_served;
         Ok(stats)
     }
 
@@ -358,7 +435,7 @@ mod tests {
                 .iter()
                 .map(|slot| {
                     let last = match &slot.work {
-                        SeqWork::Prefill { prompt } => {
+                        SeqWork::Prefill { prompt, .. } => {
                             step_s += self.prefill_s;
                             *prompt.last().unwrap_or(&0)
                         }
@@ -420,6 +497,8 @@ mod tests {
         }
         assert!(stats.decode_steps >= 5 * 3);
         assert!(stats.served_s > 0.0);
+        assert!(stats.peak_kv_pages > 0, "prompt pages were live at some point");
+        assert_eq!(stats.prefix_hits, 0, "caching off by default");
     }
 
     #[test]
@@ -448,6 +527,8 @@ mod tests {
         // end-to-end drain time must both improve.
         assert!(s4.decode_tps() > 2.0 * s1.decode_tps());
         assert!(s4.served_s < s1.served_s);
+        // More residents at once: the KV footprint peak must be higher.
+        assert!(s4.peak_kv_pages > s1.peak_kv_pages);
     }
 
     /// Regression (TTFT): time-to-first-token is measured from request
@@ -472,6 +553,33 @@ mod tests {
         assert!((b.ttft_s - 0.007).abs() < 1e-9, "B ttft = {}", b.ttft_s);
         assert!((b.latency_s - 0.010).abs() < 1e-9);
         assert!((stats.served_s - 0.010).abs() < 1e-9);
+    }
+
+    /// Satellite: percentile accessors follow the ordered TTFT spread —
+    /// P50 sits at the median, P99 at the worst queued request.
+    #[test]
+    fn percentiles_track_queueing_spread() {
+        let mut server = Server::new(
+            EchoBackend::new(16),
+            SchedulerConfig { max_batch: 1, max_seq: 64, ..Default::default() },
+            Sampler::greedy(),
+        );
+        // Four identical back-to-back requests at batch 1: TTFTs are
+        // 2, 7, 12, 17 ms (each waits for its predecessors).
+        let trace = (0..4).map(|i| req(i, 0.0, 4, 4)).collect();
+        let stats = server.run_trace(trace).unwrap();
+        assert_eq!(stats.results.len(), 4);
+        let max_ttft = stats
+            .results
+            .iter()
+            .map(|r| r.ttft_s)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!((stats.p99_ttft_s() - max_ttft).abs() < 1e-12, "P99 = worst request");
+        assert!(stats.p50_ttft_s() < stats.p99_ttft_s(), "spread is visible");
+        assert!(stats.p50_latency_s() <= stats.p99_latency_s());
+        assert!(stats.p50_ttft_s() > 0.0);
+        // Empty stats stay well-defined.
+        assert_eq!(ServeStats::default().p99_ttft_s(), 0.0);
     }
 
     #[test]
@@ -520,6 +628,7 @@ mod tests {
                 kv_pages: 2,
                 page_tokens: 4,
                 max_seq: 64,
+                ..Default::default()
             },
             Sampler::greedy(),
         );
@@ -533,6 +642,7 @@ mod tests {
             assert_eq!(r.tokens.len(), 6);
         }
         assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.peak_kv_pages, 2, "the whole pool was in use");
     }
 
     #[test]
@@ -544,6 +654,7 @@ mod tests {
                 kv_pages: 2,
                 page_tokens: 4,
                 max_seq: 64,
+                ..Default::default()
             },
             Sampler::greedy(),
         );
@@ -579,11 +690,39 @@ mod tests {
         let b = run();
         assert_eq!(a.results.len(), b.results.len());
         assert_eq!(a.served_s.to_bits(), b.served_s.to_bits());
+        assert_eq!(a.peak_kv_pages, b.peak_kv_pages);
         for (x, y) in a.results.iter().zip(&b.results) {
             assert_eq!(x.id, y.id);
             assert_eq!(x.tokens, y.tokens);
             assert_eq!(x.ttft_s.to_bits(), y.ttft_s.to_bits());
             assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
         }
+    }
+
+    /// Prefix caching through the full serving loop: shared-prompt
+    /// requests hit the cache, the hit surfaces in ServeStats, and the
+    /// backend sees the cached_ctx on its prefill slot.
+    #[test]
+    fn prefix_hits_surface_in_serve_stats() {
+        let mut server = Server::new(
+            EchoBackend::new(32),
+            SchedulerConfig {
+                max_batch: 2,
+                kv_pages: 16,
+                page_tokens: 4,
+                max_seq: 64,
+                prefix_cache: true,
+            },
+            Sampler::greedy(),
+        );
+        // Same 8-token prompt twice: the second admit shares page 0.
+        let trace = vec![req(0, 0.0, 8, 2), req(1, 0.0, 8, 2)];
+        let stats = server.run_trace(trace).unwrap();
+        assert_eq!(stats.results.len(), 2);
+        assert_eq!(stats.prefix_hits, 1, "second request hits");
+        assert_eq!(stats.prefix_cached_tokens, 4, "one full page served");
+        assert!(stats.prefix_hit_rate() > 0.0);
+        // Identical prompts → identical generated tokens either way.
+        assert_eq!(stats.results[0].tokens, stats.results[1].tokens);
     }
 }

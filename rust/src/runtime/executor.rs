@@ -189,18 +189,31 @@ fn to_anyhow(e: xla::Error) -> anyhow::Error {
 /// time) and reports measured wall seconds as the step cost — so served
 /// traces carry real host latencies on the serving clock.  Per-sequence
 /// KV literals live here, keyed by sequence id.
+///
+/// Prefix caching: the PJRT KV literals are monolithic per sequence (no
+/// paged sharing), so a prefill recomputes the FULL prompt regardless of
+/// `cached_ctx` — results stay golden-exact.  The skipped-token count is
+/// still tallied (`cached_tokens_reported`) so serving stats stay
+/// comparable with the page-sharing sim backend.
 pub struct RuntimeBackend {
     rt: ModelRuntime,
     kv: HashMap<u64, Literal>,
+    cached_tokens_reported: u64,
 }
 
 impl RuntimeBackend {
     pub fn new(rt: ModelRuntime) -> Self {
-        Self { rt, kv: HashMap::new() }
+        Self { rt, kv: HashMap::new(), cached_tokens_reported: 0 }
     }
 
     pub fn runtime(&self) -> &ModelRuntime {
         &self.rt
+    }
+
+    /// Prompt tokens the scheduler served from its prefix cache, summed
+    /// over all prefills (this backend recomputed them anyway).
+    pub fn cached_tokens_reported(&self) -> u64 {
+        self.cached_tokens_reported
     }
 }
 
@@ -214,7 +227,8 @@ impl crate::coordinator::ModelBackend for RuntimeBackend {
         let mut logits = Vec::with_capacity(batch.len());
         for slot in batch {
             match &slot.work {
-                SeqWork::Prefill { prompt } => {
+                SeqWork::Prefill { prompt, cached_ctx } => {
+                    self.cached_tokens_reported += *cached_ctx as u64;
                     let out = self.rt.prefill(prompt)?;
                     self.kv.insert(slot.seq, out.kv);
                     logits.push(out.logits);

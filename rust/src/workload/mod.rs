@@ -61,6 +61,66 @@ pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
         .collect()
 }
 
+/// Shared-prefix workload: `n_groups` fixed system prompts, each
+/// request drawing one of them followed by a per-request tail — the
+/// traffic shape (system prompts, few-shot templates) that prefix
+/// caching converts from repeated prefill into CoW page sharing.
+#[derive(Debug, Clone)]
+pub struct SharedPrefixConfig {
+    /// Distinct system prompts (prefix groups).
+    pub n_groups: usize,
+    /// Tokens in each shared prefix.
+    pub prefix_len: usize,
+    /// Per-request tail lengths (user turns).
+    pub tail_len_choices: Vec<u32>,
+    pub decode_len_choices: Vec<u32>,
+    pub n_requests: usize,
+    pub rate_per_s: f64,
+    pub vocab: u32,
+    pub seed: u64,
+}
+
+impl Default for SharedPrefixConfig {
+    fn default() -> Self {
+        Self {
+            n_groups: 2,
+            prefix_len: 96,
+            tail_len_choices: vec![8, 16, 24],
+            decode_len_choices: vec![8, 16],
+            n_requests: 16,
+            rate_per_s: 8.0,
+            vocab: 512,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a shared-prefix request trace.  Deterministic per seed, with
+/// strictly increasing arrivals (Poisson gaps).
+pub fn generate_shared_prefix_trace(cfg: &SharedPrefixConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let n_groups = cfg.n_groups.max(1);
+    let prefixes: Vec<Vec<u32>> = (0..n_groups)
+        .map(|_| (0..cfg.prefix_len).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let mut t = 0.0f64;
+    (0..cfg.n_requests)
+        .map(|i| {
+            t += rng.exp(cfg.rate_per_s);
+            let group = rng.below(n_groups as u64) as usize;
+            let tail_len = *rng.choose(&cfg.tail_len_choices);
+            let mut prompt = prefixes[group].clone();
+            prompt.extend((0..tail_len).map(|_| rng.below(cfg.vocab as u64) as u32));
+            Request {
+                id: i as u64,
+                arrival_s: t,
+                prompt,
+                max_new_tokens: *rng.choose(&cfg.decode_len_choices),
+            }
+        })
+        .collect()
+}
+
 /// A burst: `n` identical-shape requests all arriving at t = 0 — the
 /// Fig. 15 multibatch scenario pushed through the serving path, and the
 /// worst-case admission pressure for the continuous-batching engine.
@@ -143,5 +203,55 @@ mod tests {
         for r in generate_trace(&TraceConfig::default()) {
             assert!(r.prompt.iter().all(|&t| t < 512));
         }
+    }
+
+    /// Satellite: trace generation is deterministic — the same seed
+    /// yields an IDENTICAL trace (ids, arrivals, prompts, budgets), and
+    /// arrivals are strictly increasing.
+    #[test]
+    fn shared_prefix_trace_deterministic_and_ordered() {
+        let cfg = SharedPrefixConfig { seed: 9, ..Default::default() };
+        let a = generate_shared_prefix_trace(&cfg);
+        let b = generate_shared_prefix_trace(&cfg);
+        assert_eq!(a.len(), cfg.n_requests);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits(), "bit-identical");
+        }
+        for w in a.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s, "strictly increasing arrivals");
+        }
+        // A different seed must not replay the same trace.
+        let c = generate_shared_prefix_trace(&SharedPrefixConfig { seed: 10, ..Default::default() });
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn shared_prefix_trace_groups_share_prefixes() {
+        let cfg = SharedPrefixConfig {
+            n_groups: 2,
+            prefix_len: 32,
+            n_requests: 24,
+            ..Default::default()
+        };
+        let trace = generate_shared_prefix_trace(&cfg);
+        // Collect the distinct 32-token prefixes: exactly n_groups of them.
+        let mut prefixes: Vec<Vec<u32>> = Vec::new();
+        for r in &trace {
+            assert!(r.prompt.len() >= 32);
+            let p = r.prompt[..32].to_vec();
+            if !prefixes.contains(&p) {
+                prefixes.push(p);
+            }
+            assert!(cfg.tail_len_choices.contains(&((r.prompt.len() - 32) as u32)));
+        }
+        assert!(
+            prefixes.len() <= cfg.n_groups,
+            "at most n_groups distinct prefixes, got {}",
+            prefixes.len()
+        );
+        assert!(prefixes.len() >= 2, "24 draws over 2 groups hit both");
     }
 }
