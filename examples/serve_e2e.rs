@@ -1,33 +1,37 @@
 //! End-to-end serving demo — the E2E validation required by DESIGN.md:
 //! all three layers compose on a real workload.
 //!
-//! Loads the trained tiny model (L2/L1 artifacts) through the PJRT
-//! runtime, serves a Poisson request trace through the L3 coordinator's
-//! continuous-batching engine (batched scheduler + paged KV manager +
-//! sampler), reports measured latency / throughput — then serves the
-//! SAME trace shape through the `SimBackend` so the deterministic
-//! FlightLLM-on-U280 numbers (virtual TTFT / latency / tokens-per-s)
-//! print next to the real ones.
+//! Sections (the PJRT one needs `--features xla` + `make artifacts`;
+//! everything else runs on the deterministic virtual clock and is
+//! exercised in CI):
 //!
-//! Run: make artifacts && cargo run --release --features xla --example serve_e2e
+//! 1. (xla only) the trained tiny model served through the PJRT runtime
+//!    — measured host latencies.
+//! 2. The same trace shape on the simulated U280 at 7B scale —
+//!    deterministic FlightLLM latencies.
+//! 3. Prefix caching: a shared-prefix trace served cache-off then
+//!    cache-on (CoW paged-KV win, identical tokens).
+//! 4. The LIVE serving front-end in virtual-clock mode: requests
+//!    submitted through `Service::submit` stream tokens through their
+//!    `RequestHandle`s, one request is cancelled mid-prefill (its KV
+//!    pages come back immediately) and one mid-decode (its partial
+//!    tokens are kept) — all under manual `tick`/`drain`, so the run
+//!    is replayable.
+//! 5. Chunked prefill: the TTFT / P99-ITL-vs-chunk-size sweep on a
+//!    mixed burst, byte-identical tokens asserted.
+//!
+//! Run: cargo run --release --example serve_e2e
+//!      (add --features xla && make artifacts for section 1)
 
 use flightllm::config::Target;
-use flightllm::coordinator::{Sampler, SchedulerConfig, Server, SimBackend};
-use flightllm::experiments::flightllm_serve_prefix;
-use flightllm::runtime::{ModelRuntime, RuntimeBackend};
-use flightllm::workload::{generate_trace, SharedPrefixConfig, TraceConfig};
+use flightllm::coordinator::{Sampler, SchedulerConfig, Server, Service, SimBackend, StreamEvent};
+use flightllm::experiments::{flightllm_serve_chunk_sweep, flightllm_serve_prefix};
+use flightllm::workload::{
+    generate_trace, MixedBurstConfig, Request, SharedPrefixConfig, TraceConfig,
+};
 
 fn main() -> anyhow::Result<()> {
-    let dir = std::path::Path::new("artifacts");
-    anyhow::ensure!(
-        dir.join("manifest.json").exists(),
-        "artifacts/ missing — run `make artifacts` first"
-    );
-    println!("loading runtime (compiling HLO modules)...");
-    let rt = ModelRuntime::load(dir)?;
-    let max_seq = rt.manifest.config.max_seq as usize;
-    let vocab = rt.vocab() as u32;
-
+    let vocab = 512u32;
     let trace_cfg = TraceConfig {
         rate_per_s: 4.0,
         n_requests: 12,
@@ -35,42 +39,13 @@ fn main() -> anyhow::Result<()> {
         decode_len_choices: vec![16, 32],
         vocab,
         seed: 7,
+        ..Default::default()
     };
-    let trace = generate_trace(&trace_cfg);
-    println!(
-        "serving {} requests (prompts {:?}, decode {:?}, batch=1)...",
-        trace.len(),
-        trace_cfg.prompt_len_choices,
-        trace_cfg.decode_len_choices
-    );
 
-    let mut server = Server::new(
-        RuntimeBackend::new(rt),
-        SchedulerConfig {
-            max_batch: 1,
-            kv_pages: 128,
-            page_tokens: 16,
-            max_seq,
-            ..Default::default()
-        },
-        Sampler::greedy(),
-    );
-    let stats = server.run_trace(trace.clone())?;
+    // -- Section 1: PJRT runtime (xla builds with artifacts only) ------
+    run_pjrt_section(&trace_cfg)?;
 
-    println!("\n== E2E serving results (tiny model, PJRT CPU, measured clock) ==");
-    println!("{}", stats.summary("measured"));
-    println!("host wall time {:.2} s", stats.wall_s);
-    for r in stats.results.iter().take(3) {
-        println!(
-            "  req {:>2}: prompt {:>3} tokens → {:?}...",
-            r.id,
-            r.prompt_len,
-            &r.tokens[..r.tokens.len().min(8)]
-        );
-    }
-
-    // The same trace served by the simulated U280 at 7B scale: identical
-    // scheduling, deterministic accelerator latencies on the virtual clock.
+    // -- Section 2: the trace on the simulated U280 / LLaMA2-7B --------
     let t = Target::u280_llama2();
     let sim_max_seq = t.model.max_seq as usize;
     let mut sim_server = Server::new(
@@ -84,14 +59,11 @@ fn main() -> anyhow::Result<()> {
         },
         Sampler::greedy(),
     );
-    let sim_stats = sim_server.run_trace(trace)?;
-    println!("\n== same trace on simulated U280 / LLaMA2-7B (virtual clock) ==");
+    let sim_stats = sim_server.run_trace(generate_trace(&trace_cfg))?;
+    println!("== trace on simulated U280 / LLaMA2-7B (virtual clock) ==");
     println!("{}", sim_stats.summary("virtual"));
 
-    // Prefix caching on a shared-prefix trace (system prompts × user
-    // tails): the same trace served cache-off then cache-on, so the CoW
-    // paged-KV win (TTFT + peak pages, identical tokens) prints as a
-    // controlled comparison.
+    // -- Section 3: prefix caching, cache-off vs cache-on --------------
     let px_cfg = SharedPrefixConfig {
         n_requests: 12,
         vocab,
@@ -111,6 +83,162 @@ fn main() -> anyhow::Result<()> {
         px_off.peak_kv_pages,
         px_on.peak_kv_pages
     );
+
+    // -- Section 4: live front-end, streaming + cancellation -----------
+    println!("\n== live service (virtual clock): streaming + cancellation ==");
+    let mut svc = Service::new(
+        SimBackend::with_vocab(t.clone(), vocab as usize),
+        SchedulerConfig {
+            max_batch: 4,
+            kv_pages: 512,
+            page_tokens: 16,
+            max_seq: sim_max_seq,
+            prefill_chunk: 64,
+            ..Default::default()
+        },
+        Sampler::greedy(),
+    );
+    let req = |id: u64, plen: usize, dlen: u32| Request {
+        id,
+        arrival_s: 0.0,
+        prompt: (0..plen as u32).collect(),
+        max_new_tokens: dlen,
+    };
+    let streamed = svc.submit(req(0, 48, 12)); // runs to completion
+    let kill_prefill = svc.submit(req(1, 512, 8)); // cancelled mid-prefill
+    let kill_decode = svc.submit(req(2, 32, 64)); // cancelled mid-decode
+
+    // A few ticks in, request 1 is still chunk-prefilling its 512-token
+    // prompt: cancel it and watch its pages come back immediately.
+    for _ in 0..3 {
+        svc.tick()?;
+    }
+    let pages_before = svc.scheduler().pool.used_pages();
+    kill_prefill.cancel();
+    svc.tick()?;
+    let pages_after = svc.scheduler().pool.used_pages();
+    println!(
+        "cancelled req 1 mid-prefill: KV pages {pages_before} -> {pages_after} \
+         (released at the next tick)"
+    );
+    assert!(pages_after < pages_before, "cancellation must free pages");
+
+    // Let request 2 decode a little, then cancel it mid-generation.
+    for _ in 0..6 {
+        svc.tick()?;
+    }
+    kill_decode.cancel();
+    svc.drain()?;
+
+    // Stream request 0's tokens exactly as a live client would.
+    let mut tokens = Vec::new();
+    let result = loop {
+        match streamed.try_event() {
+            Some(StreamEvent::Token(tok)) => tokens.push(tok),
+            Some(StreamEvent::Done(r)) => break r,
+            Some(StreamEvent::Rejected) => anyhow::bail!("req 0 rejected"),
+            None => anyhow::bail!("req 0 stream ended without Done"),
+        }
+    };
+    println!(
+        "req 0 streamed {} tokens incrementally (first: {:?}...), ttft {:.1} ms",
+        tokens.len(),
+        &tokens[..tokens.len().min(6)],
+        result.ttft_s * 1e3
+    );
+    assert_eq!(tokens, result.tokens, "stream and final result agree");
+    let r1 = kill_prefill.wait().expect("cancelled handles still resolve");
+    let r2 = kill_decode.wait().expect("cancelled handles still resolve");
+    assert!(r1.cancelled && r1.tokens.is_empty(), "killed before first token");
+    assert!(r2.cancelled && !r2.tokens.is_empty(), "partial decode kept");
+    println!(
+        "req 1 cancelled mid-prefill (0 tokens), req 2 cancelled mid-decode \
+         ({} partial tokens kept)",
+        r2.tokens.len()
+    );
+    let live_stats = svc.stats();
+    println!("{}", live_stats.summary("virtual"));
+    assert_eq!(live_stats.cancelled, 2);
+
+    // -- Section 5: chunked prefill sweep (mixed burst) -----------------
+    println!("\n== chunked prefill: P99 decode ITL vs chunk size (mixed burst) ==");
+    let burst = MixedBurstConfig {
+        n_decode_heavy: 4,
+        decode_heavy_prompt: 32,
+        decode_heavy_tokens: 48,
+        n_prefill_heavy: 2,
+        prefill_heavy_prompt: 1024,
+        prefill_heavy_tokens: 8,
+        prefill_stagger_s: 1e-6,
+        vocab,
+        seed: 12,
+    };
+    let sweep = flightllm_serve_chunk_sweep(&t, &burst, 8, &[0, 128, 256]);
+    let baseline = sweep[0].1.clone();
+    for (chunk, stats) in &sweep {
+        for a in &baseline.results {
+            let b = stats.results.iter().find(|r| r.id == a.id).unwrap();
+            assert_eq!(a.tokens, b.tokens, "chunking must not change tokens");
+        }
+        println!(
+            "  chunk {:>4}: P99 ITL {:>8.2} ms, max ITL {:>8.2} ms, mean TTFT {:>8.1} ms",
+            if *chunk == 0 { "off".to_string() } else { chunk.to_string() },
+            stats.p99_itl_s() * 1e3,
+            stats.max_itl_s() * 1e3,
+            stats.mean_ttft_s() * 1e3
+        );
+    }
+    assert!(
+        sweep[1].1.p99_itl_s() < baseline.p99_itl_s(),
+        "chunked prefill must cut P99 decode ITL"
+    );
     println!("serve_e2e OK");
+    Ok(())
+}
+
+/// Section 1 — the PJRT runtime path.  Needs the `xla` feature and the
+/// trained artifacts; skipped (with a note) when either is missing so
+/// the virtual-clock sections run everywhere, CI included.
+#[cfg(feature = "xla")]
+fn run_pjrt_section(trace_cfg: &TraceConfig) -> anyhow::Result<()> {
+    use flightllm::runtime::{ModelRuntime, RuntimeBackend};
+
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("== PJRT section skipped: artifacts/ missing (run `make artifacts`) ==\n");
+        return Ok(());
+    }
+    println!("loading runtime (compiling HLO modules)...");
+    let rt = ModelRuntime::load(dir)?;
+    let max_seq = rt.manifest.config.max_seq as usize;
+    let vocab = rt.vocab() as u32;
+    let trace = generate_trace(&TraceConfig { vocab, ..trace_cfg.clone() });
+    println!(
+        "serving {} requests (prompts {:?}, decode {:?}, batch=1)...",
+        trace.len(),
+        trace_cfg.prompt_len_choices,
+        trace_cfg.decode_len_choices
+    );
+    let mut server = Server::new(
+        RuntimeBackend::new(rt),
+        SchedulerConfig {
+            max_batch: 1,
+            kv_pages: 128,
+            page_tokens: 16,
+            max_seq,
+            ..Default::default()
+        },
+        Sampler::greedy(),
+    );
+    let stats = server.run_trace(trace)?;
+    println!("== E2E serving results (tiny model, PJRT CPU, measured clock) ==");
+    println!("{}", stats.summary("measured"));
+    println!("host wall time {:.2} s\n", stats.wall_s);
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn run_pjrt_section(_trace_cfg: &TraceConfig) -> anyhow::Result<()> {
+    println!("== PJRT section skipped: built without the `xla` feature ==\n");
     Ok(())
 }

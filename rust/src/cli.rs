@@ -4,6 +4,7 @@
 //! flightllm serve    [--backend runtime|sim] [--artifacts DIR] [--requests N]
 //!                    [--batch N] [--temp T] [--model llama2|opt|tiny]
 //!                    [--platform u280|vhk158] [--prefix-cache]
+//!                    [--prefill-chunk N] [--live] [--rate R]
 //! flightllm simulate [--model llama2|opt] [--platform u280|vhk158]
 //!                    [--prefill N] [--decode N]
 //! flightllm report   [--what storage|resources|efficiency]
@@ -12,13 +13,21 @@
 //! `serve --backend sim` needs no artifacts: the trace is served by the
 //! continuous-batching engine against the cycle-approximate simulator,
 //! reporting the deterministic TTFT/latency/tokens-per-second FlightLLM
-//! would deliver on the chosen platform.
+//! would deliver on the chosen platform.  `--prefill-chunk N` caps the
+//! prompt tokens prefilled per engine iteration (chunked prefill:
+//! decodes stop stalling behind long prompts).
 //!
 //! `serve --backend sim --prefix-cache` switches to a shared-prefix
 //! trace (N system prompts × per-request tails) and serves it TWICE —
 //! prefix caching off, then on — printing both summaries plus the
 //! hit-rate / TTFT / peak-KV deltas, so the CoW paged-KV win is visible
 //! from one command.
+//!
+//! `serve --backend sim --live` replays a Poisson-arrival /
+//! log-normal-length trace OPEN-LOOP through the background
+//! `LiveService` on the host clock: requests are submitted at their
+//! real inter-arrival gaps (`--rate` req/s), stream tokens as the
+//! engine produces them, and resolve to per-request results.
 
 use crate::baselines::{GpuStack, GpuSystem};
 use crate::config::{ModelConfig, Target};
@@ -39,6 +48,10 @@ fn flag_u64(args: &[String], key: &str, default: u64) -> u64 {
     flag(args, key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+fn flag_f64(args: &[String], key: &str, default: f64) -> f64 {
+    flag(args, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 /// Presence flag (no value): `--prefix-cache`.
 fn has_flag(args: &[String], key: &str) -> bool {
     args.iter().any(|a| a == key)
@@ -47,6 +60,7 @@ fn has_flag(args: &[String], key: &str) -> bool {
 const USAGE: &str = "usage: flightllm <serve|simulate|report> [flags]
   serve    --backend runtime|sim --artifacts DIR --requests N --batch N --temp T
            --model llama2|opt|tiny --platform u280|vhk158 [--prefix-cache]
+           [--prefill-chunk N] [--live] [--rate R]
   simulate --model llama2|opt --platform u280|vhk158 --prefill N --decode N
   report   --what storage|resources|efficiency";
 
@@ -125,8 +139,13 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
     let t = target_for(args);
     let n = flag_u64(args, "--requests", 8) as usize;
     let batch = flag_u64(args, "--batch", 1) as usize;
+    let chunk = flag_u64(args, "--prefill-chunk", 0) as usize;
     let max_seq = t.model.max_seq as usize;
     let vocab = (t.model.vocab as u32).min(512);
+    if has_flag(args, "--live") {
+        let rate = flag_f64(args, "--rate", 8.0);
+        return cmd_serve_sim_live(t, n, batch, vocab, chunk, rate, sampler_for(args));
+    }
     if has_flag(args, "--prefix-cache") {
         if flag(args, "--temp").is_some() {
             // Greedy sampling is load-bearing here: with a stateful
@@ -153,6 +172,7 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
             kv_pages: 512,
             page_tokens: 16,
             max_seq,
+            prefill_chunk: chunk,
             ..Default::default()
         },
         sampler,
@@ -168,6 +188,85 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+/// The `--live` mode: spawn the background engine on the HOST clock and
+/// replay a Poisson-arrival / log-normal-length trace open-loop —
+/// sleeping out the real inter-arrival gaps, streaming each request
+/// through its handle — then drain and print the live stats.
+fn cmd_serve_sim_live(
+    t: Target,
+    n: usize,
+    batch: usize,
+    vocab: u32,
+    chunk: usize,
+    rate: f64,
+    sampler: Sampler,
+) -> i32 {
+    use crate::coordinator::LiveService;
+    use crate::workload::LogNormalLen;
+
+    let max_seq = t.model.max_seq as usize;
+    let rate = if rate > 0.0 { rate } else { 8.0 };
+    let trace = generate_trace(&TraceConfig {
+        n_requests: n.max(1),
+        vocab,
+        rate_per_s: rate,
+        prompt_lognormal: Some(LogNormalLen {
+            median: 48.0,
+            sigma: 0.6,
+            cap: max_seq.min(256) as u32,
+        }),
+        decode_lognormal: Some(LogNormalLen { median: 24.0, sigma: 0.5, cap: 64 }),
+        ..Default::default()
+    });
+    println!(
+        "live-serving {} open-loop requests ({rate} req/s Poisson, log-normal lengths, \
+         batch {}, prefill chunk {chunk}) on {} {} (host clock):",
+        trace.len(),
+        batch.max(1),
+        t.model.name,
+        t.platform.name
+    );
+    let svc = LiveService::spawn(
+        SimBackend::with_vocab(t, vocab as usize),
+        SchedulerConfig {
+            max_batch: batch.max(1),
+            kv_pages: 512,
+            page_tokens: 16,
+            max_seq,
+            prefill_chunk: chunk,
+            ..Default::default()
+        },
+        sampler,
+    );
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(trace.len());
+    for r in trace {
+        let dt = r.arrival_s - t0.elapsed().as_secs_f64();
+        if dt > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(dt));
+        }
+        handles.push(svc.submit(r.prompt, r.max_new_tokens));
+    }
+    for h in handles {
+        let id = h.id();
+        match h.wait() {
+            Some(r) => println!(
+                "  req {:>2}: {:>3}-token prompt -> {:>2} tokens, ttft {:>7.1} ms, \
+                 latency {:>7.1} ms",
+                id,
+                r.prompt_len,
+                r.tokens.len(),
+                r.ttft_s * 1e3,
+                r.latency_s * 1e3
+            ),
+            None => println!("  req {id:>2}: not served (rejected, or the engine stopped)"),
+        }
+    }
+    let stats = svc.shutdown();
+    println!("{}", stats.summary("live"));
+    0
 }
 
 /// The `--prefix-cache` mode: one shared-prefix trace, served twice
@@ -341,6 +440,30 @@ mod tests {
     #[test]
     fn serve_unknown_backend_fails() {
         assert_eq!(run(&s(&["flightllm", "serve", "--backend", "gpu"])), 2);
+    }
+
+    #[test]
+    fn serve_sim_chunked_prefill_runs() {
+        assert_eq!(
+            run(&s(&[
+                "flightllm", "serve", "--backend", "sim", "--model", "tiny",
+                "--requests", "3", "--batch", "2", "--prefill-chunk", "16",
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn serve_sim_live_open_loop_runs() {
+        // High rate keeps the open-loop replay's real sleeps tiny.
+        assert_eq!(
+            run(&s(&[
+                "flightllm", "serve", "--backend", "sim", "--model", "tiny",
+                "--requests", "3", "--batch", "2", "--live", "--rate", "500",
+                "--prefill-chunk", "32",
+            ])),
+            0
+        );
     }
 
     #[test]

@@ -7,33 +7,110 @@
 //!    pages are retained (LRU-evicted under pressure), and a shared
 //!    partial tail is copied the first time a writer appends through it.
 //! 2. **Scheduler** (`scheduler`): continuous-batching admission against
-//!    a virtual clock.  Admission charges only the uncached prompt
-//!    suffix; `SeqState::cached_ctx` tells the engine how much prefill
-//!    the backend may skip.  Invariant: scheduler `ctx` == pool tokens
-//!    for every running sequence, shared pages included.
-//! 3. **Engine loop** (`server`): one batched `ModelBackend::step` per
-//!    iteration (mixed prefill/decode), sampling, retirement, and
-//!    `ServeStats` (TTFT/latency means + P50/P99, prefix-hit counters,
-//!    peak KV-page footprint).
-//! 4. **Backends**: the PJRT `runtime::RuntimeBackend` for real numerics
-//!    (monolithic KV literals — recomputes cached prefixes but reports
-//!    them), and the `sim::Engine`-backed `SimBackend` for deterministic
-//!    FlightLLM latencies (prices prefill by the uncached suffix).
+//!    a serving clock, planned per iteration with CHUNKED PREFILL and
+//!    decode priority.  `plan` always decodes every prefilled sequence;
+//!    prefill work is capped at `SchedulerConfig::prefill_chunk` prompt
+//!    tokens per iteration (admission order), so one long prompt runs
+//!    as several chunks instead of freezing every in-flight decode.
+//!    Chunking composes with prefix caching: a sequence's first chunk
+//!    starts at `cached_ctx` (shared pages are never re-run), and
+//!    `SeqState::prefill_pos` tracks the cursor between iterations.
+//!    Invariants: scheduler `ctx` == pool tokens for every running
+//!    sequence, shared pages included; only the FINAL chunk
+//!    (`chunk_end == prompt.len()`) produces a token; cancellation
+//!    (queued, mid-prefill or mid-decode) releases pages immediately.
+//! 3. **Engine loop** (`service::EngineCore`): one batched
+//!    `ModelBackend::step` per iteration (mixed prefill chunks +
+//!    decodes), sampling, per-request token streaming, retirement, and
+//!    `ServeStats` (TTFT/latency means + P50/P99, decode inter-token
+//!    latency, prefix-hit counters, peak KV-page footprint).
+//! 4. **Front-ends**: `Server::run_trace` replays an offline trace
+//!    through the engine core on the deterministic virtual clock;
+//!    `Service` drives the same core with manual `tick`/`drain` plus a
+//!    command channel (streaming + cancellation, still deterministic);
+//!    `LiveService` runs the core on a background thread against the
+//!    host clock — `submit` returns a `RequestHandle` that streams
+//!    `StreamEvent::Token`s and resolves to a `RequestResult`.
+//! 5. **Backends**: the PJRT `runtime::RuntimeBackend` for real numerics
+//!    (monolithic KV literals — recomputes cached prefixes and chunked
+//!    prompts at the final chunk, but reports them), and the
+//!    `sim::Engine`-backed `SimBackend` for deterministic FlightLLM
+//!    latencies (prices each prefill chunk by its own length bucket).
 //!
 //! FlightLLM's own runtime is single-batch latency-oriented (§1); the
 //! coordinator serves that policy with `max_batch = 1` and the Fig. 15
-//! multi-batch mode with larger batches.
+//! multi-batch mode with larger batches.  Chunked prefill is what makes
+//! the live path latency-sound: P99 decode inter-token latency on a
+//! mixed burst improves while served tokens stay byte-identical
+//! (asserted in `experiments::flightllm_serve_chunk_sweep` tests).
 
 mod kv_cache;
 mod sampler;
 mod scheduler;
 mod server;
+mod service;
 mod sim_backend;
 
 pub use kv_cache::{AdmitOutcome, KvError, PagePool, PoolStats, SeqPages};
 pub use sampler::Sampler;
-pub use scheduler::{DecodeOutcome, Scheduler, SchedulerConfig, SeqState};
-pub use server::{
-    ModelBackend, RequestResult, SeqSlot, SeqWork, ServeStats, Server, StepOutput,
+pub use scheduler::{
+    DecodeOutcome, PlanItem, PlanWork, Scheduler, SchedulerConfig, SeqState,
 };
+pub use server::{
+    ITL_SAMPLE_CAP, ModelBackend, RequestResult, SeqSlot, SeqWork, ServeStats, Server, StepOutput,
+};
+pub use service::{LiveService, RequestHandle, Service, StreamEvent, Tick};
 pub use sim_backend::SimBackend;
+
+/// Shared test double for the serving stack's unit tests.
+#[cfg(test)]
+pub(crate) mod testing {
+    use anyhow::Result;
+
+    use super::server::{ModelBackend, SeqSlot, SeqWork, StepOutput};
+
+    /// A deterministic toy backend: logits favor (last_token + 1) % V.
+    /// Step cost is flat per phase — every prefill CHUNK charges
+    /// `prefill_s`, any number of decode slots share one `decode_s` (so
+    /// batching visibly improves aggregate throughput).
+    pub(crate) struct EchoBackend {
+        pub vocab: usize,
+        pub prefill_s: f64,
+        pub decode_s: f64,
+    }
+
+    impl EchoBackend {
+        pub(crate) fn new(vocab: usize) -> Self {
+            Self { vocab, prefill_s: 2e-3, decode_s: 1e-3 }
+        }
+    }
+
+    impl ModelBackend for EchoBackend {
+        fn step(&mut self, batch: &[SeqSlot]) -> Result<StepOutput> {
+            let mut step_s = 0.0;
+            let mut any_decode = false;
+            let logits = batch
+                .iter()
+                .map(|slot| {
+                    let last = match &slot.work {
+                        SeqWork::Prefill { prompt, .. } => {
+                            step_s += self.prefill_s;
+                            *prompt.last().unwrap_or(&0)
+                        }
+                        SeqWork::Decode { last, .. } => {
+                            any_decode = true;
+                            *last
+                        }
+                    } as usize;
+                    let mut l = vec![0.0f32; self.vocab];
+                    l[(last + 1) % self.vocab] = 10.0;
+                    l
+                })
+                .collect();
+            if any_decode {
+                step_s += self.decode_s;
+            }
+            Ok(StepOutput { logits, step_s })
+        }
+    }
+}

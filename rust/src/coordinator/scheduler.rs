@@ -13,6 +13,15 @@
 //! `SeqState::cached_ctx` records how many prompt tokens the backend may
 //! skip at prefill.
 //!
+//! Chunked prefill + decode priority: `plan` converts the runnable set
+//! into per-iteration work items.  Decodes always run; prefill work is
+//! capped at `prefill_chunk` prompt tokens per iteration (0 = whole
+//! prompt at once), handed out in admission order.  A long prompt is
+//! thus spread over several iterations — `SeqState::prefill_pos` tracks
+//! how far it has run — so in-flight decodes never stall behind one
+//! monolithic prefill.  Chunking composes with prefix caching: the
+//! first chunk starts at `cached_ctx` (cached pages are never re-run).
+//!
 //! Accounting invariant (checked by `check_accounting` and the property
 //! tests below): for every running sequence, `SeqState.ctx` equals the
 //! KV pool's token count — the scheduler never believes in KV the pool
@@ -35,6 +44,11 @@ pub struct SchedulerConfig {
     pub max_seq: usize,
     /// Share full-page prompt prefixes across sequences (CoW paged KV).
     pub prefix_cache: bool,
+    /// Per-iteration prefill token budget: a prompt longer than this is
+    /// split into budget-sized chunks run over successive iterations,
+    /// so decodes are never stalled behind one monolithic prefill.
+    /// 0 = unchunked (the whole uncached prompt in one iteration).
+    pub prefill_chunk: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -45,6 +59,7 @@ impl Default for SchedulerConfig {
             page_tokens: 16,
             max_seq: 256,
             prefix_cache: false,
+            prefill_chunk: 0,
         }
     }
 }
@@ -60,7 +75,10 @@ pub struct SeqState {
     /// Prompt tokens served from the prefix cache at admission: the
     /// backend only prefills the remaining suffix.
     pub cached_ctx: usize,
-    /// Whether prefill has run.
+    /// Prompt tokens already run through the backend (starts at
+    /// `cached_ctx`; advances chunk by chunk under chunked prefill).
+    pub prefill_pos: usize,
+    /// Whether prefill has run to completion (first token produced).
     pub prefilled: bool,
     /// Virtual time the request was admitted.
     pub admitted_s: f64,
@@ -80,6 +98,24 @@ impl SeqState {
     pub fn runnable(&self, max_seq: usize) -> bool {
         !self.prefilled || (!self.done() && !self.context_capped(max_seq))
     }
+}
+
+/// One sequence's work assignment for the coming engine iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanWork {
+    /// Run prompt tokens `[start, end)` through the backend.  The chunk
+    /// is final (produces the first token) iff `end` is the prompt
+    /// length.
+    Prefill { start: usize, end: usize },
+    /// One decode step.
+    Decode,
+}
+
+/// A planned slot: which sequence, and what it runs this iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanItem {
+    pub seq: u64,
+    pub work: PlanWork,
 }
 
 /// What one decode step did to a sequence.
@@ -166,6 +202,7 @@ impl Scheduler {
                 generated: Vec::new(),
                 ctx: plen,
                 cached_ctx: outcome.cached_tokens,
+                prefill_pos: outcome.cached_tokens,
                 prefilled: false,
                 admitted_s: now_s,
             });
@@ -177,6 +214,38 @@ impl Scheduler {
             .collect()
     }
 
+    /// Plan one engine iteration: admit arrivals, then convert the
+    /// runnable set into work items with decode priority.  Every
+    /// prefilled sequence decodes; prefilling sequences share a
+    /// `prefill_chunk`-token budget (admission order, 0 = unlimited), so
+    /// a long prompt runs as several chunks across iterations instead of
+    /// freezing the batch for one monolithic prefill.
+    pub fn plan(&mut self, now_s: f64) -> Vec<PlanItem> {
+        let ids = self.schedule(now_s);
+        let mut remaining = match self.cfg.prefill_chunk {
+            0 => usize::MAX,
+            n => n,
+        };
+        let mut out = Vec::with_capacity(ids.len());
+        for &id in &ids {
+            if self.seq(id).is_some_and(|s| s.prefilled) {
+                out.push(PlanItem { seq: id, work: PlanWork::Decode });
+            }
+        }
+        for &id in &ids {
+            let Some(s) = self.seq(id) else { continue };
+            if s.prefilled || remaining == 0 {
+                continue;
+            }
+            let start = s.prefill_pos;
+            let end = s.req.prompt.len().min(start.saturating_add(remaining));
+            debug_assert!(end > start, "unprefilled seq {id} has no prompt left");
+            remaining = remaining.saturating_sub(end - start);
+            out.push(PlanItem { seq: id, work: PlanWork::Prefill { start, end } });
+        }
+        out
+    }
+
     /// Pop the oldest waiting request without admitting it.  The serving
     /// loop uses this to reject a request that cannot fit the KV pool
     /// even on an empty machine.
@@ -184,9 +253,29 @@ impl Scheduler {
         self.waiting.pop_front()
     }
 
+    /// Remove a not-yet-admitted request from the waiting queue
+    /// (cancellation before admission: no pages were ever held).
+    pub fn cancel_waiting(&mut self, seq: u64) -> Option<Request> {
+        let i = self.waiting.iter().position(|r| r.id == seq)?;
+        self.waiting.remove(i)
+    }
+
+    /// Record a non-final prefill chunk: prompt tokens up to `end` are
+    /// now materialized in KV, but no token was produced yet.
+    pub fn on_prefill_chunk(&mut self, seq: u64, end: usize) {
+        if let Some(s) = self.seq_mut(seq) {
+            debug_assert!(
+                end > s.prefill_pos && end < s.req.prompt.len(),
+                "chunk end {end} out of range for seq {seq}"
+            );
+            s.prefill_pos = end;
+        }
+    }
+
     /// Record a prefill completion (first token produced).
     pub fn on_prefill_done(&mut self, seq: u64, first_token: u32) {
         if let Some(s) = self.seq_mut(seq) {
+            s.prefill_pos = s.req.prompt.len();
             s.prefilled = true;
             s.generated.push(first_token);
         }
@@ -408,6 +497,7 @@ mod tests {
             page_tokens: 16,
             max_seq: 256,
             prefix_cache: true,
+            ..Default::default()
         };
         let mut s = Scheduler::new(cfg);
         let prompt: Vec<u32> = (0..32).collect();
@@ -423,16 +513,176 @@ mod tests {
         assert!(s.check_accounting());
     }
 
+    /// Chunked prefill: a 20-token prompt under an 8-token budget runs
+    /// as [0,8) [8,16) [16,20); only the final chunk produces a token.
+    #[test]
+    fn prefill_splits_into_budget_sized_chunks() {
+        let cfg = SchedulerConfig { prefill_chunk: 8, max_seq: 64, ..Default::default() };
+        let mut s = Scheduler::new(cfg);
+        s.submit(req(0, 20, 2));
+        assert_eq!(
+            s.plan(0.0),
+            vec![PlanItem { seq: 0, work: PlanWork::Prefill { start: 0, end: 8 } }]
+        );
+        s.on_prefill_chunk(0, 8);
+        assert_eq!(s.seq(0).unwrap().prefill_pos, 8);
+        assert!(!s.seq(0).unwrap().prefilled);
+        assert_eq!(
+            s.plan(0.0),
+            vec![PlanItem { seq: 0, work: PlanWork::Prefill { start: 8, end: 16 } }]
+        );
+        s.on_prefill_chunk(0, 16);
+        assert_eq!(
+            s.plan(0.0),
+            vec![PlanItem { seq: 0, work: PlanWork::Prefill { start: 16, end: 20 } }],
+            "final chunk covers the remainder"
+        );
+        s.on_prefill_done(0, 7);
+        assert!(s.seq(0).unwrap().prefilled);
+        assert_eq!(s.seq(0).unwrap().prefill_pos, 20);
+        assert_eq!(s.plan(0.0), vec![PlanItem { seq: 0, work: PlanWork::Decode }]);
+        assert!(s.check_accounting());
+    }
+
+    /// Decode priority: while one sequence is mid-prefill, every
+    /// prefilled sequence still decodes each iteration — and the decode
+    /// items come first in the plan.
+    #[test]
+    fn decodes_run_alongside_prefill_chunks() {
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            prefill_chunk: 8,
+            max_seq: 128,
+            ..Default::default()
+        };
+        let mut s = Scheduler::new(cfg);
+        s.submit(req(0, 8, 16));
+        assert_eq!(
+            s.plan(0.0),
+            vec![PlanItem { seq: 0, work: PlanWork::Prefill { start: 0, end: 8 } }]
+        );
+        s.on_prefill_done(0, 1);
+        s.submit(req(1, 32, 4));
+        // Four iterations of seq 1's prefill, each alongside a decode of
+        // seq 0 — the 32-token prompt never stalls the running decode.
+        for chunk in 0..4 {
+            let plan = s.plan(0.0);
+            assert_eq!(plan[0], PlanItem { seq: 0, work: PlanWork::Decode });
+            assert_eq!(
+                plan[1],
+                PlanItem {
+                    seq: 1,
+                    work: PlanWork::Prefill { start: chunk * 8, end: (chunk + 1) * 8 },
+                }
+            );
+            assert_eq!(s.on_decode_done(0, 2), DecodeOutcome::Running);
+            if chunk < 3 {
+                s.on_prefill_chunk(1, (chunk + 1) * 8);
+            } else {
+                s.on_prefill_done(1, 1);
+            }
+        }
+        // Both prefilled: two decode items, no prefill work left.
+        let plan = s.plan(0.0);
+        assert_eq!(plan.len(), 2);
+        assert!(plan.iter().all(|p| p.work == PlanWork::Decode));
+        assert!(s.check_accounting());
+    }
+
+    /// The per-iteration budget is shared across prefilling sequences in
+    /// admission order: the second prompt waits until the first stops
+    /// consuming the whole budget.
+    #[test]
+    fn prefill_budget_is_shared_in_admission_order() {
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            prefill_chunk: 10,
+            max_seq: 64,
+            ..Default::default()
+        };
+        let mut s = Scheduler::new(cfg);
+        s.submit(req(0, 16, 2));
+        s.submit(req(1, 16, 2));
+        let plan = s.plan(0.0);
+        assert_eq!(
+            plan,
+            vec![PlanItem { seq: 0, work: PlanWork::Prefill { start: 0, end: 10 } }],
+            "budget exhausted by seq 0: seq 1 gets nothing this iteration"
+        );
+        s.on_prefill_chunk(0, 10);
+        let plan = s.plan(0.0);
+        assert_eq!(
+            plan,
+            vec![
+                PlanItem { seq: 0, work: PlanWork::Prefill { start: 10, end: 16 } },
+                PlanItem { seq: 1, work: PlanWork::Prefill { start: 0, end: 4 } },
+            ],
+            "leftover budget flows to the next prefilling sequence"
+        );
+    }
+
+    /// Chunking composes with prefix caching: the first chunk starts at
+    /// `cached_ctx`, so cached pages are never re-run.
+    #[test]
+    fn chunks_start_after_cached_prefix() {
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            kv_pages: 8,
+            page_tokens: 16,
+            max_seq: 256,
+            prefix_cache: true,
+            prefill_chunk: 24,
+        };
+        let mut s = Scheduler::new(cfg);
+        let prompt: Vec<u32> = (0..32).collect();
+        s.submit(Request { id: 0, arrival_s: 0.0, prompt: prompt.clone(), max_new_tokens: 2 });
+        s.submit(Request { id: 1, arrival_s: 0.0, prompt, max_new_tokens: 2 });
+        let plan = s.plan(0.0);
+        assert_eq!(plan[0], PlanItem { seq: 0, work: PlanWork::Prefill { start: 0, end: 24 } });
+        assert!(
+            !plan.iter().any(|p| p.seq == 1),
+            "budget consumed by the cold admission"
+        );
+        s.on_prefill_chunk(0, 24);
+        let plan = s.plan(0.0);
+        assert_eq!(plan[0], PlanItem { seq: 0, work: PlanWork::Prefill { start: 24, end: 32 } });
+        assert_eq!(
+            plan[1],
+            PlanItem { seq: 1, work: PlanWork::Prefill { start: 16, end: 32 } },
+            "cached 16-token prefix is skipped: seq 1's first chunk starts there"
+        );
+        assert_eq!(s.seq(1).unwrap().cached_ctx, 16);
+        assert!(s.check_accounting());
+    }
+
+    /// Cancellation before admission: the queued request disappears
+    /// without ever touching the pool, and later arrivals still run.
+    #[test]
+    fn cancel_waiting_removes_queued_request() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        s.submit(req(0, 8, 2));
+        s.submit(req(1, 8, 2));
+        s.submit(req(2, 8, 2));
+        assert!(s.cancel_waiting(1).is_some(), "queued request cancelled");
+        assert!(s.cancel_waiting(1).is_none(), "already gone");
+        assert_eq!(s.pending(), 2);
+        assert_eq!(s.pool.used_pages(), 0);
+        assert_eq!(s.plan(0.0).len(), 1);
+        assert_eq!(s.plan(0.0)[0].seq, 0, "head request unaffected");
+        assert!(s.check_accounting());
+    }
+
     #[test]
     fn property_scheduler_never_starves() {
-        // Every submitted request eventually completes under any
-        // interleaving of batch sizes and lengths.
+        // Every submitted request eventually completes (or is cancelled)
+        // under any interleaving of batch sizes, lengths and chunking.
         proptest::check_with("scheduler liveness", 64, |r| {
             let cfg = SchedulerConfig {
                 max_batch: 1 + r.below(4) as usize,
                 kv_pages: 32,
                 page_tokens: 8,
                 max_seq: 64,
+                prefill_chunk: (r.below(4) * 4) as usize,
                 ..Default::default()
             };
             let mut s = Scheduler::new(cfg);
@@ -447,7 +697,7 @@ mod tests {
             for t in trace {
                 s.submit(t);
             }
-            drive_to_drain(&mut s, total);
+            drive_to_drain(&mut s, total, r);
         });
     }
 
@@ -464,6 +714,9 @@ mod tests {
                 page_tokens: 8,
                 max_seq: 128,
                 prefix_cache: true,
+                // Randomly chunked prefill: the accounting must hold at
+                // any budget, including mid-prompt iterations.
+                prefill_chunk: (r.below(3) * 8) as usize,
             };
             let mut s = Scheduler::new(cfg);
             let trace = generate_shared_prefix_trace(&SharedPrefixConfig {
@@ -480,19 +733,34 @@ mod tests {
             for t in trace {
                 s.submit(t);
             }
-            drive_to_drain(&mut s, total);
+            drive_to_drain(&mut s, total, r);
         });
     }
 
     /// Shared driver for the liveness/accounting properties: run the
-    /// scheduler to drain, checking `check_accounting` after EVERY step.
-    fn drive_to_drain(s: &mut Scheduler, total: usize) {
-        let mut finished = 0;
+    /// scheduler to drain via `plan` (chunk-aware), randomly cancelling
+    /// requests mid-prefill, mid-decode and while queued, checking
+    /// `check_accounting` after EVERY step.
+    fn drive_to_drain(s: &mut Scheduler, total: usize, r: &mut crate::util::Rng) {
+        let mut resolved = 0; // completed or cancelled
         let mut now = 0.0f64;
         for _ in 0..10_000 {
-            let batch = s.schedule(now);
+            // Random cancellation: a queued request is dropped from the
+            // waiting line; a running one (possibly mid-prefill) is
+            // retired, which must release its pages immediately.
+            if r.below(8) == 0 {
+                let id = r.below(total as u64);
+                if s.cancel_waiting(id).is_some() {
+                    resolved += 1;
+                } else if s.seq(id).is_some() {
+                    s.retire(id);
+                    resolved += 1;
+                }
+                assert!(s.check_accounting(), "desync after cancellation");
+            }
+            let plan = s.plan(now);
             assert!(s.check_accounting(), "desync right after admission");
-            if batch.is_empty() {
+            if plan.is_empty() {
                 if s.is_drained() {
                     break;
                 }
@@ -501,18 +769,24 @@ mod tests {
                 now = t;
                 continue;
             }
-            for id in batch {
-                let prefilled = s.seq(id).unwrap().prefilled;
-                if !prefilled {
-                    s.on_prefill_done(id, 1);
-                } else {
-                    match s.on_decode_done(id, 2) {
+            for item in plan {
+                let id = item.seq;
+                match item.work {
+                    PlanWork::Prefill { end, .. } => {
+                        let plen = s.seq(id).unwrap().req.prompt.len();
+                        if end == plen {
+                            s.on_prefill_done(id, 1);
+                        } else {
+                            s.on_prefill_chunk(id, end);
+                        }
+                    }
+                    PlanWork::Decode => match s.on_decode_done(id, 2) {
                         DecodeOutcome::Running => {}
                         DecodeOutcome::Finished | DecodeOutcome::EvictedKvFull => {
                             s.retire(id);
-                            finished += 1;
+                            resolved += 1;
                         }
-                    }
+                    },
                 }
                 // The core property: scheduler ctx == pool tokens after
                 // EVERY step, for every sequence — shared pages included.
@@ -520,8 +794,9 @@ mod tests {
             }
             now += 0.01;
         }
-        assert_eq!(finished, total, "all requests must finish");
+        assert_eq!(resolved, total, "all requests must finish or cancel");
         assert!(s.is_drained());
         assert!(s.pool.check_invariants());
+        assert_eq!(s.pool.used_pages(), 0, "cancellation must release pages");
     }
 }

@@ -1,42 +1,63 @@
-//! The serving loop: a continuous-batching engine on a virtual clock.
+//! Serving data model + the offline serving client.
 //!
-//! Every iteration the scheduler admits arrived requests and hands back
-//! the runnable set; the backend executes ONE batched step over it
-//! (prefilling new sequences, decoding the rest) and reports how many
-//! seconds of model time the step took.  The virtual clock advances by
-//! that amount, which makes admission, TTFT and per-request latency
-//! deterministic functions of the trace and the backend's timing model:
-//! the `sim::Engine`-backed backend reports the FlightLLM accelerator's
+//! The engine loop itself lives in `service::EngineCore` (one batched
+//! `ModelBackend::step` per iteration, chunk-aware prefill, sampling,
+//! retirement, streaming).  This module defines what flows through it —
+//! `SeqWork`/`SeqSlot`/`StepOutput` on the way in, `RequestResult` and
+//! the aggregate `ServeStats` on the way out — and `Server`, the
+//! offline replay client: `run_trace` submits a whole pre-collected
+//! trace and drives the shared engine core to drain on the virtual
+//! clock.  The live front-end (`service::Service`/`LiveService`) drives
+//! the SAME core from a request channel.
+//!
+//! The virtual clock advances by each step's reported model time, which
+//! makes admission, TTFT and per-request latency deterministic
+//! functions of the trace and the backend's timing model: the
+//! `sim::Engine`-backed backend reports the FlightLLM accelerator's
 //! latencies, while the PJRT runtime backend reports measured host time.
 //!
-//! Prefix caching: a `Prefill` slot carries `cached_ctx`, the prompt
-//! tokens already materialized in shared KV pages — a backend only has
-//! to run the remaining suffix.  `ServeStats` reports the hit counters
-//! and the peak page footprint so cache-on/off runs can be compared.
+//! Prefix caching + chunked prefill: a `Prefill` slot carries the chunk
+//! range `[chunk_start, chunk_end)` of prompt tokens to run this
+//! iteration (the first chunk starts at `cached_ctx`, the prompt tokens
+//! already materialized in shared KV pages).  Only the final chunk
+//! (`chunk_end == prompt.len()`) produces a sampled token.
 //!
 //! TTFT and latency are measured from request ARRIVAL, so queueing delay
 //! is included (the paper's serving scenario, §1).
 
-use std::collections::HashMap;
 use std::time::Instant;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::Result;
 
 use crate::workload::Request;
 
 use super::sampler::Sampler;
-use super::scheduler::{DecodeOutcome, Scheduler, SchedulerConfig};
+use super::scheduler::{Scheduler, SchedulerConfig};
+use super::service::{ClockMode, EngineCore, Tick};
 
 /// One sequence's share of a batched engine iteration.
 #[derive(Debug, Clone)]
 pub enum SeqWork {
-    /// First iteration: run the prompt through the model.  The first
-    /// `cached_ctx` tokens are already in (shared) KV pages: the backend
-    /// only needs to compute the suffix, but sees the full prompt for
-    /// positioning and (on recompute-everything backends) parity.
-    Prefill { prompt: Vec<i32>, cached_ctx: usize },
+    /// Run prompt tokens `[chunk_start, chunk_end)` through the model.
+    /// The first `cached_ctx` tokens were served from shared KV pages
+    /// (never re-run); under chunked prefill the remainder arrives over
+    /// several iterations.  The full prompt is carried for positioning
+    /// and (on recompute-everything backends) parity; the chunk is
+    /// final — and must yield real logits — iff `chunk_end` equals the
+    /// prompt length.
+    Prefill { prompt: Vec<i32>, cached_ctx: usize, chunk_start: usize, chunk_end: usize },
     /// One decode step: feed the last sampled token at position `pos`.
     Decode { last: i32, pos: i32 },
+}
+
+impl SeqWork {
+    /// Does this slot produce a sampled token this iteration?
+    pub fn yields_token(&self) -> bool {
+        match self {
+            SeqWork::Prefill { prompt, chunk_end, .. } => *chunk_end >= prompt.len(),
+            SeqWork::Decode { .. } => true,
+        }
+    }
 }
 
 /// A slot in a batched step.
@@ -49,7 +70,9 @@ pub struct SeqSlot {
 /// What one batched step produced.
 #[derive(Debug, Clone)]
 pub struct StepOutput {
-    /// Per-slot logits, same order as the input batch.
+    /// Per-slot logits, same order as the input batch.  Non-final
+    /// prefill chunks still contribute a row (it is ignored), so the
+    /// row count always matches the batch.
     pub logits: Vec<Vec<f32>>,
     /// Seconds of model time the step took (virtual for the simulator,
     /// measured wall time for the PJRT runtime).
@@ -81,6 +104,9 @@ pub struct RequestResult {
     pub queue_s: f64,
     /// True if the sequence was cut short by KV-pool exhaustion.
     pub evicted: bool,
+    /// True if the client cancelled the request (its KV pages were
+    /// released immediately; `tokens` holds whatever was generated).
+    pub cancelled: bool,
 }
 
 /// Aggregate serving statistics.
@@ -99,8 +125,21 @@ pub struct ServeStats {
     pub decode_steps: u64,
     /// Serving-clock seconds of those pure decode steps.
     pub decode_time_s: f64,
+    /// Decode inter-token gaps, serving-clock seconds: for every
+    /// generated token after a request's first, the time since its
+    /// previous token.  A long prefill sharing an iteration with decodes
+    /// shows up here as a spike — the latency chunked prefill removes.
+    /// Bounded: a long-lived service keeps only the most recent
+    /// [`ITL_SAMPLE_CAP`] samples (ring overwrite), so the percentiles
+    /// describe recent traffic and memory stays flat.
+    pub itl_s: Vec<f64>,
+    /// Decode gaps observed over the whole run (`itl_s` holds at most
+    /// the last [`ITL_SAMPLE_CAP`] of them).
+    pub itl_total: u64,
     /// Requests rejected at admission (prompt cannot fit the KV pool).
     pub rejected: u64,
+    /// Requests cancelled by their client (mid-flight or while queued).
+    pub cancelled: u64,
     /// Admissions that reused at least one cached prefix page.
     pub prefix_hits: u64,
     /// Prompt tokens served from the prefix cache (prefill skipped).
@@ -108,6 +147,38 @@ pub struct ServeStats {
     /// Peak pages holding live sequence data (shared pages count once;
     /// retained cache pages excluded) — the KV-capacity figure of merit.
     pub peak_kv_pages: usize,
+}
+
+/// Most recent decode inter-token gaps retained for the ITL
+/// percentiles; older samples are overwritten ring-style so an
+/// always-on `LiveService` does not grow one f64 per served token
+/// forever.
+pub const ITL_SAMPLE_CAP: usize = 65_536;
+
+/// Nearest-rank percentile of a sample.  Returns 0.0 on an empty set —
+/// a zero-completion run must yield zeros, never NaN or a panic.
+fn percentile_of(vals: &[f64], q: f64) -> f64 {
+    if vals.is_empty() {
+        return 0.0;
+    }
+    let mut vals = vals.to_vec();
+    vals.sort_by(|a, b| a.partial_cmp(b).expect("samples are finite"));
+    let idx = ((q / 100.0) * (vals.len() - 1) as f64).round() as usize;
+    vals[idx.min(vals.len() - 1)]
+}
+
+/// Mean of a sample; 0.0 when empty (never NaN).
+fn mean(it: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut n) = (0.0, 0u64);
+    for v in it {
+        sum += v;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
 }
 
 impl ServeStats {
@@ -119,28 +190,43 @@ impl ServeStats {
         self.decode_steps as f64 / self.decode_time_s
     }
 
+    /// Record one decode inter-token gap, ring-overwriting the oldest
+    /// sample once [`ITL_SAMPLE_CAP`] are held.
+    pub(crate) fn record_itl(&mut self, gap_s: f64) {
+        let i = self.itl_total as usize;
+        self.itl_total += 1;
+        if self.itl_s.len() < ITL_SAMPLE_CAP {
+            self.itl_s.push(gap_s);
+        } else {
+            self.itl_s[i % ITL_SAMPLE_CAP] = gap_s;
+        }
+    }
+
+    /// Results that ran to completion.  Cancelled requests stay in
+    /// `results` (the client's final record) but are EXCLUDED from the
+    /// latency aggregates below — a request the client killed has no
+    /// meaningful TTFT or end-to-end latency.
+    fn completed(&self) -> impl Iterator<Item = &RequestResult> + '_ {
+        self.results.iter().filter(|r| !r.cancelled)
+    }
+
     pub fn mean_latency_s(&self) -> f64 {
-        mean(self.results.iter().map(|r| r.latency_s))
+        mean(self.completed().map(|r| r.latency_s))
     }
 
     pub fn mean_ttft_s(&self) -> f64 {
-        mean(self.results.iter().map(|r| r.ttft_s))
+        mean(self.completed().map(|r| r.ttft_s))
     }
 
     pub fn mean_queue_s(&self) -> f64 {
-        mean(self.results.iter().map(|r| r.queue_s))
+        mean(self.completed().map(|r| r.queue_s))
     }
 
-    /// The `q`-th percentile (nearest-rank on the sorted sample) of a
-    /// per-request metric; 0.0 when no requests completed.
+    /// The `q`-th percentile of a per-request metric; 0.0 when no
+    /// requests completed.
     fn percentile(&self, q: f64, f: impl Fn(&RequestResult) -> f64) -> f64 {
-        if self.results.is_empty() {
-            return 0.0;
-        }
-        let mut vals: Vec<f64> = self.results.iter().map(f).collect();
-        vals.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
-        let idx = ((q / 100.0) * (vals.len() - 1) as f64).round() as usize;
-        vals[idx.min(vals.len() - 1)]
+        let vals: Vec<f64> = self.completed().map(f).collect();
+        percentile_of(&vals, q)
     }
 
     pub fn p50_ttft_s(&self) -> f64 {
@@ -159,12 +245,31 @@ impl ServeStats {
         self.percentile(99.0, |r| r.latency_s)
     }
 
+    pub fn mean_itl_s(&self) -> f64 {
+        mean(self.itl_s.iter().copied())
+    }
+
+    pub fn p50_itl_s(&self) -> f64 {
+        percentile_of(&self.itl_s, 50.0)
+    }
+
+    /// P99 decode inter-token latency — the figure chunked prefill
+    /// improves on mixed prefill/decode traffic.
+    pub fn p99_itl_s(&self) -> f64 {
+        percentile_of(&self.itl_s, 99.0)
+    }
+
+    pub fn max_itl_s(&self) -> f64 {
+        self.itl_s.iter().copied().fold(0.0, f64::max)
+    }
+
     /// Fraction of completed requests that hit the prefix cache.
     pub fn prefix_hit_rate(&self) -> f64 {
-        if self.results.is_empty() {
+        let completed = self.completed().count();
+        if completed == 0 {
             return 0.0;
         }
-        self.prefix_hits as f64 / self.results.len() as f64
+        self.prefix_hits as f64 / completed as f64
     }
 
     /// Human-readable summary (one printer for the CLI and examples).
@@ -172,7 +277,7 @@ impl ServeStats {
     pub fn summary(&self, clock_label: &str) -> String {
         let mut out = format!(
             "completed {} requests in {:.3}s {clock_label} ({} engine steps)\n",
-            self.results.len(),
+            self.completed().count(),
             self.served_s,
             self.steps
         );
@@ -181,6 +286,9 @@ impl ServeStats {
                 "rejected {} requests (prompt cannot fit the KV pool)\n",
                 self.rejected
             ));
+        }
+        if self.cancelled > 0 {
+            out.push_str(&format!("cancelled {} requests (client-initiated)\n", self.cancelled));
         }
         out.push_str(&format!(
             "decode throughput {:.1} tok/s, mean TTFT {:.1} ms (queue {:.1} ms), \
@@ -199,6 +307,15 @@ impl ServeStats {
             self.p99_latency_s() * 1e3,
             self.peak_kv_pages
         ));
+        if !self.itl_s.is_empty() {
+            out.push_str(&format!(
+                "\ndecode ITL mean/P50/P99/max {:.2}/{:.2}/{:.2}/{:.2} ms",
+                self.mean_itl_s() * 1e3,
+                self.p50_itl_s() * 1e3,
+                self.p99_itl_s() * 1e3,
+                self.max_itl_s() * 1e3
+            ));
+        }
         if self.prefix_hits > 0 {
             out.push_str(&format!(
                 "\nprefix cache: {} hits ({:.0}% of requests), {} prompt tokens \
@@ -212,34 +329,22 @@ impl ServeStats {
     }
 }
 
-fn mean(it: impl Iterator<Item = f64>) -> f64 {
-    let (mut sum, mut n) = (0.0, 0u64);
-    for v in it {
-        sum += v;
-        n += 1;
-    }
-    if n == 0 {
-        0.0
-    } else {
-        sum / n as f64
-    }
-}
-
-/// The serving coordinator.
+/// The offline serving client: replays a pre-collected trace through
+/// the shared engine core (`service::EngineCore`) on the virtual clock.
+/// Live traffic goes through `service::Service` / `service::LiveService`
+/// instead — same loop, fed by a request channel.
 pub struct Server<B: ModelBackend> {
-    backend: B,
-    scheduler: Scheduler,
-    sampler: Sampler,
+    core: EngineCore<B>,
 }
 
 impl<B: ModelBackend> Server<B> {
     pub fn new(backend: B, cfg: SchedulerConfig, sampler: Sampler) -> Self {
-        Self { backend, scheduler: Scheduler::new(cfg), sampler }
+        Self { core: EngineCore::new(backend, Scheduler::new(cfg), sampler, ClockMode::Virtual) }
     }
 
     /// The scheduler (inspection; the serving loop owns mutation).
     pub fn scheduler(&self) -> &Scheduler {
-        &self.scheduler
+        self.core.scheduler()
     }
 
     /// Run a whole trace to completion (offline replay: all requests are
@@ -247,214 +352,22 @@ impl<B: ModelBackend> Server<B> {
     /// clock, so a request submitted late still queues realistically).
     pub fn run_trace(&mut self, mut trace: Vec<Request>) -> Result<ServeStats> {
         trace.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
-        let arrivals: HashMap<u64, f64> = trace.iter().map(|r| (r.id, r.arrival_s)).collect();
         for r in trace {
-            self.scheduler.submit(r);
+            self.core.submit(r, None);
         }
-        let mut stats = ServeStats::default();
         let host_t0 = Instant::now();
-        let mut clock = 0.0f64; // serving-clock seconds
-        let mut first_token_s: HashMap<u64, f64> = HashMap::new();
-
-        loop {
-            let batch = self.scheduler.schedule(clock);
-            // Admission just allocated prompt pages: sample the footprint.
-            stats.peak_kv_pages = stats.peak_kv_pages.max(self.scheduler.pool.used_pages());
-            if batch.is_empty() {
-                if self.scheduler.is_drained() {
-                    break;
-                }
-                // Residents that are genuinely finished (done or at the
-                // context cap) are retired — and ONLY those.
-                let stuck: Vec<u64> = self
-                    .scheduler
-                    .running()
-                    .iter()
-                    .filter(|s| s.done() || s.context_capped(self.scheduler.cfg.max_seq))
-                    .map(|s| s.req.id)
-                    .collect();
-                if !stuck.is_empty() {
-                    for seq in stuck {
-                        self.finish(seq, false, clock, &arrivals, &mut first_token_s, &mut stats);
-                    }
-                    continue;
-                }
-                if self.scheduler.running().is_empty() {
-                    if let Some(t) = self.scheduler.next_arrival_s() {
-                        if t > clock {
-                            // Machine idle: fast-forward to the next arrival.
-                            clock = t;
-                            continue;
-                        }
-                        // Arrived, machine empty, still unadmittable: the
-                        // prompt can never fit the KV pool. Reject it
-                        // explicitly instead of looping forever.
-                        let _ = self.scheduler.reject_front();
-                        stats.rejected += 1;
-                        continue;
-                    }
-                }
-                bail!("scheduler stalled: nothing runnable but trace not drained");
-            }
-
-            // Build the batched step from scheduler state.
-            let slots: Vec<SeqSlot> = batch
-                .iter()
-                .map(|&id| {
-                    let s = self.scheduler.seq(id).expect("scheduled sequence exists");
-                    let work = if !s.prefilled {
-                        SeqWork::Prefill {
-                            prompt: s.req.prompt.iter().map(|&t| t as i32).collect(),
-                            cached_ctx: s.cached_ctx,
-                        }
-                    } else {
-                        SeqWork::Decode {
-                            last: *s.generated.last().expect("prefilled seq has a token")
-                                as i32,
-                            pos: s.ctx as i32,
-                        }
-                    };
-                    SeqSlot { seq: id, work }
-                })
-                .collect();
-
-            let out = self.backend.step(&slots)?;
-            ensure!(
-                out.logits.len() == slots.len(),
-                "backend returned {} logit rows for a batch of {}",
-                out.logits.len(),
-                slots.len()
-            );
-            clock += out.step_s.max(0.0);
-            stats.steps += 1;
-            let n_decode = slots
-                .iter()
-                .filter(|s| matches!(s.work, SeqWork::Decode { .. }))
-                .count() as u64;
-            // Only pure decode steps sample throughput: a mixed step's
-            // cost is dominated by its prefills and would deflate tok/s.
-            if n_decode == slots.len() as u64 {
-                stats.decode_steps += n_decode;
-                stats.decode_time_s += out.step_s.max(0.0);
-            }
-
-            // Sample each slot's token and record it with the scheduler.
-            let mut finished: Vec<(u64, bool)> = Vec::new();
-            for (slot, logits) in slots.iter().zip(&out.logits) {
-                let tok = self.sampler.sample(logits);
-                match slot.work {
-                    SeqWork::Prefill { .. } => {
-                        self.scheduler.on_prefill_done(slot.seq, tok);
-                        first_token_s.insert(slot.seq, clock);
-                    }
-                    SeqWork::Decode { .. } => {
-                        if self.scheduler.on_decode_done(slot.seq, tok)
-                            == DecodeOutcome::EvictedKvFull
-                        {
-                            finished.push((slot.seq, true));
-                        }
-                    }
-                }
-            }
-            // Decode appends may have opened (or CoW-copied) pages.
-            stats.peak_kv_pages = stats.peak_kv_pages.max(self.scheduler.pool.used_pages());
-            // Sweep completed sequences (token budget reached, or context
-            // cap hit — including prompts that fill the context at prefill).
-            let max_seq = self.scheduler.cfg.max_seq;
-            finished.extend(
-                self.scheduler
-                    .running()
-                    .iter()
-                    .filter(|s| s.done() || s.context_capped(max_seq))
-                    .map(|s| (s.req.id, false)),
-            );
-            for (seq, evicted) in finished {
-                self.finish(seq, evicted, clock, &arrivals, &mut first_token_s, &mut stats);
-            }
-        }
-        stats.served_s = clock;
+        while self.core.tick()? != Tick::Drained {}
+        let mut stats = self.core.stats_snapshot();
         stats.wall_s = host_t0.elapsed().as_secs_f64();
-        let pool = self.scheduler.pool.stats();
-        stats.prefix_hits = pool.prefix_hits;
-        stats.prefix_cached_tokens = pool.cached_tokens_served;
         Ok(stats)
-    }
-
-    fn finish(
-        &mut self,
-        seq: u64,
-        evicted: bool,
-        clock: f64,
-        arrivals: &HashMap<u64, f64>,
-        first_token_s: &mut HashMap<u64, f64>,
-        stats: &mut ServeStats,
-    ) {
-        if let Some(s) = self.scheduler.retire(seq) {
-            self.backend.release(seq);
-            let arrival = arrivals.get(&seq).copied().unwrap_or(0.0);
-            let first = first_token_s.remove(&seq).unwrap_or(clock);
-            stats.results.push(RequestResult {
-                id: seq,
-                prompt_len: s.req.prompt.len(),
-                tokens: s.generated,
-                latency_s: clock - arrival,
-                ttft_s: first - arrival,
-                queue_s: s.admitted_s - arrival,
-                evicted,
-            });
-        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::testing::EchoBackend;
     use crate::workload::{generate_trace, TraceConfig};
-
-    /// A deterministic toy backend: logits favor (last_token + 1) % V.
-    /// Step cost is flat per phase — prefills charge `prefill_s` each,
-    /// any number of decode slots share one `decode_s` (so batching
-    /// visibly improves aggregate throughput).
-    struct EchoBackend {
-        vocab: usize,
-        prefill_s: f64,
-        decode_s: f64,
-    }
-
-    impl EchoBackend {
-        fn new(vocab: usize) -> Self {
-            Self { vocab, prefill_s: 2e-3, decode_s: 1e-3 }
-        }
-    }
-
-    impl ModelBackend for EchoBackend {
-        fn step(&mut self, batch: &[SeqSlot]) -> Result<StepOutput> {
-            let mut step_s = 0.0;
-            let mut any_decode = false;
-            let logits = batch
-                .iter()
-                .map(|slot| {
-                    let last = match &slot.work {
-                        SeqWork::Prefill { prompt, .. } => {
-                            step_s += self.prefill_s;
-                            *prompt.last().unwrap_or(&0)
-                        }
-                        SeqWork::Decode { last, .. } => {
-                            any_decode = true;
-                            *last
-                        }
-                    } as usize;
-                    let mut l = vec![0.0f32; self.vocab];
-                    l[(last + 1) % self.vocab] = 10.0;
-                    l
-                })
-                .collect();
-            if any_decode {
-                step_s += self.decode_s;
-            }
-            Ok(StepOutput { logits, step_s })
-        }
-    }
 
     fn req(id: u64, arrival_s: f64, plen: usize, dlen: u32) -> Request {
         Request {
@@ -494,11 +407,13 @@ mod tests {
             }
             assert_eq!(r.tokens.len(), 4);
             assert!(!r.evicted);
+            assert!(!r.cancelled);
         }
         assert!(stats.decode_steps >= 5 * 3);
         assert!(stats.served_s > 0.0);
         assert!(stats.peak_kv_pages > 0, "prompt pages were live at some point");
         assert_eq!(stats.prefix_hits, 0, "caching off by default");
+        assert!(!stats.itl_s.is_empty(), "decode gaps were sampled");
     }
 
     #[test]
@@ -578,8 +493,53 @@ mod tests {
         assert!(stats.p50_ttft_s() < stats.p99_ttft_s(), "spread is visible");
         assert!(stats.p50_latency_s() <= stats.p99_latency_s());
         assert!(stats.p50_ttft_s() > 0.0);
-        // Empty stats stay well-defined.
-        assert_eq!(ServeStats::default().p99_ttft_s(), 0.0);
+    }
+
+    /// Satellite: every percentile/mean helper is well-defined on a
+    /// zero-completion run — zeros across the board, no NaN, no panic.
+    #[test]
+    fn empty_stats_yield_zeros_not_nan() {
+        let stats = ServeStats::default();
+        let vals = [
+            stats.decode_tps(),
+            stats.mean_latency_s(),
+            stats.mean_ttft_s(),
+            stats.mean_queue_s(),
+            stats.p50_ttft_s(),
+            stats.p99_ttft_s(),
+            stats.p50_latency_s(),
+            stats.p99_latency_s(),
+            stats.mean_itl_s(),
+            stats.p50_itl_s(),
+            stats.p99_itl_s(),
+            stats.max_itl_s(),
+            stats.prefix_hit_rate(),
+        ];
+        for (i, v) in vals.iter().enumerate() {
+            assert_eq!(*v, 0.0, "helper {i} must be 0.0 on empty stats");
+            assert!(!v.is_nan(), "helper {i} must not be NaN");
+        }
+        // The summary printer must not panic either.
+        let text = stats.summary("virtual");
+        assert!(text.contains("completed 0 requests"));
+        assert!(!text.contains("NaN"));
+    }
+
+    /// Satellite: the ITL buffer is a bounded ring — a long-lived
+    /// service keeps the most recent samples and flat memory.
+    #[test]
+    fn itl_ring_caps_memory_and_keeps_recent_samples() {
+        let mut stats = ServeStats::default();
+        for i in 0..(ITL_SAMPLE_CAP + 10) {
+            stats.record_itl(i as f64);
+        }
+        assert_eq!(stats.itl_s.len(), ITL_SAMPLE_CAP, "capped");
+        assert_eq!(stats.itl_total, (ITL_SAMPLE_CAP + 10) as u64, "all gaps counted");
+        // The 10 oldest samples were overwritten by the newest 10.
+        assert_eq!(stats.itl_s[0], ITL_SAMPLE_CAP as f64);
+        assert_eq!(stats.itl_s[9], (ITL_SAMPLE_CAP + 9) as f64);
+        assert_eq!(stats.itl_s[10], 10.0);
+        assert_eq!(stats.max_itl_s(), (ITL_SAMPLE_CAP + 9) as f64);
     }
 
     #[test]
@@ -699,6 +659,38 @@ mod tests {
         }
     }
 
+    /// Chunked prefill is a pure scheduling change: the same trace
+    /// produces byte-identical tokens at any chunk size, and a chunked
+    /// prompt takes one backend iteration per chunk.
+    #[test]
+    fn chunked_prefill_preserves_tokens() {
+        let run = |prefill_chunk: usize| {
+            let mut server = Server::new(
+                EchoBackend::new(64),
+                SchedulerConfig {
+                    max_batch: 2,
+                    max_seq: 128,
+                    prefill_chunk,
+                    ..Default::default()
+                },
+                Sampler::greedy(),
+            );
+            let trace = vec![req(0, 0.0, 40, 6), req(1, 0.0, 8, 6)];
+            server.run_trace(trace).unwrap()
+        };
+        let whole = run(0);
+        let chunked = run(16);
+        assert_eq!(whole.results.len(), 2);
+        assert_eq!(chunked.results.len(), 2);
+        for a in &whole.results {
+            let b = chunked.results.iter().find(|r| r.id == a.id).unwrap();
+            assert_eq!(a.tokens, b.tokens, "chunking must not change tokens");
+        }
+        // 40 tokens at 16/iteration = 3 chunks (vs 1 unchunked): the
+        // chunked run needs more engine steps for the same tokens.
+        assert!(chunked.steps > whole.steps);
+    }
+
     /// Prefix caching through the full serving loop: shared-prompt
     /// requests hit the cache, the hit surfaces in ServeStats, and the
     /// backend sees the cached_ctx on its prefill slot.
@@ -712,6 +704,7 @@ mod tests {
                 page_tokens: 4,
                 max_seq: 64,
                 prefix_cache: true,
+                ..Default::default()
             },
             Sampler::greedy(),
         );

@@ -1,0 +1,826 @@
+//! The live serving front-end: clients `submit` requests and get a
+//! `RequestHandle` that streams tokens as they are generated, supports
+//! mid-flight cancellation (KV pages released immediately), and
+//! resolves to a final `RequestResult`.
+//!
+//! Architecture — one engine loop, three drivers:
+//!
+//! - [`EngineCore`] is the continuous-batching iteration: plan
+//!   (admission + chunked prefill + decode priority), one batched
+//!   `ModelBackend::step`, sampling, streaming, retirement.  It is
+//!   clock-agnostic: `ClockMode::Virtual` advances by each step's
+//!   reported model time, `ClockMode::Real` follows the host clock.
+//! - [`Service`] drives the core in virtual-clock mode under MANUAL
+//!   `tick`/`drain` control — the deterministic harness the tests (and
+//!   `Server::run_trace`) use.
+//! - [`LiveService`] spawns the core on a background thread fed by an
+//!   mpsc command channel — the open-loop, real-time front-end.
+//!
+//! Commands flow through one channel in both modes, so cancellation and
+//! submission take the identical code path whether the clock is virtual
+//! or real.  A dropped `RequestHandle` cancels its request implicitly:
+//! the first undeliverable token tells the engine the client is gone.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::workload::Request;
+
+use super::sampler::Sampler;
+use super::scheduler::{DecodeOutcome, PlanWork, Scheduler, SchedulerConfig};
+use super::server::{ModelBackend, RequestResult, SeqSlot, SeqWork, ServeStats};
+
+/// What a `RequestHandle` receives while its request is served.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// One generated token (the first arrives when prefill completes).
+    Token(u32),
+    /// Terminal: the request ran to completion, was evicted, or was
+    /// cancelled — see the result's `evicted` / `cancelled` flags.
+    Done(RequestResult),
+    /// Terminal: the prompt can never fit the KV pool.
+    Rejected,
+}
+
+/// Client → engine commands (one channel for both clock modes).
+enum Command {
+    Submit(Request, Sender<StreamEvent>),
+    Cancel(u64),
+    Shutdown,
+}
+
+/// A client's view of one in-flight request.
+pub struct RequestHandle {
+    id: u64,
+    events: Receiver<StreamEvent>,
+    commands: Sender<Command>,
+}
+
+impl RequestHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Ask the engine to cancel this request.  Its KV pages are released
+    /// as soon as the command is processed; the handle still resolves
+    /// (with `cancelled = true`) via [`RequestHandle::wait`].
+    pub fn cancel(&self) {
+        let _ = self.commands.send(Command::Cancel(self.id));
+    }
+
+    /// Non-blocking poll for the next event (virtual-clock mode: call
+    /// between `tick`s).
+    pub fn try_event(&self) -> Option<StreamEvent> {
+        self.events.try_recv().ok()
+    }
+
+    /// Blocking receive (live mode).  `None` when the service is gone.
+    pub fn recv_event(&self) -> Option<StreamEvent> {
+        self.events.recv().ok()
+    }
+
+    /// Block until the request resolves, discarding interim tokens (the
+    /// result carries them all).  `None` if it was rejected or the
+    /// service shut down first.
+    pub fn wait(self) -> Option<RequestResult> {
+        loop {
+            match self.events.recv() {
+                Ok(StreamEvent::Done(r)) => return Some(r),
+                Ok(StreamEvent::Rejected) => return None,
+                Ok(StreamEvent::Token(_)) => {}
+                Err(_) => return None,
+            }
+        }
+    }
+}
+
+/// How the engine's serving clock advances.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum ClockMode {
+    /// Deterministic: the clock advances by each step's reported model
+    /// time and fast-forwards over idle gaps.
+    Virtual,
+    /// The clock follows host time elapsed since `t0` (live serving).
+    /// EVERY stat is on the host clock in this mode — per-step costs
+    /// are measured around `ModelBackend::step`, not taken from the
+    /// backend's (possibly virtual) reported time.
+    Real { t0: Instant },
+}
+
+/// What one engine tick did.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Tick {
+    /// Executed one batched backend step.
+    Stepped,
+    /// Bookkeeping only: retired finished sequences, rejected an
+    /// unservable request, or (virtual clock) jumped to the next
+    /// arrival.
+    Swept,
+    /// Real clock only: nothing runnable until the given arrival time.
+    Idle(f64),
+    /// No waiting and no running requests.
+    Drained,
+}
+
+/// Why a sequence left the running set.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum FinishKind {
+    Done,
+    Evicted,
+    Cancelled,
+}
+
+/// The continuous-batching engine iteration, shared by the offline
+/// `Server` and the live `Service`/`LiveService` front-ends.
+pub(crate) struct EngineCore<B: ModelBackend> {
+    backend: B,
+    scheduler: Scheduler,
+    sampler: Sampler,
+    mode: ClockMode,
+    /// Serving-clock seconds (monotone; follows `mode`).
+    clock: f64,
+    stats: ServeStats,
+    arrivals: HashMap<u64, f64>,
+    first_token_s: HashMap<u64, f64>,
+    last_token_s: HashMap<u64, f64>,
+    /// Streaming sinks for requests submitted with a subscriber.
+    subs: HashMap<u64, Sender<StreamEvent>>,
+}
+
+impl<B: ModelBackend> EngineCore<B> {
+    pub(crate) fn new(backend: B, scheduler: Scheduler, sampler: Sampler, mode: ClockMode) -> Self {
+        Self {
+            backend,
+            scheduler,
+            sampler,
+            mode,
+            clock: 0.0,
+            stats: ServeStats::default(),
+            arrivals: HashMap::new(),
+            first_token_s: HashMap::new(),
+            last_token_s: HashMap::new(),
+            subs: HashMap::new(),
+        }
+    }
+
+    pub(crate) fn scheduler(&self) -> &Scheduler {
+        &self.scheduler
+    }
+
+    fn now(&self) -> f64 {
+        match self.mode {
+            ClockMode::Virtual => self.clock,
+            ClockMode::Real { t0 } => t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Queue a request, optionally with a streaming subscriber.
+    pub(crate) fn submit(&mut self, req: Request, sub: Option<Sender<StreamEvent>>) {
+        self.arrivals.insert(req.id, req.arrival_s);
+        if let Some(tx) = sub {
+            self.subs.insert(req.id, tx);
+        }
+        self.scheduler.submit(req);
+    }
+
+    /// Cancel a request: a queued one vanishes without ever touching the
+    /// pool; a running one is retired NOW, releasing its KV pages, with
+    /// whatever tokens it generated.  Unknown ids are ignored.
+    pub(crate) fn cancel(&mut self, seq: u64) {
+        if let Some(req) = self.scheduler.cancel_waiting(seq) {
+            self.stats.cancelled += 1;
+            let arrival = self.arrivals.remove(&seq).unwrap_or(req.arrival_s);
+            let result = RequestResult {
+                id: seq,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                latency_s: (self.clock - arrival).max(0.0),
+                ttft_s: 0.0,
+                queue_s: 0.0,
+                evicted: false,
+                cancelled: true,
+            };
+            self.stats.results.push(result.clone());
+            if let Some(tx) = self.subs.remove(&seq) {
+                let _ = tx.send(StreamEvent::Done(result));
+            }
+        } else if self.scheduler.seq(seq).is_some() {
+            self.finish(seq, FinishKind::Cancelled);
+        }
+    }
+
+    /// Deliver an event to a request's subscriber.  `false` means the
+    /// client dropped its handle — the engine treats that as a cancel.
+    fn emit(&self, seq: u64, ev: StreamEvent) -> bool {
+        match self.subs.get(&seq) {
+            Some(tx) => tx.send(ev).is_ok(),
+            None => true,
+        }
+    }
+
+    /// Retire a sequence and resolve its result (no-op if already gone).
+    fn finish(&mut self, seq: u64, kind: FinishKind) {
+        let Some(s) = self.scheduler.retire(seq) else { return };
+        self.backend.release(seq);
+        if kind == FinishKind::Cancelled {
+            self.stats.cancelled += 1;
+        }
+        let arrival = self.arrivals.remove(&seq).unwrap_or(0.0);
+        // Only a request that actually produced a token has a TTFT — a
+        // cancel before the first token records 0.0 (and cancelled
+        // results are excluded from the ServeStats aggregates anyway).
+        let first = self.first_token_s.remove(&seq);
+        self.last_token_s.remove(&seq);
+        let result = RequestResult {
+            id: seq,
+            prompt_len: s.req.prompt.len(),
+            tokens: s.generated,
+            latency_s: self.clock - arrival,
+            ttft_s: first.map_or(0.0, |f| f - arrival),
+            queue_s: s.admitted_s - arrival,
+            evicted: kind == FinishKind::Evicted,
+            cancelled: kind == FinishKind::Cancelled,
+        };
+        self.stats.results.push(result.clone());
+        if let Some(tx) = self.subs.remove(&seq) {
+            let _ = tx.send(StreamEvent::Done(result));
+        }
+    }
+
+    /// One engine iteration: plan, step, sample, stream, retire.
+    pub(crate) fn tick(&mut self) -> Result<Tick> {
+        let now = self.now();
+        if now > self.clock {
+            self.clock = now;
+        }
+        let plan = self.scheduler.plan(self.clock);
+        // Admission just allocated prompt pages: sample the footprint.
+        self.stats.peak_kv_pages = self.stats.peak_kv_pages.max(self.scheduler.pool.used_pages());
+        if plan.is_empty() {
+            if self.scheduler.is_drained() {
+                return Ok(Tick::Drained);
+            }
+            // Residents that are genuinely finished (done or at the
+            // context cap) are retired — and ONLY those.
+            let max_seq = self.scheduler.cfg.max_seq;
+            let stuck: Vec<u64> = self
+                .scheduler
+                .running()
+                .iter()
+                .filter(|s| s.done() || s.context_capped(max_seq))
+                .map(|s| s.req.id)
+                .collect();
+            if !stuck.is_empty() {
+                for seq in stuck {
+                    self.finish(seq, FinishKind::Done);
+                }
+                return Ok(Tick::Swept);
+            }
+            if self.scheduler.running().is_empty() {
+                if let Some(t) = self.scheduler.next_arrival_s() {
+                    if t > self.clock {
+                        match self.mode {
+                            ClockMode::Virtual => {
+                                // Machine idle: fast-forward to the arrival.
+                                self.clock = t;
+                                return Ok(Tick::Swept);
+                            }
+                            ClockMode::Real { .. } => return Ok(Tick::Idle(t)),
+                        }
+                    }
+                    // Arrived, machine empty, still unadmittable: the
+                    // prompt can never fit the KV pool.  Reject it
+                    // explicitly instead of looping forever.
+                    if let Some(req) = self.scheduler.reject_front() {
+                        self.stats.rejected += 1;
+                        self.arrivals.remove(&req.id);
+                        if let Some(tx) = self.subs.remove(&req.id) {
+                            let _ = tx.send(StreamEvent::Rejected);
+                        }
+                    }
+                    return Ok(Tick::Swept);
+                }
+            }
+            bail!("scheduler stalled: nothing runnable but requests not drained");
+        }
+
+        // Build the batched step from the plan.
+        let slots: Vec<SeqSlot> = plan
+            .iter()
+            .map(|item| {
+                let s = self.scheduler.seq(item.seq).expect("planned sequence exists");
+                let work = match item.work {
+                    PlanWork::Decode => SeqWork::Decode {
+                        last: *s.generated.last().expect("prefilled seq has a token") as i32,
+                        pos: s.ctx as i32,
+                    },
+                    // The full prompt is copied for EVERY chunk: backends
+                    // detect the final chunk by `chunk_end == prompt.len()`
+                    // and the recompute-everything PJRT backend needs the
+                    // whole prompt there anyway.  O(len²/chunk) bytes per
+                    // prompt — accepted; revisit (Arc or an explicit
+                    // prompt_len field) if prompts grow past a few K.
+                    PlanWork::Prefill { start, end } => SeqWork::Prefill {
+                        prompt: s.req.prompt.iter().map(|&t| t as i32).collect(),
+                        cached_ctx: s.cached_ctx,
+                        chunk_start: start,
+                        chunk_end: end,
+                    },
+                };
+                SeqSlot { seq: item.seq, work }
+            })
+            .collect();
+
+        let step_wall = Instant::now();
+        let out = self.backend.step(&slots)?;
+        ensure!(
+            out.logits.len() == slots.len(),
+            "backend returned {} logit rows for a batch of {}",
+            out.logits.len(),
+            slots.len()
+        );
+        // Every stat stays on ONE clock: the virtual mode charges the
+        // backend's reported model time, the real mode charges measured
+        // host time (a simulated backend's virtual seconds would
+        // otherwise mix units with the wall-clock TTFT/latency).
+        let step_cost_s = match self.mode {
+            ClockMode::Virtual => out.step_s.max(0.0),
+            ClockMode::Real { .. } => step_wall.elapsed().as_secs_f64(),
+        };
+        match self.mode {
+            ClockMode::Virtual => self.clock += step_cost_s,
+            ClockMode::Real { t0 } => self.clock = self.clock.max(t0.elapsed().as_secs_f64()),
+        }
+        self.stats.steps += 1;
+        let n_decode = slots
+            .iter()
+            .filter(|s| matches!(s.work, SeqWork::Decode { .. }))
+            .count() as u64;
+        // Only pure decode steps sample throughput: a mixed step's
+        // cost is dominated by its prefills and would deflate tok/s.
+        if n_decode == slots.len() as u64 {
+            self.stats.decode_steps += n_decode;
+            self.stats.decode_time_s += step_cost_s;
+        }
+
+        // Sample each token-yielding slot and stream it; non-final
+        // prefill chunks only advance the prefill cursor.
+        let mut finished: Vec<(u64, FinishKind)> = Vec::new();
+        let mut dropped: Vec<u64> = Vec::new();
+        for (slot, logits) in slots.iter().zip(&out.logits) {
+            match &slot.work {
+                SeqWork::Prefill { chunk_end, .. } if !slot.work.yields_token() => {
+                    self.scheduler.on_prefill_chunk(slot.seq, *chunk_end);
+                }
+                SeqWork::Prefill { .. } => {
+                    let tok = self.sampler.sample(logits);
+                    self.scheduler.on_prefill_done(slot.seq, tok);
+                    self.first_token_s.insert(slot.seq, self.clock);
+                    self.last_token_s.insert(slot.seq, self.clock);
+                    if !self.emit(slot.seq, StreamEvent::Token(tok)) {
+                        dropped.push(slot.seq);
+                    }
+                }
+                SeqWork::Decode { .. } => {
+                    let tok = self.sampler.sample(logits);
+                    if let Some(prev) = self.last_token_s.insert(slot.seq, self.clock) {
+                        self.stats.record_itl(self.clock - prev);
+                    }
+                    if self.scheduler.on_decode_done(slot.seq, tok)
+                        == DecodeOutcome::EvictedKvFull
+                    {
+                        finished.push((slot.seq, FinishKind::Evicted));
+                    }
+                    if !self.emit(slot.seq, StreamEvent::Token(tok)) {
+                        dropped.push(slot.seq);
+                    }
+                }
+            }
+        }
+        // Decode appends may have opened (or CoW-copied) pages.
+        self.stats.peak_kv_pages = self.stats.peak_kv_pages.max(self.scheduler.pool.used_pages());
+        // Sweep completed sequences (token budget reached, or context
+        // cap hit — including prompts that fill the context at prefill).
+        let max_seq = self.scheduler.cfg.max_seq;
+        finished.extend(
+            self.scheduler
+                .running()
+                .iter()
+                .filter(|s| s.done() || s.context_capped(max_seq))
+                .map(|s| (s.req.id, FinishKind::Done)),
+        );
+        for (seq, kind) in finished {
+            self.finish(seq, kind);
+        }
+        // A failed send means the client dropped its handle: treat it
+        // as an implicit cancel so the pages come back immediately.
+        for seq in dropped {
+            self.cancel(seq);
+        }
+        Ok(Tick::Stepped)
+    }
+
+    /// A snapshot of the serving stats so far (prefix counters and the
+    /// serving-clock total filled in from live state).
+    pub(crate) fn stats_snapshot(&self) -> ServeStats {
+        let mut stats = self.stats.clone();
+        stats.served_s = self.clock;
+        let pool = self.scheduler.pool.stats();
+        stats.prefix_hits = pool.prefix_hits;
+        stats.prefix_cached_tokens = pool.cached_tokens_served;
+        stats
+    }
+}
+
+/// The virtual-clock service: the engine core plus a command channel,
+/// driven by MANUAL `tick`/`drain` calls — deterministic streaming and
+/// cancellation for tests and offline tools.  Commands (including
+/// cancels from handles) are applied at the start of each tick.
+pub struct Service<B: ModelBackend> {
+    core: EngineCore<B>,
+    cmd_tx: Sender<Command>,
+    cmd_rx: Receiver<Command>,
+}
+
+impl<B: ModelBackend> Service<B> {
+    pub fn new(backend: B, cfg: SchedulerConfig, sampler: Sampler) -> Self {
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let core = EngineCore::new(backend, Scheduler::new(cfg), sampler, ClockMode::Virtual);
+        Self { core, cmd_tx, cmd_rx }
+    }
+
+    /// Submit a request (the caller controls ids and arrival times —
+    /// that is what makes virtual-clock runs replayable).
+    pub fn submit(&self, req: Request) -> RequestHandle {
+        let (etx, erx) = mpsc::channel();
+        let id = req.id;
+        let _ = self.cmd_tx.send(Command::Submit(req, etx));
+        RequestHandle { id, events: erx, commands: self.cmd_tx.clone() }
+    }
+
+    fn apply_commands(&mut self) {
+        // One dispatcher for both clock modes; Shutdown is meaningless
+        // under manual ticking, so the flag it sets goes nowhere here.
+        let mut shutdown = false;
+        while let Ok(cmd) = self.cmd_rx.try_recv() {
+            apply(&mut self.core, cmd, &mut shutdown);
+        }
+    }
+
+    /// Apply pending commands, then run one engine iteration.
+    pub fn tick(&mut self) -> Result<Tick> {
+        self.apply_commands();
+        self.core.tick()
+    }
+
+    /// Tick until every submitted request has resolved.
+    pub fn drain(&mut self) -> Result<()> {
+        while self.tick()? != Tick::Drained {}
+        Ok(())
+    }
+
+    /// The scheduler (pool/accounting inspection in tests).
+    pub fn scheduler(&self) -> &Scheduler {
+        self.core.scheduler()
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.core.stats_snapshot()
+    }
+}
+
+/// The real-time front-end: the engine core runs on a background thread
+/// fed by the command channel; `submit` stamps arrivals with the host
+/// clock (open-loop traffic), handles stream tokens as the engine
+/// produces them, and `shutdown` drains in-flight work and returns the
+/// final stats.
+pub struct LiveService {
+    cmd_tx: Sender<Command>,
+    next_id: AtomicU64,
+    t0: Instant,
+    join: Option<thread::JoinHandle<ServeStats>>,
+}
+
+impl LiveService {
+    pub fn spawn<B>(backend: B, cfg: SchedulerConfig, sampler: Sampler) -> Self
+    where
+        B: ModelBackend + Send + 'static,
+    {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<Command>();
+        let t0 = Instant::now();
+        let join = thread::spawn(move || {
+            let mode = ClockMode::Real { t0 };
+            let mut core = EngineCore::new(backend, Scheduler::new(cfg), sampler, mode);
+            let mut shutdown = false;
+            loop {
+                while let Ok(cmd) = cmd_rx.try_recv() {
+                    apply(&mut core, cmd, &mut shutdown);
+                }
+                match core.tick() {
+                    Ok(Tick::Stepped | Tick::Swept) => {}
+                    Ok(Tick::Drained) => {
+                        if shutdown {
+                            break;
+                        }
+                        // Nothing in flight: block until the next command.
+                        match cmd_rx.recv_timeout(Duration::from_millis(2)) {
+                            Ok(cmd) => apply(&mut core, cmd, &mut shutdown),
+                            Err(RecvTimeoutError::Timeout) => {}
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                    Ok(Tick::Idle(_)) => thread::sleep(Duration::from_micros(200)),
+                    // A backend failure or stalled scheduler is fatal for
+                    // the engine: report it (outstanding handles resolve
+                    // to None) and hand back the stats gathered so far.
+                    Err(e) => {
+                        eprintln!("live service engine stopped: {e:#}");
+                        break;
+                    }
+                }
+            }
+            core.stats_snapshot()
+        });
+        Self { cmd_tx, next_id: AtomicU64::new(0), t0, join: Some(join) }
+    }
+
+    /// Submit a prompt; the arrival timestamp is the host clock NOW.
+    pub fn submit(&self, prompt: Vec<u32>, max_new_tokens: u32) -> RequestHandle {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            id,
+            arrival_s: self.t0.elapsed().as_secs_f64(),
+            prompt,
+            max_new_tokens,
+        };
+        let (etx, erx) = mpsc::channel();
+        let _ = self.cmd_tx.send(Command::Submit(req, etx));
+        RequestHandle { id, events: erx, commands: self.cmd_tx.clone() }
+    }
+
+    /// Drain in-flight requests, stop the engine thread, and return the
+    /// final serving stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.shutdown_inner().unwrap_or_default()
+    }
+
+    fn shutdown_inner(&mut self) -> Option<ServeStats> {
+        let _ = self.cmd_tx.send(Command::Shutdown);
+        self.join.take().and_then(|j| j.join().ok())
+    }
+}
+
+impl Drop for LiveService {
+    fn drop(&mut self) {
+        let _ = self.shutdown_inner();
+    }
+}
+
+fn apply<B: ModelBackend>(core: &mut EngineCore<B>, cmd: Command, shutdown: &mut bool) {
+    match cmd {
+        Command::Submit(req, tx) => core.submit(req, Some(tx)),
+        Command::Cancel(id) => core.cancel(id),
+        Command::Shutdown => *shutdown = true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testing::EchoBackend;
+    use crate::coordinator::Server;
+    use crate::workload::{generate_trace, TraceConfig};
+
+    fn req(id: u64, plen: usize, dlen: u32) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            prompt: (0..plen as u32).collect(),
+            max_new_tokens: dlen,
+        }
+    }
+
+    #[test]
+    fn virtual_service_streams_tokens_then_done() {
+        let mut svc = Service::new(
+            EchoBackend::new(32),
+            SchedulerConfig { max_seq: 64, ..Default::default() },
+            Sampler::greedy(),
+        );
+        let h = svc.submit(req(0, 4, 4));
+        svc.drain().unwrap();
+        let mut streamed = Vec::new();
+        let result = loop {
+            match h.try_event() {
+                Some(StreamEvent::Token(t)) => streamed.push(t),
+                Some(StreamEvent::Done(r)) => break r,
+                Some(StreamEvent::Rejected) => panic!("must not be rejected"),
+                None => panic!("event stream ended without Done"),
+            }
+        };
+        assert_eq!(streamed.len(), 4, "every token was streamed incrementally");
+        assert_eq!(streamed, result.tokens, "stream and result agree");
+        assert!(!result.cancelled && !result.evicted);
+        assert_eq!(svc.stats().results.len(), 1);
+        assert!(svc.scheduler().is_drained());
+    }
+
+    /// Cancelling mid-prefill (chunked, so prefill spans several ticks)
+    /// releases the KV pages immediately and still resolves the handle.
+    #[test]
+    fn cancel_mid_prefill_releases_pages_immediately() {
+        let mut svc = Service::new(
+            EchoBackend::new(32),
+            SchedulerConfig {
+                max_batch: 2,
+                kv_pages: 16,
+                page_tokens: 4,
+                max_seq: 64,
+                prefill_chunk: 8,
+                ..Default::default()
+            },
+            Sampler::greedy(),
+        );
+        let h = svc.submit(req(0, 32, 4));
+        assert_eq!(svc.tick().unwrap(), Tick::Stepped, "first 8-token chunk ran");
+        let s = &svc.scheduler().running()[0];
+        assert!(!s.prefilled, "still mid-prefill");
+        assert_eq!(s.prefill_pos, 8);
+        assert!(svc.scheduler().pool.used_pages() > 0, "prompt pages held");
+        h.cancel();
+        assert_eq!(svc.tick().unwrap(), Tick::Drained, "cancel applied before planning");
+        assert_eq!(svc.scheduler().pool.used_pages(), 0, "pages released at cancel");
+        let r = h.wait().expect("cancelled requests still resolve");
+        assert!(r.cancelled);
+        assert!(r.tokens.is_empty(), "cancelled before the first token");
+        assert_eq!(r.ttft_s, 0.0, "no token was produced: no fabricated TTFT");
+        let stats = svc.stats();
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(
+            stats.mean_ttft_s(),
+            0.0,
+            "cancelled results are excluded from the latency aggregates"
+        );
+    }
+
+    /// Cancelling mid-decode keeps the tokens generated so far and
+    /// frees the pages for the next request.
+    #[test]
+    fn cancel_mid_decode_keeps_partial_tokens() {
+        let mut svc = Service::new(
+            EchoBackend::new(32),
+            SchedulerConfig {
+                max_batch: 1,
+                kv_pages: 16,
+                page_tokens: 4,
+                max_seq: 64,
+                ..Default::default()
+            },
+            Sampler::greedy(),
+        );
+        let h = svc.submit(req(0, 4, 100));
+        svc.tick().unwrap(); // prefill → first token
+        svc.tick().unwrap(); // decode
+        svc.tick().unwrap(); // decode
+        h.cancel();
+        assert_eq!(svc.tick().unwrap(), Tick::Drained);
+        assert_eq!(svc.scheduler().pool.used_pages(), 0);
+        let r = h.wait().expect("resolves with partial output");
+        assert!(r.cancelled);
+        assert_eq!(r.tokens.len(), 3, "prefill token + two decode tokens kept");
+        // The machine is free again: a second request runs to completion.
+        let h2 = svc.submit(req(1, 4, 2));
+        svc.drain().unwrap();
+        let r2 = h2.wait().expect("second request completes");
+        assert!(!r2.cancelled);
+        assert_eq!(r2.tokens.len(), 2);
+    }
+
+    /// A dropped handle is an implicit cancel: the first undeliverable
+    /// token releases the request's pages.
+    #[test]
+    fn dropped_handle_auto_cancels() {
+        let mut svc = Service::new(
+            EchoBackend::new(32),
+            SchedulerConfig { max_batch: 1, max_seq: 64, ..Default::default() },
+            Sampler::greedy(),
+        );
+        let h = svc.submit(req(0, 4, 100));
+        drop(h);
+        assert_eq!(svc.tick().unwrap(), Tick::Stepped, "prefill token undeliverable");
+        assert_eq!(svc.scheduler().pool.used_pages(), 0, "implicitly cancelled");
+        assert_eq!(svc.tick().unwrap(), Tick::Drained);
+        assert_eq!(svc.stats().cancelled, 1);
+    }
+
+    /// A prompt that can never fit the pool resolves the handle with
+    /// `Rejected` instead of hanging it.
+    #[test]
+    fn oversized_prompt_resolves_as_rejected() {
+        let mut svc = Service::new(
+            EchoBackend::new(32),
+            SchedulerConfig {
+                max_batch: 1,
+                kv_pages: 2,
+                page_tokens: 4,
+                max_seq: 64,
+                ..Default::default()
+            },
+            Sampler::greedy(),
+        );
+        let h = svc.submit(req(0, 32, 4)); // needs 8 pages, pool has 2
+        svc.drain().unwrap();
+        assert!(h.wait().is_none(), "rejected handles resolve to None");
+        assert_eq!(svc.stats().rejected, 1);
+    }
+
+    /// The virtual-clock service and the offline `run_trace` replay are
+    /// the SAME engine: identical tokens and bit-identical timings for
+    /// the same trace.
+    #[test]
+    fn service_matches_offline_replay() {
+        let trace_cfg = TraceConfig {
+            n_requests: 6,
+            vocab: 32,
+            prompt_len_choices: vec![4, 8],
+            decode_len_choices: vec![4, 8],
+            seed: 5,
+            ..Default::default()
+        };
+        let sched_cfg = SchedulerConfig { max_batch: 2, max_seq: 64, ..Default::default() };
+        let mut server = Server::new(EchoBackend::new(32), sched_cfg.clone(), Sampler::greedy());
+        let offline = server.run_trace(generate_trace(&trace_cfg)).unwrap();
+
+        let mut svc = Service::new(EchoBackend::new(32), sched_cfg, Sampler::greedy());
+        let handles: Vec<RequestHandle> = generate_trace(&trace_cfg)
+            .into_iter()
+            .map(|r| svc.submit(r))
+            .collect();
+        svc.drain().unwrap();
+        let live = svc.stats();
+
+        assert_eq!(live.results.len(), offline.results.len());
+        for a in &offline.results {
+            let b = live.results.iter().find(|r| r.id == a.id).unwrap();
+            assert_eq!(a.tokens, b.tokens, "same engine, same tokens");
+            assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "bit-identical TTFT");
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+        }
+        assert_eq!(live.served_s.to_bits(), offline.served_s.to_bits());
+        for h in handles {
+            assert!(h.wait().is_some(), "every handle resolves");
+        }
+    }
+
+    /// Live mode smoke test: the background engine serves submissions on
+    /// the host clock and `shutdown` drains before returning stats.
+    #[test]
+    fn live_service_serves_and_shuts_down() {
+        let svc = LiveService::spawn(
+            EchoBackend::new(32),
+            SchedulerConfig { max_batch: 2, max_seq: 64, ..Default::default() },
+            Sampler::greedy(),
+        );
+        let h1 = svc.submit((0..4).collect(), 3);
+        let h2 = svc.submit((0..8).collect(), 3);
+        let r1 = h1.wait().expect("request 1 completes");
+        let r2 = h2.wait().expect("request 2 completes");
+        assert_eq!(r1.tokens.len(), 3);
+        assert_eq!(r2.tokens.len(), 3);
+        assert!(r1.latency_s >= 0.0 && r1.ttft_s >= 0.0);
+        let stats = svc.shutdown();
+        assert_eq!(stats.results.len(), 2);
+        assert_eq!(stats.cancelled, 0);
+        assert!(stats.steps > 0);
+    }
+
+    /// Live-mode cancellation: the handle always resolves — either the
+    /// cancel won (partial tokens) or the request had already finished.
+    #[test]
+    fn live_cancellation_resolves_handle() {
+        let svc = LiveService::spawn(
+            EchoBackend::new(32),
+            SchedulerConfig {
+                max_batch: 1,
+                kv_pages: 512,
+                page_tokens: 16,
+                max_seq: 4096,
+                ..Default::default()
+            },
+            Sampler::greedy(),
+        );
+        let h = svc.submit((0..8).collect(), 100_000);
+        // Wait for the first streamed token so the request is running.
+        assert!(h.recv_event().is_some(), "first token streams");
+        h.cancel();
+        let r = h.wait().expect("handle resolves after cancel");
+        assert!(!r.tokens.is_empty());
+        let stats = svc.shutdown();
+        assert_eq!(stats.results.len(), 1);
+    }
+}

@@ -5,8 +5,11 @@
 //!
 //! Timing model per engine iteration: each prefill slot replays its
 //! length-adaptive prefill stream back-to-back (prefill is per-sequence,
-//! §5.2) — priced by its UNCACHED suffix when the scheduler served part
-//! of the prompt from the prefix cache — and all decode slots share ONE
+//! §5.2) — priced by the CHUNK of prompt tokens it actually runs this
+//! iteration, which composes with prefix caching (the first chunk
+//! starts after the cached prefix) and with chunked prefill (a long
+//! prompt costs several small-bucket streams spread over iterations
+//! instead of one big one) — and all decode slots share ONE
 //! batched decode stream at the largest context bucket in the batch — the Fig. 15 multibatch lowering
 //! (`CompilerOptions::with_batch`).  Streams are lowered and simulated
 //! once per (stage, bucket, batch) and memoised, which is what keeps
@@ -100,12 +103,15 @@ impl ModelBackend for SimBackend {
         let mut max_ctx = 0u64;
         for slot in batch {
             match &slot.work {
-                SeqWork::Prefill { prompt, cached_ctx } => {
-                    // Cached prefix pages hold already-computed KV: only
-                    // the uncached suffix runs through the accelerator,
-                    // at its own (smaller) length-adaptive bucket.
-                    let suffix = prompt.len().saturating_sub(*cached_ctx).max(1);
-                    let b = self.plan.prefill_bucket(suffix as u64);
+                SeqWork::Prefill { chunk_start, chunk_end, .. } => {
+                    // Only this iteration's chunk runs through the
+                    // accelerator, at its own (smaller) length-adaptive
+                    // bucket: cached prefix pages hold already-computed
+                    // KV (the first chunk starts after them), and under
+                    // chunked prefill the rest of the prompt is priced
+                    // by later iterations.
+                    let chunk = chunk_end.saturating_sub(*chunk_start).max(1);
+                    let b = self.plan.prefill_bucket(chunk as u64);
                     step_s += self.stream_s(true, b, 1);
                 }
                 SeqWork::Decode { pos, .. } => {
@@ -145,6 +151,7 @@ mod tests {
                 page_tokens: 16,
                 max_seq: 256,
                 prefix_cache,
+                ..Default::default()
             },
             Sampler::greedy(),
         )

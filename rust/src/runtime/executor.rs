@@ -190,11 +190,12 @@ fn to_anyhow(e: xla::Error) -> anyhow::Error {
 /// traces carry real host latencies on the serving clock.  Per-sequence
 /// KV literals live here, keyed by sequence id.
 ///
-/// Prefix caching: the PJRT KV literals are monolithic per sequence (no
-/// paged sharing), so a prefill recomputes the FULL prompt regardless of
-/// `cached_ctx` — results stay golden-exact.  The skipped-token count is
-/// still tallied (`cached_tokens_reported`) so serving stats stay
-/// comparable with the page-sharing sim backend.
+/// Prefix caching + chunked prefill: the PJRT KV literals are monolithic
+/// per sequence (no paged sharing), so the FULL prompt is recomputed at
+/// the final prefill chunk regardless of `cached_ctx` — results stay
+/// golden-exact — and non-final chunks are free placeholders.  The
+/// skipped-token count is still tallied (`cached_tokens_reported`) so
+/// serving stats stay comparable with the page-sharing sim backend.
 pub struct RuntimeBackend {
     rt: ModelRuntime,
     kv: HashMap<u64, Literal>,
@@ -227,7 +228,15 @@ impl crate::coordinator::ModelBackend for RuntimeBackend {
         let mut logits = Vec::with_capacity(batch.len());
         for slot in batch {
             match &slot.work {
-                SeqWork::Prefill { prompt, cached_ctx } => {
+                SeqWork::Prefill { prompt, cached_ctx, chunk_end, .. } => {
+                    // Monolithic KV literals: the FULL prompt runs at
+                    // the final chunk (results stay golden-exact), so
+                    // earlier chunks cost nothing here and contribute
+                    // only a placeholder logits row (ignored upstream).
+                    if *chunk_end < prompt.len() {
+                        logits.push(vec![0.0; self.rt.vocab()]);
+                        continue;
+                    }
                     self.cached_tokens_reported += *cached_ctx as u64;
                     let out = self.rt.prefill(prompt)?;
                     self.kv.insert(slot.seq, out.kv);

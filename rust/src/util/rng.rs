@@ -65,6 +65,21 @@ impl Rng {
         -u.ln() / lambda
     }
 
+    /// Standard-normal sample (Box-Muller; one of the pair is discarded
+    /// to keep the call stateless beyond the RNG stream).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Log-normal sample with the given `median` (= exp(mu)) and `sigma`
+    /// of the underlying normal — the shape of real request-length
+    /// distributions (many short, a long tail).
+    pub fn lognormal(&mut self, median: f64, sigma: f64) -> f64 {
+        median.max(f64::MIN_POSITIVE) * (sigma * self.normal()).exp()
+    }
+
     /// Fisher-Yates shuffle.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
         for i in (1..v.len()).rev() {
@@ -122,6 +137,31 @@ mod tests {
         let n = 20_000;
         let mean: f64 = (0..n).map(|_| r.exp(2.0)).sum::<f64>() / n as f64;
         assert!((mean - 0.5).abs() < 0.02, "mean = {mean}");
+    }
+
+    #[test]
+    fn normal_has_zero_mean_unit_variance() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let samples: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean = {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var = {var}");
+    }
+
+    #[test]
+    fn lognormal_median_tracks_parameter() {
+        let mut r = Rng::new(13);
+        let n = 10_001;
+        let mut samples: Vec<f64> = (0..n).map(|_| r.lognormal(64.0, 0.8)).collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[n / 2];
+        assert!(
+            (median / 64.0 - 1.0).abs() < 0.1,
+            "sample median = {median} (want ~64)"
+        );
+        assert!(samples.iter().all(|&x| x > 0.0));
     }
 
     #[test]

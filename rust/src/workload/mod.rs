@@ -17,14 +17,39 @@ pub struct Request {
     pub max_new_tokens: u32,
 }
 
+/// Log-normally distributed request lengths: `median` tokens at the
+/// 50th percentile, `sigma` of the underlying normal controlling the
+/// tail, clamped to `[1, cap]` — the shape of real serving traffic
+/// (many short requests, a heavy tail of long ones).
+#[derive(Debug, Clone, Copy)]
+pub struct LogNormalLen {
+    pub median: f64,
+    pub sigma: f64,
+    pub cap: u32,
+}
+
+impl LogNormalLen {
+    fn sample(&self, rng: &mut Rng) -> u32 {
+        let v = rng.lognormal(self.median, self.sigma).round();
+        (v as u32).clamp(1, self.cap.max(1))
+    }
+}
+
 /// Poisson arrivals with geometric-ish length mixtures — the
-/// latency-sensitive single-batch serving scenario of §1.
+/// latency-sensitive single-batch serving scenario of §1.  With the
+/// log-normal options set, lengths are drawn from heavy-tailed
+/// distributions instead of the choice lists — the open-loop live
+/// serving workload (deterministic per seed either way).
 #[derive(Debug, Clone)]
 pub struct TraceConfig {
     pub rate_per_s: f64,
     pub n_requests: usize,
     pub prompt_len_choices: Vec<u32>,
     pub decode_len_choices: Vec<u32>,
+    /// When set, prompt lengths are log-normal (ignoring the choices).
+    pub prompt_lognormal: Option<LogNormalLen>,
+    /// When set, decode budgets are log-normal (ignoring the choices).
+    pub decode_lognormal: Option<LogNormalLen>,
     pub vocab: u32,
     pub seed: u64,
 }
@@ -36,6 +61,8 @@ impl Default for TraceConfig {
             n_requests: 32,
             prompt_len_choices: vec![16, 32, 64, 128],
             decode_len_choices: vec![16, 32, 64],
+            prompt_lognormal: None,
+            decode_lognormal: None,
             vocab: 512,
             seed: 0,
         }
@@ -49,8 +76,14 @@ pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
     (0..cfg.n_requests)
         .map(|i| {
             t += rng.exp(cfg.rate_per_s);
-            let plen = *rng.choose(&cfg.prompt_len_choices);
-            let dlen = *rng.choose(&cfg.decode_len_choices);
+            let plen = match cfg.prompt_lognormal {
+                Some(d) => d.sample(&mut rng),
+                None => *rng.choose(&cfg.prompt_len_choices),
+            };
+            let dlen = match cfg.decode_lognormal {
+                Some(d) => d.sample(&mut rng),
+                None => *rng.choose(&cfg.decode_len_choices),
+            };
             Request {
                 id: i as u64,
                 arrival_s: t,
@@ -119,6 +152,66 @@ pub fn generate_shared_prefix_trace(cfg: &SharedPrefixConfig) -> Vec<Request> {
             }
         })
         .collect()
+}
+
+/// A mixed burst: `n_decode_heavy` short-prompt / long-decode requests
+/// arrive at t = 0 and settle into steady decode; `n_prefill_heavy`
+/// long-prompt requests then land at `prefill_stagger_s` intervals
+/// while those decodes are in flight.  This is the workload where an
+/// unchunked prefill freezes every in-flight decode for a whole
+/// iteration — the chunked-prefill scheduling benchmark.
+#[derive(Debug, Clone)]
+pub struct MixedBurstConfig {
+    pub n_decode_heavy: usize,
+    pub decode_heavy_prompt: usize,
+    pub decode_heavy_tokens: u32,
+    pub n_prefill_heavy: usize,
+    pub prefill_heavy_prompt: usize,
+    pub prefill_heavy_tokens: u32,
+    /// Gap before (and between) the prefill-heavy arrivals.
+    pub prefill_stagger_s: f64,
+    pub vocab: u32,
+    pub seed: u64,
+}
+
+impl Default for MixedBurstConfig {
+    fn default() -> Self {
+        Self {
+            n_decode_heavy: 3,
+            decode_heavy_prompt: 16,
+            decode_heavy_tokens: 48,
+            n_prefill_heavy: 2,
+            prefill_heavy_prompt: 192,
+            prefill_heavy_tokens: 4,
+            prefill_stagger_s: 1e-3,
+            vocab: 512,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a mixed decode/prefill burst (deterministic per seed).
+pub fn generate_mixed_burst_trace(cfg: &MixedBurstConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let vocab = cfg.vocab.max(2) as u64;
+    let mut trace = Vec::with_capacity(cfg.n_decode_heavy + cfg.n_prefill_heavy);
+    for i in 0..cfg.n_decode_heavy {
+        trace.push(Request {
+            id: i as u64,
+            arrival_s: 0.0,
+            prompt: (0..cfg.decode_heavy_prompt).map(|_| rng.below(vocab) as u32).collect(),
+            max_new_tokens: cfg.decode_heavy_tokens,
+        });
+    }
+    for i in 0..cfg.n_prefill_heavy {
+        trace.push(Request {
+            id: (cfg.n_decode_heavy + i) as u64,
+            arrival_s: cfg.prefill_stagger_s * (i + 1) as f64,
+            prompt: (0..cfg.prefill_heavy_prompt).map(|_| rng.below(vocab) as u32).collect(),
+            max_new_tokens: cfg.prefill_heavy_tokens,
+        });
+    }
+    trace
 }
 
 /// A burst: `n` identical-shape requests all arriving at t = 0 — the
@@ -202,6 +295,66 @@ mod tests {
     fn tokens_within_vocab() {
         for r in generate_trace(&TraceConfig::default()) {
             assert!(r.prompt.iter().all(|&t| t < 512));
+        }
+    }
+
+    /// Satellite: the log-normal length option is deterministic per
+    /// seed, respects the clamp, and lands its sample median near the
+    /// configured one — realistic open-loop arrival/length traffic.
+    #[test]
+    fn lognormal_trace_deterministic_and_clamped() {
+        let cfg = TraceConfig {
+            n_requests: 400,
+            rate_per_s: 50.0,
+            prompt_lognormal: Some(LogNormalLen { median: 48.0, sigma: 0.7, cap: 128 }),
+            decode_lognormal: Some(LogNormalLen { median: 16.0, sigma: 0.5, cap: 64 }),
+            seed: 17,
+            ..Default::default()
+        };
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a.len(), 400);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt, "deterministic per seed");
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        }
+        for r in &a {
+            assert!((1..=128).contains(&r.prompt.len()), "clamped: {}", r.prompt.len());
+            assert!((1..=64).contains(&r.max_new_tokens));
+        }
+        let mut plens: Vec<usize> = a.iter().map(|r| r.prompt.len()).collect();
+        plens.sort_unstable();
+        let median = plens[plens.len() / 2] as f64;
+        assert!(
+            (median / 48.0 - 1.0).abs() < 0.25,
+            "sample median = {median} (want ~48)"
+        );
+        // The heavy tail is real: some requests well past the median.
+        assert!(plens.iter().any(|&p| p > 96), "no tail in {plens:?}");
+        for w in a.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s, "Poisson arrivals increase");
+        }
+    }
+
+    #[test]
+    fn mixed_burst_shapes_and_arrivals() {
+        let cfg = MixedBurstConfig::default();
+        let t = generate_mixed_burst_trace(&cfg);
+        assert_eq!(t.len(), 5);
+        for r in &t[..3] {
+            assert_eq!(r.arrival_s, 0.0);
+            assert_eq!(r.prompt.len(), 16);
+            assert_eq!(r.max_new_tokens, 48);
+        }
+        for (i, r) in t[3..].iter().enumerate() {
+            assert!((r.arrival_s - 1e-3 * (i + 1) as f64).abs() < 1e-12);
+            assert_eq!(r.prompt.len(), 192);
+            assert_eq!(r.max_new_tokens, 4);
+        }
+        let again = generate_mixed_burst_trace(&cfg);
+        for (x, y) in t.iter().zip(&again) {
+            assert_eq!(x.prompt, y.prompt, "seeded: reproducible");
         }
     }
 
