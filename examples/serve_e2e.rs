@@ -19,15 +19,22 @@
 //!    is replayable.
 //! 5. Chunked prefill: the TTFT / P99-ITL-vs-chunk-size sweep on a
 //!    mixed burst, byte-identical tokens asserted.
+//! 6. Overload + swap-to-DDR (§4.4 hybrid placement): the same
+//!    overload trace with an over-provisioned pool, a small pool that
+//!    spills to DDR (everything completes byte-identically, spill
+//!    priced on the clock) and the small pool with legacy truncation
+//!    (requests lost).
 //!
 //! Run: cargo run --release --example serve_e2e
 //!      (add --features xla && make artifacts for section 1)
 
 use flightllm::config::Target;
 use flightllm::coordinator::{Sampler, SchedulerConfig, Server, Service, SimBackend, StreamEvent};
-use flightllm::experiments::{flightllm_serve_chunk_sweep, flightllm_serve_prefix};
+use flightllm::experiments::{
+    flightllm_overload_three_way, flightllm_serve_chunk_sweep, flightllm_serve_prefix,
+};
 use flightllm::workload::{
-    generate_trace, MixedBurstConfig, Request, SharedPrefixConfig, TraceConfig,
+    generate_trace, MixedBurstConfig, OverloadConfig, Request, SharedPrefixConfig, TraceConfig,
 };
 
 fn main() -> anyhow::Result<()> {
@@ -191,6 +198,35 @@ fn main() -> anyhow::Result<()> {
     assert!(
         sweep[1].1.p99_itl_s() < baseline.p99_itl_s(),
         "chunked prefill must cut P99 decode ITL"
+    );
+
+    // -- Section 6: overload + swap-to-DDR preemption -------------------
+    println!("\n== overload: swap-to-DDR preemption vs legacy truncation ==");
+    let ov = OverloadConfig {
+        n_requests: 6,
+        prompt_len: 32,
+        decode_len_choices: vec![48, 64, 96],
+        rate_per_s: 1e6, // near-simultaneous arrivals: force residency overlap
+        vocab,
+        seed: 5,
+    };
+    let (big, swapped, lossy) = flightllm_overload_three_way(&t, &ov, 3, 64, 12, None);
+    println!("-- over-provisioned pool (64 pages) --\n{}", big.summary("virtual"));
+    println!("-- small pool (12 pages), swap ON --\n{}", swapped.summary("virtual"));
+    println!("-- small pool (12 pages), swap OFF --\n{}", lossy.summary("virtual"));
+    for a in &big.results {
+        let b = swapped.results.iter().find(|r| r.id == a.id).unwrap();
+        assert_eq!(a.tokens, b.tokens, "swap must resume byte-identically");
+    }
+    assert_eq!(swapped.preempted_truncated(), 0, "swap eliminates truncation");
+    assert!(swapped.preemptions > 0 && swapped.swap_time_s > 0.0);
+    assert!(lossy.preempted_truncated() > 0, "legacy baseline loses requests");
+    assert!(swapped.served_s > big.served_s, "spilling is priced on the clock");
+    println!(
+        "swap trade: truncations {} -> 0, {} preemptions, {:.1} ms spilling over DDR",
+        lossy.preempted_truncated(),
+        swapped.preemptions,
+        swapped.swap_time_s * 1e3
     );
     println!("serve_e2e OK");
     Ok(())

@@ -5,6 +5,7 @@
 //!                    [--batch N] [--temp T] [--model llama2|opt|tiny]
 //!                    [--platform u280|vhk158] [--prefix-cache]
 //!                    [--prefill-chunk N] [--live] [--rate R]
+//!                    [--swap] [--swap-gbps G]
 //! flightllm simulate [--model llama2|opt] [--platform u280|vhk158]
 //!                    [--prefill N] [--decode N]
 //! flightllm report   [--what storage|resources|efficiency]
@@ -28,6 +29,13 @@
 //! `LiveService` on the host clock: requests are submitted at their
 //! real inter-arrival gaps (`--rate` req/s), stream tokens as the
 //! engine produces them, and resolve to per-request results.
+//!
+//! `serve --backend sim --swap` serves an overload trace THREE ways —
+//! over-provisioned pool, small pool with swap-to-DDR preemption, and
+//! small pool with legacy truncation — so the §4.4 hybrid-placement
+//! trade (priced DDR spill traffic instead of lost requests) is visible
+//! from one command.  `--swap-gbps` overrides the DDR bandwidth the
+//! spill traffic is priced at.
 
 use crate::baselines::{GpuStack, GpuSystem};
 use crate::config::{ModelConfig, Target};
@@ -60,7 +68,7 @@ fn has_flag(args: &[String], key: &str) -> bool {
 const USAGE: &str = "usage: flightllm <serve|simulate|report> [flags]
   serve    --backend runtime|sim --artifacts DIR --requests N --batch N --temp T
            --model llama2|opt|tiny --platform u280|vhk158 [--prefix-cache]
-           [--prefill-chunk N] [--live] [--rate R]
+           [--prefill-chunk N] [--live] [--rate R] [--swap] [--swap-gbps G]
   simulate --model llama2|opt --platform u280|vhk158 --prefill N --decode N
   report   --what storage|resources|efficiency";
 
@@ -143,8 +151,26 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
     let max_seq = t.model.max_seq as usize;
     let vocab = (t.model.vocab as u32).min(512);
     if has_flag(args, "--live") {
+        if has_flag(args, "--swap") {
+            eprintln!("note: --swap is ignored with --live (swap demo runs offline)");
+        }
         let rate = flag_f64(args, "--rate", 8.0);
         return cmd_serve_sim_live(t, n, batch, vocab, chunk, rate, sampler_for(args));
+    }
+    if has_flag(args, "--swap") {
+        if flag(args, "--temp").is_some() {
+            // Greedy sampling is load-bearing: the three runs must
+            // consume no shared RNG state for the token-identity check.
+            eprintln!("note: --temp is ignored with --swap (comparison is greedy)");
+        }
+        if has_flag(args, "--prefix-cache") || flag(args, "--prefill-chunk").is_some() {
+            eprintln!(
+                "note: --prefix-cache/--prefill-chunk are ignored with --swap \
+                 (the overload comparison isolates the swap tier)"
+            );
+        }
+        let gbps = flag(args, "--swap-gbps").and_then(|v| v.parse::<f64>().ok());
+        return cmd_serve_sim_swap(&t, n, batch, vocab, gbps);
     }
     if has_flag(args, "--prefix-cache") {
         if flag(args, "--temp").is_some() {
@@ -266,6 +292,51 @@ fn cmd_serve_sim_live(
     }
     let stats = svc.shutdown();
     println!("{}", stats.summary("live"));
+    0
+}
+
+/// The `--swap` mode: one overload trace served three ways — an
+/// over-provisioned pool (no contention), a small pool with
+/// swap-to-DDR preemption (everything completes, spill is priced), and
+/// the same small pool with legacy truncation (requests lost).
+fn cmd_serve_sim_swap(t: &Target, n: usize, batch: usize, vocab: u32, gbps: Option<f64>) -> i32 {
+    use crate::experiments::{flightllm_overload_three_way, SERVE_PAGE_TOKENS};
+    use crate::workload::OverloadConfig;
+
+    let batch = batch.max(2); // preemption needs concurrent residents
+    let cfg = OverloadConfig { n_requests: n.max(4), vocab, ..Default::default() };
+    // Per-request worst case: prompt + largest decode budget, in KV
+    // pages; 1.5 requests' worth of pool forces preemption.
+    let max_decode = cfg.decode_len_choices.iter().copied().max().unwrap_or(64) as usize;
+    let per_seq = (cfg.prompt_len + max_decode).div_ceil(SERVE_PAGE_TOKENS);
+    let small = (per_seq * 3).div_ceil(2);
+    println!(
+        "sim-serving an overload trace ({} requests, batch {batch}, {}-token prompts, \
+         decode budgets {:?}) on {} {}:",
+        cfg.n_requests,
+        cfg.prompt_len,
+        cfg.decode_len_choices,
+        t.model.name,
+        t.platform.name
+    );
+    let (big, swapped, lossy) =
+        flightllm_overload_three_way(t, &cfg, batch, per_seq * batch, small, gbps);
+    println!("-- over-provisioned pool ({} pages) --", per_seq * batch);
+    println!("{}", big.summary("virtual"));
+    println!("-- small pool ({small} pages), swap-to-DDR ON --");
+    println!("{}", swapped.summary("virtual"));
+    println!("-- small pool ({small} pages), swap OFF (legacy truncation) --");
+    println!("{}", lossy.summary("virtual"));
+    println!(
+        "swap trade: truncations {} -> {} with {} preemptions, served {:.3}s -> {:.3}s \
+         ({:.1} ms spilling over DDR)",
+        lossy.preempted_truncated(),
+        swapped.preempted_truncated(),
+        swapped.preemptions,
+        lossy.served_s,
+        swapped.served_s,
+        swapped.swap_time_s * 1e3
+    );
     0
 }
 
@@ -461,6 +532,17 @@ mod tests {
                 "flightllm", "serve", "--backend", "sim", "--model", "tiny",
                 "--requests", "3", "--batch", "2", "--live", "--rate", "500",
                 "--prefill-chunk", "32",
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn serve_sim_swap_comparison_runs() {
+        assert_eq!(
+            run(&s(&[
+                "flightllm", "serve", "--backend", "sim", "--model", "tiny",
+                "--requests", "4", "--batch", "2", "--swap",
             ])),
             0
         );

@@ -18,6 +18,15 @@
 //! free, still serving cache hits) and evicted in LRU order only under
 //! allocation pressure — the paged-KV analogue of keeping warm prefixes
 //! on-chip for as long as capacity allows (§4.4).
+//!
+//! Swap tier (§4.4 hybrid HBM/DDR placement): `swap_out` moves a
+//! victim's whole KV image out of HBM — its pages are released exactly
+//! like a `release` (shared prefix pages just drop a refcount, indexed
+//! pages are retained for the cache), but the sequence's token count is
+//! preserved in a swapped registry so `swap_in` can later reallocate the
+//! exact page footprint and the scheduler can resume the sequence where
+//! it left off.  The pool tracks pages moved in each direction so the
+//! serving layer can price the DDR traffic.
 
 use std::collections::{HashMap, VecDeque};
 
@@ -73,6 +82,14 @@ pub struct PoolStats {
     pub cached_tokens_served: u64,
     /// Retained (refcount-0) pages evicted under allocation pressure.
     pub retained_evicted: u64,
+    /// Sequences swapped out to the DDR tier (preemptions).
+    pub swap_outs: u64,
+    /// Sequences swapped back into HBM (resumes).
+    pub swap_ins: u64,
+    /// KV pages written HBM → DDR across all swap-outs.
+    pub swapped_out_pages: u64,
+    /// KV pages read DDR → HBM across all swap-ins.
+    pub swapped_in_pages: u64,
 }
 
 /// Seed for the chained prefix hash (any odd constant works).
@@ -109,6 +126,10 @@ pub struct PagePool {
     /// oldest, evicted first).
     retained: VecDeque<u32>,
     seqs: HashMap<u64, SeqPages>,
+    /// Sequences swapped out to the DDR tier: token count preserved so
+    /// `swap_in` reallocates the exact page footprint.  Disjoint from
+    /// `seqs` — a sequence is resident or swapped, never both.
+    swapped: HashMap<u64, usize>,
     /// Whether admits consult and feed the prefix index.
     prefix_caching: bool,
     stats: PoolStats,
@@ -139,6 +160,7 @@ impl PagePool {
             index: HashMap::new(),
             retained: VecDeque::new(),
             seqs: HashMap::new(),
+            swapped: HashMap::new(),
             prefix_caching,
             stats: PoolStats::default(),
         }
@@ -186,11 +208,17 @@ impl PagePool {
         self.retained.len()
     }
 
+    /// Total pool capacity in pages.
+    pub fn total_pages(&self) -> usize {
+        self.total
+    }
+
     pub fn stats(&self) -> PoolStats {
         self.stats
     }
 
-    fn pages_for(&self, tokens: usize) -> usize {
+    /// Pages needed to hold `tokens` tokens at this pool's geometry.
+    pub fn pages_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.page_tokens)
     }
 
@@ -385,7 +413,14 @@ impl PagePool {
     /// future cache hits (and push to the back of the LRU queue).
     pub fn release(&mut self, seq: u64) -> Result<(), KvError> {
         let s = self.seqs.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
-        for p in s.pages {
+        self.drop_page_refs(&s.pages);
+        Ok(())
+    }
+
+    /// Drop one reference per page, retaining indexed pages and freeing
+    /// the rest (shared by `release` and `swap_out`).
+    fn drop_page_refs(&mut self, pages: &[u32]) {
+        for &p in pages {
             debug_assert!(self.refcnt[p as usize] > 0, "releasing unreferenced page {p}");
             self.refcnt[p as usize] -= 1;
             if self.refcnt[p as usize] == 0 {
@@ -396,7 +431,66 @@ impl PagePool {
                 }
             }
         }
-        Ok(())
+    }
+
+    /// Preempt a resident sequence: write its whole KV image to the DDR
+    /// swap tier and give its HBM pages back.  Shared prefix pages only
+    /// drop a refcount (other residents keep using them); indexed pages
+    /// are retained for the cache like a normal release.  Returns the
+    /// pages of DDR write traffic (the full image, sharing included —
+    /// that is what crosses the memory bus).
+    pub fn swap_out(&mut self, seq: u64) -> Result<usize, KvError> {
+        let s = self.seqs.remove(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        let moved = s.pages.len();
+        self.drop_page_refs(&s.pages);
+        self.swapped.insert(seq, s.tokens);
+        self.stats.swap_outs += 1;
+        self.stats.swapped_out_pages += moved as u64;
+        Ok(moved)
+    }
+
+    /// Resume a swapped-out sequence: reallocate its page footprint in
+    /// HBM (fresh exclusive pages — the image is re-read from DDR, so
+    /// prior sharing is not reconstructed) and make it resident again.
+    /// Returns the pages of DDR read traffic.
+    pub fn swap_in(&mut self, seq: u64) -> Result<usize, KvError> {
+        let &tokens = self.swapped.get(&seq).ok_or(KvError::UnknownSeq(seq))?;
+        let need = self.pages_for(tokens);
+        let avail = self.free_pages();
+        if need > avail {
+            return Err(KvError::OutOfPages { need, free: avail });
+        }
+        let pages: Vec<u32> = (0..need)
+            .map(|_| {
+                let p = self.alloc_page().expect("availability checked above");
+                self.refcnt[p as usize] = 1;
+                p
+            })
+            .collect();
+        self.swapped.remove(&seq);
+        self.seqs.insert(seq, SeqPages { pages, tokens });
+        self.stats.swap_ins += 1;
+        self.stats.swapped_in_pages += need as u64;
+        Ok(need)
+    }
+
+    /// Token count of a swapped-out sequence (`None` if not swapped).
+    pub fn swapped_tokens(&self, seq: u64) -> Option<usize> {
+        self.swapped.get(&seq).copied()
+    }
+
+    /// Sequences currently parked in the DDR swap tier.
+    pub fn swapped_seqs(&self) -> usize {
+        self.swapped.len()
+    }
+
+    /// Forget a swapped-out sequence without bringing it back (cancelled
+    /// or terminally evicted while parked in DDR — no HBM pages to free).
+    pub fn drop_swapped(&mut self, seq: u64) -> Result<(), KvError> {
+        match self.swapped.remove(&seq) {
+            Some(_) => Ok(()),
+            None => Err(KvError::UnknownSeq(seq)),
+        }
     }
 
     pub fn seq(&self, seq: u64) -> Option<&SeqPages> {
@@ -460,6 +554,13 @@ impl PagePool {
                 return false;
             }
             if self.refcnt[p as usize] == 0 && !self.retained.contains(&p) {
+                return false;
+            }
+        }
+        // A sequence is resident or swapped, never both; a swapped
+        // sequence holds tokens but zero HBM pages.
+        for id in self.swapped.keys() {
+            if self.seqs.contains_key(id) {
                 return false;
             }
         }
@@ -639,6 +740,94 @@ mod tests {
         assert!(p.check_invariants());
     }
 
+    /// Swap tier roundtrip: swapping out frees every HBM page while
+    /// preserving the token count, and swapping back in reallocates the
+    /// exact footprint with the traffic accounted in both directions.
+    #[test]
+    fn swap_out_then_in_roundtrips_footprint() {
+        let mut p = PagePool::new(8, 4);
+        p.admit(1, &[5; 10]).unwrap(); // 3 pages
+        for _ in 0..2 {
+            p.append(1).unwrap(); // 12 tokens, still 3 pages
+        }
+        assert_eq!(p.swap_out(1), Ok(3));
+        assert_eq!(p.used_pages(), 0, "HBM fully reclaimed");
+        assert_eq!(p.swapped_tokens(1), Some(12));
+        assert_eq!(p.swapped_seqs(), 1);
+        assert!(p.seq(1).is_none(), "swapped sequence is not resident");
+        assert!(p.check_invariants());
+        // The freed pages serve another request while 1 is parked.
+        p.admit(2, &[6; 20]).unwrap(); // 5 pages
+        assert_eq!(p.swap_in(1), Ok(3));
+        assert_eq!(p.seq(1).unwrap().tokens, 12, "token count preserved");
+        assert_eq!(p.seq(1).unwrap().pages.len(), 3);
+        assert_eq!(p.used_pages(), 8);
+        assert_eq!(p.swapped_seqs(), 0);
+        assert!(p.check_invariants());
+        let st = p.stats();
+        assert_eq!((st.swap_outs, st.swap_ins), (1, 1));
+        assert_eq!((st.swapped_out_pages, st.swapped_in_pages), (3, 3));
+        // Resumed pages are exclusive: once room exists again, appends
+        // grow the sequence in place.
+        p.release(2).unwrap();
+        p.append(1).unwrap();
+        assert!(p.check_invariants());
+    }
+
+    /// Swap-in is refused (not corrupted) when HBM has no room yet.
+    #[test]
+    fn swap_in_waits_for_capacity() {
+        let mut p = PagePool::new(2, 4);
+        p.admit(1, &[1; 8]).unwrap();
+        p.swap_out(1).unwrap();
+        p.admit(2, &[2; 5]).unwrap(); // 2 pages: pool full again
+        assert_eq!(p.swap_in(1), Err(KvError::OutOfPages { need: 2, free: 0 }));
+        assert!(p.check_invariants());
+        p.release(2).unwrap();
+        assert_eq!(p.swap_in(1), Ok(2), "resumes once pages free up");
+        assert!(p.check_invariants());
+    }
+
+    /// Swapping out a sequence that shares CoW prefix pages only drops
+    /// refcounts: the other resident keeps the pages, the index keeps
+    /// serving hits, and swap-in comes back with exclusive pages.
+    #[test]
+    fn swap_out_interacts_with_shared_prefix_refcounts() {
+        let mut p = PagePool::with_prefix_cache(8, 16);
+        let prompt: Vec<u32> = (0..32).collect();
+        p.admit(1, &prompt).unwrap();
+        p.admit(2, &prompt).unwrap(); // shares page 0 with seq 1
+        let shared = p.seq(1).unwrap().pages[0];
+        assert_eq!(p.seq(2).unwrap().pages[0], shared);
+        assert_eq!(p.swap_out(2), Ok(2), "traffic counts the shared page too");
+        assert_eq!(p.refcnt[shared as usize], 1, "seq 1 still holds the prefix page");
+        assert!(p.check_invariants());
+        // A third admit still hits the index while 2 is swapped out.
+        let out = p.admit(3, &prompt).unwrap();
+        assert_eq!(out.cached_tokens, 16);
+        p.swap_in(2).unwrap();
+        assert_ne!(
+            p.seq(2).unwrap().pages[0],
+            shared,
+            "resume reallocates exclusive pages (image re-read from DDR)"
+        );
+        assert_eq!(p.seq(2).unwrap().tokens, 32);
+        assert!(p.check_invariants());
+    }
+
+    /// `drop_swapped` forgets a parked sequence without touching HBM.
+    #[test]
+    fn drop_swapped_forgets_parked_sequence() {
+        let mut p = PagePool::new(4, 4);
+        p.admit(1, &[1; 4]).unwrap();
+        p.swap_out(1).unwrap();
+        assert_eq!(p.drop_swapped(1), Ok(()));
+        assert_eq!(p.drop_swapped(1), Err(KvError::UnknownSeq(1)));
+        assert_eq!(p.swap_in(1), Err(KvError::UnknownSeq(1)));
+        assert_eq!(p.swapped_seqs(), 0);
+        assert!(p.check_invariants());
+    }
+
     #[test]
     fn property_no_double_allocation() {
         proptest::check("kv pages never double-allocated", |r| {
@@ -673,8 +862,10 @@ mod tests {
     }
 
     /// The extended sharing property: random admit (with shared
-    /// prefixes), append, fork and release keep every refcount accurate
-    /// and every page accounted for, on every step.
+    /// prefixes), append, fork, release and swap-out/swap-in cycles keep
+    /// every refcount accurate and every page accounted for, on every
+    /// step — and a swapped sequence always comes back with its exact
+    /// token count.
     #[test]
     fn property_refcounts_accurate_under_sharing() {
         proptest::check("CoW pool refcount invariant", |r| {
@@ -684,9 +875,10 @@ mod tests {
                 .map(|g| (0..8).map(|i| g * 100 + i).collect())
                 .collect();
             let mut live: Vec<u64> = Vec::new();
+            let mut parked: Vec<(u64, usize)> = Vec::new();
             let mut next_id = 0u64;
             for _ in 0..96 {
-                match r.below(4) {
+                match r.below(6) {
                     0 => {
                         let id = next_id;
                         next_id += 1;
@@ -713,12 +905,31 @@ mod tests {
                         let id = live.swap_remove(i);
                         p.release(id).unwrap();
                     }
+                    4 if !live.is_empty() => {
+                        let i = r.range(0, live.len());
+                        let id = live.swap_remove(i);
+                        let tokens = p.seq(id).unwrap().tokens;
+                        p.swap_out(id).unwrap();
+                        parked.push((id, tokens));
+                    }
+                    5 if !parked.is_empty() => {
+                        let i = r.range(0, parked.len());
+                        let (id, tokens) = parked[i];
+                        if p.swap_in(id).is_ok() {
+                            parked.swap_remove(i);
+                            assert_eq!(p.seq(id).unwrap().tokens, tokens, "tokens survive swap");
+                            live.push(id);
+                        }
+                    }
                     _ => {}
                 }
                 assert!(p.check_invariants(), "refcount invariant broken");
             }
             for id in live {
                 p.release(id).unwrap();
+            }
+            for (id, _) in parked {
+                p.drop_swapped(id).unwrap();
             }
             assert!(p.check_invariants());
             assert_eq!(p.used_pages(), 0, "all pages free or retained after drain");

@@ -6,6 +6,12 @@
 //!    shares the pages instead of recomputing them, released prefix
 //!    pages are retained (LRU-evicted under pressure), and a shared
 //!    partial tail is copied the first time a writer appends through it.
+//!    A DDR swap tier (the §4.4 hybrid HBM/DDR placement) backs
+//!    preemption: `swap_out` frees a victim's HBM pages while
+//!    preserving its token accounting in a swap registry (shared prefix
+//!    pages just drop a refcount), `swap_in` reallocates the exact
+//!    footprint when capacity frees up, and pages moved in each
+//!    direction are counted so the serving layer can price the traffic.
 //! 2. **Scheduler** (`scheduler`): continuous-batching admission against
 //!    a serving clock, planned per iteration with CHUNKED PREFILL and
 //!    decode priority.  `plan` always decodes every prefilled sequence;
@@ -15,15 +21,33 @@
 //!    Chunking composes with prefix caching: a sequence's first chunk
 //!    starts at `cached_ctx` (shared pages are never re-run), and
 //!    `SeqState::prefill_pos` tracks the cursor between iterations.
+//!    Preemption & swap: with `SchedulerConfig::swap` on, KV exhaustion
+//!    during decode swaps the NEWEST resident out to DDR (oldest
+//!    requests keep their latency) instead of truncating anything;
+//!    `plan` swaps parked sequences back in — strict oldest-first,
+//!    AHEAD of fresh admissions — and they resume byte-identically.
+//!    Terminal eviction survives only for a sequence that alone
+//!    exceeds the entire pool.
 //!    Invariants: scheduler `ctx` == pool tokens for every running
-//!    sequence, shared pages included; only the FINAL chunk
+//!    sequence, shared pages included, and == the swap-registry token
+//!    count for every preempted one; only the FINAL chunk
 //!    (`chunk_end == prompt.len()`) produces a token; cancellation
-//!    (queued, mid-prefill or mid-decode) releases pages immediately.
+//!    (queued, parked in the swap tier, mid-prefill or mid-decode)
+//!    releases pages immediately.
 //! 3. **Engine loop** (`service::EngineCore`): one batched
 //!    `ModelBackend::step` per iteration (mixed prefill chunks +
 //!    decodes), sampling, per-request token streaming, retirement, and
 //!    `ServeStats` (TTFT/latency means + P50/P99, decode inter-token
-//!    latency, prefix-hit counters, peak KV-page footprint).
+//!    latency, prefix-hit counters, peak KV-page footprint, preemption
+//!    and swap-traffic counters).  Swap pricing: pages moved to/from
+//!    DDR are charged on the virtual clock through
+//!    `ModelBackend::swap_cost_s` — the `SimBackend` prices them at KV
+//!    page bytes over the platform's DDR bandwidth, so overload shows
+//!    up as served time, not as data loss.  Requests keep streaming
+//!    across a preempt/resume cycle; KV-truncated requests (swap off)
+//!    are excluded from the latency aggregates and surfaced as
+//!    `preempted_truncated` so overload can never make the stats look
+//!    BETTER.
 //! 4. **Front-ends**: `Server::run_trace` replays an offline trace
 //!    through the engine core on the deterministic virtual clock;
 //!    `Service` drives the same core with manual `tick`/`drain` plus a

@@ -22,10 +22,22 @@
 //! monolithic prefill.  Chunking composes with prefix caching: the
 //! first chunk starts at `cached_ctx` (cached pages are never re-run).
 //!
+//! Preemption & swap (§4.4 hybrid HBM/DDR placement): with
+//! `SchedulerConfig::swap` on, KV exhaustion during decode no longer
+//! truncates a sequence.  The NEWEST running sequence (latest
+//! `admitted_s`, so the oldest requests keep their latency) is swapped
+//! out to the DDR tier — pages freed, token image preserved — and
+//! parked on the `preempted` queue; `schedule` swaps parked sequences
+//! back in (oldest first, strict order) AHEAD of fresh admissions once
+//! pages free up, and the sequence resumes exactly where it stopped.
+//! Terminal `EvictedKvFull` survives only for a sequence that alone
+//! exceeds the entire pool (it can never continue, swap or no swap).
+//!
 //! Accounting invariant (checked by `check_accounting` and the property
 //! tests below): for every running sequence, `SeqState.ctx` equals the
 //! KV pool's token count — the scheduler never believes in KV the pool
-//! does not hold, cached or not.
+//! does not hold, cached or not — and every preempted sequence's `ctx`
+//! equals its token count in the pool's swap registry.
 
 use std::collections::VecDeque;
 
@@ -49,6 +61,10 @@ pub struct SchedulerConfig {
     /// so decodes are never stalled behind one monolithic prefill.
     /// 0 = unchunked (the whole uncached prompt in one iteration).
     pub prefill_chunk: usize,
+    /// Preempt + swap-to-DDR instead of terminally evicting on KV
+    /// exhaustion: the newest resident is swapped out and later resumed,
+    /// so overload degrades into priced DDR traffic, not truncation.
+    pub swap: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -60,6 +76,7 @@ impl Default for SchedulerConfig {
             max_seq: 256,
             prefix_cache: false,
             prefill_chunk: 0,
+            swap: false,
         }
     }
 }
@@ -127,8 +144,16 @@ pub enum DecodeOutcome {
     Finished,
     /// The KV pool could not grow: the sequence must be retired now.
     /// `ctx` was NOT advanced, so scheduler context and pool tokens stay
-    /// in sync (the produced token is still recorded).
+    /// in sync (the produced token is still recorded).  With swap
+    /// enabled this survives only for a sequence that alone exceeds the
+    /// ENTIRE pool.
     EvictedKvFull,
+    /// Swap mode: the sequence was the newest resident and preempted
+    /// ITSELF to the DDR tier.  The produced token was dropped — `ctx`
+    /// did not advance, so the resumed decode re-produces it at the same
+    /// position (deterministic backends yield the identical token).  Not
+    /// terminal: the engine must keep the request's streaming state.
+    Preempted,
 }
 
 #[derive(Debug)]
@@ -136,6 +161,13 @@ pub struct Scheduler {
     pub cfg: SchedulerConfig,
     waiting: VecDeque<Request>,
     running: Vec<SeqState>,
+    /// Sequences swapped out to DDR, awaiting resume (token images
+    /// preserved in `SeqState`; page footprints in the pool's swap
+    /// registry).
+    preempted: Vec<SeqState>,
+    /// Preempted sequences whose next decode step cannot fit even an
+    /// empty pool: the engine drains these for terminal eviction.
+    unresumable: Vec<SeqState>,
     pub pool: PagePool,
 }
 
@@ -146,7 +178,14 @@ impl Scheduler {
         } else {
             PagePool::new(cfg.kv_pages, cfg.page_tokens)
         };
-        Self { cfg, waiting: VecDeque::new(), running: Vec::new(), pool }
+        Self {
+            cfg,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            preempted: Vec::new(),
+            unresumable: Vec::new(),
+            pool,
+        }
     }
 
     /// Queue a request.  Prompts longer than `max_seq` are truncated HERE
@@ -180,13 +219,62 @@ impl Scheduler {
         self.waiting.front().map(|r| r.arrival_s)
     }
 
+    /// Index of the next preempted sequence to resume: strict oldest
+    /// first (earliest `admitted_s`, ties by request id), so a resumed
+    /// request is never leapfrogged by newer parked work.
+    fn oldest_preempted(&self) -> Option<usize> {
+        self.preempted
+            .iter()
+            .enumerate()
+            .min_by(|a, b| {
+                a.1.admitted_s
+                    .total_cmp(&b.1.admitted_s)
+                    .then(a.1.req.id.cmp(&b.1.req.id))
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Swap parked sequences back into free batch slots, oldest first.
+    /// A resume is gated on room for the sequence AND its next decode
+    /// token, so a freshly resumed sequence never preempts on its first
+    /// step just to grow by one page.
+    fn resume_preempted(&mut self) {
+        while self.running.len() < self.cfg.max_batch {
+            let Some(i) = self.oldest_preempted() else { break };
+            let need = self.pool.pages_for(self.preempted[i].ctx + 1);
+            if need > self.pool.total_pages() {
+                // Can never fit even an empty pool: hand to the engine
+                // for terminal eviction instead of spinning forever.
+                let s = self.preempted.swap_remove(i);
+                self.pool
+                    .drop_swapped(s.req.id)
+                    .expect("preempted sequence is parked in the swap tier");
+                self.unresumable.push(s);
+                continue;
+            }
+            if need > self.pool.free_pages() {
+                break; // strict oldest-first: wait for pages, don't leapfrog
+            }
+            let s = self.preempted.swap_remove(i);
+            self.pool.swap_in(s.req.id).expect("capacity checked above");
+            self.running.push(s);
+        }
+    }
+
     /// Admit arrived requests while capacity allows, then return the ids
     /// runnable this iteration (admission order; unprefilled sequences
-    /// run prefill, the rest one decode step each).  Admission charges
+    /// run prefill, the rest one decode step each).  Swap-ins of
+    /// preempted sequences take strict priority over fresh admissions —
+    /// they already absorbed queueing latency once.  Admission charges
     /// only the uncached prompt suffix: a cached full-page prefix is
     /// shared, not reallocated.
     pub fn schedule(&mut self, now_s: f64) -> Vec<u64> {
-        while self.running.len() < self.cfg.max_batch {
+        self.resume_preempted();
+        // While anything is still parked in the swap tier, fresh
+        // admissions are frozen: a new prompt must not consume the
+        // pages the oldest preempted sequence is waiting for (running
+        // work keeps draining, so the freeze always lifts).
+        while self.preempted.is_empty() && self.running.len() < self.cfg.max_batch {
             let Some(req) = self.waiting.front() else { break };
             if req.arrival_s > now_s || !self.pool.can_admit(&req.prompt) {
                 break;
@@ -281,22 +369,104 @@ impl Scheduler {
         }
     }
 
-    /// Record a decode step.  The KV pool grows first; on exhaustion the
-    /// sequence is reported for eviction instead of silently desyncing
-    /// `ctx` from the pool's token count.
-    pub fn on_decode_done(&mut self, seq: u64, token: u32) -> DecodeOutcome {
-        match self.pool.append(seq) {
-            Ok(()) => {
-                let max_seq = self.cfg.max_seq;
-                if let Some(s) = self.seq_mut(seq) {
-                    s.ctx += 1;
-                    s.generated.push(token);
-                    if s.done() || s.context_capped(max_seq) {
-                        return DecodeOutcome::Finished;
-                    }
-                }
-                DecodeOutcome::Running
+    /// Record a successful decode append: advance `ctx`, keep the token.
+    fn record_decode(&mut self, seq: u64, token: u32) -> DecodeOutcome {
+        let max_seq = self.cfg.max_seq;
+        if let Some(s) = self.seq_mut(seq) {
+            s.ctx += 1;
+            s.generated.push(token);
+            if s.done() || s.context_capped(max_seq) {
+                return DecodeOutcome::Finished;
             }
+        }
+        DecodeOutcome::Running
+    }
+
+    /// The preemption victim: the NEWEST running sequence that still has
+    /// decode work (latest `admitted_s`, ties by request id).  Done or
+    /// context-capped residents are never victims — they are about to
+    /// retire and their results must still be emitted.
+    fn pick_victim(&self) -> Option<u64> {
+        let max_seq = self.cfg.max_seq;
+        self.running
+            .iter()
+            .filter(|s| !s.done() && !s.context_capped(max_seq))
+            .max_by(|a, b| {
+                a.admitted_s
+                    .total_cmp(&b.admitted_s)
+                    .then(a.req.id.cmp(&b.req.id))
+            })
+            .map(|s| s.req.id)
+    }
+
+    /// Preempt a running sequence to the DDR swap tier: its pages are
+    /// freed (token image preserved for a byte-identical resume) and it
+    /// joins the `preempted` queue.  Refused (`false`) for unknown,
+    /// done, or context-capped sequences.
+    pub fn preempt(&mut self, seq: u64) -> bool {
+        let max_seq = self.cfg.max_seq;
+        let Some(idx) = self.running.iter().position(|s| s.req.id == seq) else {
+            return false;
+        };
+        if self.running[idx].done() || self.running[idx].context_capped(max_seq) {
+            return false;
+        }
+        let s = self.running.swap_remove(idx);
+        self.pool
+            .swap_out(seq)
+            .expect("running sequence is resident in the pool");
+        self.preempted.push(s);
+        true
+    }
+
+    /// Record a decode step.  The KV pool grows first; on exhaustion the
+    /// outcome depends on `cfg.swap`: swap OFF reports the sequence for
+    /// terminal eviction (legacy truncation), swap ON preempts the
+    /// newest resident — possibly the appending sequence itself — and
+    /// the decode either completes on the freed pages or resumes later.
+    pub fn on_decode_done(&mut self, seq: u64, token: u32) -> DecodeOutcome {
+        // The FINAL budgeted token will never be attended to: record it
+        // without growing the pool (ctx stays == pool tokens), so a
+        // full pool can neither truncate nor pointlessly swap-cycle a
+        // request on its very last token.
+        let finishes = self
+            .seq(seq)
+            .is_some_and(|s| s.generated.len() + 1 >= s.req.max_new_tokens as usize);
+        if finishes {
+            if let Some(s) = self.seq_mut(seq) {
+                s.generated.push(token);
+            }
+            return DecodeOutcome::Finished;
+        }
+        match self.pool.append(seq) {
+            Ok(()) => self.record_decode(seq, token),
+            Err(_) if self.cfg.swap => loop {
+                let victim = self
+                    .pick_victim()
+                    .expect("the appending sequence is itself a victim candidate");
+                if victim == seq {
+                    if self.running.len() == 1 {
+                        // Alone on the machine and still out of pages:
+                        // ctx + 1 exceeds the ENTIRE pool, so this
+                        // sequence can never continue.  Terminal — the
+                        // produced token is recorded like the legacy
+                        // eviction path.
+                        if let Some(s) = self.seq_mut(seq) {
+                            s.generated.push(token);
+                        }
+                        return DecodeOutcome::EvictedKvFull;
+                    }
+                    // seq is the newest resident with work: it preempts
+                    // itself.  The token is DROPPED — the resumed decode
+                    // re-produces it at the same position.
+                    self.preempt(seq);
+                    return DecodeOutcome::Preempted;
+                }
+                self.preempt(victim);
+                if self.pool.append(seq).is_ok() {
+                    return self.record_decode(seq, token);
+                }
+            },
             Err(_) => {
                 // The token was produced; record it, but leave ctx equal
                 // to the pool's token count and hand the sequence back
@@ -323,17 +493,48 @@ impl Scheduler {
         Some(s)
     }
 
+    /// Sequences parked in the DDR swap tier, awaiting resume.
+    pub fn preempted(&self) -> &[SeqState] {
+        &self.preempted
+    }
+
+    /// Remove a preempted sequence (client cancellation while parked:
+    /// no HBM pages are held, only the swap registry entry).
+    pub fn cancel_preempted(&mut self, seq: u64) -> Option<SeqState> {
+        let i = self.preempted.iter().position(|s| s.req.id == seq)?;
+        let s = self.preempted.swap_remove(i);
+        self.pool
+            .drop_swapped(seq)
+            .expect("preempted sequence is parked in the swap tier");
+        Some(s)
+    }
+
+    /// Drain sequences that can never resume (their next decode step
+    /// exceeds the entire pool) for terminal eviction by the engine.
+    pub fn take_unresumable(&mut self) -> Vec<SeqState> {
+        std::mem::take(&mut self.unresumable)
+    }
+
     pub fn is_drained(&self) -> bool {
-        self.waiting.is_empty() && self.running.is_empty()
+        self.waiting.is_empty()
+            && self.running.is_empty()
+            && self.preempted.is_empty()
+            && self.unresumable.is_empty()
     }
 
     /// The scheduler↔pool accounting invariant: every running sequence's
-    /// `ctx` equals its pool token count, and the pool itself is sound
-    /// (every page free, retained, or shared with an accurate refcount).
+    /// `ctx` equals its pool token count, every preempted sequence's
+    /// `ctx` equals its swap-registry token count, and the pool itself
+    /// is sound (every page free, retained, or shared with an accurate
+    /// refcount).
     pub fn check_accounting(&self) -> bool {
         self.running
             .iter()
             .all(|s| self.pool.seq(s.req.id).is_some_and(|p| p.tokens == s.ctx))
+            && self
+                .preempted
+                .iter()
+                .all(|s| self.pool.swapped_tokens(s.req.id) == Some(s.ctx))
             && self.pool.check_invariants()
     }
 }
@@ -467,6 +668,209 @@ mod tests {
         assert!(s.check_accounting());
         s.retire(0);
         assert_eq!(s.pool.used_pages(), 0);
+    }
+
+    /// The final budgeted token is never attended to, so it needs no KV
+    /// growth: a pool that is exactly full must complete the request —
+    /// not truncate it (swap off) or swap-cycle it (swap on).
+    #[test]
+    fn final_token_completes_even_when_pool_is_full() {
+        for swap in [false, true] {
+            let cfg = SchedulerConfig {
+                max_batch: 1,
+                kv_pages: 2,
+                page_tokens: 4,
+                max_seq: 64,
+                swap,
+                ..Default::default()
+            };
+            let mut s = Scheduler::new(cfg);
+            s.submit(req(0, 7, 3)); // ctx 8 fills the pool before the last token
+            assert_eq!(s.schedule(0.0), vec![0]);
+            s.on_prefill_done(0, 1);
+            assert_eq!(s.on_decode_done(0, 2), DecodeOutcome::Running); // ctx 7 -> 8
+            assert_eq!(
+                s.on_decode_done(0, 3),
+                DecodeOutcome::Finished,
+                "the last token must not need a page (swap = {swap})"
+            );
+            let seq = s.seq(0).unwrap();
+            assert_eq!(seq.generated, vec![1, 2, 3], "full budget delivered");
+            assert_eq!(seq.ctx, 8, "ctx still equals pool tokens");
+            assert_eq!(s.preempted().len(), 0, "no pointless swap cycle");
+            assert!(s.check_accounting());
+            s.retire(0);
+            assert!(s.is_drained());
+        }
+    }
+
+    /// Swap mode: KV exhaustion preempts the NEWEST resident (here the
+    /// appending sequence itself) instead of truncating it; the oldest
+    /// keeps decoding, and once it retires the parked sequence swaps
+    /// back in with its token image intact and resumes decoding.
+    #[test]
+    fn kv_exhaustion_preempts_newest_and_resumes() {
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            kv_pages: 4,
+            page_tokens: 4,
+            max_seq: 64,
+            swap: true,
+            ..Default::default()
+        };
+        let mut s = Scheduler::new(cfg);
+        s.submit(req(0, 8, 4)); // 2 pages
+        s.submit(req(1, 4, 100)); // 1 page, wants to grow forever
+        assert_eq!(s.schedule(0.0), vec![0, 1]);
+        s.on_prefill_done(0, 10);
+        s.on_prefill_done(1, 20);
+        // Seq 0 takes the last free page; seq 1's growth then exhausts
+        // the pool.  Seq 1 is the newest resident → it preempts itself.
+        assert_eq!(s.on_decode_done(0, 11), DecodeOutcome::Running);
+        assert_eq!(s.on_decode_done(1, 21), DecodeOutcome::Preempted);
+        assert!(s.seq(1).is_none(), "parked, not running");
+        assert_eq!(s.preempted().len(), 1);
+        assert_eq!(
+            s.preempted()[0].generated,
+            vec![20],
+            "the un-appended token is dropped (re-decoded at resume)"
+        );
+        assert_eq!(s.pool.swapped_tokens(1), Some(4));
+        assert!(!s.is_drained(), "a parked sequence keeps the engine alive");
+        assert!(s.check_accounting());
+        // The oldest request completes untouched on the freed capacity.
+        assert_eq!(s.on_decode_done(0, 12), DecodeOutcome::Running);
+        assert_eq!(s.on_decode_done(0, 13), DecodeOutcome::Finished);
+        s.retire(0);
+        // Resume: the swap-in happens inside plan() and the sequence
+        // decodes again from exactly where it stopped.
+        let plan = s.plan(0.0);
+        assert_eq!(plan, vec![PlanItem { seq: 1, work: PlanWork::Decode }]);
+        let resumed = s.seq(1).unwrap();
+        assert_eq!(resumed.ctx, 4, "context restored");
+        assert_eq!(resumed.generated, vec![20], "token image byte-identical");
+        assert!(resumed.prefilled);
+        assert!(s.check_accounting());
+        assert_eq!(s.on_decode_done(1, 21), DecodeOutcome::Running);
+        assert_eq!(s.seq(1).unwrap().generated, vec![20, 21]);
+    }
+
+    /// Swap mode: when an OLD sequence needs pages, the newest other
+    /// resident is the victim — and swap-ins beat fresh admissions to
+    /// the freed batch slot.
+    #[test]
+    fn old_sequence_growth_evicts_newest_victim() {
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            kv_pages: 4,
+            page_tokens: 4,
+            max_seq: 64,
+            swap: true,
+            ..Default::default()
+        };
+        let mut s = Scheduler::new(cfg);
+        s.submit(req(0, 4, 100));
+        assert_eq!(s.schedule(0.0), vec![0]);
+        s.on_prefill_done(0, 10);
+        // Seq 1 arrives later: strictly newer.
+        let mut r1 = req(1, 12, 100);
+        r1.arrival_s = 1.0;
+        s.submit(r1);
+        assert_eq!(s.schedule(1.0), vec![0, 1]);
+        s.on_prefill_done(1, 20);
+        // Pool full (1 + 3 pages).  Seq 0's growth preempts seq 1.
+        assert_eq!(s.on_decode_done(0, 11), DecodeOutcome::Running);
+        assert_eq!(s.running().len(), 1, "victim left the running set");
+        assert_eq!(s.preempted().len(), 1);
+        assert_eq!(s.preempted()[0].req.id, 1, "newest is the victim");
+        assert_eq!(s.seq(0).unwrap().ctx, 5, "the old sequence grew");
+        assert!(s.check_accounting());
+        // A fresh request is waiting, but the parked sequence takes the
+        // freed slot first once seq 0 retires.
+        s.submit(req(2, 4, 2));
+        s.retire(0);
+        let ids = s.schedule(1.0);
+        assert_eq!(ids[0], 1, "swap-in beats the fresh admission");
+        assert!(s.seq(1).is_some());
+        assert_eq!(s.seq(1).unwrap().ctx, 12);
+        assert!(s.check_accounting());
+    }
+
+    /// Swap mode: a sequence that alone exceeds the entire pool is still
+    /// terminally evicted — no amount of swapping can ever resume it.
+    #[test]
+    fn lone_sequence_exceeding_pool_still_evicts_terminally() {
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            kv_pages: 2,
+            page_tokens: 4,
+            max_seq: 64,
+            swap: true,
+            ..Default::default()
+        };
+        let mut s = Scheduler::new(cfg);
+        s.submit(req(0, 7, 100)); // 2 pages, 1 token of slack
+        assert_eq!(s.schedule(0.0), vec![0]);
+        s.on_prefill_done(0, 1);
+        assert_eq!(s.on_decode_done(0, 2), DecodeOutcome::Running); // fills the pool
+        assert_eq!(s.on_decode_done(0, 3), DecodeOutcome::EvictedKvFull);
+        assert_eq!(s.seq(0).unwrap().generated.len(), 3, "produced tokens kept");
+        assert!(s.check_accounting());
+        s.retire(0);
+        assert!(s.is_drained());
+    }
+
+    /// A sequence force-preempted while it holds the whole pool can
+    /// never swap back in: `plan` routes it to the unresumable drain for
+    /// terminal eviction instead of stalling the engine forever.
+    #[test]
+    fn unresumable_preempted_sequence_is_drained_for_eviction() {
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            kv_pages: 2,
+            page_tokens: 4,
+            max_seq: 64,
+            swap: true,
+            ..Default::default()
+        };
+        let mut s = Scheduler::new(cfg);
+        s.submit(req(0, 8, 100)); // exactly the whole pool
+        assert_eq!(s.schedule(0.0), vec![0]);
+        s.on_prefill_done(0, 1);
+        assert!(s.preempt(0), "explicit preemption of a running sequence");
+        assert_eq!(s.pool.used_pages(), 0);
+        assert!(s.plan(0.0).is_empty());
+        let dead = s.take_unresumable();
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].req.id, 0);
+        assert_eq!(s.pool.swapped_seqs(), 0, "swap registry entry dropped");
+        assert!(s.is_drained());
+        assert!(s.check_accounting());
+    }
+
+    /// Cancellation while parked in the swap tier: the sequence
+    /// disappears without touching HBM, and the machine drains.
+    #[test]
+    fn cancel_preempted_releases_swap_registry() {
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            kv_pages: 4,
+            page_tokens: 4,
+            max_seq: 64,
+            swap: true,
+            ..Default::default()
+        };
+        let mut s = Scheduler::new(cfg);
+        s.submit(req(0, 4, 8));
+        s.schedule(0.0);
+        s.on_prefill_done(0, 1);
+        assert!(s.preempt(0));
+        let cancelled = s.cancel_preempted(0).expect("parked sequence cancels");
+        assert_eq!(cancelled.generated, vec![1], "partial tokens handed back");
+        assert!(s.cancel_preempted(0).is_none(), "already gone");
+        assert_eq!(s.pool.swapped_seqs(), 0);
+        assert!(s.is_drained());
+        assert!(s.check_accounting());
     }
 
     /// Regression (truncation mismatch): an oversized prompt is truncated
@@ -632,6 +1036,7 @@ mod tests {
             max_seq: 256,
             prefix_cache: true,
             prefill_chunk: 24,
+            swap: false,
         };
         let mut s = Scheduler::new(cfg);
         let prompt: Vec<u32> = (0..32).collect();
@@ -717,6 +1122,7 @@ mod tests {
                 // Randomly chunked prefill: the accounting must hold at
                 // any budget, including mid-prompt iterations.
                 prefill_chunk: (r.below(3) * 8) as usize,
+                swap: false,
             };
             let mut s = Scheduler::new(cfg);
             let trace = generate_shared_prefix_trace(&SharedPrefixConfig {
@@ -737,20 +1143,63 @@ mod tests {
         });
     }
 
+    /// Satellite: random preempt/swap-out/swap-in cycles interleaved
+    /// with admits, appends, chunked prefills and cancellations keep the
+    /// ctx == pool-tokens invariant (and `check_invariants`) on every
+    /// step, resume token streams byte-identically, and still drain
+    /// every request.
+    #[test]
+    fn property_preempt_swap_cycles_keep_accounting() {
+        proptest::check_with("preempt/swap scheduler accounting", 64, |r| {
+            let cfg = SchedulerConfig {
+                max_batch: 2 + r.below(3) as usize,
+                kv_pages: 8 + r.below(8) as usize,
+                page_tokens: 4,
+                max_seq: 96,
+                prefix_cache: r.below(2) == 0,
+                prefill_chunk: (r.below(3) * 8) as usize,
+                swap: true,
+            };
+            let mut s = Scheduler::new(cfg);
+            let trace = generate_trace(&TraceConfig {
+                n_requests: 6,
+                prompt_len_choices: vec![4, 8, 16],
+                decode_len_choices: vec![2, 4, 8],
+                seed: r.next_u64(),
+                ..Default::default()
+            });
+            let total = trace.len();
+            for t in trace {
+                s.submit(t);
+            }
+            drive_to_drain(&mut s, total, r);
+        });
+    }
+
     /// Shared driver for the liveness/accounting properties: run the
     /// scheduler to drain via `plan` (chunk-aware), randomly cancelling
-    /// requests mid-prefill, mid-decode and while queued, checking
-    /// `check_accounting` after EVERY step.
+    /// requests mid-prefill, mid-decode, while queued and while parked
+    /// in the swap tier — and, in swap mode, randomly force-preempting
+    /// running sequences — checking `check_accounting` after EVERY step
+    /// and that every observed token stream only ever grows (a resumed
+    /// sequence continues byte-identically from its parked image).
     fn drive_to_drain(s: &mut Scheduler, total: usize, r: &mut crate::util::Rng) {
         let mut resolved = 0; // completed or cancelled
         let mut now = 0.0f64;
+        // Last observed generated stream per sequence: preempt/resume
+        // must only ever APPEND to it.
+        let mut streams: std::collections::HashMap<u64, Vec<u32>> =
+            std::collections::HashMap::new();
         for _ in 0..10_000 {
             // Random cancellation: a queued request is dropped from the
-            // waiting line; a running one (possibly mid-prefill) is
-            // retired, which must release its pages immediately.
+            // waiting line; a parked one leaves the swap registry; a
+            // running one (possibly mid-prefill) is retired, which must
+            // release its pages immediately.
             if r.below(8) == 0 {
                 let id = r.below(total as u64);
                 if s.cancel_waiting(id).is_some() {
+                    resolved += 1;
+                } else if s.cancel_preempted(id).is_some() {
                     resolved += 1;
                 } else if s.seq(id).is_some() {
                     s.retire(id);
@@ -758,7 +1207,19 @@ mod tests {
                 }
                 assert!(s.check_accounting(), "desync after cancellation");
             }
+            // Swap mode: force a preemption beyond what pool pressure
+            // alone would trigger (no-op for unknown/done sequences).
+            if s.cfg.swap && r.below(8) == 0 {
+                s.preempt(r.below(total as u64));
+                assert!(s.check_accounting(), "desync after forced preemption");
+            }
             let plan = s.plan(now);
+            // Force-preempted whole-pool residents can never swap back
+            // in; plan hands them over for terminal eviction.
+            for dead in s.take_unresumable() {
+                streams.remove(&dead.req.id);
+                resolved += 1;
+            }
             assert!(s.check_accounting(), "desync right after admission");
             if plan.is_empty() {
                 if s.is_drained() {
@@ -771,6 +1232,11 @@ mod tests {
             }
             for item in plan {
                 let id = item.seq;
+                if s.seq(id).is_none() {
+                    // Preempted mid-iteration by an earlier decode's
+                    // victim selection (or cancelled): skip its slot.
+                    continue;
+                }
                 match item.work {
                     PlanWork::Prefill { end, .. } => {
                         let plen = s.seq(id).unwrap().req.prompt.len();
@@ -781,7 +1247,7 @@ mod tests {
                         }
                     }
                     PlanWork::Decode => match s.on_decode_done(id, 2) {
-                        DecodeOutcome::Running => {}
+                        DecodeOutcome::Running | DecodeOutcome::Preempted => {}
                         DecodeOutcome::Finished | DecodeOutcome::EvictedKvFull => {
                             s.retire(id);
                             resolved += 1;
@@ -789,8 +1255,19 @@ mod tests {
                     },
                 }
                 // The core property: scheduler ctx == pool tokens after
-                // EVERY step, for every sequence — shared pages included.
+                // EVERY step, for every sequence — shared pages and the
+                // swap registry included.
                 assert!(s.check_accounting(), "ctx/pool desync");
+            }
+            // Byte-identity across preempt/resume: a sequence's stream
+            // only ever extends what was last observed.
+            for st in s.running().iter().chain(s.preempted().iter()) {
+                let prev = streams.entry(st.req.id).or_default();
+                assert!(
+                    st.generated.starts_with(prev),
+                    "token stream must survive preempt/swap byte-identically"
+                );
+                *prev = st.generated.clone();
             }
             now += 0.01;
         }

@@ -87,6 +87,14 @@ pub trait ModelBackend {
 
     /// Drop any per-sequence state held for a retired sequence.
     fn release(&mut self, _seq: u64) {}
+
+    /// Seconds of model time to move `pages` KV pages between HBM and
+    /// the DDR swap tier (preemption spill / resume traffic).  The
+    /// default prices it free — backends with a memory model override
+    /// this so the serving clock shows the real cost of spilling.
+    fn swap_cost_s(&mut self, _pages: usize) -> f64 {
+        0.0
+    }
 }
 
 /// Completed-request record.  All times are on the serving clock
@@ -102,7 +110,10 @@ pub struct RequestResult {
     pub ttft_s: f64,
     /// Seconds the request waited in the queue before admission.
     pub queue_s: f64,
-    /// True if the sequence was cut short by KV-pool exhaustion.
+    /// True if the sequence was cut short by KV-pool exhaustion (swap
+    /// disabled, or the sequence alone exceeds the entire pool).  Its
+    /// `tokens` are a TRUNCATED stream, so the request is excluded from
+    /// the TTFT/latency aggregates and counted as preempted-truncated.
     pub evicted: bool,
     /// True if the client cancelled the request (its KV pages were
     /// released immediately; `tokens` holds whatever was generated).
@@ -140,6 +151,10 @@ pub struct ServeStats {
     pub rejected: u64,
     /// Requests cancelled by their client (mid-flight or while queued).
     pub cancelled: u64,
+    /// Sequences admitted into the KV pool (denominator for the prefix
+    /// hit rate: hits are counted at admission, so neither truncation
+    /// nor cancellation afterwards can push the rate past 100%).
+    pub admissions: u64,
     /// Admissions that reused at least one cached prefix page.
     pub prefix_hits: u64,
     /// Prompt tokens served from the prefix cache (prefill skipped).
@@ -147,6 +162,15 @@ pub struct ServeStats {
     /// Peak pages holding live sequence data (shared pages count once;
     /// retained cache pages excluded) — the KV-capacity figure of merit.
     pub peak_kv_pages: usize,
+    /// Sequences preempted to the DDR swap tier (swap-out events).
+    pub preemptions: u64,
+    /// KV pages written HBM → DDR across all preemptions.
+    pub swapped_out_pages: u64,
+    /// KV pages read DDR → HBM across all resumes.
+    pub swapped_in_pages: u64,
+    /// Serving-clock seconds charged for that swap traffic (virtual
+    /// clock only; on the host clock swap cost is whatever it measures).
+    pub swap_time_s: f64,
 }
 
 /// Most recent decode inter-token gaps retained for the ITL
@@ -156,13 +180,15 @@ pub struct ServeStats {
 pub const ITL_SAMPLE_CAP: usize = 65_536;
 
 /// Nearest-rank percentile of a sample.  Returns 0.0 on an empty set —
-/// a zero-completion run must yield zeros, never NaN or a panic.
+/// a zero-completion run must yield zeros, never NaN or a panic.  A NaN
+/// sample sorts last (`total_cmp`) instead of panicking the serving
+/// loop mid-trace.
 fn percentile_of(vals: &[f64], q: f64) -> f64 {
     if vals.is_empty() {
         return 0.0;
     }
     let mut vals = vals.to_vec();
-    vals.sort_by(|a, b| a.partial_cmp(b).expect("samples are finite"));
+    vals.sort_by(f64::total_cmp);
     let idx = ((q / 100.0) * (vals.len() - 1) as f64).round() as usize;
     vals[idx.min(vals.len() - 1)]
 }
@@ -202,12 +228,21 @@ impl ServeStats {
         }
     }
 
-    /// Results that ran to completion.  Cancelled requests stay in
-    /// `results` (the client's final record) but are EXCLUDED from the
-    /// latency aggregates below — a request the client killed has no
-    /// meaningful TTFT or end-to-end latency.
+    /// Results that ran to completion.  Cancelled AND KV-truncated
+    /// (`evicted`) requests stay in `results` (the client's final
+    /// record) but are EXCLUDED from the latency aggregates below — a
+    /// request the client killed has no meaningful TTFT or end-to-end
+    /// latency, and a truncated one finished artificially EARLY, which
+    /// used to make the stats look better exactly when the pool was
+    /// overloaded.
     fn completed(&self) -> impl Iterator<Item = &RequestResult> + '_ {
-        self.results.iter().filter(|r| !r.cancelled)
+        self.results.iter().filter(|r| !r.cancelled && !r.evicted)
+    }
+
+    /// Requests cut short by KV exhaustion (truncated streams): reported
+    /// separately, never blended into the latency aggregates.
+    pub fn preempted_truncated(&self) -> usize {
+        self.results.iter().filter(|r| r.evicted).count()
     }
 
     pub fn mean_latency_s(&self) -> f64 {
@@ -263,13 +298,15 @@ impl ServeStats {
         self.itl_s.iter().copied().fold(0.0, f64::max)
     }
 
-    /// Fraction of completed requests that hit the prefix cache.
+    /// Fraction of admissions that hit the prefix cache.  Hits are
+    /// counted when a prompt is admitted, so the denominator is
+    /// admissions too — a request truncated or cancelled AFTER its
+    /// admission consulted the cache cannot push the rate past 100%.
     pub fn prefix_hit_rate(&self) -> f64 {
-        let completed = self.completed().count();
-        if completed == 0 {
+        if self.admissions == 0 {
             return 0.0;
         }
-        self.prefix_hits as f64 / completed as f64
+        self.prefix_hits as f64 / self.admissions as f64
     }
 
     /// Human-readable summary (one printer for the CLI and examples).
@@ -289,6 +326,13 @@ impl ServeStats {
         }
         if self.cancelled > 0 {
             out.push_str(&format!("cancelled {} requests (client-initiated)\n", self.cancelled));
+        }
+        let truncated = self.preempted_truncated();
+        if truncated > 0 {
+            out.push_str(&format!(
+                "preempted_truncated {truncated} requests (KV exhausted — excluded from \
+                 the latency aggregates)\n"
+            ));
         }
         out.push_str(&format!(
             "decode throughput {:.1} tok/s, mean TTFT {:.1} ms (queue {:.1} ms), \
@@ -318,11 +362,21 @@ impl ServeStats {
         }
         if self.prefix_hits > 0 {
             out.push_str(&format!(
-                "\nprefix cache: {} hits ({:.0}% of requests), {} prompt tokens \
+                "\nprefix cache: {} hits ({:.0}% of admissions), {} prompt tokens \
                  served from cache",
                 self.prefix_hits,
                 self.prefix_hit_rate() * 100.0,
                 self.prefix_cached_tokens
+            ));
+        }
+        if self.preemptions > 0 {
+            out.push_str(&format!(
+                "\nswap tier: {} preemptions, {} pages out / {} pages in over DDR \
+                 ({:.1} ms of swap traffic)",
+                self.preemptions,
+                self.swapped_out_pages,
+                self.swapped_in_pages,
+                self.swap_time_s * 1e3
             ));
         }
         out
@@ -350,8 +404,9 @@ impl<B: ModelBackend> Server<B> {
     /// Run a whole trace to completion (offline replay: all requests are
     /// known upfront; `arrival_s` gates admission against the serving
     /// clock, so a request submitted late still queues realistically).
+    /// A NaN arrival sorts last (`total_cmp`) instead of panicking.
     pub fn run_trace(&mut self, mut trace: Vec<Request>) -> Result<ServeStats> {
-        trace.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        trace.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         for r in trace {
             self.core.submit(r, None);
         }
@@ -603,6 +658,119 @@ mod tests {
         }
         assert_eq!(stats.rejected, 0);
         assert_eq!(stats.peak_kv_pages, 2, "the whole pool was in use");
+    }
+
+    /// Satellite (truthful overload stats): a KV-truncated request is
+    /// excluded from the TTFT/latency aggregates and surfaced as
+    /// `preempted_truncated` instead — its artificially short latency
+    /// must not make an overloaded run look fast.
+    #[test]
+    fn truncated_requests_do_not_pollute_latency_aggregates() {
+        let mut server = Server::new(
+            EchoBackend::new(32),
+            SchedulerConfig {
+                max_batch: 1,
+                kv_pages: 2,
+                page_tokens: 4,
+                max_seq: 64,
+                ..Default::default()
+            },
+            Sampler::greedy(),
+        );
+        // Request 0 completes inside the pool; request 1 overruns it.
+        let trace = vec![req(0, 0.0, 4, 2), req(1, 0.0, 4, 100)];
+        let stats = server.run_trace(trace).unwrap();
+        assert_eq!(stats.results.len(), 2);
+        let ok = stats.results.iter().find(|r| r.id == 0).unwrap();
+        let cut = stats.results.iter().find(|r| r.id == 1).unwrap();
+        assert!(!ok.evicted && cut.evicted);
+        assert_eq!(stats.preempted_truncated(), 1);
+        // The aggregates are the COMPLETED request's numbers exactly.
+        assert_eq!(stats.mean_latency_s(), ok.latency_s);
+        assert_eq!(stats.mean_ttft_s(), ok.ttft_s);
+        assert_eq!(stats.p99_latency_s(), ok.latency_s);
+        let summary = stats.summary("virtual");
+        assert!(summary.contains("preempted_truncated 1"));
+        assert!(summary.contains("completed 1 requests"));
+    }
+
+    /// Satellite: a NaN arrival must not panic the serving loop — the
+    /// request sorts last (`total_cmp`), the arrival is pinned to 0.0
+    /// at submit, and every aggregate stays finite (the old code
+    /// panicked in the sort; an unsanitized NaN would silently poison
+    /// the means and percentiles instead).
+    #[test]
+    fn nan_arrival_is_served_without_panicking() {
+        let mut server = Server::new(
+            EchoBackend::new(16),
+            SchedulerConfig { max_batch: 1, max_seq: 64, ..Default::default() },
+            Sampler::greedy(),
+        );
+        let mut bad = req(1, 0.0, 4, 2);
+        bad.arrival_s = f64::NAN;
+        let stats = server.run_trace(vec![req(0, 0.0, 4, 2), bad]).unwrap();
+        assert_eq!(stats.results.len(), 2, "both requests served");
+        let ok = stats.results.iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(ok.tokens.len(), 2);
+        let sanitized = stats.results.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(sanitized.tokens.len(), 2, "NaN arrival still generates tokens");
+        assert!(sanitized.latency_s.is_finite(), "arrival pinned to 0.0 at submit");
+        assert!(sanitized.ttft_s.is_finite());
+        assert!(stats.mean_latency_s().is_finite(), "aggregates stay truthful");
+        assert!(stats.p99_ttft_s().is_finite());
+        assert!(stats.p99_latency_s().is_finite());
+        assert!(!stats.summary("virtual").contains("NaN"));
+    }
+
+    /// Tentpole through the offline client: with swap enabled, an
+    /// overloaded pool preempts instead of truncating — every request
+    /// completes with tokens byte-identical to an over-provisioned run,
+    /// the preemption traffic is counted, and serving takes strictly
+    /// longer than the big-pool run (spilling is not free).
+    #[test]
+    fn swap_serving_completes_overload_token_identically() {
+        let run = |kv_pages: usize, swap: bool| {
+            let mut server = Server::new(
+                EchoBackend::new(32),
+                SchedulerConfig {
+                    max_batch: 2,
+                    kv_pages,
+                    page_tokens: 4,
+                    max_seq: 64,
+                    swap,
+                    ..Default::default()
+                },
+                Sampler::greedy(),
+            );
+            let trace = vec![req(0, 0.0, 4, 12), req(1, 0.0, 4, 12)];
+            server.run_trace(trace).unwrap()
+        };
+        let big = run(64, false);
+        let swapped = run(4, true);
+        let lossy = run(4, false);
+        assert_eq!(big.results.len(), 2);
+        assert_eq!(swapped.results.len(), 2);
+        assert!(big.results.iter().all(|r| !r.evicted && r.tokens.len() == 12));
+        assert!(
+            swapped.results.iter().all(|r| !r.evicted && r.tokens.len() == 12),
+            "swap must eliminate truncation"
+        );
+        for a in &big.results {
+            let b = swapped.results.iter().find(|r| r.id == a.id).unwrap();
+            assert_eq!(a.tokens, b.tokens, "request {} resumes byte-identically", a.id);
+        }
+        assert!(swapped.preemptions > 0, "the small pool must have preempted");
+        assert!(swapped.swapped_out_pages > 0 && swapped.swapped_in_pages > 0);
+        assert!(
+            swapped.served_s > big.served_s,
+            "preemption serializes work: {} vs {}",
+            swapped.served_s,
+            big.served_s
+        );
+        assert_eq!(swapped.preempted_truncated(), 0);
+        // The legacy baseline on the same pool loses both requests.
+        assert_eq!(lossy.preempted_truncated(), 2);
+        assert!(lossy.results.iter().all(|r| r.tokens.len() < 12));
     }
 
     #[test]

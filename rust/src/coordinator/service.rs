@@ -32,7 +32,7 @@ use anyhow::{bail, ensure, Result};
 use crate::workload::Request;
 
 use super::sampler::Sampler;
-use super::scheduler::{DecodeOutcome, PlanWork, Scheduler, SchedulerConfig};
+use super::scheduler::{DecodeOutcome, PlanWork, Scheduler, SchedulerConfig, SeqState};
 use super::server::{ModelBackend, RequestResult, SeqSlot, SeqWork, ServeStats};
 
 /// What a `RequestHandle` receives while its request is served.
@@ -127,7 +127,8 @@ pub enum Tick {
     Drained,
 }
 
-/// Why a sequence left the running set.
+/// Why a sequence left the running set for good.  Preemption is NOT a
+/// finish: a preempted sequence keeps its streaming state and resumes.
 #[derive(Clone, Copy, PartialEq, Eq)]
 enum FinishKind {
     Done,
@@ -150,6 +151,8 @@ pub(crate) struct EngineCore<B: ModelBackend> {
     last_token_s: HashMap<u64, f64>,
     /// Streaming sinks for requests submitted with a subscriber.
     subs: HashMap<u64, Sender<StreamEvent>>,
+    /// Cumulative swap pages (out + in) already priced on the clock.
+    swap_pages_charged: u64,
 }
 
 impl<B: ModelBackend> EngineCore<B> {
@@ -165,6 +168,7 @@ impl<B: ModelBackend> EngineCore<B> {
             first_token_s: HashMap::new(),
             last_token_s: HashMap::new(),
             subs: HashMap::new(),
+            swap_pages_charged: 0,
         }
     }
 
@@ -179,8 +183,14 @@ impl<B: ModelBackend> EngineCore<B> {
         }
     }
 
-    /// Queue a request, optionally with a streaming subscriber.
-    pub(crate) fn submit(&mut self, req: Request, sub: Option<Sender<StreamEvent>>) {
+    /// Queue a request, optionally with a streaming subscriber.  A
+    /// non-finite arrival (NaN/∞) would bypass the arrival gate anyway
+    /// (NaN comparisons are false) and poison every latency aggregate:
+    /// pin it to 0.0 — arrived at trace start — so stats stay truthful.
+    pub(crate) fn submit(&mut self, mut req: Request, sub: Option<Sender<StreamEvent>>) {
+        if !req.arrival_s.is_finite() {
+            req.arrival_s = 0.0;
+        }
         self.arrivals.insert(req.id, req.arrival_s);
         if let Some(tx) = sub {
             self.subs.insert(req.id, tx);
@@ -189,8 +199,9 @@ impl<B: ModelBackend> EngineCore<B> {
     }
 
     /// Cancel a request: a queued one vanishes without ever touching the
-    /// pool; a running one is retired NOW, releasing its KV pages, with
-    /// whatever tokens it generated.  Unknown ids are ignored.
+    /// pool; one parked in the swap tier leaves the swap registry; a
+    /// running one is retired NOW, releasing its KV pages, with whatever
+    /// tokens it generated.  Unknown ids are ignored.
     pub(crate) fn cancel(&mut self, seq: u64) {
         if let Some(req) = self.scheduler.cancel_waiting(seq) {
             self.stats.cancelled += 1;
@@ -209,6 +220,8 @@ impl<B: ModelBackend> EngineCore<B> {
             if let Some(tx) = self.subs.remove(&seq) {
                 let _ = tx.send(StreamEvent::Done(result));
             }
+        } else if let Some(s) = self.scheduler.cancel_preempted(seq) {
+            self.finish_state(s, FinishKind::Cancelled);
         } else if self.scheduler.seq(seq).is_some() {
             self.finish(seq, FinishKind::Cancelled);
         }
@@ -226,6 +239,13 @@ impl<B: ModelBackend> EngineCore<B> {
     /// Retire a sequence and resolve its result (no-op if already gone).
     fn finish(&mut self, seq: u64, kind: FinishKind) {
         let Some(s) = self.scheduler.retire(seq) else { return };
+        self.finish_state(s, kind);
+    }
+
+    /// Resolve a sequence already removed from the scheduler (retired,
+    /// cancelled out of the swap tier, or terminally unresumable).
+    fn finish_state(&mut self, s: SeqState, kind: FinishKind) {
+        let seq = s.req.id;
         self.backend.release(seq);
         if kind == FinishKind::Cancelled {
             self.stats.cancelled += 1;
@@ -252,6 +272,27 @@ impl<B: ModelBackend> EngineCore<B> {
         }
     }
 
+    /// Price the KV pages moved to/from the DDR swap tier since the last
+    /// charge.  On the virtual clock the cost advances the clock (a
+    /// swap-in must land back in HBM before the step it precedes; a
+    /// swap-out delays whatever runs next).  On the real clock the host
+    /// already measures whatever the traffic costs, so only the page
+    /// counters move.
+    fn charge_swap_traffic(&mut self) {
+        let ps = self.scheduler.pool.stats();
+        let moved = ps.swapped_out_pages + ps.swapped_in_pages;
+        let delta = moved.saturating_sub(self.swap_pages_charged);
+        if delta == 0 {
+            return;
+        }
+        self.swap_pages_charged = moved;
+        if let ClockMode::Virtual = self.mode {
+            let cost = self.backend.swap_cost_s(delta as usize).max(0.0);
+            self.clock += cost;
+            self.stats.swap_time_s += cost;
+        }
+    }
+
     /// One engine iteration: plan, step, sample, stream, retire.
     pub(crate) fn tick(&mut self) -> Result<Tick> {
         let now = self.now();
@@ -259,6 +300,15 @@ impl<B: ModelBackend> EngineCore<B> {
             self.clock = now;
         }
         let plan = self.scheduler.plan(self.clock);
+        // A parked sequence whose next decode step exceeds the ENTIRE
+        // pool can never resume: terminal eviction, the one eviction
+        // mode that survives with swap enabled.
+        for s in self.scheduler.take_unresumable() {
+            self.finish_state(s, FinishKind::Evicted);
+        }
+        // Swap-ins performed during planning are priced before the step
+        // runs: the resumed KV must be back in HBM before compute.
+        self.charge_swap_traffic();
         // Admission just allocated prompt pages: sample the footprint.
         self.stats.peak_kv_pages = self.stats.peak_kv_pages.max(self.scheduler.pool.used_pages());
         if plan.is_empty() {
@@ -373,6 +423,12 @@ impl<B: ModelBackend> EngineCore<B> {
         let mut finished: Vec<(u64, FinishKind)> = Vec::new();
         let mut dropped: Vec<u64> = Vec::new();
         for (slot, logits) in slots.iter().zip(&out.logits) {
+            if self.scheduler.seq(slot.seq).is_none() {
+                // Preempted mid-iteration by an earlier slot's victim
+                // selection: its KV did not advance, so the whole slot
+                // replays (same tokens) after resume.  Nothing streams.
+                continue;
+            }
             match &slot.work {
                 SeqWork::Prefill { chunk_end, .. } if !slot.work.yields_token() => {
                     self.scheduler.on_prefill_chunk(slot.seq, *chunk_end);
@@ -388,20 +444,32 @@ impl<B: ModelBackend> EngineCore<B> {
                 }
                 SeqWork::Decode { .. } => {
                     let tok = self.sampler.sample(logits);
-                    if let Some(prev) = self.last_token_s.insert(slot.seq, self.clock) {
-                        self.stats.record_itl(self.clock - prev);
-                    }
-                    if self.scheduler.on_decode_done(slot.seq, tok)
-                        == DecodeOutcome::EvictedKvFull
-                    {
-                        finished.push((slot.seq, FinishKind::Evicted));
-                    }
-                    if !self.emit(slot.seq, StreamEvent::Token(tok)) {
-                        dropped.push(slot.seq);
+                    match self.scheduler.on_decode_done(slot.seq, tok) {
+                        DecodeOutcome::Preempted => {
+                            // The sequence parked itself in the swap
+                            // tier and the token was dropped with it —
+                            // the resumed decode re-produces it, so
+                            // nothing streams and no ITL is sampled.
+                        }
+                        outcome => {
+                            let prev = self.last_token_s.insert(slot.seq, self.clock);
+                            if let Some(prev) = prev {
+                                self.stats.record_itl(self.clock - prev);
+                            }
+                            if outcome == DecodeOutcome::EvictedKvFull {
+                                finished.push((slot.seq, FinishKind::Evicted));
+                            }
+                            if !self.emit(slot.seq, StreamEvent::Token(tok)) {
+                                dropped.push(slot.seq);
+                            }
+                        }
                     }
                 }
             }
         }
+        // Swap-outs discovered during decode processing are priced after
+        // the step: they delay whatever runs next.
+        self.charge_swap_traffic();
         // Decode appends may have opened (or CoW-copied) pages.
         self.stats.peak_kv_pages = self.stats.peak_kv_pages.max(self.scheduler.pool.used_pages());
         // Sweep completed sequences (token budget reached, or context
@@ -425,14 +493,18 @@ impl<B: ModelBackend> EngineCore<B> {
         Ok(Tick::Stepped)
     }
 
-    /// A snapshot of the serving stats so far (prefix counters and the
-    /// serving-clock total filled in from live state).
+    /// A snapshot of the serving stats so far (prefix + swap counters
+    /// and the serving-clock total filled in from live state).
     pub(crate) fn stats_snapshot(&self) -> ServeStats {
         let mut stats = self.stats.clone();
         stats.served_s = self.clock;
         let pool = self.scheduler.pool.stats();
+        stats.admissions = pool.admits;
         stats.prefix_hits = pool.prefix_hits;
         stats.prefix_cached_tokens = pool.cached_tokens_served;
+        stats.preemptions = pool.swap_outs;
+        stats.swapped_out_pages = pool.swapped_out_pages;
+        stats.swapped_in_pages = pool.swapped_in_pages;
         stats
     }
 }
@@ -797,6 +869,92 @@ mod tests {
         assert_eq!(stats.results.len(), 2);
         assert_eq!(stats.cancelled, 0);
         assert!(stats.steps > 0);
+    }
+
+    /// Tentpole: a request preempted to the swap tier keeps streaming
+    /// across the preempt/resume cycle — no terminal `Evicted` event,
+    /// the handle resolves with the full token budget, and the streamed
+    /// tokens equal the final result byte for byte.
+    #[test]
+    fn streaming_survives_preempt_resume_cycle() {
+        let mut svc = Service::new(
+            EchoBackend::new(32),
+            SchedulerConfig {
+                max_batch: 2,
+                kv_pages: 4,
+                page_tokens: 4,
+                max_seq: 64,
+                swap: true,
+                ..Default::default()
+            },
+            Sampler::greedy(),
+        );
+        // Two residents that each outgrow half the pool: one must spill.
+        let h0 = svc.submit(req(0, 4, 12));
+        let h1 = svc.submit(req(1, 4, 12));
+        svc.drain().unwrap();
+        let stats = svc.stats();
+        assert!(stats.preemptions > 0, "the pool forces at least one preemption");
+        assert_eq!(stats.preempted_truncated(), 0, "no truncation with swap on");
+        assert_eq!(svc.scheduler().pool.used_pages(), 0);
+        assert_eq!(svc.scheduler().pool.swapped_seqs(), 0);
+        for h in [h0, h1] {
+            let mut streamed = Vec::new();
+            let result = loop {
+                match h.try_event() {
+                    Some(StreamEvent::Token(t)) => streamed.push(t),
+                    Some(StreamEvent::Done(r)) => break r,
+                    Some(StreamEvent::Rejected) => panic!("must not be rejected"),
+                    None => panic!("stream ended without Done"),
+                }
+            };
+            assert!(!result.evicted && !result.cancelled);
+            assert_eq!(result.tokens.len(), 12, "full budget across the swap cycle");
+            assert_eq!(streamed, result.tokens, "stream and result agree");
+        }
+    }
+
+    /// Cancelling a request while it is parked in the swap tier resolves
+    /// the handle (partial tokens kept) and clears the swap registry.
+    #[test]
+    fn cancel_while_preempted_resolves_handle() {
+        let mut svc = Service::new(
+            EchoBackend::new(32),
+            SchedulerConfig {
+                max_batch: 2,
+                kv_pages: 4,
+                page_tokens: 4,
+                max_seq: 64,
+                swap: true,
+                ..Default::default()
+            },
+            Sampler::greedy(),
+        );
+        let h0 = svc.submit(req(0, 4, 12));
+        let h1 = svc.submit(req(1, 4, 12));
+        for _ in 0..20 {
+            if !svc.scheduler().preempted().is_empty() {
+                break;
+            }
+            svc.tick().unwrap();
+        }
+        let parked = svc.scheduler().preempted();
+        assert_eq!(parked.len(), 1, "pool pressure parked the newest request");
+        assert_eq!(parked[0].req.id, 1);
+        h1.cancel();
+        svc.tick().unwrap();
+        assert_eq!(svc.scheduler().preempted().len(), 0);
+        assert_eq!(svc.scheduler().pool.swapped_seqs(), 0, "registry cleared");
+        svc.drain().unwrap();
+        let r1 = h1.wait().expect("cancelled handle resolves");
+        assert!(r1.cancelled);
+        assert!(!r1.tokens.is_empty(), "tokens streamed before the preemption kept");
+        let r0 = h0.wait().expect("survivor completes");
+        assert!(!r0.cancelled && !r0.evicted);
+        assert_eq!(r0.tokens.len(), 12);
+        let stats = svc.stats();
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.preempted_truncated(), 0);
     }
 
     /// Live-mode cancellation: the handle always resolves — either the

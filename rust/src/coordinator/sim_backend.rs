@@ -20,6 +20,14 @@
 //! deterministically from (sequence, last token, position): served
 //! token streams and latencies are bit-identical across runs for a
 //! fixed trace and sampler seed.
+//!
+//! Swap pricing (§4.4 hybrid HBM/DDR placement): with a swap model
+//! configured (`with_swap_model`), preemption spill/resume traffic is
+//! charged at page-bytes ÷ DDR bandwidth — page bytes come from the
+//! model's KV geometry (`ModelConfig::kv_bytes` per token × tokens per
+//! page at the serving layer's page size), the bandwidth defaults to
+//! the platform's DDR channel.  The virtual clock then shows the real
+//! cost of spilling under overload.
 
 use std::collections::HashMap;
 
@@ -33,6 +41,14 @@ use crate::util::Rng;
 
 use super::server::{ModelBackend, SeqSlot, SeqWork, StepOutput};
 
+/// DDR swap-tier cost model: how many bytes one KV page carries and how
+/// fast the DDR channel moves them.
+#[derive(Debug, Clone, Copy)]
+struct SwapModel {
+    page_bytes: f64,
+    ddr_gbps: f64,
+}
+
 /// Serving backend that executes steps on the simulated accelerator.
 pub struct SimBackend {
     target: Target,
@@ -40,6 +56,8 @@ pub struct SimBackend {
     vocab: usize,
     /// Memoised stream timings: (is_prefill, bucket, batch) → seconds.
     cache: HashMap<(bool, u64, u32), f64>,
+    /// DDR swap pricing; `None` prices swap traffic free.
+    swap: Option<SwapModel>,
 }
 
 impl SimBackend {
@@ -54,7 +72,19 @@ impl SimBackend {
     /// serving a synthetic trace against a 7B-scale target.
     pub fn with_vocab(target: Target, vocab: usize) -> Self {
         let plan = BucketPlan::paper_default(target.model.max_seq);
-        Self { target, plan, vocab: vocab.max(2), cache: HashMap::new() }
+        Self { target, plan, vocab: vocab.max(2), cache: HashMap::new(), swap: None }
+    }
+
+    /// Enable DDR swap pricing for a serving layer using
+    /// `page_tokens`-token KV pages.  Page bytes follow the model's KV
+    /// geometry at the compression recipe's activation width;
+    /// `ddr_gbps` overrides the platform's DDR bandwidth (GB/s).
+    pub fn with_swap_model(mut self, page_tokens: usize, ddr_gbps: Option<f64>) -> Self {
+        let act_bytes = (self.target.compression.act_bits as u64).div_ceil(8).max(1);
+        let page_bytes = self.target.model.kv_bytes(page_tokens.max(1) as u64, act_bytes);
+        let ddr_gbps = ddr_gbps.unwrap_or(self.target.platform.ddr.bandwidth_gbs).max(1e-3);
+        self.swap = Some(SwapModel { page_bytes: page_bytes as f64, ddr_gbps });
+        self
     }
 
     /// Seconds for one (stage, bucket, batch) stream on the accelerator.
@@ -109,10 +139,20 @@ impl ModelBackend for SimBackend {
                     // bucket: cached prefix pages hold already-computed
                     // KV (the first chunk starts after them), and under
                     // chunked prefill the rest of the prompt is priced
-                    // by later iterations.
-                    let chunk = chunk_end.saturating_sub(*chunk_start).max(1);
-                    let b = self.plan.prefill_bucket(chunk as u64);
-                    step_s += self.stream_s(true, b, 1);
+                    // by later iterations.  A zero-length chunk is a
+                    // planner bug — assert in debug builds, and never
+                    // invent cost for it (the old `.max(1)` silently
+                    // priced phantom work).
+                    let chunk = chunk_end.saturating_sub(*chunk_start);
+                    debug_assert!(
+                        chunk > 0,
+                        "degenerate prefill chunk [{chunk_start}, {chunk_end}) for seq {}",
+                        slot.seq
+                    );
+                    if chunk > 0 {
+                        let b = self.plan.prefill_bucket(chunk as u64);
+                        step_s += self.stream_s(true, b, 1);
+                    }
                 }
                 SeqWork::Decode { pos, .. } => {
                     n_decode += 1;
@@ -126,6 +166,16 @@ impl ModelBackend for SimBackend {
         }
         let logits = batch.iter().map(|s| self.logits_for(s)).collect();
         Ok(StepOutput { logits, step_s })
+    }
+
+    /// Price preemption spill/resume traffic over the DDR channel:
+    /// pages × page-bytes ÷ bandwidth.  Free when no swap model is
+    /// configured (swap disabled at the serving layer).
+    fn swap_cost_s(&mut self, pages: usize) -> f64 {
+        match self.swap {
+            Some(m) => pages as f64 * m.page_bytes / (m.ddr_gbps * 1e9),
+            None => 0.0,
+        }
     }
 }
 
@@ -233,6 +283,69 @@ mod tests {
             let b = on.results.iter().find(|r| r.id == a.id).unwrap();
             assert_eq!(a.tokens, b.tokens, "tokens must not change with caching");
         }
+    }
+
+    /// Satellite: the DDR swap cost model follows the KV geometry —
+    /// linear in pages, inversely proportional to the bandwidth, free
+    /// when unconfigured (swap disabled at the serving layer).
+    #[test]
+    fn swap_cost_scales_with_pages_and_bandwidth() {
+        let t = Target::u280_tiny();
+        let ddr = t.platform.ddr.bandwidth_gbs;
+        let act_bytes = (t.compression.act_bits as u64).div_ceil(8).max(1);
+        let expect_one = t.model.kv_bytes(16, act_bytes) as f64 / (ddr * 1e9);
+        let mut free = SimBackend::with_vocab(t.clone(), 8);
+        assert_eq!(free.swap_cost_s(4), 0.0, "no swap model: traffic is free");
+        let mut priced = SimBackend::with_vocab(t.clone(), 8).with_swap_model(16, None);
+        let one = priced.swap_cost_s(1);
+        assert!(one > 0.0);
+        assert!((one - expect_one).abs() < 1e-12, "page bytes follow the KV geometry");
+        assert!((priced.swap_cost_s(8) - 8.0 * one).abs() < 1e-15, "cost is linear in pages");
+        let mut fast = SimBackend::with_vocab(t, 8).with_swap_model(16, Some(2.0 * ddr));
+        assert!(
+            (fast.swap_cost_s(1) - one / 2.0).abs() < 1e-12,
+            "doubling the bandwidth halves the cost"
+        );
+    }
+
+    /// Satellite: a zero-length prefill chunk is a planner bug — debug
+    /// builds assert instead of silently pricing phantom work.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "degenerate prefill chunk")]
+    fn degenerate_prefill_chunk_asserts_in_debug() {
+        let mut b = SimBackend::with_vocab(Target::u280_tiny(), 8);
+        let slot = SeqSlot {
+            seq: 0,
+            work: SeqWork::Prefill {
+                prompt: vec![1, 2, 3, 4],
+                cached_ctx: 0,
+                chunk_start: 2,
+                chunk_end: 2,
+            },
+        };
+        let _ = b.step(&[slot]);
+    }
+
+    /// Satellite: release builds skip the degenerate chunk instead of
+    /// inventing one token of cost (the old `.max(1)`), and the logits
+    /// row count still matches the batch.
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn degenerate_prefill_chunk_is_not_priced_in_release() {
+        let mut b = SimBackend::with_vocab(Target::u280_tiny(), 8);
+        let slot = SeqSlot {
+            seq: 0,
+            work: SeqWork::Prefill {
+                prompt: vec![1, 2, 3, 4],
+                cached_ctx: 0,
+                chunk_start: 2,
+                chunk_end: 2,
+            },
+        };
+        let out = b.step(&[slot]).unwrap();
+        assert_eq!(out.step_s, 0.0, "no phantom prefill cost");
+        assert_eq!(out.logits.len(), 1, "row count still matches the batch");
     }
 
     /// Batched decode amortizes weight streaming (Fig. 15): aggregate

@@ -13,6 +13,11 @@ use crate::ir::{passes, Graph, Stage};
 use crate::metrics::{EvalPoint, Measurement};
 use crate::sim::{Engine, PowerModel, SimReport};
 
+/// KV page size (tokens) the serving experiments size their pools and
+/// price their swap traffic with — one definition, so `cli serve`'s
+/// pool sizing and the experiment drivers can never drift apart.
+pub const SERVE_PAGE_TOKENS: usize = 16;
+
 /// Lower and simulate one stream for a target — the single source of
 /// stage timings for the figure sweeps AND the serving-path
 /// `coordinator::SimBackend`.
@@ -165,7 +170,7 @@ pub fn flightllm_serve_batch_tps(
     use crate::workload::generate_burst_trace;
 
     let vocab = 512u32.min(target.model.vocab as u32).max(2);
-    let page_tokens = 16usize;
+    let page_tokens = SERVE_PAGE_TOKENS;
     let per_seq = (ctx as usize + decode as usize).div_ceil(page_tokens) + 1;
     let cfg = SchedulerConfig {
         max_batch: batch.max(1) as usize,
@@ -200,7 +205,7 @@ pub fn flightllm_serve_prefix(
     let cfg = SchedulerConfig {
         max_batch: max_batch.max(1),
         kv_pages: 512,
-        page_tokens: 16,
+        page_tokens: SERVE_PAGE_TOKENS,
         max_seq: target.model.max_seq as usize,
         prefix_cache,
         ..Default::default()
@@ -210,6 +215,68 @@ pub fn flightllm_serve_prefix(
     Server::new(backend, cfg, Sampler::greedy())
         .run_trace(trace)
         .expect("sim serving is infallible")
+}
+
+/// Serve an overload trace (concurrent KV demand exceeding the pool)
+/// through the continuous-batching engine over the sim backend, with a
+/// `kv_pages`-page pool and swap-to-DDR preemption on or off — the
+/// controlled comparison behind `serve --swap`, the serve_e2e overload
+/// section and the fig15 swap table.  With swap ON the backend prices
+/// spill/resume traffic at the KV page size over `ddr_gbps` (platform
+/// DDR bandwidth when `None`), so the virtual clock shows the cost of
+/// spilling; sampling is greedy so token streams are comparable across
+/// pool sizes (the simulator prices time, not numerics).
+pub fn flightllm_serve_overload(
+    target: &Target,
+    trace_cfg: &crate::workload::OverloadConfig,
+    max_batch: usize,
+    kv_pages: usize,
+    swap: bool,
+    ddr_gbps: Option<f64>,
+) -> crate::coordinator::ServeStats {
+    use crate::coordinator::{Sampler, SchedulerConfig, Server, SimBackend};
+    use crate::workload::generate_overload_trace;
+
+    let page_tokens = SERVE_PAGE_TOKENS;
+    let cfg = SchedulerConfig {
+        max_batch: max_batch.max(1),
+        kv_pages: kv_pages.max(1),
+        page_tokens,
+        max_seq: target.model.max_seq as usize,
+        swap,
+        ..Default::default()
+    };
+    let trace = generate_overload_trace(trace_cfg);
+    let backend = SimBackend::with_vocab(target.clone(), trace_cfg.vocab.max(2) as usize)
+        .with_swap_model(page_tokens, ddr_gbps);
+    Server::new(backend, cfg, Sampler::greedy())
+        .run_trace(trace)
+        .expect("sim serving is infallible")
+}
+
+/// The controlled three-way overload comparison: the SAME trace served
+/// with an over-provisioned pool (no contention), the small pool with
+/// swap-to-DDR preemption, and the small pool with legacy truncation.
+/// Returns `(big, swapped, lossy)` — one definition of the comparison
+/// shared by the acceptance test, the fig15 swap table, the serve_e2e
+/// overload section and `cli serve --swap`.
+pub fn flightllm_overload_three_way(
+    target: &Target,
+    trace_cfg: &crate::workload::OverloadConfig,
+    max_batch: usize,
+    big_pool: usize,
+    small_pool: usize,
+    ddr_gbps: Option<f64>,
+) -> (
+    crate::coordinator::ServeStats,
+    crate::coordinator::ServeStats,
+    crate::coordinator::ServeStats,
+) {
+    (
+        flightllm_serve_overload(target, trace_cfg, max_batch, big_pool, false, ddr_gbps),
+        flightllm_serve_overload(target, trace_cfg, max_batch, small_pool, true, ddr_gbps),
+        flightllm_serve_overload(target, trace_cfg, max_batch, small_pool, false, ddr_gbps),
+    )
 }
 
 /// TTFT / P99-decode-ITL vs prefill chunk size: serve the SAME mixed
@@ -236,7 +303,7 @@ pub fn flightllm_serve_chunk_sweep(
             let cfg = SchedulerConfig {
                 max_batch: max_batch.max(1),
                 kv_pages: 512,
-                page_tokens: 16,
+                page_tokens: SERVE_PAGE_TOKENS,
                 max_seq: target.model.max_seq as usize,
                 prefill_chunk: chunk,
                 ..Default::default()
@@ -420,6 +487,116 @@ mod tests {
             let b = on.results.iter().find(|r| r.id == a.id).expect("same ids");
             assert_eq!(a.tokens, b.tokens, "request {} tokens must be identical", a.id);
         }
+    }
+
+    /// Acceptance (swap-to-DDR preemption): on an overload trace with a
+    /// KV pool sized to force preemption, swap-enabled serving completes
+    /// ALL requests with token streams byte-identical to an
+    /// over-provisioned-pool run (zero truncations), and pays for it in
+    /// served time — strictly above BOTH the big-pool run (spilling is
+    /// priced DDR traffic plus serialization) and the swap-disabled
+    /// baseline, which "finishes" early only because it truncates
+    /// requests outright.
+    #[test]
+    fn swap_preemption_completes_overload_token_identically() {
+        use crate::workload::OverloadConfig;
+        let t = Target::u280_tiny();
+        let cfg = OverloadConfig {
+            n_requests: 6,
+            prompt_len: 32,
+            decode_len_choices: vec![48, 64, 96],
+            // Near-simultaneous arrivals: tiny-model sim steps are
+            // µs-scale, so a slow trace would never overlap residents.
+            rate_per_s: 1e7,
+            vocab: 64,
+            seed: 5,
+        };
+        // 12 pages × 16 tokens: three concurrent residents outgrow the
+        // pool mid-decode, but no single request exceeds it alone.
+        let (big, swapped, lossy) = flightllm_overload_three_way(&t, &cfg, 3, 64, 12, None);
+        assert_eq!(big.results.len(), 6);
+        assert_eq!(big.preempted_truncated(), 0, "the big pool never truncates");
+        assert_eq!(swapped.results.len(), 6);
+        assert_eq!(swapped.preempted_truncated(), 0, "swap must eliminate truncation");
+        assert!(swapped.preemptions > 0, "the small pool must have preempted");
+        assert!(swapped.swap_time_s > 0.0, "spill traffic is priced on the clock");
+        for a in &big.results {
+            let b = swapped.results.iter().find(|r| r.id == a.id).expect("same ids");
+            assert_eq!(a.tokens, b.tokens, "request {} must resume byte-identically", a.id);
+        }
+        assert!(
+            lossy.preempted_truncated() > 0,
+            "the swap-disabled baseline loses requests under the same pool"
+        );
+        assert!(
+            swapped.served_s > big.served_s,
+            "spilling must cost time over abundant HBM: {} vs {}",
+            swapped.served_s,
+            big.served_s
+        );
+        assert!(
+            swapped.served_s > lossy.served_s,
+            "completing the truncated work must cost time over dropping it: {} vs {}",
+            swapped.served_s,
+            lossy.served_s
+        );
+    }
+
+    /// Regression (truthful overload stats): the overload run's mean
+    /// latency must NOT drop below the uncontended run's — KV-truncated
+    /// requests used to pollute the aggregates with artificially short
+    /// latencies, making the stats look better exactly under overload.
+    #[test]
+    fn overload_mean_latency_does_not_drop_below_uncontended() {
+        use crate::coordinator::{Sampler, SchedulerConfig, Server, SimBackend};
+        use crate::workload::generate_burst_trace;
+        let t = Target::u280_tiny();
+        let run = |kv_pages: usize| {
+            let cfg = SchedulerConfig {
+                max_batch: 2,
+                kv_pages,
+                page_tokens: SERVE_PAGE_TOKENS,
+                max_seq: 256,
+                ..Default::default()
+            };
+            // Three identical requests: demand 4 pages each (16-token
+            // prompt + 48 decode tokens), arriving together at batch 2.
+            let trace = generate_burst_trace(3, 16, 48, 64, 7);
+            let backend = SimBackend::with_vocab(t.clone(), 64);
+            Server::new(backend, cfg, Sampler::greedy())
+                .run_trace(trace)
+                .expect("sim serving is infallible")
+        };
+        let uncontended = run(32);
+        let overload = run(6); // first resident pair exhausts 6 pages mid-decode
+        assert_eq!(uncontended.preempted_truncated(), 0);
+        assert_eq!(
+            overload.preempted_truncated(),
+            2,
+            "the concurrent pair truncates; the queued request completes alone"
+        );
+        let completed: Vec<_> = overload
+            .results
+            .iter()
+            .filter(|r| !r.evicted && !r.cancelled)
+            .collect();
+        assert_eq!(completed.len(), 1);
+        // The OLD aggregate blended the truncated short latencies in —
+        // strictly below the truthful number.
+        let polluted_mean = overload.results.iter().map(|r| r.latency_s).sum::<f64>()
+            / overload.results.len() as f64;
+        assert!(
+            overload.mean_latency_s() > polluted_mean,
+            "excluding truncated runs must raise the mean: {} vs {}",
+            overload.mean_latency_s(),
+            polluted_mean
+        );
+        assert!(
+            overload.mean_latency_s() >= uncontended.mean_latency_s(),
+            "overload must not report better latency than an uncontended run: {} vs {}",
+            overload.mean_latency_s(),
+            uncontended.mean_latency_s()
+        );
     }
 
     /// Acceptance (chunked prefill): on a mixed burst trace — sim

@@ -214,6 +214,63 @@ pub fn generate_mixed_burst_trace(cfg: &MixedBurstConfig) -> Vec<Request> {
     trace
 }
 
+/// An overload workload: decode-heavy requests arriving faster than the
+/// KV pool can hold them, so concurrent KV demand exceeds HBM capacity
+/// mid-decode — the regime where a swap-less scheduler silently
+/// truncates sequences and a swap-enabled one spills to DDR and
+/// resumes.  All requests share one prompt length (deterministic page
+/// demand); decode budgets cycle through `decode_len_choices` so
+/// sequences finish at staggered times and capacity frees gradually.
+#[derive(Debug, Clone)]
+pub struct OverloadConfig {
+    pub n_requests: usize,
+    pub prompt_len: usize,
+    pub decode_len_choices: Vec<u32>,
+    /// Arrival rate (req/s); high rates pile residents up concurrently.
+    pub rate_per_s: f64,
+    pub vocab: u32,
+    pub seed: u64,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        Self {
+            n_requests: 8,
+            prompt_len: 32,
+            decode_len_choices: vec![48, 64, 96],
+            // Near-simultaneous arrivals: the whole batch must be
+            // resident together even on µs-scale simulated steps.
+            rate_per_s: 1e6,
+            vocab: 512,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate an overload trace (deterministic per seed, strictly
+/// increasing Poisson arrivals).
+pub fn generate_overload_trace(cfg: &OverloadConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let vocab = cfg.vocab.max(2) as u64;
+    let choices = if cfg.decode_len_choices.is_empty() {
+        vec![64]
+    } else {
+        cfg.decode_len_choices.clone()
+    };
+    let mut t = 0.0f64;
+    (0..cfg.n_requests)
+        .map(|i| {
+            t += rng.exp(cfg.rate_per_s.max(1e-9));
+            Request {
+                id: i as u64,
+                arrival_s: t,
+                prompt: (0..cfg.prompt_len).map(|_| rng.below(vocab) as u32).collect(),
+                max_new_tokens: choices[i % choices.len()].max(1),
+            }
+        })
+        .collect()
+}
+
 /// A burst: `n` identical-shape requests all arriving at t = 0 — the
 /// Fig. 15 multibatch scenario pushed through the serving path, and the
 /// worst-case admission pressure for the continuous-batching engine.
@@ -335,6 +392,28 @@ mod tests {
         for w in a.windows(2) {
             assert!(w[1].arrival_s > w[0].arrival_s, "Poisson arrivals increase");
         }
+    }
+
+    /// Satellite: the overload trace is deterministic per seed, keeps
+    /// strictly increasing arrivals, one prompt length, and cycles its
+    /// decode budgets so completions stagger.
+    #[test]
+    fn overload_trace_deterministic_and_staggered() {
+        let cfg = OverloadConfig { n_requests: 6, seed: 3, ..Default::default() };
+        let a = generate_overload_trace(&cfg);
+        let b = generate_overload_trace(&cfg);
+        assert_eq!(a.len(), 6);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt, "deterministic per seed");
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!(x.prompt.len(), cfg.prompt_len);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s, "strictly increasing arrivals");
+        }
+        let budgets: Vec<u32> = a.iter().map(|r| r.max_new_tokens).collect();
+        assert_eq!(budgets, vec![48, 64, 96, 48, 64, 96], "cycled decode budgets");
     }
 
     #[test]
