@@ -24,17 +24,26 @@
 //!    spills to DDR (everything completes byte-identically, spill
 //!    priced on the clock) and the small pool with legacy truncation
 //!    (requests lost).
+//! 7. The multi-shard fleet (SLR/board replication): the same overload
+//!    burst on one board and on a 2-shard fleet — byte-identical token
+//!    streams, strictly better P99 TTFT, per-shard + merged summaries
+//!    — plus prefix-affinity vs round-robin hit rates on a
+//!    shared-prefix trace with per-shard prefix caches.
 //!
 //! Run: cargo run --release --example serve_e2e
 //!      (add --features xla && make artifacts for section 1)
 
 use flightllm::config::Target;
-use flightllm::coordinator::{Sampler, SchedulerConfig, Server, Service, SimBackend, StreamEvent};
+use flightllm::coordinator::{
+    RoutePolicy, Sampler, SchedulerConfig, Server, Service, SimBackend, StreamEvent,
+};
 use flightllm::experiments::{
     flightllm_overload_three_way, flightllm_serve_chunk_sweep, flightllm_serve_prefix,
+    flightllm_serve_sharded, FleetSpec,
 };
 use flightllm::workload::{
-    generate_trace, MixedBurstConfig, OverloadConfig, Request, SharedPrefixConfig, TraceConfig,
+    generate_overload_trace, generate_shared_prefix_trace, generate_trace, MixedBurstConfig,
+    OverloadConfig, Request, SharedPrefixConfig, TraceConfig,
 };
 
 fn main() -> anyhow::Result<()> {
@@ -227,6 +236,80 @@ fn main() -> anyhow::Result<()> {
         lossy.preempted_truncated(),
         swapped.preemptions,
         swapped.swap_time_s * 1e3
+    );
+
+    // -- Section 7: multi-shard fleet -----------------------------------
+    println!("\n== fleet: 1 board vs 2 shards on the overload burst ==");
+    let fleet_ov = OverloadConfig {
+        n_requests: 12,
+        prompt_len: 32,
+        decode_len_choices: vec![32, 48],
+        rate_per_s: 1e6,
+        vocab,
+        seed: 6,
+    };
+    let run_fleet = |shards: usize, route: RoutePolicy| {
+        let spec = FleetSpec {
+            shards,
+            route,
+            max_batch: 2,
+            kv_pages_per_shard: 64,
+            prefix_cache: false,
+            vocab: vocab as usize,
+        };
+        flightllm_serve_sharded(&t, generate_overload_trace(&fleet_ov), &spec)
+    };
+    let (_, single) = run_fleet(1, RoutePolicy::LeastLoaded);
+    let (per_shard, fleet) = run_fleet(2, RoutePolicy::LeastLoaded);
+    println!("-- 1 board --\n{}", single.summary("virtual"));
+    for (i, s) in per_shard.iter().enumerate() {
+        println!("-- shard {i}/2 --\n{}", s.summary("virtual"));
+    }
+    println!("-- fleet merged (least-loaded routing) --\n{}", fleet.summary("virtual"));
+    for a in &single.results {
+        let b = fleet.results.iter().find(|r| r.id == a.id).unwrap();
+        assert_eq!(a.tokens, b.tokens, "sharding must not change tokens");
+    }
+    assert!(
+        fleet.p99_ttft_s() < single.p99_ttft_s(),
+        "2 shards must cut P99 TTFT on the overload burst"
+    );
+    assert!(fleet.served_s < single.served_s, "two boards drain faster");
+    println!(
+        "fleet trade: P99 TTFT {:.1} -> {:.1} ms on 2 boards",
+        single.p99_ttft_s() * 1e3,
+        fleet.p99_ttft_s() * 1e3
+    );
+
+    let fleet_px = SharedPrefixConfig {
+        n_groups: 4,
+        prefix_len: 96,
+        n_requests: 16,
+        rate_per_s: 1e3,
+        vocab,
+        ..Default::default()
+    };
+    let run_px = |route: RoutePolicy| {
+        let spec = FleetSpec {
+            shards: 2,
+            route,
+            max_batch: 2,
+            kv_pages_per_shard: 128,
+            prefix_cache: true,
+            vocab: vocab as usize,
+        };
+        flightllm_serve_sharded(&t, generate_shared_prefix_trace(&fleet_px), &spec).1
+    };
+    let rr = run_px(RoutePolicy::RoundRobin);
+    let affine = run_px(RoutePolicy::PrefixAffinity);
+    assert!(
+        affine.prefix_hit_rate() >= rr.prefix_hit_rate(),
+        "prefix affinity must not lose to round-robin"
+    );
+    println!(
+        "prefix affinity on 2 shards: {:.0}% hit rate vs {:.0}% under round-robin",
+        affine.prefix_hit_rate() * 100.0,
+        rr.prefix_hit_rate() * 100.0
     );
     println!("serve_e2e OK");
     Ok(())

@@ -12,12 +12,16 @@
 
 use flightllm::baselines::{GpuStack, GpuSystem};
 use flightllm::config::Target;
+use flightllm::coordinator::RoutePolicy;
 use flightllm::experiments::{
     flightllm_batch_tps, flightllm_overload_three_way, flightllm_serve_batch_tps,
-    flightllm_serve_chunk_sweep, flightllm_serve_prefix,
+    flightllm_serve_chunk_sweep, flightllm_serve_prefix, flightllm_serve_sharded, FleetSpec,
 };
 use flightllm::metrics::format_table;
-use flightllm::workload::{MixedBurstConfig, OverloadConfig, SharedPrefixConfig};
+use flightllm::workload::{
+    generate_overload_trace, generate_shared_prefix_trace, MixedBurstConfig, OverloadConfig,
+    SharedPrefixConfig,
+};
 
 fn main() {
     let target = Target::u280_llama2();
@@ -217,5 +221,106 @@ fn main() {
         "spilling must cost served time: {} vs {}",
         swapped.served_s,
         big.served_s
+    );
+
+    // Shard sweep (SLR/board replication): the same overload burst on
+    // 1/2/4 boards behind the fleet router.  Token streams stay
+    // byte-identical at every shard count; queueing delay converts to
+    // parallelism, so P99 TTFT falls as boards are added.
+    let fleet_ov = OverloadConfig {
+        n_requests: 16,
+        prompt_len: 32,
+        decode_len_choices: vec![32, 48],
+        rate_per_s: 1e6,
+        vocab: 512,
+        seed: 6,
+    };
+    let fleet_spec = |shards: usize, route: RoutePolicy, prefix_cache: bool| FleetSpec {
+        shards,
+        route,
+        max_batch: 2,
+        kv_pages_per_shard: if prefix_cache { 128 } else { 64 },
+        prefix_cache,
+        vocab: 512,
+    };
+    let mut shard_rows = Vec::new();
+    let mut fleet_p99s = Vec::new();
+    // The shards=1 iteration doubles as the token-stream reference for
+    // the larger fleets.
+    let mut solo_results = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let (per_shard, fleet) = flightllm_serve_sharded(
+            &target,
+            generate_overload_trace(&fleet_ov),
+            &fleet_spec(shards, RoutePolicy::LeastLoaded, false),
+        );
+        if shards == 1 {
+            solo_results = fleet.results.clone();
+        }
+        for a in &solo_results {
+            let b = fleet.results.iter().find(|r| r.id == a.id).unwrap();
+            assert_eq!(a.tokens, b.tokens, "{shards} shards must not change tokens");
+        }
+        let busy = per_shard.iter().filter(|s| !s.results.is_empty()).count();
+        fleet_p99s.push(fleet.p99_ttft_s());
+        shard_rows.push(vec![
+            format!("{shards}"),
+            format!("{busy}"),
+            format!("{:.1}", fleet.p99_ttft_s() * 1e3),
+            format!("{:.1}", fleet.p50_ttft_s() * 1e3),
+            format!("{:.1}", fleet.mean_latency_s() * 1e3),
+            format!("{:.3}", fleet.served_s),
+        ]);
+    }
+    println!(
+        "{}",
+        format_table(
+            "Fleet shard sweep on the overload burst (16 requests, least-loaded routing)",
+            &["shards", "busy", "P99 TTFT (ms)", "P50 TTFT (ms)", "mean lat (ms)", "served s"],
+            &shard_rows
+        )
+    );
+    assert!(fleet_p99s[1] < fleet_p99s[0], "2 shards must cut P99 TTFT: {fleet_p99s:?}");
+    assert!(fleet_p99s[2] <= fleet_p99s[1], "4 shards must not regress P99 TTFT: {fleet_p99s:?}");
+
+    // Routing policies on a shared-prefix trace with per-shard prefix
+    // caches: prefix affinity pins each prefix group to one board, so
+    // its hit rate is at least round-robin's cache-scattering.
+    let fleet_px = SharedPrefixConfig {
+        n_groups: 4,
+        prefix_len: 96,
+        n_requests: 16,
+        rate_per_s: 1e3,
+        ..Default::default()
+    };
+    let mut route_rows = Vec::new();
+    let mut hit_rates = Vec::new();
+    for route in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::PrefixAffinity] {
+        let (_, fleet) = flightllm_serve_sharded(
+            &target,
+            generate_shared_prefix_trace(&fleet_px),
+            &fleet_spec(2, route, true),
+        );
+        hit_rates.push((route, fleet.prefix_hit_rate()));
+        route_rows.push(vec![
+            route.label().to_string(),
+            format!("{:.0}%", fleet.prefix_hit_rate() * 100.0),
+            format!("{:.1}", fleet.mean_ttft_s() * 1e3),
+            format!("{:.3}", fleet.served_s),
+        ]);
+    }
+    println!(
+        "{}",
+        format_table(
+            "Routing policies, 2 shards, shared-prefix trace (4 groups x 96 tokens)",
+            &["route", "prefix hit rate", "mean TTFT (ms)", "served s"],
+            &route_rows
+        )
+    );
+    let rr_rate = hit_rates[0].1;
+    let affine_rate = hit_rates[2].1;
+    assert!(
+        affine_rate >= rr_rate,
+        "prefix affinity {affine_rate} must be at least round-robin {rr_rate}"
     );
 }

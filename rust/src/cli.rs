@@ -6,6 +6,7 @@
 //!                    [--platform u280|vhk158] [--prefix-cache]
 //!                    [--prefill-chunk N] [--live] [--rate R]
 //!                    [--swap] [--swap-gbps G]
+//!                    [--shards N] [--route rr|load|prefix]
 //! flightllm simulate [--model llama2|opt] [--platform u280|vhk158]
 //!                    [--prefill N] [--decode N]
 //! flightllm report   [--what storage|resources|efficiency]
@@ -36,6 +37,16 @@
 //! trade (priced DDR spill traffic instead of lost requests) is visible
 //! from one command.  `--swap-gbps` overrides the DDR bandwidth the
 //! spill traffic is priced at.
+//!
+//! `serve --backend sim --shards N` serves the same trace on ONE board
+//! and on an N-shard fleet (each shard its own engine + KV pool —
+//! FlightLLM's SLR-symmetric replication), printing each shard's
+//! summary, the merged fleet summary (pooled percentiles) and the P99
+//! TTFT delta.  `--route` picks the request router: `rr` round-robin,
+//! `load` least-loaded (queue depth + live KV pages, the default), or
+//! `prefix` prefix-affinity — which switches to a shared-prefix trace
+//! with per-shard prefix caches and also prints the round-robin hit
+//! rate for comparison.
 
 use crate::baselines::{GpuStack, GpuSystem};
 use crate::config::{ModelConfig, Target};
@@ -69,6 +80,7 @@ const USAGE: &str = "usage: flightllm <serve|simulate|report> [flags]
   serve    --backend runtime|sim --artifacts DIR --requests N --batch N --temp T
            --model llama2|opt|tiny --platform u280|vhk158 [--prefix-cache]
            [--prefill-chunk N] [--live] [--rate R] [--swap] [--swap-gbps G]
+           [--shards N] [--route rr|load|prefix]
   simulate --model llama2|opt --platform u280|vhk158 --prefill N --decode N
   report   --what storage|resources|efficiency";
 
@@ -150,6 +162,38 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
     let chunk = flag_u64(args, "--prefill-chunk", 0) as usize;
     let max_seq = t.model.max_seq as usize;
     let vocab = (t.model.vocab as u32).min(512);
+    let shards = flag_u64(args, "--shards", 1) as usize;
+    if shards > 1 || flag(args, "--route").is_some() {
+        use crate::coordinator::RoutePolicy;
+        let route = match flag(args, "--route") {
+            None => RoutePolicy::LeastLoaded,
+            Some(s) => match RoutePolicy::parse(s) {
+                Some(r) => r,
+                None => {
+                    eprintln!("unknown route {s} (want rr|load|prefix)\n{USAGE}");
+                    return 2;
+                }
+            },
+        };
+        if has_flag(args, "--live") || has_flag(args, "--swap") {
+            eprintln!("note: --live/--swap are ignored with --shards (fleet demo is offline)");
+        }
+        if has_flag(args, "--prefix-cache") || flag(args, "--prefill-chunk").is_some() {
+            eprintln!(
+                "note: --prefix-cache/--prefill-chunk are ignored with --shards \
+                 (per-shard caches follow --route prefix; chunking is off)"
+            );
+        }
+        if flag(args, "--temp").is_some() {
+            // Greedy sampling is load-bearing: the 1-shard and N-shard
+            // runs must generate byte-identical token streams.
+            eprintln!("note: --temp is ignored with --shards (comparison is greedy)");
+        }
+        if shards < 2 {
+            eprintln!("note: the fleet comparison needs >= 2 shards; using 2");
+        }
+        return cmd_serve_sim_sharded(&t, n, batch, vocab, shards.max(2), route);
+    }
     if has_flag(args, "--live") {
         if has_flag(args, "--swap") {
             eprintln!("note: --swap is ignored with --live (swap demo runs offline)");
@@ -337,6 +381,96 @@ fn cmd_serve_sim_swap(t: &Target, n: usize, batch: usize, vocab: u32, gbps: Opti
         swapped.served_s,
         swapped.swap_time_s * 1e3
     );
+    0
+}
+
+/// The `--shards` mode: the same trace served on one board and on an
+/// N-shard fleet with the chosen routing policy — per-shard and merged
+/// summaries through the one `ServeStats` printer, plus the P99 TTFT
+/// delta the replication buys.  `--route prefix` switches to a
+/// shared-prefix trace with per-shard prefix caches and adds the
+/// round-robin hit rate for comparison.
+fn cmd_serve_sim_sharded(
+    t: &Target,
+    n: usize,
+    batch: usize,
+    vocab: u32,
+    shards: usize,
+    route: crate::coordinator::RoutePolicy,
+) -> i32 {
+    use crate::coordinator::RoutePolicy;
+    use crate::experiments::{flightllm_serve_sharded, FleetSpec};
+    use crate::workload::{
+        generate_overload_trace, generate_shared_prefix_trace, OverloadConfig, SharedPrefixConfig,
+    };
+
+    let prefix_route = route == RoutePolicy::PrefixAffinity;
+    let trace = if prefix_route {
+        let cfg = SharedPrefixConfig {
+            n_requests: n.max(8),
+            vocab,
+            rate_per_s: 1e3,
+            ..Default::default()
+        };
+        println!(
+            "sim-serving a shared-prefix trace ({} groups x {}-token prefixes, {} requests) \
+             on 1 board vs {shards} shards ({} routing), {} {}:",
+            cfg.n_groups,
+            cfg.prefix_len,
+            cfg.n_requests,
+            route.label(),
+            t.model.name,
+            t.platform.name
+        );
+        generate_shared_prefix_trace(&cfg)
+    } else {
+        let cfg = OverloadConfig { n_requests: n.max(8), vocab, ..Default::default() };
+        println!(
+            "sim-serving an overload burst ({} requests, batch {batch}/board) on 1 board vs \
+             {shards} shards ({} routing), {} {}:",
+            cfg.n_requests,
+            route.label(),
+            t.model.name,
+            t.platform.name
+        );
+        generate_overload_trace(&cfg)
+    };
+    let run = |shards: usize, route: RoutePolicy| {
+        let spec = FleetSpec {
+            shards,
+            route,
+            max_batch: batch.max(1),
+            kv_pages_per_shard: 256,
+            prefix_cache: prefix_route,
+            vocab: vocab as usize,
+        };
+        flightllm_serve_sharded(t, trace.clone(), &spec)
+    };
+    let (_, single) = run(1, route);
+    println!("-- 1 board --");
+    println!("{}", single.summary("virtual"));
+    let (per_shard, fleet) = run(shards, route);
+    for (i, s) in per_shard.iter().enumerate() {
+        println!("-- shard {i}/{shards} --");
+        println!("{}", s.summary("virtual"));
+    }
+    println!("-- fleet merged ({shards} shards, {} routing) --", route.label());
+    println!("{}", fleet.summary("virtual"));
+    println!(
+        "fleet trade: P99 TTFT {:.1} -> {:.1} ms, served {:.3}s -> {:.3}s on {shards} boards",
+        single.p99_ttft_s() * 1e3,
+        fleet.p99_ttft_s() * 1e3,
+        single.served_s,
+        fleet.served_s
+    );
+    if prefix_route {
+        let (_, rr) = run(shards, RoutePolicy::RoundRobin);
+        println!(
+            "prefix affinity: {:.0}% hit rate vs {:.0}% under round-robin",
+            fleet.prefix_hit_rate() * 100.0,
+            rr.prefix_hit_rate() * 100.0
+        );
+    }
     0
 }
 
@@ -545,6 +679,39 @@ mod tests {
                 "--requests", "4", "--batch", "2", "--swap",
             ])),
             0
+        );
+    }
+
+    #[test]
+    fn serve_sim_sharded_fleet_runs() {
+        assert_eq!(
+            run(&s(&[
+                "flightllm", "serve", "--backend", "sim", "--model", "tiny",
+                "--requests", "8", "--batch", "2", "--shards", "2",
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn serve_sim_sharded_prefix_route_runs() {
+        assert_eq!(
+            run(&s(&[
+                "flightllm", "serve", "--backend", "sim", "--model", "tiny",
+                "--requests", "8", "--batch", "2", "--shards", "2", "--route", "prefix",
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn serve_sim_unknown_route_fails() {
+        assert_eq!(
+            run(&s(&[
+                "flightllm", "serve", "--backend", "sim", "--model", "tiny",
+                "--shards", "2", "--route", "sideways",
+            ])),
+            2
         );
     }
 

@@ -1,0 +1,597 @@
+//! The multi-shard serving fleet: N independent replica lanes behind
+//! the one submit/stream/cancel front-end.
+//!
+//! FlightLLM's accelerator is SLR-symmetric (§3.1): the natural way to
+//! scale serving beyond one die/board is to replicate the whole engine
+//! and route requests among the replicas.  [`ShardedService`] owns one
+//! lane per shard — each lane its own `ModelBackend` + `PagePool` +
+//! `Scheduler` + virtual clock, i.e. a whole board — and a router that
+//! assigns every submitted request a home lane:
+//!
+//! - [`RoutePolicy::RoundRobin`]: lane = arrival index mod N.
+//! - [`RoutePolicy::LeastLoaded`]: the lane with the fewest requests in
+//!   flight (waiting + running + parked in the swap tier), ties broken
+//!   by live KV pages, then lane index — both load signals the issue of
+//!   a real fleet scheduler would poll from its boards.
+//! - [`RoutePolicy::PrefixAffinity`]: hash the prompt's first full KV
+//!   page, lane = hash mod N — requests sharing a system prompt land on
+//!   the shard whose CoW prefix cache (PR 2) already holds their
+//!   prefix, so the per-board caches see hits a load-blind router would
+//!   scatter.  Prompts shorter than one page fall back to least-loaded.
+//!
+//! The fleet-level `SchedulerConfig` carries the TOTAL KV budget; each
+//! lane gets `kv_pages / N` (per-board HBM), so adding shards adds
+//! capacity the way adding boards does.  Lanes advance their virtual
+//! clocks independently (boards run in parallel); the fleet serving
+//! time is the max over lanes, which is what `ServeStats::merge`
+//! reports as `served_s`.  Merged percentiles are recomputed from the
+//! pooled per-request samples — never averaged per-shard percentiles.
+//!
+//! Determinism: routing is a pure function of the submission order and
+//! lane state, and the sim/echo backends derive logits from (sequence
+//! id, last token, position) alone — so under greedy sampling a
+//! request's token stream is byte-identical whichever lane serves it,
+//! and identical to a single-shard run (asserted in
+//! `experiments::sharded_fleet_*` tests).  A cloned temperature sampler
+//! seeds one RNG per lane, so routing changes WOULD reorder its draws —
+//! the fleet comparisons therefore pin greedy sampling.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, Sender};
+
+use anyhow::Result;
+
+use crate::workload::Request;
+
+use super::kv_cache::{chain_hash, PREFIX_HASH_SEED};
+use super::sampler::Sampler;
+use super::scheduler::{Scheduler, SchedulerConfig};
+use super::server::{ModelBackend, ServeStats};
+use super::service::{ClockMode, Command, EngineCore, RequestHandle, StreamEvent, Tick};
+
+/// How the fleet assigns a submitted request to a shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Submission order mod shard count.
+    RoundRobin,
+    /// Fewest requests in flight, ties by live KV pages, then index.
+    LeastLoaded,
+    /// Hash of the prompt's first full KV page, so shared-prefix
+    /// traffic keeps hitting the same shard's prefix cache.
+    PrefixAffinity,
+}
+
+impl RoutePolicy {
+    /// Parse a CLI spelling (`rr` / `load` / `prefix`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rr" | "round-robin" => Some(RoutePolicy::RoundRobin),
+            "load" | "least-loaded" => Some(RoutePolicy::LeastLoaded),
+            "prefix" | "prefix-affinity" => Some(RoutePolicy::PrefixAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoaded => "least-loaded",
+            RoutePolicy::PrefixAffinity => "prefix-affinity",
+        }
+    }
+}
+
+/// N replica serving lanes behind one submit/stream/cancel front-end,
+/// driven by manual `tick`/`drain` on per-lane virtual clocks (the
+/// deterministic harness, like `Service` for a single engine).
+pub struct ShardedService<B: ModelBackend> {
+    lanes: Vec<EngineCore<B>>,
+    route: RoutePolicy,
+    rr_next: usize,
+    page_tokens: usize,
+    /// Request id → home lane (route decisions are sticky: cancellation
+    /// must reach the lane that holds the request's state).  Entries of
+    /// finished requests are pruned every [`HOME_PRUNE_TICKS`] ticks so
+    /// a long-lived fleet front-end does not grow one entry per request
+    /// served, forever.
+    homes: HashMap<u64, usize>,
+    ticks: u64,
+    cmd_tx: Sender<Command>,
+    cmd_rx: Receiver<Command>,
+}
+
+/// How often (in fleet ticks) the sticky request→lane map drops
+/// entries whose lane no longer tracks the request.
+const HOME_PRUNE_TICKS: u64 = 256;
+
+impl<B: ModelBackend> ShardedService<B> {
+    /// Build a fleet of `shards` lanes.  `cfg` is the FLEET config: its
+    /// `kv_pages` is the total budget, split per board with the
+    /// remainder spread over the first `kv_pages % shards` lanes so no
+    /// page of the budget is silently dropped (each lane keeps the rest
+    /// of the config — `max_batch` is per board, like the compute it
+    /// models).  `backend_for(i)` builds lane `i`'s backend; the
+    /// sampler is cloned per lane.
+    pub fn new(
+        shards: usize,
+        route: RoutePolicy,
+        cfg: SchedulerConfig,
+        sampler: Sampler,
+        mut backend_for: impl FnMut(usize) -> B,
+    ) -> Self {
+        let shards = shards.max(1);
+        let (base, extra) = (cfg.kv_pages / shards, cfg.kv_pages % shards);
+        let lanes = (0..shards)
+            .map(|i| {
+                let lane_cfg = SchedulerConfig {
+                    kv_pages: (base + usize::from(i < extra)).max(1),
+                    ..cfg.clone()
+                };
+                EngineCore::new(
+                    backend_for(i),
+                    Scheduler::new(lane_cfg),
+                    sampler.clone(),
+                    ClockMode::Virtual,
+                )
+            })
+            .collect();
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        Self {
+            lanes,
+            route,
+            rr_next: 0,
+            page_tokens: cfg.page_tokens,
+            homes: HashMap::new(),
+            ticks: 0,
+            cmd_tx,
+            cmd_rx,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// One lane's scheduler (pool/accounting inspection in tests).
+    pub fn scheduler(&self, shard: usize) -> &Scheduler {
+        self.lanes[shard].scheduler()
+    }
+
+    /// The lane a request was routed to (`None` before its submit
+    /// command has been applied by a tick).
+    pub fn shard_of(&self, req_id: u64) -> Option<usize> {
+        self.homes.get(&req_id).copied()
+    }
+
+    /// Submit a request; the router picks its lane when the command is
+    /// applied (so least-loaded sees up-to-date lane state).  The
+    /// handle streams tokens and cancels exactly like a single-engine
+    /// `Service` handle.
+    pub fn submit(&self, req: Request) -> RequestHandle {
+        let (etx, erx) = mpsc::channel();
+        let id = req.id;
+        let _ = self.cmd_tx.send(Command::Submit(req, etx));
+        RequestHandle::new(id, erx, self.cmd_tx.clone())
+    }
+
+    /// Lane index with the fewest requests in flight (waiting + running
+    /// + parked), ties by live KV pages, then lane index.
+    fn least_loaded(&self) -> usize {
+        self.lanes
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, lane)| {
+                let s = lane.scheduler();
+                let in_flight = s.pending() + s.running().len() + s.preempted().len();
+                (in_flight, s.pool.used_pages(), *i)
+            })
+            .map(|(i, _)| i)
+            .expect("a fleet has at least one lane")
+    }
+
+    /// Prefix-affinity target: the KV pool's own chained hash of the
+    /// prompt's first full page (the exact key the per-shard prefix
+    /// index uses — one definition, so routing can never drift from
+    /// what the caches actually store), mod the shard count.  `None`
+    /// for prompts shorter than one page (nothing cacheable to be
+    /// affine to).
+    fn prefix_shard(&self, prompt: &[u32]) -> Option<usize> {
+        if prompt.len() < self.page_tokens {
+            return None;
+        }
+        let h = chain_hash(PREFIX_HASH_SEED, &prompt[..self.page_tokens]);
+        Some((h % self.lanes.len() as u64) as usize)
+    }
+
+    fn pick_shard(&mut self, req: &Request) -> usize {
+        match self.route {
+            RoutePolicy::RoundRobin => {
+                let shard = self.rr_next % self.lanes.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                shard
+            }
+            RoutePolicy::LeastLoaded => self.least_loaded(),
+            RoutePolicy::PrefixAffinity => {
+                self.prefix_shard(&req.prompt).unwrap_or_else(|| self.least_loaded())
+            }
+        }
+    }
+
+    fn submit_routed(&mut self, req: Request, sub: Option<Sender<StreamEvent>>) {
+        let shard = self.pick_shard(&req);
+        self.homes.insert(req.id, shard);
+        self.lanes[shard].submit(req, sub);
+    }
+
+    fn apply_commands(&mut self) {
+        while let Ok(cmd) = self.cmd_rx.try_recv() {
+            match cmd {
+                Command::Submit(req, tx) => self.submit_routed(req, Some(tx)),
+                Command::Cancel(id) => {
+                    if let Some(&shard) = self.homes.get(&id) {
+                        self.lanes[shard].cancel(id);
+                    }
+                }
+                // Meaningless under manual ticking (as for `Service`).
+                Command::Shutdown => {}
+            }
+        }
+    }
+
+    /// Apply pending commands, then advance every lane one iteration.
+    /// Lanes tick independently — board clocks are not synchronized —
+    /// and a drained lane is a no-op.  `Stepped` if any lane stepped,
+    /// `Swept` if any did bookkeeping, `Drained` when the whole fleet
+    /// is idle.
+    pub fn tick(&mut self) -> Result<Tick> {
+        self.apply_commands();
+        self.ticks += 1;
+        if self.ticks % HOME_PRUNE_TICKS == 0 {
+            // Forget finished requests' routes: a cancel for a request
+            // no lane tracks any more is a no-op on any lane.
+            let lanes = &self.lanes;
+            self.homes.retain(|&id, &mut shard| lanes[shard].scheduler().tracks(id));
+        }
+        let mut any_stepped = false;
+        let mut any_active = false;
+        for lane in &mut self.lanes {
+            match lane.tick()? {
+                Tick::Drained => {}
+                Tick::Stepped => {
+                    any_stepped = true;
+                    any_active = true;
+                }
+                Tick::Swept | Tick::Idle(_) => any_active = true,
+            }
+        }
+        Ok(if any_stepped {
+            Tick::Stepped
+        } else if any_active {
+            Tick::Swept
+        } else {
+            Tick::Drained
+        })
+    }
+
+    /// Tick until every submitted request has resolved on every lane.
+    pub fn drain(&mut self) -> Result<()> {
+        while self.tick()? != Tick::Drained {}
+        Ok(())
+    }
+
+    /// Per-shard serving stats, lane order.
+    pub fn shard_stats(&self) -> Vec<ServeStats> {
+        self.lanes.iter().map(|l| l.stats_snapshot()).collect()
+    }
+
+    /// The fleet summary: per-shard stats merged — pooled percentile
+    /// samples, summed counters, `served_s` = max over lane clocks.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats::merge(&self.shard_stats())
+    }
+
+    /// The fleet serving clock: boards run in parallel, so fleet time
+    /// is the furthest-ahead lane (what `stats().served_s` reports).
+    pub fn clock_s(&self) -> f64 {
+        self.lanes.iter().map(|l| l.clock_s()).fold(0.0, f64::max)
+    }
+
+    /// Offline replay across the fleet (the sharded `Server::run_trace`
+    /// equivalent).  A request is routed when the fleet clock reaches
+    /// its arrival — NOT when the trace is loaded — so least-loaded
+    /// sees the backlog that actually exists at arrival time instead of
+    /// counting not-yet-arrived requests.  When every lane is idle the
+    /// clock jumps to the next arrival (the single-engine fast-forward,
+    /// fleet-wide).  Results land in `shard_stats()` / `stats()`;
+    /// per-request streaming still goes through `submit` handles.
+    pub fn run_trace(&mut self, mut trace: Vec<Request>) -> Result<ServeStats> {
+        trace.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        let mut pending: std::collections::VecDeque<Request> = trace.into();
+        loop {
+            let now = self.clock_s();
+            while pending.front().is_some_and(|r| r.arrival_s <= now) {
+                let req = pending.pop_front().expect("front checked");
+                self.submit_routed(req, None);
+            }
+            if self.tick()? == Tick::Drained {
+                // Idle fleet: jump to the next arrival (a NaN arrival
+                // lands here too and is pinned at submit).
+                match pending.pop_front() {
+                    Some(req) => self.submit_routed(req, None),
+                    None => break,
+                }
+            }
+        }
+        Ok(self.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testing::EchoBackend;
+    use crate::coordinator::Server;
+    use crate::util::proptest;
+    use crate::workload::{
+        generate_shared_prefix_trace, generate_trace, SharedPrefixConfig, TraceConfig,
+    };
+
+    fn echo_fleet(
+        shards: usize,
+        route: RoutePolicy,
+        cfg: SchedulerConfig,
+    ) -> ShardedService<EchoBackend> {
+        ShardedService::new(shards, route, cfg, Sampler::greedy(), |_| EchoBackend::new(64))
+    }
+
+    fn trace_cfg(seed: u64) -> TraceConfig {
+        TraceConfig {
+            n_requests: 10,
+            vocab: 64,
+            prompt_len_choices: vec![4, 8, 16],
+            decode_len_choices: vec![4, 8],
+            seed,
+            ..Default::default()
+        }
+    }
+
+    /// Tentpole: the fleet serves the same trace with per-request token
+    /// streams byte-identical to a single-shard run — sharding re-times
+    /// requests, it never changes what they generate.
+    #[test]
+    fn fleet_token_streams_match_single_shard() {
+        let cfg = SchedulerConfig { max_batch: 2, max_seq: 64, kv_pages: 64, ..Default::default() };
+        let routes = [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastLoaded,
+            RoutePolicy::PrefixAffinity,
+        ];
+        for route in routes {
+            let single = Server::new(EchoBackend::new(64), cfg.clone(), Sampler::greedy())
+                .run_trace(generate_trace(&trace_cfg(3)))
+                .unwrap();
+            let mut fleet = echo_fleet(2, route, cfg.clone());
+            let merged = fleet.run_trace(generate_trace(&trace_cfg(3))).unwrap();
+            assert_eq!(merged.results.len(), single.results.len());
+            for a in &single.results {
+                let b = merged.results.iter().find(|r| r.id == a.id).unwrap();
+                assert_eq!(a.tokens, b.tokens, "{}: req {} differs", route.label(), a.id);
+            }
+            // Two boards drain a queued trace no slower than one.
+            assert!(merged.served_s <= single.served_s, "{} slowed the fleet", route.label());
+        }
+    }
+
+    /// Streaming and cancellation work through the fleet front-end
+    /// exactly as through a single-engine `Service`.
+    #[test]
+    fn fleet_streams_and_cancels_through_handles() {
+        let cfg = SchedulerConfig { max_batch: 1, max_seq: 64, kv_pages: 64, ..Default::default() };
+        let mut fleet = echo_fleet(2, RoutePolicy::RoundRobin, cfg);
+        let keep = fleet.submit(Request {
+            id: 0,
+            arrival_s: 0.0,
+            prompt: (0..4).collect(),
+            max_new_tokens: 4,
+        });
+        let kill = fleet.submit(Request {
+            id: 1,
+            arrival_s: 0.0,
+            prompt: (0..4).collect(),
+            max_new_tokens: 100,
+        });
+        fleet.tick().unwrap();
+        assert_eq!(fleet.shard_of(0), Some(0));
+        assert_eq!(fleet.shard_of(1), Some(1), "round-robin spreads the pair");
+        for _ in 0..2 {
+            fleet.tick().unwrap();
+        }
+        kill.cancel();
+        fleet.drain().unwrap();
+        let mut streamed = Vec::new();
+        let done = loop {
+            match keep.try_event() {
+                Some(StreamEvent::Token(t)) => streamed.push(t),
+                Some(StreamEvent::Done(r)) => break r,
+                Some(StreamEvent::Rejected) => panic!("must not reject"),
+                None => panic!("stream ended without Done"),
+            }
+        };
+        assert_eq!(streamed, done.tokens, "stream and result agree");
+        assert_eq!(done.tokens.len(), 4);
+        let killed = kill.wait().expect("cancelled handles resolve");
+        assert!(killed.cancelled);
+        assert!(!killed.tokens.is_empty(), "partial tokens kept");
+        let stats = fleet.stats();
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.results.len(), 2);
+    }
+
+    /// Least-loaded spreads a burst by queue depth: routing each submit
+    /// against live lane state (pending + running + parked), a 6-burst
+    /// over 3 lanes lands exactly 2 requests per lane.
+    #[test]
+    fn least_loaded_spreads_a_burst() {
+        let cfg = SchedulerConfig { max_batch: 1, max_seq: 64, kv_pages: 96, ..Default::default() };
+        let mut fleet = echo_fleet(3, RoutePolicy::LeastLoaded, cfg);
+        let handles: Vec<RequestHandle> = (0..6)
+            .map(|id| {
+                fleet.submit(Request {
+                    id,
+                    arrival_s: 0.0,
+                    prompt: (0..8).collect(),
+                    max_new_tokens: 4,
+                })
+            })
+            .collect();
+        // One tick applies all six submits in order; each routing
+        // decision sees the queue depth the previous ones created.
+        fleet.tick().unwrap();
+        let mut per_lane = [0usize; 3];
+        for id in 0..6 {
+            per_lane[fleet.shard_of(id).expect("routed")] += 1;
+        }
+        assert_eq!(per_lane, [2, 2, 2], "queue-depth routing balances the burst");
+        fleet.drain().unwrap();
+        for h in handles {
+            assert_eq!(h.wait().expect("completes").tokens.len(), 4);
+        }
+    }
+
+    /// The fleet KV budget splits without losing pages: the remainder
+    /// of an uneven division lands on the first lanes.
+    #[test]
+    fn kv_budget_split_keeps_every_page() {
+        let cfg = SchedulerConfig { kv_pages: 100, ..Default::default() };
+        let fleet = echo_fleet(3, RoutePolicy::RoundRobin, cfg);
+        let per: Vec<usize> = (0..3).map(|i| fleet.scheduler(i).cfg.kv_pages).collect();
+        assert_eq!(per, vec![34, 33, 33], "remainder spread over the first lanes");
+        assert_eq!(per.iter().sum::<usize>(), 100, "no page of the budget dropped");
+    }
+
+    /// The sticky request→lane map forgets finished requests: a
+    /// long-lived fleet front-end must not grow one entry per served
+    /// request forever.
+    #[test]
+    fn homes_map_prunes_finished_requests() {
+        let cfg = SchedulerConfig { max_batch: 1, max_seq: 64, kv_pages: 64, ..Default::default() };
+        let mut fleet = echo_fleet(2, RoutePolicy::RoundRobin, cfg);
+        let h = fleet.submit(Request {
+            id: 0,
+            arrival_s: 0.0,
+            prompt: (0..4).collect(),
+            max_new_tokens: 2,
+        });
+        fleet.drain().unwrap();
+        assert_eq!(h.wait().expect("completes").tokens.len(), 2);
+        assert_eq!(fleet.shard_of(0), Some(0), "route remembered until the sweep");
+        for _ in 0..HOME_PRUNE_TICKS {
+            fleet.tick().unwrap();
+        }
+        assert_eq!(fleet.shard_of(0), None, "finished request's route pruned");
+    }
+
+    /// Prefix affinity is consistent: every request sharing a first
+    /// page lands on the same lane, so that lane's prefix cache serves
+    /// all of the group's admissions after the first.
+    #[test]
+    fn prefix_affinity_keeps_groups_on_one_lane() {
+        let px = SharedPrefixConfig {
+            n_groups: 3,
+            prefix_len: 32,
+            tail_len_choices: vec![4, 8],
+            decode_len_choices: vec![2],
+            n_requests: 12,
+            rate_per_s: 100.0,
+            vocab: 64,
+            seed: 11,
+        };
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            max_seq: 128,
+            kv_pages: 128,
+            page_tokens: 16,
+            prefix_cache: true,
+            ..Default::default()
+        };
+        let trace = generate_shared_prefix_trace(&px);
+        let prompts: Vec<(u64, Vec<u32>)> =
+            trace.iter().map(|r| (r.id, r.prompt[..16].to_vec())).collect();
+        let mut fleet = echo_fleet(2, RoutePolicy::PrefixAffinity, cfg);
+        let merged = fleet.run_trace(trace).unwrap();
+        let mut page_to_lane: HashMap<Vec<u32>, usize> = HashMap::new();
+        for (id, page) in prompts {
+            let lane = fleet.shard_of(id).expect("routed");
+            let prev = page_to_lane.entry(page).or_insert(lane);
+            assert_eq!(*prev, lane, "request {id} left its prefix group's lane");
+        }
+        // Every admission after each group's first hits that lane's cache.
+        assert!(merged.prefix_hits >= merged.admissions - 3, "{} hits", merged.prefix_hits);
+    }
+
+    /// Satellite (fleet property test): random routing policies and
+    /// preempt/swap-cycle configs across ≥2 shards, with random
+    /// mid-flight cancellations — every lane keeps the ctx == pool
+    /// tokens (+ swap registry) invariant on every tick, no request is
+    /// ever visible on two shards, and every handle resolves.
+    #[test]
+    fn property_fleet_lanes_keep_accounting_and_isolation() {
+        proptest::check_with("fleet lane accounting", 48, |r| {
+            let shards = 2 + r.below(2) as usize;
+            let route = match r.below(3) {
+                0 => RoutePolicy::RoundRobin,
+                1 => RoutePolicy::LeastLoaded,
+                _ => RoutePolicy::PrefixAffinity,
+            };
+            let cfg = SchedulerConfig {
+                max_batch: 2,
+                // Small per-lane pools: decode growth forces real
+                // preempt/swap cycles inside the lanes.
+                kv_pages: shards * (8 + r.below(8) as usize),
+                page_tokens: 4,
+                max_seq: 96,
+                prefix_cache: r.below(2) == 0,
+                prefill_chunk: (r.below(3) * 8) as usize,
+                swap: true,
+            };
+            let mut fleet = ShardedService::new(shards, route, cfg, Sampler::greedy(), |_| {
+                EchoBackend::new(32)
+            });
+            let trace = generate_trace(&TraceConfig {
+                n_requests: 8,
+                vocab: 32,
+                prompt_len_choices: vec![4, 8, 16],
+                decode_len_choices: vec![2, 4, 8],
+                seed: r.next_u64(),
+                ..Default::default()
+            });
+            let total = trace.len() as u64;
+            let handles: Vec<RequestHandle> = trace.into_iter().map(|t| fleet.submit(t)).collect();
+            let mut drained = false;
+            for _ in 0..10_000 {
+                if r.below(8) == 0 {
+                    handles[r.below(total) as usize].cancel();
+                }
+                let t = fleet.tick().unwrap();
+                let mut seen: HashMap<u64, usize> = HashMap::new();
+                for s in 0..fleet.shards() {
+                    let sched = fleet.scheduler(s);
+                    assert!(sched.check_accounting(), "lane {s} ctx/pool desync");
+                    for st in sched.running().iter().chain(sched.preempted().iter()) {
+                        if let Some(other) = seen.insert(st.req.id, s) {
+                            panic!("request {} visible on lanes {other} and {s}", st.req.id);
+                        }
+                    }
+                }
+                if t == Tick::Drained {
+                    drained = true;
+                    break;
+                }
+            }
+            assert!(drained, "fleet must drain");
+            for h in handles {
+                assert!(h.wait().is_some(), "every handle resolves (done or cancelled)");
+            }
+        });
+    }
+}

@@ -93,12 +93,14 @@ pub struct PoolStats {
 }
 
 /// Seed for the chained prefix hash (any odd constant works).
-const PREFIX_HASH_SEED: u64 = 0x5151_7EAD_F11C_4711;
+pub(crate) const PREFIX_HASH_SEED: u64 = 0x5151_7EAD_F11C_4711;
 
 /// Extend the running prefix hash with one full page of tokens.  The
 /// chain makes the hash position-dependent: equal hashes mean equal
 /// prompt prefixes (up to 64-bit collision odds), not just equal pages.
-fn chain_hash(prev: u64, page: &[u32]) -> u64 {
+/// Shared with the fleet's prefix-affinity router, so a routing key is
+/// BY CONSTRUCTION the same hash that keys the per-shard prefix index.
+pub(crate) fn chain_hash(prev: u64, page: &[u32]) -> u64 {
     let mut h = prev ^ 0x9E37_79B9_7F4A_7C15;
     for &t in page {
         h ^= t as u64;

@@ -60,14 +60,34 @@
 //!    prompts at the final chunk, but reports them), and the
 //!    `sim::Engine`-backed `SimBackend` for deterministic FlightLLM
 //!    latencies (prices each prefill chunk by its own length bucket).
+//!    A backend never fabricates logits for a slot that yields no token
+//!    (non-final prefill chunks carry `None` rows), and the engine
+//!    never samples from such a row even if one shows up.
+//! 6. **Fleet** (`fleet`): the multi-shard tier.  FlightLLM's
+//!    accelerator is SLR-symmetric (§3.1), so serving scales by
+//!    replicating the whole engine per die/board: `ShardedService`
+//!    owns N independent lanes — each its own backend + `PagePool` +
+//!    `Scheduler`, with the fleet KV budget split per board — behind
+//!    the same submit/stream/cancel front-end, routing requests
+//!    round-robin, least-loaded (queue depth + live KV pages), or by
+//!    prefix affinity (the prompt's first-page hash pins shared-prefix
+//!    traffic to the shard whose CoW cache holds it).  Lanes advance
+//!    their virtual clocks independently; fleet time is the max over
+//!    lanes, and per-shard `ServeStats` merge with percentiles
+//!    recomputed from pooled samples (`ServeStats::merge`).
 //!
 //! FlightLLM's own runtime is single-batch latency-oriented (§1); the
 //! coordinator serves that policy with `max_batch = 1` and the Fig. 15
 //! multi-batch mode with larger batches.  Chunked prefill is what makes
 //! the live path latency-sound: P99 decode inter-token latency on a
 //! mixed burst improves while served tokens stay byte-identical
-//! (asserted in `experiments::flightllm_serve_chunk_sweep` tests).
+//! (asserted in `experiments::flightllm_serve_chunk_sweep` tests); the
+//! fleet tier is what turns overload into parallelism — 2 shards
+//! strictly improve P99 TTFT on the overload trace with token streams
+//! byte-identical to a single shard (asserted in
+//! `experiments::flightllm_serve_sharded` tests).
 
+mod fleet;
 mod kv_cache;
 mod sampler;
 mod scheduler;
@@ -75,6 +95,7 @@ mod server;
 mod service;
 mod sim_backend;
 
+pub use fleet::{RoutePolicy, ShardedService};
 pub use kv_cache::{AdmitOutcome, KvError, PagePool, PoolStats, SeqPages};
 pub use sampler::Sampler;
 pub use scheduler::{
@@ -96,16 +117,20 @@ pub(crate) mod testing {
     /// A deterministic toy backend: logits favor (last_token + 1) % V.
     /// Step cost is flat per phase — every prefill CHUNK charges
     /// `prefill_s`, any number of decode slots share one `decode_s` (so
-    /// batching visibly improves aggregate throughput).
+    /// batching visibly improves aggregate throughput).  Non-final
+    /// prefill chunks carry no logits (`None`) — unless
+    /// `garbage_chunk_rows` is set, which emits a garbage row there so
+    /// tests can prove the engine never samples from it.
     pub(crate) struct EchoBackend {
         pub vocab: usize,
         pub prefill_s: f64,
         pub decode_s: f64,
+        pub garbage_chunk_rows: bool,
     }
 
     impl EchoBackend {
         pub(crate) fn new(vocab: usize) -> Self {
-            Self { vocab, prefill_s: 2e-3, decode_s: 1e-3 }
+            Self { vocab, prefill_s: 2e-3, decode_s: 1e-3, garbage_chunk_rows: false }
         }
     }
 
@@ -119,6 +144,16 @@ pub(crate) mod testing {
                     let last = match &slot.work {
                         SeqWork::Prefill { prompt, .. } => {
                             step_s += self.prefill_s;
+                            if !slot.work.yields_token() {
+                                // No token this iteration: no logits —
+                                // or, for the regression test, a row of
+                                // garbage the engine must ignore.
+                                return self.garbage_chunk_rows.then(|| {
+                                    let mut l = vec![0.0f32; self.vocab];
+                                    l[self.vocab - 1] = 99.0;
+                                    l
+                                });
+                            }
                             *prompt.last().unwrap_or(&0)
                         }
                         SeqWork::Decode { last, .. } => {
@@ -128,7 +163,7 @@ pub(crate) mod testing {
                     } as usize;
                     let mut l = vec![0.0f32; self.vocab];
                     l[(last + 1) % self.vocab] = 10.0;
-                    l
+                    Some(l)
                 })
                 .collect();
             if any_decode {

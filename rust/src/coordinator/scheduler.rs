@@ -515,6 +515,17 @@ impl Scheduler {
         std::mem::take(&mut self.unresumable)
     }
 
+    /// Is this request still anywhere in the scheduler — queued,
+    /// running, parked in the swap tier, or awaiting terminal eviction?
+    /// `false` means it finished or was cancelled (its id can be
+    /// forgotten by routing layers).
+    pub fn tracks(&self, seq: u64) -> bool {
+        self.running.iter().any(|s| s.req.id == seq)
+            || self.waiting.iter().any(|r| r.id == seq)
+            || self.preempted.iter().any(|s| s.req.id == seq)
+            || self.unresumable.iter().any(|s| s.req.id == seq)
+    }
+
     pub fn is_drained(&self) -> bool {
         self.waiting.is_empty()
             && self.running.is_empty()

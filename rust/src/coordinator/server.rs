@@ -70,10 +70,14 @@ pub struct SeqSlot {
 /// What one batched step produced.
 #[derive(Debug, Clone)]
 pub struct StepOutput {
-    /// Per-slot logits, same order as the input batch.  Non-final
-    /// prefill chunks still contribute a row (it is ignored), so the
-    /// row count always matches the batch.
-    pub logits: Vec<Vec<f32>>,
+    /// Per-slot logits, same order as the input batch.  A slot that
+    /// yields a sampled token this iteration (`SeqWork::yields_token`)
+    /// must carry `Some`; a non-final prefill chunk carries `None` —
+    /// backends no longer fabricate a vocab-sized row just for the
+    /// engine to discard it.  The row count always matches the batch,
+    /// and the engine never samples from a non-yielding slot's row even
+    /// if a backend returns garbage there.
+    pub logits: Vec<Option<Vec<f32>>>,
     /// Seconds of model time the step took (virtual for the simulator,
     /// measured wall time for the PJRT runtime).
     pub step_s: f64,
@@ -131,11 +135,20 @@ pub struct ServeStats {
     /// Batched engine iterations executed.
     pub steps: u64,
     /// Decode slot-executions in PURE decode steps (no prefill slot in
-    /// the batch).  Mixed steps are excluded so `decode_tps` samples
-    /// steady-state decode throughput instead of absorbing prefill cost.
+    /// the batch).  Mixed steps are counted separately so `decode_tps`
+    /// samples steady-state decode throughput instead of absorbing
+    /// prefill cost.
     pub decode_steps: u64,
     /// Serving-clock seconds of those pure decode steps.
     pub decode_time_s: f64,
+    /// Decode slot-executions in MIXED steps (a prefill slot shared the
+    /// batch).  A chunked-prefill-saturated run decodes thousands of
+    /// tokens without a single pure decode step — these keep that
+    /// throughput visible instead of reporting ~0 tok/s.
+    pub mixed_decodes: u64,
+    /// Serving-clock seconds of those mixed steps (prefill cost
+    /// included, which is why the two rates are reported separately).
+    pub mixed_time_s: f64,
     /// Decode inter-token gaps, serving-clock seconds: for every
     /// generated token after a request's first, the time since its
     /// previous token.  A long prefill sharing an iteration with decodes
@@ -179,18 +192,22 @@ pub struct ServeStats {
 /// forever.
 pub const ITL_SAMPLE_CAP: usize = 65_536;
 
-/// Nearest-rank percentile of a sample.  Returns 0.0 on an empty set —
-/// a zero-completion run must yield zeros, never NaN or a panic.  A NaN
-/// sample sorts last (`total_cmp`) instead of panicking the serving
-/// loop mid-trace.
+/// Nearest-rank (ceil convention) percentile of a sample: the smallest
+/// value with at least `q`% of the sample at or below it —
+/// `sorted[ceil(q/100 · N) - 1]`.  The old `.round()` on the rank made
+/// P50 of a 2-sample set return the MAX, so percentiles drifted with
+/// sample count and fleet-merged numbers were not comparable across
+/// shard counts.  Returns 0.0 on an empty set — a zero-completion run
+/// must yield zeros, never NaN or a panic.  A NaN sample sorts last
+/// (`total_cmp`) instead of panicking the serving loop mid-trace.
 fn percentile_of(vals: &[f64], q: f64) -> f64 {
     if vals.is_empty() {
         return 0.0;
     }
     let mut vals = vals.to_vec();
     vals.sort_by(f64::total_cmp);
-    let idx = ((q / 100.0) * (vals.len() - 1) as f64).round() as usize;
-    vals[idx.min(vals.len() - 1)]
+    let rank = ((q / 100.0) * vals.len() as f64).ceil() as usize;
+    vals[rank.clamp(1, vals.len()) - 1]
 }
 
 /// Mean of a sample; 0.0 when empty (never NaN).
@@ -208,12 +225,69 @@ fn mean(it: impl Iterator<Item = f64>) -> f64 {
 }
 
 impl ServeStats {
-    /// Aggregate decode throughput, tokens/s on the serving clock.
+    /// Aggregate decode throughput, tokens/s on the serving clock:
+    /// pure-step rate when any pure decode step ran, otherwise the
+    /// mixed-step rate.  A chunked-prefill-saturated run used to report
+    /// ~0 tok/s here despite thousands of decoded tokens, because every
+    /// decode shared its step with a prefill chunk.
     pub fn decode_tps(&self) -> f64 {
-        if self.decode_time_s <= 0.0 {
+        if self.decode_time_s > 0.0 {
+            self.decode_steps as f64 / self.decode_time_s
+        } else {
+            self.mixed_decode_tps()
+        }
+    }
+
+    /// Decode throughput over MIXED steps only (decode slot-executions
+    /// over mixed-step seconds — prefill cost included, so this is a
+    /// lower bound on the decode rate those steps sustained).
+    pub fn mixed_decode_tps(&self) -> f64 {
+        if self.mixed_time_s <= 0.0 {
             return 0.0;
         }
-        self.decode_steps as f64 / self.decode_time_s
+        self.mixed_decodes as f64 / self.mixed_time_s
+    }
+
+    /// Merge per-shard stats into one fleet summary.  Percentiles and
+    /// means are recomputed from the POOLED per-request samples (the
+    /// merged `results`), never averaged across shards — an average of
+    /// per-shard P99s is not a P99.  Counters sum; `served_s` is the
+    /// fleet clock (max over lanes: boards run in parallel);
+    /// `peak_kv_pages` sums because each board has its own HBM pool.
+    /// The throughput ratios (`decode_tps`) pool slot-executions and
+    /// step seconds across lanes, so they read as per-board rates —
+    /// fleet-level speedup shows up in `served_s`, not here.
+    ///
+    /// The merged value is a reporting SNAPSHOT, not a live ring: its
+    /// `itl_s` concatenates each shard's retained window and may hold
+    /// up to shards × [`ITL_SAMPLE_CAP`] samples.  Keep recording into
+    /// the per-shard stats and re-merge; do not `record_itl` into a
+    /// merged snapshot.
+    pub fn merge(shards: &[ServeStats]) -> ServeStats {
+        let mut out = ServeStats::default();
+        for s in shards {
+            out.results.extend(s.results.iter().cloned());
+            out.served_s = out.served_s.max(s.served_s);
+            out.wall_s = out.wall_s.max(s.wall_s);
+            out.steps += s.steps;
+            out.decode_steps += s.decode_steps;
+            out.decode_time_s += s.decode_time_s;
+            out.mixed_decodes += s.mixed_decodes;
+            out.mixed_time_s += s.mixed_time_s;
+            out.itl_total += s.itl_total;
+            out.itl_s.extend_from_slice(&s.itl_s);
+            out.rejected += s.rejected;
+            out.cancelled += s.cancelled;
+            out.admissions += s.admissions;
+            out.prefix_hits += s.prefix_hits;
+            out.prefix_cached_tokens += s.prefix_cached_tokens;
+            out.peak_kv_pages += s.peak_kv_pages;
+            out.preemptions += s.preemptions;
+            out.swapped_out_pages += s.swapped_out_pages;
+            out.swapped_in_pages += s.swapped_in_pages;
+            out.swap_time_s += s.swap_time_s;
+        }
+        out
     }
 
     /// Record one decode inter-token gap, ring-overwriting the oldest
@@ -342,6 +416,13 @@ impl ServeStats {
             self.mean_queue_s() * 1e3,
             self.mean_latency_s() * 1e3
         ));
+        if self.mixed_decodes > 0 {
+            out.push_str(&format!(
+                "mixed-step decodes {} ({:.1} tok/s alongside prefill chunks)\n",
+                self.mixed_decodes,
+                self.mixed_decode_tps()
+            ));
+        }
         out.push_str(&format!(
             "TTFT P50/P99 {:.1}/{:.1} ms, latency P50/P99 {:.1}/{:.1} ms, \
              peak KV {} pages",
@@ -557,6 +638,7 @@ mod tests {
         let stats = ServeStats::default();
         let vals = [
             stats.decode_tps(),
+            stats.mixed_decode_tps(),
             stats.mean_latency_s(),
             stats.mean_ttft_s(),
             stats.mean_queue_s(),
@@ -578,6 +660,106 @@ mod tests {
         let text = stats.summary("virtual");
         assert!(text.contains("completed 0 requests"));
         assert!(!text.contains("NaN"));
+    }
+
+    /// Satellite (percentile convention): nearest-rank with a CEIL on
+    /// the rank — P50 of {1, 2} is 1, not the max the old `.round()`
+    /// returned.  Small-N behavior is pinned down so fleet-merged
+    /// percentiles are comparable across shard counts.
+    #[test]
+    fn percentiles_use_ceil_nearest_rank_on_small_samples() {
+        // N = 1: every percentile is the one sample.
+        assert_eq!(percentile_of(&[5.0], 50.0), 5.0);
+        assert_eq!(percentile_of(&[5.0], 99.0), 5.0);
+        // N = 2: P50 = ceil(1.0) = rank 1 = the LOWER sample (the old
+        // round() picked rank round(0.5) of 0..=1 — the max).
+        assert_eq!(percentile_of(&[2.0, 1.0], 50.0), 1.0);
+        assert_eq!(percentile_of(&[2.0, 1.0], 99.0), 2.0);
+        // N = 3: P50 = ceil(1.5) = rank 2 = the median; P99 = max.
+        assert_eq!(percentile_of(&[3.0, 1.0, 2.0], 50.0), 2.0);
+        assert_eq!(percentile_of(&[3.0, 1.0, 2.0], 99.0), 3.0);
+        // Degenerate q values stay in range.
+        assert_eq!(percentile_of(&[3.0, 1.0, 2.0], 0.0), 1.0);
+        assert_eq!(percentile_of(&[3.0, 1.0, 2.0], 100.0), 3.0);
+    }
+
+    /// Satellite (mixed-step decode throughput): a chunked-prefill
+    /// -saturated run has NO pure decode steps — every decode shares
+    /// its iteration with a prefill chunk.  The old `decode_tps`
+    /// reported ~0 tok/s despite the decoded tokens; the mixed-step
+    /// counters keep the rate visible and `decode_tps` falls back.
+    #[test]
+    fn mixed_step_decodes_keep_throughput_visible() {
+        let mut server = Server::new(
+            EchoBackend::new(32),
+            SchedulerConfig {
+                max_batch: 2,
+                max_seq: 512,
+                prefill_chunk: 8,
+                ..Default::default()
+            },
+            Sampler::greedy(),
+        );
+        // A decodes 10 tokens, every one of them alongside one of B's
+        // prefill chunks (B's 200-token prompt runs as 25 chunks); B's
+        // budget of 1 is spent by its final-chunk token, so B never
+        // takes a pure decode step either.
+        let trace = vec![req(0, 0.0, 4, 10), req(1, 0.0, 200, 1)];
+        let stats = server.run_trace(trace).unwrap();
+        assert_eq!(stats.results.len(), 2);
+        assert_eq!(stats.decode_steps, 0, "no pure decode step ever ran");
+        assert!(stats.mixed_decodes >= 9, "decodes ran alongside chunks");
+        assert!(stats.mixed_time_s > 0.0);
+        assert!(stats.decode_tps() > 0.0, "saturated run must not report zero decode throughput");
+        assert_eq!(stats.decode_tps(), stats.mixed_decode_tps());
+        let summary = stats.summary("virtual");
+        assert!(summary.contains("mixed-step decodes"));
+    }
+
+    /// Satellite (fleet merge): percentiles of merged stats come from
+    /// the POOLED samples, not averaged per-shard percentiles, and the
+    /// counters/clocks combine the way independent boards do.
+    #[test]
+    fn merge_pools_samples_and_combines_counters() {
+        let mk = |latencies: &[f64], served_s: f64| {
+            let mut s = ServeStats {
+                served_s,
+                steps: 10,
+                decode_steps: 4,
+                decode_time_s: 0.5,
+                peak_kv_pages: 3,
+                admissions: latencies.len() as u64,
+                ..Default::default()
+            };
+            for (i, &l) in latencies.iter().enumerate() {
+                s.results.push(RequestResult {
+                    id: i as u64,
+                    prompt_len: 4,
+                    tokens: vec![1],
+                    latency_s: l,
+                    ttft_s: l,
+                    queue_s: 0.0,
+                    evicted: false,
+                    cancelled: false,
+                });
+            }
+            s
+        };
+        let a = mk(&[1.0, 2.0], 2.0);
+        let b = mk(&[10.0, 20.0], 5.0);
+        let m = ServeStats::merge(&[a.clone(), b.clone()]);
+        assert_eq!(m.results.len(), 4);
+        assert_eq!(m.served_s, 5.0, "fleet clock = max over lanes");
+        assert_eq!(m.steps, 20);
+        assert_eq!(m.peak_kv_pages, 6, "per-board pools sum");
+        assert_eq!(m.admissions, 4);
+        // Pooled P99 is the worst request anywhere in the fleet — NOT
+        // the mean of the two per-shard P99s (10.5 here).
+        assert_eq!(m.p99_ttft_s(), 20.0);
+        let averaged = (a.p99_ttft_s() + b.p99_ttft_s()) / 2.0;
+        assert!(m.p99_ttft_s() > averaged);
+        // Pooled P50 = ceil-rank 2 of {1, 2, 10, 20}.
+        assert_eq!(m.p50_ttft_s(), 2.0);
     }
 
     /// Satellite: the ITL buffer is a bounded ring — a long-lived

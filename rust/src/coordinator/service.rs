@@ -47,8 +47,9 @@ pub enum StreamEvent {
     Rejected,
 }
 
-/// Client → engine commands (one channel for both clock modes).
-enum Command {
+/// Client → engine commands (one channel for both clock modes, shared
+/// with the multi-shard `fleet` front-end).
+pub(crate) enum Command {
     Submit(Request, Sender<StreamEvent>),
     Cancel(u64),
     Shutdown,
@@ -62,6 +63,10 @@ pub struct RequestHandle {
 }
 
 impl RequestHandle {
+    pub(crate) fn new(id: u64, events: Receiver<StreamEvent>, commands: Sender<Command>) -> Self {
+        Self { id, events, commands }
+    }
+
     pub fn id(&self) -> u64 {
         self.id
     }
@@ -174,6 +179,12 @@ impl<B: ModelBackend> EngineCore<B> {
 
     pub(crate) fn scheduler(&self) -> &Scheduler {
         &self.scheduler
+    }
+
+    /// The engine's serving-clock seconds so far (virtual mode: the
+    /// lane clock the fleet's arrival-gated routing reads).
+    pub(crate) fn clock_s(&self) -> f64 {
+        self.clock
     }
 
     fn now(&self) -> f64 {
@@ -411,15 +422,21 @@ impl<B: ModelBackend> EngineCore<B> {
             .iter()
             .filter(|s| matches!(s.work, SeqWork::Decode { .. }))
             .count() as u64;
-        // Only pure decode steps sample throughput: a mixed step's
-        // cost is dominated by its prefills and would deflate tok/s.
+        // Pure decode steps sample steady-state throughput; decodes
+        // sharing a step with prefill chunks are counted separately (a
+        // mixed step's cost is dominated by its prefills), so a
+        // chunked-prefill-saturated run still reports its decode rate.
         if n_decode == slots.len() as u64 {
             self.stats.decode_steps += n_decode;
             self.stats.decode_time_s += step_cost_s;
+        } else if n_decode > 0 {
+            self.stats.mixed_decodes += n_decode;
+            self.stats.mixed_time_s += step_cost_s;
         }
 
         // Sample each token-yielding slot and stream it; non-final
-        // prefill chunks only advance the prefill cursor.
+        // prefill chunks only advance the prefill cursor — their logits
+        // row (if a backend supplied one anyway) is never sampled.
         let mut finished: Vec<(u64, FinishKind)> = Vec::new();
         let mut dropped: Vec<u64> = Vec::new();
         for (slot, logits) in slots.iter().zip(&out.logits) {
@@ -429,12 +446,19 @@ impl<B: ModelBackend> EngineCore<B> {
                 // replays (same tokens) after resume.  Nothing streams.
                 continue;
             }
+            if slot.work.yields_token() {
+                ensure!(
+                    logits.is_some(),
+                    "backend returned no logits for token-yielding slot {}",
+                    slot.seq
+                );
+            }
             match &slot.work {
                 SeqWork::Prefill { chunk_end, .. } if !slot.work.yields_token() => {
                     self.scheduler.on_prefill_chunk(slot.seq, *chunk_end);
                 }
                 SeqWork::Prefill { .. } => {
-                    let tok = self.sampler.sample(logits);
+                    let tok = self.sampler.sample(logits.as_ref().expect("checked above"));
                     self.scheduler.on_prefill_done(slot.seq, tok);
                     self.first_token_s.insert(slot.seq, self.clock);
                     self.last_token_s.insert(slot.seq, self.clock);
@@ -443,7 +467,7 @@ impl<B: ModelBackend> EngineCore<B> {
                     }
                 }
                 SeqWork::Decode { .. } => {
-                    let tok = self.sampler.sample(logits);
+                    let tok = self.sampler.sample(logits.as_ref().expect("checked above"));
                     match self.scheduler.on_decode_done(slot.seq, tok) {
                         DecodeOutcome::Preempted => {
                             // The sequence parked itself in the swap
@@ -700,6 +724,38 @@ mod tests {
         assert!(!result.cancelled && !result.evicted);
         assert_eq!(svc.stats().results.len(), 1);
         assert!(svc.scheduler().is_drained());
+    }
+
+    /// Regression (fabricated chunk logits): a non-final prefill chunk
+    /// never yields a sampled token — even when the backend returns a
+    /// garbage logits row for it instead of `None`.  The garbage peak
+    /// (vocab - 1 at logit 99) would be unmissable if sampled.
+    #[test]
+    fn non_final_chunk_never_samples_even_garbage_logits() {
+        let mut backend = EchoBackend::new(32);
+        backend.garbage_chunk_rows = true;
+        let mut svc = Service::new(
+            backend,
+            SchedulerConfig {
+                max_batch: 1,
+                max_seq: 64,
+                prefill_chunk: 8,
+                ..Default::default()
+            },
+            Sampler::greedy(),
+        );
+        let h = svc.submit(req(0, 24, 3)); // 3 chunks: [0,8) [8,16) [16,24)
+        for tick in 0..2 {
+            svc.tick().unwrap();
+            assert!(h.try_event().is_none(), "no token may stream after non-final chunk {tick}");
+            assert!(svc.scheduler().running()[0].generated.is_empty());
+        }
+        svc.drain().unwrap();
+        let r = h.wait().expect("completes");
+        assert_eq!(r.tokens.len(), 3);
+        // Real logits, not the garbage peak: (last prompt token + 1).
+        assert_eq!(r.tokens[0], 24, "first token comes from the FINAL chunk's logits");
+        assert!(r.tokens.iter().all(|&t| t != 31), "garbage peak never sampled");
     }
 
     /// Cancelling mid-prefill (chunked, so prefill spans several ticks)

@@ -106,8 +106,15 @@ impl SimBackend {
     }
 
     /// Deterministic pseudo-logits: a single peak derived from the slot's
-    /// identity and position (pure function — no mutable RNG state).
-    fn logits_for(&self, slot: &SeqSlot) -> Vec<f32> {
+    /// identity and position (pure function — no mutable RNG state, so
+    /// a request generates the same tokens on any shard of a fleet).
+    /// `None` for a non-final prefill chunk: it yields no token, so
+    /// fabricating a vocab-sized row for the engine to discard was pure
+    /// waste.
+    fn logits_for(&self, slot: &SeqSlot) -> Option<Vec<f32>> {
+        if !slot.work.yields_token() {
+            return None;
+        }
         let (last, pos) = match &slot.work {
             SeqWork::Prefill { prompt, .. } => {
                 (prompt.last().copied().unwrap_or(0) as u64, prompt.len() as u64)
@@ -122,7 +129,7 @@ impl SimBackend {
         let peak = Rng::new(seed).next_u64() % self.vocab as u64;
         let mut logits = vec![0.0f32; self.vocab];
         logits[peak as usize] = 10.0;
-        logits
+        Some(logits)
     }
 }
 
@@ -346,6 +353,33 @@ mod tests {
         let out = b.step(&[slot]).unwrap();
         assert_eq!(out.step_s, 0.0, "no phantom prefill cost");
         assert_eq!(out.logits.len(), 1, "row count still matches the batch");
+    }
+
+    /// Satellite: a non-final prefill chunk yields no token, so the
+    /// backend returns `None` for its row instead of fabricating a
+    /// vocab-sized logits vector the engine would discard; the final
+    /// chunk and decode slots carry real rows.
+    #[test]
+    fn non_final_chunks_carry_no_logits_row() {
+        let mut b = SimBackend::with_vocab(Target::u280_tiny(), 8);
+        let prefill = |chunk_end: usize| SeqSlot {
+            seq: 0,
+            work: SeqWork::Prefill {
+                prompt: vec![1, 2, 3, 4],
+                cached_ctx: 0,
+                chunk_start: 0,
+                chunk_end,
+            },
+        };
+        let out = b.step(&[prefill(2)]).unwrap();
+        assert_eq!(out.logits.len(), 1);
+        assert!(out.logits[0].is_none(), "non-final chunk: no logits");
+        assert!(out.step_s > 0.0, "the chunk still costs model time");
+        let out = b.step(&[prefill(4)]).unwrap();
+        assert!(out.logits[0].is_some(), "final chunk: real logits");
+        let decode = SeqSlot { seq: 0, work: SeqWork::Decode { last: 3, pos: 4 } };
+        let out = b.step(&[decode]).unwrap();
+        assert!(out.logits[0].is_some(), "decode: real logits");
     }
 
     /// Batched decode amortizes weight streaming (Fig. 15): aggregate

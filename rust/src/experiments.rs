@@ -318,6 +318,60 @@ pub fn flightllm_serve_chunk_sweep(
         .collect()
 }
 
+/// Geometry + routing of a sim-backed serving fleet: shard count, the
+/// request→shard policy, and the PER-BOARD batch and KV budget (adding
+/// shards adds capacity the way adding boards does).
+#[derive(Debug, Clone, Copy)]
+pub struct FleetSpec {
+    pub shards: usize,
+    pub route: crate::coordinator::RoutePolicy,
+    /// Concurrent sequences per board.
+    pub max_batch: usize,
+    /// KV pool pages per board (at [`SERVE_PAGE_TOKENS`]-token pages).
+    pub kv_pages_per_shard: usize,
+    /// Per-board CoW prefix caches (what prefix-affinity routing
+    /// exploits).
+    pub prefix_cache: bool,
+    /// Fabricated-logits width for the sim lanes.
+    pub vocab: usize,
+}
+
+/// Serve a trace across a multi-shard fleet of sim-backed replica
+/// lanes (`coordinator::ShardedService`) — the SLR/board-replication
+/// serving tier.  Each lane gets its own `SimBackend`, scheduler and
+/// KV pool per `spec`.  Returns (per-shard stats, merged fleet stats):
+/// the merged percentiles are recomputed from the pooled per-request
+/// samples, and `served_s` is the fleet clock (max over lane clocks —
+/// boards run in parallel).  Sampling is greedy so token streams are
+/// comparable across shard counts (the sim backend derives logits from
+/// the sequence alone, so a request generates the same tokens
+/// whichever lane serves it).  One definition shared by the acceptance
+/// tests, the fig15 shard table, serve_e2e and `cli serve --shards`.
+pub fn flightllm_serve_sharded(
+    target: &Target,
+    trace: Vec<crate::workload::Request>,
+    spec: &FleetSpec,
+) -> (Vec<crate::coordinator::ServeStats>, crate::coordinator::ServeStats) {
+    use crate::coordinator::{Sampler, SchedulerConfig, ShardedService, SimBackend};
+
+    let shards = spec.shards.max(1);
+    let cfg = SchedulerConfig {
+        max_batch: spec.max_batch.max(1),
+        // The fleet config carries the TOTAL budget; ShardedService
+        // splits it back to kv_pages_per_shard per board.
+        kv_pages: spec.kv_pages_per_shard.max(1) * shards,
+        page_tokens: SERVE_PAGE_TOKENS,
+        max_seq: target.model.max_seq as usize,
+        prefix_cache: spec.prefix_cache,
+        ..Default::default()
+    };
+    let mut fleet = ShardedService::new(shards, spec.route, cfg, Sampler::greedy(), |_| {
+        SimBackend::with_vocab(target.clone(), spec.vocab.max(2))
+    });
+    let merged = fleet.run_trace(trace).expect("sim serving is infallible");
+    (fleet.shard_stats(), merged)
+}
+
 /// Fig. 14's three rungs, normalized against a V100S-opt baseline the
 /// way the paper plots them.
 pub fn fig14_rungs(target: &Target, pt: EvalPoint) -> Vec<(String, Measurement)> {
@@ -641,6 +695,121 @@ mod tests {
         // Spreading a 192-token prompt over 32-token chunks takes more
         // engine iterations — that is the mechanism, not a side effect.
         assert!(chunked.steps > unchunked.steps);
+    }
+
+    /// Acceptance (sharded fleet): on the overload trace, a 2-shard
+    /// fleet serves per-request token streams byte-identical to the
+    /// single-shard run and strictly improves P99 TTFT — replication
+    /// converts queueing delay into parallelism, never into different
+    /// output.  The fleet summary comes out of the one shared
+    /// `ServeStats` printer, per shard and merged.
+    #[test]
+    fn sharded_fleet_improves_p99_ttft_token_identically() {
+        use crate::coordinator::RoutePolicy;
+        use crate::workload::{generate_overload_trace, OverloadConfig};
+        let t = Target::u280_tiny();
+        let cfg = OverloadConfig {
+            n_requests: 12,
+            prompt_len: 32,
+            decode_len_choices: vec![32, 48],
+            rate_per_s: 1e7, // near-simultaneous: the queue is the overload
+            vocab: 64,
+            seed: 6,
+        };
+        let run = |shards: usize| {
+            let spec = FleetSpec {
+                shards,
+                route: RoutePolicy::RoundRobin,
+                max_batch: 2,
+                kv_pages_per_shard: 64,
+                prefix_cache: false,
+                vocab: 64,
+            };
+            flightllm_serve_sharded(&t, generate_overload_trace(&cfg), &spec)
+        };
+        let (_, single) = run(1);
+        let (per_shard, fleet) = run(2);
+        assert_eq!(single.results.len(), 12);
+        assert_eq!(fleet.results.len(), 12);
+        assert_eq!(per_shard.len(), 2);
+        assert!(
+            per_shard.iter().all(|s| !s.results.is_empty()),
+            "round-robin must use both shards"
+        );
+        assert_eq!(single.preempted_truncated(), 0);
+        assert_eq!(fleet.preempted_truncated(), 0);
+        for a in &single.results {
+            let b = fleet.results.iter().find(|r| r.id == a.id).expect("same ids");
+            assert_eq!(a.tokens, b.tokens, "request {} tokens must not change", a.id);
+        }
+        assert!(
+            fleet.p99_ttft_s() < single.p99_ttft_s(),
+            "2 shards must strictly cut P99 TTFT on the overload trace: {} vs {}",
+            fleet.p99_ttft_s(),
+            single.p99_ttft_s()
+        );
+        assert!(fleet.served_s < single.served_s, "two boards must drain the queue faster");
+        // Per-shard and merged stats speak through the one printer.
+        for (i, s) in per_shard.iter().enumerate() {
+            assert!(s.summary("virtual").contains("completed"), "shard {i} summary");
+        }
+        assert!(fleet.summary("virtual").contains("completed 12 requests"));
+    }
+
+    /// Acceptance (prefix-affinity routing): on the shared-prefix trace
+    /// with per-shard prefix caches, hashing the prompt's first page
+    /// keeps each prefix group on one shard — its hit rate is at least
+    /// round-robin's, which scatters every group across all the caches.
+    #[test]
+    fn prefix_affinity_hit_rate_at_least_round_robin() {
+        use crate::coordinator::RoutePolicy;
+        use crate::workload::SharedPrefixConfig;
+        let t = Target::u280_tiny();
+        let cfg = SharedPrefixConfig {
+            n_groups: 4,
+            prefix_len: 64,
+            tail_len_choices: vec![8, 16],
+            decode_len_choices: vec![4],
+            n_requests: 16,
+            rate_per_s: 1e3,
+            vocab: 64,
+            seed: 13,
+        };
+        let run = |route: RoutePolicy| {
+            let spec = FleetSpec {
+                shards: 2,
+                route,
+                max_batch: 2,
+                kv_pages_per_shard: 128,
+                prefix_cache: true,
+                vocab: 64,
+            };
+            flightllm_serve_sharded(&t, crate::workload::generate_shared_prefix_trace(&cfg), &spec)
+        };
+        let (_, rr) = run(RoutePolicy::RoundRobin);
+        let (_, affine) = run(RoutePolicy::PrefixAffinity);
+        assert_eq!(rr.results.len(), 16);
+        assert_eq!(affine.results.len(), 16);
+        assert!(affine.prefix_hits > 0, "shared prefixes must hit");
+        assert!(
+            affine.prefix_hit_rate() >= rr.prefix_hit_rate(),
+            "affinity {} must be at least round-robin {}",
+            affine.prefix_hit_rate(),
+            rr.prefix_hit_rate()
+        );
+        // Consistent group→shard mapping: at most one cold miss per
+        // prefix group across the whole fleet.
+        assert!(
+            affine.prefix_hits >= (cfg.n_requests - cfg.n_groups) as u64,
+            "affinity hits {} < {}",
+            affine.prefix_hits,
+            cfg.n_requests - cfg.n_groups
+        );
+        // Routing never changes what a request generates.
+        for a in &rr.results {
+            let b = affine.results.iter().find(|r| r.id == a.id).expect("same ids");
+            assert_eq!(a.tokens, b.tokens);
+        }
     }
 
     #[test]

@@ -231,16 +231,16 @@ impl crate::coordinator::ModelBackend for RuntimeBackend {
                 SeqWork::Prefill { prompt, cached_ctx, chunk_end, .. } => {
                     // Monolithic KV literals: the FULL prompt runs at
                     // the final chunk (results stay golden-exact), so
-                    // earlier chunks cost nothing here and contribute
-                    // only a placeholder logits row (ignored upstream).
+                    // earlier chunks cost nothing here and carry no
+                    // logits row at all.
                     if *chunk_end < prompt.len() {
-                        logits.push(vec![0.0; self.rt.vocab()]);
+                        logits.push(None);
                         continue;
                     }
                     self.cached_tokens_reported += *cached_ctx as u64;
                     let out = self.rt.prefill(prompt)?;
                     self.kv.insert(slot.seq, out.kv);
-                    logits.push(out.logits);
+                    logits.push(Some(out.logits));
                 }
                 SeqWork::Decode { last, pos } => {
                     let kv = self
@@ -249,7 +249,7 @@ impl crate::coordinator::ModelBackend for RuntimeBackend {
                         .ok_or_else(|| anyhow!("no KV state for sequence {}", slot.seq))?;
                     let out = self.rt.decode(*last, kv, *pos)?;
                     self.kv.insert(slot.seq, out.kv);
-                    logits.push(out.logits);
+                    logits.push(Some(out.logits));
                 }
             }
         }
