@@ -30,6 +30,11 @@
 //!    — plus prefix-affinity vs round-robin hit rates on a
 //!    shared-prefix trace with per-shard prefix caches.
 //!
+//! Before any serving, the static verifier checks every instruction
+//! stream the simulated target can execute (occupancy, addresses,
+//! channel runs, sync discipline) — the same gate `flightllm verify`
+//! runs in CI.
+//!
 //! Run: cargo run --release --example serve_e2e
 //!      (add --features xla && make artifacts for section 1)
 
@@ -63,6 +68,25 @@ fn main() -> anyhow::Result<()> {
 
     // -- Section 2: the trace on the simulated U280 / LLaMA2-7B --------
     let t = Target::u280_llama2();
+
+    // Gate: statically verify every instruction stream this target can
+    // execute before handing any of them to the simulator.
+    let report = flightllm::verify::verify_target(&t);
+    println!(
+        "== static verifier: {} streams, {} instructions on {} ==",
+        report.streams.len(),
+        report.total_instructions(),
+        report.target
+    );
+    if !report.is_clean() {
+        for s in &report.streams {
+            for d in &s.diags {
+                eprintln!("  {}: {d}", s.label);
+            }
+        }
+        anyhow::bail!("{} verifier diagnostics on {}", report.total_diags(), report.target);
+    }
+    println!("all streams verify clean\n");
     let sim_max_seq = t.model.max_seq as usize;
     let mut sim_server = Server::new(
         SimBackend::with_vocab(t.clone(), vocab as usize),

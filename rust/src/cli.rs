@@ -10,7 +10,15 @@
 //! flightllm simulate [--model llama2|opt] [--platform u280|vhk158]
 //!                    [--prefill N] [--decode N]
 //! flightllm report   [--what storage|resources|efficiency]
+//! flightllm verify   [--model llama2|opt|tiny] [--platform u280|vhk158]
 //! ```
+//!
+//! `verify` statically checks every shipped instruction stream (all
+//! compiler presets × stage × bucket) against the platform contract —
+//! buffer occupancy, address/channel bounds, encoding roundtrip, sync
+//! discipline, bucket coverage — and exits nonzero on any diagnostic.
+//! With no flags it covers the LLaMA2-on-U280, LLaMA2-on-VHK158 and tiny
+//! targets; `--model`/`--platform` narrow it to one.
 //!
 //! `serve --backend sim` needs no artifacts: the trace is served by the
 //! continuous-batching engine against the cycle-approximate simulator,
@@ -82,13 +90,15 @@ const USAGE: &str = "usage: flightllm <serve|simulate|report> [flags]
            [--prefill-chunk N] [--live] [--rate R] [--swap] [--swap-gbps G]
            [--shards N] [--route rr|load|prefix]
   simulate --model llama2|opt --platform u280|vhk158 --prefill N --decode N
-  report   --what storage|resources|efficiency";
+  report   --what storage|resources|efficiency
+  verify   [--model llama2|opt|tiny] [--platform u280|vhk158]";
 
 pub fn run(args: &[String]) -> i32 {
     match args.get(1).map(|s| s.as_str()) {
         Some("serve") => cmd_serve(&args[2..]),
         Some("simulate") => cmd_simulate(&args[2..]),
         Some("report") => cmd_report(&args[2..]),
+        Some("verify") => cmd_verify(&args[2..]),
         Some("--help") | Some("-h") | None => {
             eprintln!("{USAGE}");
             if args.len() <= 1 {
@@ -570,6 +580,50 @@ fn cmd_serve_runtime(_args: &[String]) -> i32 {
     1
 }
 
+/// Statically verify the shipped instruction streams; exit 1 on any
+/// diagnostic (the CI gate).
+fn cmd_verify(args: &[String]) -> i32 {
+    let targets: Vec<Target> =
+        if flag(args, "--model").is_some() || flag(args, "--platform").is_some() {
+            vec![target_for(args)]
+        } else {
+            vec![Target::u280_llama2(), Target::vhk158_llama2(), Target::u280_tiny()]
+        };
+    let mut diag_total = 0usize;
+    for t in &targets {
+        let report = crate::verify::verify_target(t);
+        println!(
+            "{}: {} streams, {} instructions — {}",
+            report.target,
+            report.streams.len(),
+            report.total_instructions(),
+            if report.is_clean() {
+                "clean".to_string()
+            } else {
+                format!("{} diagnostics", report.total_diags())
+            }
+        );
+        for d in &report.bucket_diags {
+            println!("  bucket plan: {d}");
+        }
+        for s in report.streams.iter().filter(|s| !s.diags.is_empty()) {
+            for d in s.diags.iter().take(5) {
+                println!("  {}: {d}", s.label);
+            }
+            if s.diags.len() > 5 {
+                println!("  {}: ... and {} more", s.label, s.diags.len() - 5);
+            }
+        }
+        diag_total += report.total_diags();
+    }
+    if diag_total > 0 {
+        eprintln!("verification failed with {diag_total} diagnostics");
+        1
+    } else {
+        0
+    }
+}
+
 fn cmd_report(args: &[String]) -> i32 {
     match flag(args, "--what").unwrap_or("efficiency") {
         "storage" => {
@@ -729,6 +783,15 @@ mod tests {
     #[test]
     fn report_resources_runs() {
         assert_eq!(run(&s(&["flightllm", "report", "--what", "resources"])), 0);
+    }
+
+    #[test]
+    fn verify_tiny_target_is_clean() {
+        assert_eq!(
+            run(&s(&["flightllm", "verify", "--model", "tiny"])),
+            0,
+            "shipped tiny streams must verify clean"
+        );
     }
 
     #[test]

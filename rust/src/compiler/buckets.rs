@@ -33,12 +33,14 @@ impl BucketPlan {
     }
 
     /// The tiny-model plan matching python/compile/aot.py PREFILL_BUCKETS.
+    /// The last prefill edge is pinned to `max_seq`: without it, lengths
+    /// past the largest fixed bucket would silently clamp to a stream
+    /// compiled for a shorter prompt.
     pub fn tiny(max_seq: u64) -> Self {
-        Self {
-            max_seq,
-            decode: vec![max_seq],
-            prefill: vec![16, 32, 64, 128],
-        }
+        let mut prefill: Vec<u64> =
+            [16, 32, 64, 128].into_iter().filter(|&e| e < max_seq).collect();
+        prefill.push(max_seq);
+        Self { max_seq, decode: vec![max_seq], prefill }
     }
 
     pub fn decode_bucket(&self, ctx: u64) -> u64 {
@@ -134,6 +136,22 @@ mod tests {
         }
         for &e in &p.prefill {
             assert_eq!(e % 16, 0, "prefill edge {e} must align to block");
+        }
+    }
+
+    #[test]
+    fn tiny_plan_covers_up_to_max_seq() {
+        // Regression: the fixed [16..128] prefill table used to clamp a
+        // 256-token prompt onto the 128-token stream.
+        for max_seq in [96u64, 128, 256, 1024] {
+            let p = BucketPlan::tiny(max_seq);
+            assert_eq!(*p.prefill.last().unwrap(), max_seq);
+            for w in p.prefill.windows(2) {
+                assert!(w[0] < w[1], "edges must stay ascending: {:?}", p.prefill);
+            }
+            for len in 1..=max_seq {
+                assert!(p.prefill_bucket(len) >= len);
+            }
         }
     }
 

@@ -127,17 +127,20 @@ impl<'a, S: InstSink> Lowerer<'a, S> {
         let fc = self.next_channel;
         self.next_channel =
             (self.next_channel + MERGE_CHANNELS) % self.t.platform.hbm.channels as u8;
+        // Per-channel leg, 64-byte aligned: the 16-byte encoding stores
+        // addresses as 64-byte tile indices, so per-leg addresses (and the
+        // cursor below) must stay 64-aligned or they truncate.
+        let leg = bytes.div_ceil(MERGE_CHANNELS as u64).next_multiple_of(64) as u32;
         if self.opt.merge_channel_io {
             self.sink.emit(Inst::LdMerged {
                 first_channel: fc,
                 channels: MERGE_CHANNELS,
                 dst: OnChipBuf::Weight,
                 addr: self.addr,
-                bytes: (bytes / MERGE_CHANNELS as u64).max(64) as u32,
+                bytes: leg,
             });
         } else {
             // Unmerged: one LD per channel leg (the pre-optimization ISA).
-            let leg = (bytes / MERGE_CHANNELS as u64).max(64) as u32;
             for c in 0..MERGE_CHANNELS {
                 self.sink.emit(Inst::Ld {
                     src: MemSpace::Hbm { channel: fc + c },
@@ -147,7 +150,7 @@ impl<'a, S: InstSink> Lowerer<'a, S> {
                 });
             }
         }
-        self.addr += bytes;
+        self.addr += MERGE_CHANNELS as u64 * leg as u64;
     }
 
     /// Activation vector traffic for the non-fused (naive) schedule.
@@ -248,15 +251,19 @@ impl<'a, S: InstSink> Lowerer<'a, S> {
                 // MV against the KV cache: K then V, per head group; each
                 // batched sequence has its OWN cache (no amortization —
                 // this is why the multibatch advantage shrinks, Fig. 15).
+                // Each head's K (then V) panel is streamed right before
+                // the MV that consumes it: one aggregate KV load for all
+                // heads would overflow the weight buffer.
                 let b = self.opt.batch.max(1) as u64;
-                let kv_bytes = 2 * ctx * hd * heads_slr * act_bytes_per_elem * b;
-                self.emit_weight_load(kv_bytes.max(MERGE_CHANNELS as u64 * 64));
+                let panel = (ctx * hd * act_bytes_per_elem).max(MERGE_CHANNELS as u64 * 64);
                 for _ in 0..heads_slr * b {
                     // q·K^T : (1×hd)·(hd×ctx), then s·V : (1×ctx)·(ctx×hd)
+                    self.emit_weight_load(panel);
                     self.sink.emit(Inst::Mv { k: hd as u32, n: ctx as u32, sparsity: Sparsity::Dense });
                     if fused_softmax {
                         self.sink.emit(Inst::Misc { op: MiscOp::Softmax, len: ctx as u32 });
                     }
+                    self.emit_weight_load(panel);
                     self.sink.emit(Inst::Mv { k: ctx as u32, n: hd as u32, sparsity: Sparsity::Dense });
                 }
             }
@@ -265,12 +272,19 @@ impl<'a, S: InstSink> Lowerer<'a, S> {
                 let nb = n.div_ceil(block);
                 let causal_blocks = nb * (nb + 1) / 2;
                 let kept = ((causal_blocks as f64 * block_density).ceil() as u64).max(nb);
+                // Each head streams its K panel before the QK^T blocks and
+                // its V panel before the S·V blocks.  (The old lowering
+                // emitted one aggregate KV load for all heads *after* the
+                // MMs — a read-before-load the stream verifier rejects,
+                // and a panel too large for the weight buffer.)
+                let panel = (n * hd * act_bytes_per_elem).max(MERGE_CHANNELS as u64 * 64);
                 match self.opt.attn {
                     AttnGranularity::Fine => {
                         // One MM per (head, kept block) for QK^T and for
                         // S·V — the true stored stream (§5.2.1: every
                         // layer and head has its own pattern).
                         for _ in 0..heads_slr {
+                            self.emit_weight_load(panel);
                             for _ in 0..kept {
                                 self.sink.emit(Inst::Mm {
                                     m: block as u32,
@@ -282,6 +296,7 @@ impl<'a, S: InstSink> Lowerer<'a, S> {
                             if fused_softmax {
                                 self.sink.emit(Inst::Misc { op: MiscOp::Softmax, len: n as u32 });
                             }
+                            self.emit_weight_load(panel);
                             for _ in 0..kept {
                                 self.sink.emit(Inst::Mm {
                                     m: block as u32,
@@ -296,17 +311,16 @@ impl<'a, S: InstSink> Lowerer<'a, S> {
                         let d256 = ((block_density * 256.0) as u8).max(1);
                         let sp = Sparsity::BlockSparse { density_256: d256 };
                         for _ in 0..heads_slr {
+                            self.emit_weight_load(panel);
                             self.sink.emit(Inst::Mm { m: n as u32, k: hd as u32, n: n as u32, sparsity: sp });
                             if fused_softmax {
                                 self.sink.emit(Inst::Misc { op: MiscOp::Softmax, len: n as u32 });
                             }
+                            self.emit_weight_load(panel);
                             self.sink.emit(Inst::Mm { m: n as u32, k: n as u32, n: hd as u32, sparsity: sp });
                         }
                     }
                 }
-                // Score traffic: prefill streams K/V tiles from HBM.
-                let kv_bytes = 2 * n * hd * heads_slr * act_bytes_per_elem;
-                self.emit_weight_load(kv_bytes.max(MERGE_CHANNELS as u64 * 64));
             }
             (Stage::Prefill { .. }, AttentionKind::Decode) => unreachable!(),
         }

@@ -2,6 +2,12 @@
 //! streams, with length-adaptive compilation (§5.2) and the multi-channel
 //! LD/ST merge, plus the storage-size model that reproduces the paper's
 //! 1.67 TB → 4.77 GB → 3.25 GB progression.
+//!
+//! Everything this module emits is checkable without execution: the
+//! [`crate::verify`] tier replays a compiled stream through an abstract
+//! machine (on-chip occupancy, off-chip address bounds, channel runs,
+//! encode/decode, sync discipline) and the `flightllm verify` CI gate
+//! holds every shipped target × preset to zero diagnostics.
 
 mod buckets;
 mod lowering;

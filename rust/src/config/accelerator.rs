@@ -10,7 +10,7 @@
 //!   BW   = (MPU/8 + 2) · MPE · 14.4 GB/s
 
 
-use super::platform::Platform;
+use super::platform::{OnChipBudget, Platform};
 
 #[derive(Debug, Clone)]
 pub struct AcceleratorConfig {
@@ -59,6 +59,17 @@ impl AcceleratorConfig {
     /// VHK158: 2 cores, same MPU shape, more bandwidth per channel.
     pub fn for_vhk158() -> Self {
         Self { mpe: 2, mpu_per_mpe: 12, ..Self::for_u280() }
+    }
+
+    /// Per-core buffer capacities implied by this organization — must
+    /// agree with the platform's `OnChipBudget` (BRAM36 = 4 KiB usable).
+    pub fn onchip_budget(&self) -> OnChipBudget {
+        OnChipBudget {
+            weight_bytes: self.weight_buf_bram as u64 * 4096,
+            activation_bytes: self.act_buffer_kib as u64 * 1024,
+            global_bytes: self.global_buf_bram as u64 * 4096,
+            index_bytes: self.index_buf_bram as u64 * 4096,
+        }
     }
 
     /// MACs per cycle of the whole accelerator in dense mode.
@@ -194,6 +205,15 @@ mod tests {
         let a = AcceleratorConfig::for_u280();
         let tops = a.peak_tops(225.0);
         assert!(tops > 4.0 && tops < 30.0, "tops = {tops}");
+    }
+
+    #[test]
+    fn onchip_budget_matches_platform_presets() {
+        assert_eq!(AcceleratorConfig::for_u280().onchip_budget(), Platform::u280().onchip);
+        assert_eq!(
+            AcceleratorConfig::for_vhk158().onchip_budget(),
+            Platform::vhk158().onchip
+        );
     }
 
     #[test]

@@ -14,7 +14,7 @@ mod platform;
 pub use accelerator::{AcceleratorConfig, ResourceEstimate};
 pub use compression::CompressionConfig;
 pub use model::{FfnKind, ModelConfig};
-pub use platform::{GpuConfig, MemoryConfig, Platform};
+pub use platform::{GpuConfig, MemoryConfig, OnChipBudget, Platform};
 
 /// A fully-specified experiment target: which board, how the accelerator
 /// is organized on it, which model, and which compression recipe.

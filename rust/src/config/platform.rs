@@ -28,6 +28,41 @@ impl MemoryConfig {
     pub fn per_channel_gbs(&self) -> f64 {
         self.bandwidth_gbs / self.channels as f64
     }
+
+    /// Capacity in bytes (decimal GB, matching Table 2).
+    pub fn capacity_bytes(&self) -> u64 {
+        (self.capacity_gb * 1e9) as u64
+    }
+}
+
+/// Per-core on-chip buffer capacities in bytes — the budgets the stream
+/// verifier holds LD/compute occupancy against.  Weight/global/index
+/// buffers are BRAM36-backed (4 KiB usable per block, §5.3); the
+/// activation buffer is URAM-backed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OnChipBudget {
+    pub weight_bytes: u64,
+    pub activation_bytes: u64,
+    pub global_bytes: u64,
+    pub index_bytes: u64,
+}
+
+impl OnChipBudget {
+    /// U280 build (Table 3 sizing): 192/64/16 BRAM36 + 2 MiB URAM.
+    pub fn u280() -> Self {
+        Self {
+            weight_bytes: 192 * 4096,
+            activation_bytes: 2048 * 1024,
+            global_bytes: 64 * 4096,
+            index_bytes: 16 * 4096,
+        }
+    }
+
+    /// VHK158 inherits the U280 per-core buffer sizing (§6.1: same MPU
+    /// shape, more bandwidth per channel).
+    pub fn vhk158() -> Self {
+        Self::u280()
+    }
 }
 
 /// An FPGA (or, for the GPU baselines, a `GpuConfig` instead).
@@ -41,6 +76,8 @@ pub struct Platform {
     pub slr_count: u32,
     pub hbm: MemoryConfig,
     pub ddr: MemoryConfig,
+    /// Per-core on-chip buffer capacities (verifier occupancy budgets).
+    pub onchip: OnChipBudget,
     pub bram36_total: u32,
     pub uram_total: u32,
     pub lut_total: u32,
@@ -72,6 +109,7 @@ impl Platform {
                 latency_ns: 63.0,
                 burst_efficiency: 0.90,
             },
+            onchip: OnChipBudget::u280(),
             bram36_total: 2016,
             uram_total: 960,
             lut_total: 1_304_000,
@@ -102,6 +140,7 @@ impl Platform {
                 latency_ns: 63.0,
                 burst_efficiency: 0.90,
             },
+            onchip: OnChipBudget::vhk158(),
             bram36_total: 5063,
             uram_total: 1301,
             lut_total: 1_802_000,
@@ -195,6 +234,19 @@ mod tests {
         assert!(p.ddr.access_ns(128) < p.hbm.access_ns(128));
         // ~MB MPE-style access: HBM wins on bandwidth.
         assert!(p.hbm.access_ns(4 << 20) < p.ddr.access_ns(4 << 20));
+    }
+
+    #[test]
+    fn onchip_budget_is_positive_and_weight_buf_dominates() {
+        for p in [Platform::u280(), Platform::vhk158()] {
+            let b = p.onchip;
+            assert!(b.weight_bytes > 0 && b.global_bytes > 0 && b.index_bytes > 0);
+            // Weight streaming needs the largest BRAM budget (§5.3).
+            assert!(b.weight_bytes > b.global_bytes);
+            assert!(b.global_bytes > b.index_bytes);
+            // URAM activation buffer is the largest overall.
+            assert!(b.activation_bytes > b.weight_bytes);
+        }
     }
 
     #[test]

@@ -86,6 +86,12 @@
 //! strictly improve P99 TTFT on the overload trace with token streams
 //! byte-identical to a single shard (asserted in
 //! `experiments::flightllm_serve_sharded` tests).
+//!
+//! Below the backend boundary, every instruction stream the `SimBackend`
+//! executes has already passed the [`crate::verify`] static gate: the
+//! simulator's `Engine` prechecks streams against the machine-safety
+//! subset in debug builds, and CI verifies the full discipline
+//! (occupancy, addresses, sync) for every shipped target.
 
 mod fleet;
 mod kv_cache;

@@ -397,6 +397,26 @@ mod tests {
     }
 
     #[test]
+    fn shipped_streams_verify_clean() {
+        // Acceptance gate: every stream the experiments can ship — each
+        // compiler preset × stage × length bucket — passes the static
+        // verifier with zero diagnostics, for both the headline model and
+        // the runnable tiny one.
+        for t in [Target::u280_llama2(), Target::u280_tiny()] {
+            let report = crate::verify::verify_target(&t);
+            assert!(report.bucket_diags.is_empty(), "{:?}", report.bucket_diags);
+            for s in &report.streams {
+                assert!(
+                    s.diags.is_empty(),
+                    "{} fails verification: {:?}",
+                    s.label,
+                    &s.diags[..s.diags.len().min(5)]
+                );
+            }
+        }
+    }
+
+    #[test]
     fn fig14_rungs_are_monotone() {
         // Each added technique must improve end-to-end latency.
         let rungs = fig14_rungs(&Target::u280_llama2(), pt());

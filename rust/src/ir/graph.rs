@@ -95,7 +95,8 @@ impl Graph {
         let sparsity = if c.weight_pruning {
             // Average N over blocks, rounded to the nearest valid level.
             let n = ((c.weight_density * c.nm_m as f64).round() as u8).max(1);
-            Sparsity::Nm { n, m: c.nm_m as u8 }
+            Sparsity::nm(n, c.nm_m as u8)
+                .expect("compression recipe yields a degenerate N:M descriptor")
         } else {
             Sparsity::Dense
         };

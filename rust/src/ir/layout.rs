@@ -103,16 +103,18 @@ mod tests {
     use crate::ir::graph::Stage;
     use crate::ir::passes;
 
-    fn laid_out(c: &CompressionConfig) -> Result<AddressMap, LayoutError> {
+    fn laid_out(c: &CompressionConfig) -> (Graph, Result<AddressMap, LayoutError>) {
         let m = ModelConfig::llama2_7b();
         let mut g = Graph::from_model(&m, c, Stage::Decode { ctx: 2048 });
         passes::optimize(&mut g);
-        assign_addresses(&g, &Platform::u280())
+        let map = assign_addresses(&g, &Platform::u280());
+        (g, map)
     }
 
     #[test]
     fn compressed_llama_fits_hbm() {
-        let map = laid_out(&CompressionConfig::paper_default()).unwrap();
+        let (_, map) = laid_out(&CompressionConfig::paper_default());
+        let map = map.unwrap();
         assert!(map.hbm_used < 8_000_000_000, "hbm = {}", map.hbm_used);
         assert!(map.ddr_used > 0, "luts should land on DDR");
     }
@@ -121,7 +123,7 @@ mod tests {
     fn uncompressed_llama_overflows_hbm() {
         // fp16 LLaMA2-7B (13.5 GB) cannot live in U280's 8 GB HBM — the
         // motivation for the compression recipe.
-        match laid_out(&CompressionConfig::none()) {
+        match laid_out(&CompressionConfig::none()).1 {
             Err(LayoutError::HbmOverflow { .. }) => {}
             other => panic!("expected HBM overflow, got {other:?}"),
         }
@@ -150,25 +152,43 @@ mod tests {
 
     #[test]
     fn hbm_placements_do_not_overlap() {
-        let map = laid_out(&CompressionConfig::paper_default()).unwrap();
-        let mut spans: Vec<(u64, u64)> = map
+        // Real interval check over [addr, addr + bytes) — the old version
+        // compared degenerate (addr, addr) spans, which only caught exact
+        // base-address duplicates, not overlapping extents.
+        let (g, map) = laid_out(&CompressionConfig::paper_default());
+        let map = map.unwrap();
+        let mut spans: Vec<(u64, u64, &str)> = map
             .placements
-            .values()
-            .filter_map(|p| match p {
-                Placement::Hbm { addr, .. } => Some(*addr),
+            .iter()
+            .filter_map(|(id, p)| match p {
+                Placement::Hbm { addr, .. } => {
+                    Some((*addr, *addr + g.tensors[*id].bytes, g.tensors[*id].name.as_str()))
+                }
                 _ => None,
             })
-            .map(|a| (a, a))
             .collect();
-        spans.sort();
+        assert!(spans.len() > 1, "llama2 must place several HBM tensors");
+        spans.sort_unstable();
         for w in spans.windows(2) {
-            assert!(w[0].0 != w[1].0, "duplicate HBM base address");
+            assert!(
+                w[0].1 <= w[1].0,
+                "{} [{}, {}) overlaps {} [{}, {})",
+                w[0].2,
+                w[0].0,
+                w[0].1,
+                w[1].2,
+                w[1].0,
+                w[1].1
+            );
         }
+        let end = spans.last().unwrap().1;
+        assert!(end <= map.hbm_used, "spans must stay inside hbm_used");
     }
 
     #[test]
     fn channel_striping_round_robins() {
-        let map = laid_out(&CompressionConfig::paper_default()).unwrap();
+        let (_, map) = laid_out(&CompressionConfig::paper_default());
+        let map = map.unwrap();
         let firsts: std::collections::HashSet<u8> = map
             .placements
             .values()

@@ -14,7 +14,7 @@
 
 mod encode;
 
-pub use encode::{decode_stream, encode_stream, DecodeError, INST_BYTES};
+pub use encode::{decode, decode_stream, encode, encode_stream, DecodeError, INST_BYTES};
 
 
 /// Off-chip source/destination of an LD/ST (§4.4 hybrid memory).
@@ -47,6 +47,24 @@ pub enum Sparsity {
 }
 
 impl Sparsity {
+    /// Checked N:M constructor: `m == 0` would make `density()` NaN (and
+    /// `macs()` a garbage cast), `n > m` a density > 1, and `n > 63` does
+    /// not fit the 6-bit encoding field.
+    pub fn nm(n: u8, m: u8) -> Result<Sparsity, IsaError> {
+        if n == 0 || m == 0 || n > m || n > 63 {
+            return Err(IsaError::BadNm { n, m });
+        }
+        Ok(Sparsity::Nm { n, m })
+    }
+
+    /// Whether the descriptor is internally consistent (see `nm`).
+    pub fn is_valid(&self) -> bool {
+        match self {
+            Sparsity::Nm { n, m } => *n >= 1 && *m >= 1 && n <= m && *n <= 63,
+            _ => true,
+        }
+    }
+
     /// Fraction of MACs actually executed relative to dense.
     pub fn density(&self) -> f64 {
         match self {
@@ -56,6 +74,30 @@ impl Sparsity {
         }
     }
 }
+
+/// Construction-time validation failures for instruction fields.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IsaError {
+    /// N:M descriptor out of range (n in 1..=min(m, 63), m >= 1).
+    BadNm { n: u8, m: u8 },
+    /// Merged LD/ST channel run leaves u8 channel space (or is empty):
+    /// `first_channel + channels` must stay <= 256 with channels >= 1.
+    BadChannelRun { first_channel: u8, channels: u8 },
+}
+
+impl std::fmt::Display for IsaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IsaError::BadNm { n, m } => write!(f, "invalid {n}:{m} sparsity descriptor"),
+            IsaError::BadChannelRun { first_channel, channels } => write!(
+                f,
+                "merged channel run {first_channel}+{channels} wraps u8 channel space"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for IsaError {}
 
 /// MISC (SFU) operation kinds (§3.3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -115,6 +157,33 @@ pub enum Inst {
 }
 
 impl Inst {
+    /// Checked merged-load constructor: rejects channel runs that would
+    /// wrap u8 channel space when expanded (`first_channel + channels`
+    /// must stay <= 256, channels >= 1).  Platform channel-count bounds
+    /// are the verifier's job; this guards the arithmetic itself.
+    pub fn ld_merged(
+        first_channel: u8,
+        channels: u8,
+        dst: OnChipBuf,
+        addr: u64,
+        bytes: u32,
+    ) -> Result<Inst, IsaError> {
+        check_channel_run(first_channel, channels)?;
+        Ok(Inst::LdMerged { first_channel, channels, dst, addr, bytes })
+    }
+
+    /// Checked merged-store constructor (see `ld_merged`).
+    pub fn st_merged(
+        first_channel: u8,
+        channels: u8,
+        src: OnChipBuf,
+        addr: u64,
+        bytes: u32,
+    ) -> Result<Inst, IsaError> {
+        check_channel_run(first_channel, channels)?;
+        Ok(Inst::StMerged { first_channel, channels, src, addr, bytes })
+    }
+
     /// MAC count of a compute instruction (0 for data movement / sync).
     pub fn macs(&self) -> u64 {
         match self {
@@ -143,12 +212,18 @@ impl Inst {
 
     /// Expand merged LD/ST into per-channel micro-instructions — the
     /// hardware decoder of §5.2. Non-merged instructions pass through.
+    ///
+    /// Channel indices are computed in u32 so a run built outside the
+    /// checked constructors cannot overflow-panic here; an invalid run
+    /// (`first_channel + channels > 256`) wraps mod 256 deterministically
+    /// and is flagged by the stream verifier instead.
     pub fn expand(&self) -> Vec<Inst> {
+        let wrap = |fc: u8, c: u8| ((fc as u32 + c as u32) % 256) as u8;
         match self {
             Inst::LdMerged { first_channel, channels, dst, addr, bytes } => (0
                 ..*channels)
                 .map(|c| Inst::Ld {
-                    src: MemSpace::Hbm { channel: first_channel + c },
+                    src: MemSpace::Hbm { channel: wrap(*first_channel, c) },
                     dst: *dst,
                     addr: addr + c as u64 * *bytes as u64,
                     bytes: *bytes,
@@ -158,7 +233,7 @@ impl Inst {
                 ..*channels)
                 .map(|c| Inst::St {
                     src: *src,
-                    dst: MemSpace::Hbm { channel: first_channel + c },
+                    dst: MemSpace::Hbm { channel: wrap(*first_channel, c) },
                     addr: addr + c as u64 * *bytes as u64,
                     bytes: *bytes,
                 })
@@ -177,6 +252,13 @@ impl Inst {
             Inst::Ld { .. } | Inst::St { .. } | Inst::LdMerged { .. } | Inst::StMerged { .. }
         )
     }
+}
+
+fn check_channel_run(first_channel: u8, channels: u8) -> Result<(), IsaError> {
+    if channels == 0 || first_channel as u32 + channels as u32 > 256 {
+        return Err(IsaError::BadChannelRun { first_channel, channels });
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -235,5 +317,52 @@ mod tests {
     fn non_merged_expand_is_identity() {
         let mv = Inst::Mv { k: 16, n: 16, sparsity: Sparsity::Dense };
         assert_eq!(mv.expand(), vec![mv.clone()]);
+    }
+
+    #[test]
+    fn checked_merged_constructors_reject_u8_wrap() {
+        // Regression: `first_channel + c` used to be a bare u8 add that
+        // overflowed in expand() for runs crossing channel 255.
+        assert!(Inst::ld_merged(248, 8, OnChipBuf::Weight, 0, 64).is_ok());
+        assert!(matches!(
+            Inst::ld_merged(250, 10, OnChipBuf::Weight, 0, 64),
+            Err(IsaError::BadChannelRun { first_channel: 250, channels: 10 })
+        ));
+        assert!(matches!(
+            Inst::st_merged(0, 0, OnChipBuf::Global, 0, 64),
+            Err(IsaError::BadChannelRun { .. })
+        ));
+    }
+
+    #[test]
+    fn expand_of_wrapping_run_does_not_panic() {
+        // An invalid run built around the checked constructors must not
+        // overflow-panic; channels wrap mod 256 and the verifier flags it.
+        let ld = Inst::LdMerged {
+            first_channel: 250,
+            channels: 10,
+            dst: OnChipBuf::Weight,
+            addr: 0,
+            bytes: 64,
+        };
+        let ex = ld.expand();
+        assert_eq!(ex.len(), 10);
+        match &ex[9] {
+            Inst::Ld { src: MemSpace::Hbm { channel }, .. } => assert_eq!(*channel, 3),
+            other => panic!("expected Ld, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nm_constructor_rejects_degenerate_descriptors() {
+        assert_eq!(Sparsity::nm(8, 16), Ok(Sparsity::Nm { n: 8, m: 16 }));
+        assert_eq!(Sparsity::nm(8, 0), Err(IsaError::BadNm { n: 8, m: 0 }));
+        assert_eq!(Sparsity::nm(0, 16), Err(IsaError::BadNm { n: 0, m: 16 }));
+        assert_eq!(Sparsity::nm(17, 16), Err(IsaError::BadNm { n: 17, m: 16 }));
+        assert_eq!(Sparsity::nm(64, 128), Err(IsaError::BadNm { n: 64, m: 128 }));
+        assert!(!Sparsity::Nm { n: 8, m: 0 }.density().is_finite());
+        assert!(!Sparsity::Nm { n: 8, m: 0 }.is_valid());
+        assert!(Sparsity::Nm { n: 8, m: 16 }.is_valid());
+        assert!(Sparsity::Dense.is_valid());
     }
 }

@@ -4,7 +4,8 @@
 //! rebuilt as a three-layer rust + JAX + Pallas system:
 //!
 //! - **L3 (this crate)** — the mapping flow (IR → optimization →
-//!   length-adaptive instruction generation), a cycle-approximate model
+//!   length-adaptive instruction generation), a static instruction-stream
+//!   verifier gating what the simulator runs, a cycle-approximate model
 //!   of the FlightLLM accelerator (CSD-chain MPE, SFU, HBM+DDR MMU), GPU
 //!   and SOTA-accelerator baselines, and a serving coordinator that
 //!   drives real token generation through AOT-compiled XLA executables.
@@ -35,4 +36,5 @@ pub mod runtime;
 pub mod sim;
 pub mod sparse;
 pub mod util;
+pub mod verify;
 pub mod workload;

@@ -31,6 +31,10 @@ pub struct Engine {
     pub sfu: SfuModel,
     pub slr_count: u32,
     freq_mhz: f64,
+    /// Machine-safety verification context applied to every `run_ref`
+    /// stream in debug builds (channels, encoding, address capacity — the
+    /// checks a malformed stream would need to pass on real hardware).
+    precheck: Option<crate::verify::VerifyContext>,
 }
 
 impl Engine {
@@ -94,6 +98,7 @@ impl Engine {
             sfu: SfuModel { freq_mhz: freq, ..SfuModel::for_u280() },
             slr_count: t.platform.slr_count,
             freq_mhz: freq,
+            precheck: Some(crate::verify::VerifyContext::machine_safety(t)),
         }
     }
 
@@ -104,7 +109,21 @@ impl Engine {
     /// Execute a stream without consuming the engine: clones for fresh
     /// per-run channel state.  The serving backend replays memoised
     /// streams through this repeatedly.
+    ///
+    /// Debug builds first run the machine-safety subset of the stream
+    /// verifier — a stream the hardware could not execute (channel out of
+    /// range, unencodable word, address past memory) panics here instead
+    /// of producing a plausible-looking latency.
     pub fn run_ref(&self, insts: &[Inst]) -> SimReport {
+        if cfg!(debug_assertions) {
+            if let Some(ctx) = &self.precheck {
+                let diags = crate::verify::verify_stream(insts, ctx);
+                assert!(
+                    diags.is_empty(),
+                    "stream fails machine-safety verification: {diags:?}"
+                );
+            }
+        }
         self.clone().run(insts)
     }
 

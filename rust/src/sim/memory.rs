@@ -91,11 +91,14 @@ impl MemorySystem {
             | Inst::StMerged { first_channel, channels, bytes, .. } => {
                 // Legs all start at `now` on distinct channels —
                 // concurrency is captured by per-channel ready times.
+                // u32 math mod 256: matches Inst::expand(), never
+                // overflow-panics on a run the verifier would reject.
                 let mut done = now;
                 for c in 0..channels {
+                    let channel = ((first_channel as u32 + c as u32) % 256) as u8;
                     done = done.max(self.transfer(
                         now,
-                        MemSpace::Hbm { channel: first_channel + c },
+                        MemSpace::Hbm { channel },
                         bytes as u64 * scale,
                     ));
                 }

@@ -1,0 +1,970 @@
+//! Static instruction-stream verifier — the checker between
+//! `compiler::lower` and `sim::Engine::run`.
+//!
+//! The compiled stream *is* the hardware contract (§5, Fig. 9): a
+//! lowering bug silently becomes a wrong latency number that the whole
+//! serving stack then prices.  `VerifySink` abstract-interprets a stream
+//! instruction-by-instruction (it is an `InstSink`, so `lower` can emit
+//! straight into it without materializing a `Vec`), holding every
+//! LD/ST/compute against the platform's budgets:
+//!
+//! 1. **Buffer occupancy** — bytes in flight per `OnChipBuf` against the
+//!    `OnChipBudget`, plus RAW hazards (compute consuming a weight
+//!    buffer nothing has loaded since the last barrier).
+//! 2. **Off-chip address safety** — every LD/ST span inside HBM/DDR
+//!    capacity, and (when an `AddressMap` is supplied) inside some
+//!    placed tensor's span with a matching `MemSpace`.
+//! 3. **Channel bounds** — merged runs satisfy
+//!    `first_channel + channels <= platform.hbm.channels`, no u8 wrap.
+//! 4. **Encoding bounds** — every instruction round-trips the 16-byte
+//!    word unchanged (field-truncation lint: unaligned addresses, N:M
+//!    `n` past the 6-bit field, ...).
+//! 5. **Sync discipline** — the expected `SyncSlr` per layer slice, no
+//!    store left unsynced at stream end, final host sync present.
+//! 6. **Bucket coverage** — `BucketPlan` lint: every length 1..=max_seq
+//!    maps to exactly one bucket (no gaps, no overlaps).
+//!
+//! The analyzer itself is proven by fault-injection property tests: each
+//! corruption class (byte flip, channel bump, capacity bust, dropped LD,
+//! dropped SYS, degenerate sparsity, wild address) must be rejected with
+//! the right diagnostic kind at the right instruction index, while every
+//! shipped compiler output verifies clean.
+
+use crate::compiler::{lower, BucketPlan, CompilerOptions, InstSink};
+use crate::config::Target;
+use crate::ir::{passes, AddressMap, Graph, Placement, Stage};
+use crate::isa::{self, Inst, MemSpace, OnChipBuf, SysOp, INST_BYTES};
+
+/// One verifier finding, anchored to an instruction index.  End-of-stream
+/// findings (e.g. a missing barrier) use the stream length as index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub index: usize,
+    pub kind: DiagnosticKind,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {:?}: {}", self.index, self.kind, self.detail)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DiagnosticKind {
+    /// LD would overflow an on-chip buffer's capacity.
+    BufferOverflow,
+    /// Compute reads a weight buffer nothing has loaded since the last
+    /// barrier (RAW hazard).
+    ReadBeforeLoad,
+    /// LD/ST span exceeds HBM/DDR capacity.
+    AddressOutOfRange,
+    /// Access lies outside every placed tensor span (layout-checked runs).
+    UnmappedAccess,
+    /// Channel index past the platform channel count, or a merged run
+    /// that wraps u8 channel space.
+    ChannelOutOfRange,
+    /// Instruction does not round-trip the 16-byte encoding (field
+    /// truncation, or an undecodable word in an encoded stream).
+    EncodingMismatch,
+    /// Missing/extra SLR barrier, trailing unsynced store, or missing
+    /// final host sync.
+    SyncViolation,
+    /// Degenerate N:M sparsity descriptor (m == 0, n > m, n > 63).
+    SparsityInvalid,
+    /// Bucket plan leaves lengths uncovered.
+    BucketGap,
+    /// Bucket plan edges overlap (not strictly ascending).
+    BucketOverlap,
+}
+
+/// A placed tensor span the layout check holds accesses against.
+#[derive(Debug, Clone, Copy)]
+struct PlacedSpan {
+    start: u64,
+    end: u64,
+    hbm: bool,
+}
+
+/// Platform-derived budgets + toggles for one verification run.
+#[derive(Debug, Clone)]
+pub struct VerifyContext {
+    weight_cap: u64,
+    activation_cap: u64,
+    global_cap: u64,
+    index_cap: u64,
+    hbm_capacity: u64,
+    ddr_capacity: u64,
+    hbm_channels: u32,
+    /// Exact `SyncSlr` count the stream must carry (one per layer slice).
+    expected_slr_syncs: Option<u64>,
+    check_occupancy: bool,
+    check_sync: bool,
+    spans: Option<Vec<PlacedSpan>>,
+}
+
+impl VerifyContext {
+    /// Full-strength checks for compiler output.
+    pub fn for_target(t: &Target) -> Self {
+        let b = t.platform.onchip;
+        Self {
+            weight_cap: b.weight_bytes,
+            activation_cap: b.activation_bytes,
+            global_cap: b.global_bytes,
+            index_cap: b.index_bytes,
+            hbm_capacity: t.platform.hbm.capacity_bytes(),
+            ddr_capacity: t.platform.ddr.capacity_bytes(),
+            hbm_channels: t.platform.hbm.channels,
+            expected_slr_syncs: None,
+            check_occupancy: true,
+            check_sync: true,
+            spans: None,
+        }
+    }
+
+    /// The machine-safety subset (channels, encoding, address capacity)
+    /// for ad-hoc streams the engine replays — no occupancy or sync
+    /// discipline, which hand-built test streams legitimately ignore.
+    pub fn machine_safety(t: &Target) -> Self {
+        Self { check_occupancy: false, check_sync: false, ..Self::for_target(t) }
+    }
+
+    /// Require exactly `n` SLR barriers (one per layer slice) and a final
+    /// host sync.
+    pub fn expect_slr_syncs(mut self, n: u64) -> Self {
+        self.expected_slr_syncs = Some(n);
+        self
+    }
+
+    /// Hold every access against the placed tensor spans of `map`.
+    pub fn with_layout(mut self, g: &Graph, map: &AddressMap) -> Self {
+        let mut spans = Vec::with_capacity(map.placements.len());
+        for (&id, p) in &map.placements {
+            let bytes = g.tensors[id].bytes.max(1);
+            let (start, hbm) = match p {
+                Placement::Hbm { addr, .. } => (*addr, true),
+                Placement::Ddr { addr } => (*addr, false),
+            };
+            spans.push(PlacedSpan { start, end: start + bytes, hbm });
+        }
+        self.spans = Some(spans);
+        self
+    }
+
+    fn buf_cap(&self, buf: OnChipBuf) -> u64 {
+        match buf {
+            OnChipBuf::Weight => self.weight_cap,
+            OnChipBuf::Activation => self.activation_cap,
+            OnChipBuf::Global => self.global_cap,
+            OnChipBuf::Index => self.index_cap,
+        }
+    }
+}
+
+fn buf_index(buf: OnChipBuf) -> usize {
+    match buf {
+        OnChipBuf::Weight => 0,
+        OnChipBuf::Activation => 1,
+        OnChipBuf::Global => 2,
+        OnChipBuf::Index => 3,
+    }
+}
+
+const BUFS: [OnChipBuf; 4] =
+    [OnChipBuf::Weight, OnChipBuf::Activation, OnChipBuf::Global, OnChipBuf::Index];
+
+/// Streaming verifier: feed it a stream via `InstSink::emit` (or let
+/// `lower` do so), then call `finish` for the end-of-stream checks.
+#[derive(Debug)]
+pub struct VerifySink {
+    ctx: VerifyContext,
+    idx: usize,
+    /// Bytes loaded per buffer since the last consuming compute/barrier.
+    inflight: [u64; 4],
+    /// Whether a buffer holds consumed-and-kept data since the last barrier.
+    resident: [bool; 4],
+    slr_syncs: u64,
+    /// Indices of stores not yet covered by a following SYS.
+    pending_stores: Vec<usize>,
+    last_inst_was_host_sync: bool,
+    diags: Vec<Diagnostic>,
+}
+
+impl VerifySink {
+    pub fn new(ctx: VerifyContext) -> Self {
+        Self {
+            ctx,
+            idx: 0,
+            inflight: [0; 4],
+            resident: [false; 4],
+            slr_syncs: 0,
+            pending_stores: Vec::new(),
+            last_inst_was_host_sync: false,
+            diags: Vec::new(),
+        }
+    }
+
+    pub fn instructions(&self) -> usize {
+        self.idx
+    }
+
+    fn diag(&mut self, kind: DiagnosticKind, detail: String) {
+        self.diags.push(Diagnostic { index: self.idx, kind, detail });
+    }
+
+    fn check_encoding(&mut self, inst: &Inst) {
+        match isa::decode(&isa::encode(inst)) {
+            Ok(back) if back == *inst => {}
+            Ok(back) => self.diag(
+                DiagnosticKind::EncodingMismatch,
+                format!("{inst:?} decodes back as {back:?}"),
+            ),
+            Err(e) => self.diag(
+                DiagnosticKind::EncodingMismatch,
+                format!("{inst:?} does not decode: {e}"),
+            ),
+        }
+    }
+
+    fn check_channel(&mut self, space: &MemSpace) {
+        if let MemSpace::Hbm { channel } = space {
+            if *channel as u32 >= self.ctx.hbm_channels {
+                self.diag(
+                    DiagnosticKind::ChannelOutOfRange,
+                    format!("channel {channel} >= {} HBM channels", self.ctx.hbm_channels),
+                );
+            }
+        }
+    }
+
+    fn check_channel_run(&mut self, first: u8, channels: u8) {
+        let end = first as u32 + channels as u32;
+        if channels == 0 || end > 256 {
+            self.diag(
+                DiagnosticKind::ChannelOutOfRange,
+                format!("merged run {first}+{channels} wraps u8 channel space"),
+            );
+        } else if end > self.ctx.hbm_channels {
+            self.diag(
+                DiagnosticKind::ChannelOutOfRange,
+                format!("merged run {first}+{channels} > {} HBM channels", self.ctx.hbm_channels),
+            );
+        }
+    }
+
+    fn check_span(&mut self, hbm: bool, addr: u64, bytes: u64) {
+        let cap = if hbm { self.ctx.hbm_capacity } else { self.ctx.ddr_capacity };
+        let end = addr.saturating_add(bytes);
+        if end > cap {
+            let mem = if hbm { "HBM" } else { "DDR" };
+            self.diag(
+                DiagnosticKind::AddressOutOfRange,
+                format!("[{addr:#x}, {end:#x}) exceeds {mem} capacity {cap:#x}"),
+            );
+            return;
+        }
+        if let Some(spans) = &self.ctx.spans {
+            let inside = spans
+                .iter()
+                .any(|s| s.hbm == hbm && addr >= s.start && end <= s.end);
+            if !inside {
+                let mem = if hbm { "HBM" } else { "DDR" };
+                self.diag(
+                    DiagnosticKind::UnmappedAccess,
+                    format!("[{addr:#x}, {end:#x}) in {mem} hits no placed tensor"),
+                );
+            }
+        }
+    }
+
+    fn occupy_load(&mut self, dst: OnChipBuf, total_bytes: u64) {
+        if !self.ctx.check_occupancy {
+            return;
+        }
+        let cap = self.ctx.buf_cap(dst);
+        let b = buf_index(dst);
+        self.inflight[b] += total_bytes;
+        if self.inflight[b] > cap {
+            self.diag(
+                DiagnosticKind::BufferOverflow,
+                format!("{dst:?} buffer holds {} B > {cap} B capacity", self.inflight[b]),
+            );
+            // Clamp so one oversized load doesn't cascade into a
+            // diagnostic on every subsequent instruction.
+            self.inflight[b] = cap;
+        }
+    }
+
+    /// MM/MV consume the weight buffer (tile streaming) and drain any
+    /// staged activations.  Activations may legitimately be produced
+    /// on-chip, so only the weight path is a RAW hazard.
+    fn consume_compute(&mut self) {
+        if !self.ctx.check_occupancy {
+            return;
+        }
+        let w = buf_index(OnChipBuf::Weight);
+        if self.inflight[w] == 0 && !self.resident[w] {
+            self.diag(
+                DiagnosticKind::ReadBeforeLoad,
+                "compute reads the weight buffer before any load since the last barrier"
+                    .into(),
+            );
+        }
+        for buf in [OnChipBuf::Weight, OnChipBuf::Activation] {
+            let b = buf_index(buf);
+            self.resident[b] = true;
+            self.inflight[b] = 0;
+        }
+    }
+
+    fn check_sparsity(&mut self, s: &crate::isa::Sparsity) {
+        if !s.is_valid() {
+            self.diag(DiagnosticKind::SparsityInvalid, format!("{s:?}"));
+        }
+    }
+
+    fn observe(&mut self, inst: &Inst) {
+        self.check_encoding(inst);
+        match inst {
+            Inst::Ld { src, dst, addr, bytes } => {
+                self.check_channel(src);
+                self.check_span(matches!(src, MemSpace::Hbm { .. }), *addr, *bytes as u64);
+                self.occupy_load(*dst, *bytes as u64);
+            }
+            Inst::LdMerged { first_channel, channels, dst, addr, bytes } => {
+                self.check_channel_run(*first_channel, *channels);
+                self.check_span(true, *addr, *channels as u64 * *bytes as u64);
+                self.occupy_load(*dst, *channels as u64 * *bytes as u64);
+            }
+            Inst::St { dst, addr, bytes, .. } => {
+                self.check_channel(dst);
+                self.check_span(matches!(dst, MemSpace::Hbm { .. }), *addr, *bytes as u64);
+                if self.ctx.check_sync {
+                    self.pending_stores.push(self.idx);
+                }
+            }
+            Inst::StMerged { first_channel, channels, addr, bytes, .. } => {
+                self.check_channel_run(*first_channel, *channels);
+                self.check_span(true, *addr, *channels as u64 * *bytes as u64);
+                if self.ctx.check_sync {
+                    self.pending_stores.push(self.idx);
+                }
+            }
+            Inst::Mm { sparsity, .. } | Inst::Mv { sparsity, .. } => {
+                self.check_sparsity(sparsity);
+                self.consume_compute();
+            }
+            Inst::Misc { .. } => {}
+            Inst::Sys { op } => {
+                if *op == SysOp::SyncSlr {
+                    self.slr_syncs += 1;
+                }
+                self.pending_stores.clear();
+                // A barrier drains the pipeline: buffers restart empty.
+                for buf in BUFS {
+                    let b = buf_index(buf);
+                    self.inflight[b] = 0;
+                    self.resident[b] = false;
+                }
+            }
+        }
+        self.last_inst_was_host_sync = matches!(inst, Inst::Sys { op: SysOp::SyncHost });
+        self.idx += 1;
+    }
+
+    /// End-of-stream checks; returns every diagnostic found.
+    pub fn finish(mut self) -> Vec<Diagnostic> {
+        if self.ctx.check_sync {
+            for idx in std::mem::take(&mut self.pending_stores) {
+                self.diags.push(Diagnostic {
+                    index: idx,
+                    kind: DiagnosticKind::SyncViolation,
+                    detail: "store not followed by any SYS before stream end".into(),
+                });
+            }
+            if let Some(expected) = self.ctx.expected_slr_syncs {
+                if self.slr_syncs != expected {
+                    self.diags.push(Diagnostic {
+                        index: self.idx,
+                        kind: DiagnosticKind::SyncViolation,
+                        detail: format!(
+                            "{} SyncSlr barriers, expected {expected} (one per layer slice)",
+                            self.slr_syncs
+                        ),
+                    });
+                }
+                if self.idx > 0 && !self.last_inst_was_host_sync {
+                    self.diags.push(Diagnostic {
+                        index: self.idx,
+                        kind: DiagnosticKind::SyncViolation,
+                        detail: "stream does not end with a host sync".into(),
+                    });
+                }
+            }
+        }
+        self.diags
+    }
+}
+
+impl InstSink for VerifySink {
+    fn emit(&mut self, inst: Inst) {
+        self.observe(&inst);
+    }
+}
+
+/// Verify a materialized stream (replaying a `VecSink`).
+pub fn verify_stream(insts: &[Inst], ctx: &VerifyContext) -> Vec<Diagnostic> {
+    let mut sink = VerifySink::new(ctx.clone());
+    for inst in insts {
+        sink.observe(inst);
+    }
+    sink.finish()
+}
+
+/// Verify an encoded stream: undecodable words become `EncodingMismatch`
+/// diagnostics at their word index; a fully-decodable stream is then run
+/// through the stream checks.
+pub fn verify_encoded(bytes: &[u8], ctx: &VerifyContext) -> Vec<Diagnostic> {
+    if bytes.len() % INST_BYTES != 0 {
+        return vec![Diagnostic {
+            index: bytes.len() / INST_BYTES,
+            kind: DiagnosticKind::EncodingMismatch,
+            detail: format!("{} trailing bytes, not a whole word", bytes.len() % INST_BYTES),
+        }];
+    }
+    let mut insts = Vec::with_capacity(bytes.len() / INST_BYTES);
+    let mut diags = Vec::new();
+    for (i, w) in bytes.chunks_exact(INST_BYTES).enumerate() {
+        match isa::decode(w.try_into().expect("chunk is INST_BYTES")) {
+            Ok(inst) => insts.push(inst),
+            Err(e) => diags.push(Diagnostic {
+                index: i,
+                kind: DiagnosticKind::EncodingMismatch,
+                detail: format!("word does not decode: {e}"),
+            }),
+        }
+    }
+    if !diags.is_empty() {
+        return diags;
+    }
+    verify_stream(&insts, ctx)
+}
+
+/// Lint a bucket plan: edges strictly ascending (else overlap), nonzero,
+/// and the last edge reaching max_seq (else lengths silently clamp to a
+/// too-short stream — a gap).  Diagnostic indices are edge positions.
+pub fn verify_bucket_plan(plan: &BucketPlan) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for (stage, edges) in [("decode", &plan.decode), ("prefill", &plan.prefill)] {
+        if edges.is_empty() {
+            diags.push(Diagnostic {
+                index: 0,
+                kind: DiagnosticKind::BucketGap,
+                detail: format!("{stage} bucket table is empty"),
+            });
+            continue;
+        }
+        for (i, &e) in edges.iter().enumerate() {
+            if e == 0 {
+                diags.push(Diagnostic {
+                    index: i,
+                    kind: DiagnosticKind::BucketGap,
+                    detail: format!("{stage} edge 0 covers nothing"),
+                });
+            }
+            if i > 0 && e <= edges[i - 1] {
+                diags.push(Diagnostic {
+                    index: i,
+                    kind: DiagnosticKind::BucketOverlap,
+                    detail: format!(
+                        "{stage} edges not strictly ascending: {} then {e}",
+                        edges[i - 1]
+                    ),
+                });
+            }
+        }
+        let last = *edges.last().expect("nonempty");
+        if last < plan.max_seq {
+            diags.push(Diagnostic {
+                index: edges.len() - 1,
+                kind: DiagnosticKind::BucketGap,
+                detail: format!(
+                    "{stage} last edge {last} < max_seq {} — lengths past it clamp silently",
+                    plan.max_seq
+                ),
+            });
+        }
+        if last > plan.max_seq {
+            diags.push(Diagnostic {
+                index: edges.len() - 1,
+                kind: DiagnosticKind::BucketGap,
+                detail: format!("{stage} last edge {last} > max_seq {}", plan.max_seq),
+            });
+        }
+    }
+    diags
+}
+
+/// One verified stream of a target's shipped matrix.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub label: String,
+    pub instructions: usize,
+    pub diags: Vec<Diagnostic>,
+}
+
+/// Verification of every shipped stream for one target: every
+/// `CompilerOptions` preset × stage × bucket, plus the bucket-plan lint.
+#[derive(Debug, Clone)]
+pub struct TargetReport {
+    pub target: String,
+    pub streams: Vec<StreamReport>,
+    pub bucket_diags: Vec<Diagnostic>,
+}
+
+impl TargetReport {
+    pub fn total_diags(&self) -> usize {
+        self.bucket_diags.len() + self.streams.iter().map(|s| s.diags.len()).sum::<usize>()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.total_diags() == 0
+    }
+
+    pub fn total_instructions(&self) -> u64 {
+        self.streams.iter().map(|s| s.instructions as u64).sum()
+    }
+}
+
+/// The shipped `CompilerOptions` presets the matrix covers.
+pub fn shipped_presets() -> Vec<(&'static str, CompilerOptions)> {
+    vec![
+        ("full", CompilerOptions::full()),
+        ("naive", CompilerOptions::naive()),
+        ("storage-fine", CompilerOptions::storage_fine()),
+        ("batch8", CompilerOptions::with_batch(8)),
+    ]
+}
+
+/// Verify every shipped stream of `t` by lowering straight into a
+/// `VerifySink` (no stream materialization).
+pub fn verify_target(t: &Target) -> TargetReport {
+    let plan = BucketPlan::paper_default(t.model.max_seq);
+    let ctx = VerifyContext::for_target(t).expect_slr_syncs(t.model.n_layers);
+    let mut streams = Vec::new();
+    let stages = plan
+        .decode
+        .iter()
+        .map(|&b| Stage::Decode { ctx: b })
+        .chain(plan.prefill.iter().map(|&b| Stage::Prefill { n: b }));
+    for stage in stages {
+        let mut g = Graph::from_model(&t.model, &t.compression, stage);
+        passes::optimize(&mut g);
+        for (name, opt) in shipped_presets() {
+            let mut sink = VerifySink::new(ctx.clone());
+            lower(&g, t, opt, &mut sink);
+            let instructions = sink.instructions();
+            streams.push(StreamReport {
+                label: format!("{} {:?} {}", t.model.name, stage, name),
+                instructions,
+                diags: sink.finish(),
+            });
+        }
+    }
+    TargetReport {
+        target: format!("{} on {}", t.model.name, t.platform.name),
+        streams,
+        bucket_diags: verify_bucket_plan(&plan),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::VecSink;
+    use crate::config::{ModelConfig, Target};
+    use crate::ir::assign_addresses;
+    use crate::isa::{MiscOp, OnChipBuf, Sparsity};
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> Target {
+        Target::u280_tiny()
+    }
+
+    fn shipped_stream(t: &Target, stage: Stage, opt: CompilerOptions) -> Vec<Inst> {
+        let mut g = Graph::from_model(&t.model, &t.compression, stage);
+        passes::optimize(&mut g);
+        let mut sink = VecSink::default();
+        lower(&g, t, opt, &mut sink);
+        sink.0
+    }
+
+    fn full_ctx(t: &Target) -> VerifyContext {
+        VerifyContext::for_target(t).expect_slr_syncs(t.model.n_layers)
+    }
+
+    /// The tiny decode stream every fault test mutates.
+    fn base() -> (Vec<Inst>, VerifyContext) {
+        let t = tiny();
+        let insts =
+            shipped_stream(&t, Stage::Decode { ctx: t.model.max_seq }, CompilerOptions::full());
+        (insts, full_ctx(&t))
+    }
+
+    fn has(diags: &[Diagnostic], kind: DiagnosticKind, index: usize) -> bool {
+        diags.iter().any(|d| d.kind == kind && d.index == index)
+    }
+
+    #[test]
+    fn shipped_tiny_streams_are_clean() {
+        let (insts, ctx) = base();
+        let diags = verify_stream(&insts, &ctx);
+        assert!(diags.is_empty(), "shipped stream must verify clean: {diags:?}");
+        // And through the encoded path.
+        assert!(verify_encoded(&isa::encode_stream(&insts), &ctx).is_empty());
+    }
+
+    #[test]
+    fn verify_sink_streams_equal_replay() {
+        // Lowering directly into the sink must see exactly what a VecSink
+        // replay sees.
+        let t = tiny();
+        let stage = Stage::Prefill { n: 64 };
+        let mut g = Graph::from_model(&t.model, &t.compression, stage);
+        passes::optimize(&mut g);
+        let mut sink = VerifySink::new(full_ctx(&t));
+        lower(&g, &t, CompilerOptions::full(), &mut sink);
+        let direct = sink.finish();
+        let replay =
+            verify_stream(&shipped_stream(&t, stage, CompilerOptions::full()), &full_ctx(&t));
+        assert_eq!(direct, replay);
+    }
+
+    #[test]
+    fn fault_byte_flip_caught_at_word_index() {
+        let (insts, ctx) = base();
+        proptest::check_with("byte flip rejected", 64, |r: &mut Rng| {
+            let mut bytes = isa::encode_stream(&insts);
+            let word = r.below(insts.len() as u64) as usize;
+            bytes[word * INST_BYTES] = 0xEE; // invalid opcode
+            let diags = verify_encoded(&bytes, &ctx);
+            assert!(
+                has(&diags, DiagnosticKind::EncodingMismatch, word),
+                "flip at word {word} not caught: {diags:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn fault_channel_bump_caught() {
+        let (insts, ctx) = base();
+        let merged: Vec<usize> = insts
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| matches!(i, Inst::LdMerged { .. } | Inst::StMerged { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!merged.is_empty());
+        proptest::check_with("channel bump rejected", 64, |r: &mut Rng| {
+            let mut m = insts.clone();
+            let at = merged[r.below(merged.len() as u64) as usize];
+            match &mut m[at] {
+                Inst::LdMerged { first_channel, .. } | Inst::StMerged { first_channel, .. } => {
+                    // 30 + 8 channels > the platform's 32.
+                    *first_channel = 30 + r.below(128) as u8;
+                }
+                _ => unreachable!(),
+            }
+            let diags = verify_stream(&m, &ctx);
+            assert!(
+                has(&diags, DiagnosticKind::ChannelOutOfRange, at),
+                "bump at {at} not caught: {diags:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn fault_capacity_bust_caught() {
+        let (insts, ctx) = base();
+        let loads: Vec<usize> = insts
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| {
+                matches!(
+                    i,
+                    Inst::Ld { dst: OnChipBuf::Weight, .. }
+                        | Inst::LdMerged { dst: OnChipBuf::Weight, .. }
+                )
+            })
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!loads.is_empty());
+        let cap = Target::u280_tiny().platform.onchip.weight_bytes;
+        proptest::check_with("capacity bust rejected", 64, |r: &mut Rng| {
+            let mut m = insts.clone();
+            let at = loads[r.below(loads.len() as u64) as usize];
+            match &mut m[at] {
+                Inst::Ld { bytes, .. } => *bytes = cap as u32 + 64,
+                Inst::LdMerged { channels, bytes, .. } => {
+                    *bytes = (cap / *channels as u64) as u32 + 64;
+                }
+                _ => unreachable!(),
+            }
+            let diags = verify_stream(&m, &ctx);
+            assert!(
+                has(&diags, DiagnosticKind::BufferOverflow, at),
+                "bust at {at} not caught: {diags:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn fault_dropped_load_caught_at_consuming_compute() {
+        let (insts, ctx) = base();
+        // Boundaries after which the weight buffer restarts empty: stream
+        // start and every SYS.
+        let mut boundaries = vec![0usize];
+        boundaries.extend(
+            insts
+                .iter()
+                .enumerate()
+                .filter(|(_, i)| matches!(i, Inst::Sys { .. }))
+                .map(|(i, _)| i + 1),
+        );
+        proptest::check_with("dropped load rejected", 64, |r: &mut Rng| {
+            let from = boundaries[r.below(boundaries.len() as u64) as usize];
+            // First weight load after the boundary: dropping it starves
+            // the next MM/MV (mid-tile drops are hidden by residency).
+            let Some(ld) = (from..insts.len()).find(|&i| {
+                matches!(
+                    insts[i],
+                    Inst::Ld { dst: OnChipBuf::Weight, .. }
+                        | Inst::LdMerged { dst: OnChipBuf::Weight, .. }
+                )
+            }) else {
+                return; // boundary past the last load (e.g. final sync)
+            };
+            let mut m = insts.clone();
+            m.remove(ld);
+            // The starving compute is the first MM/MV after the drop with
+            // no weight load in between (another load would hide it).
+            let mut compute = None;
+            for (i, inst) in m.iter().enumerate().skip(ld) {
+                match inst {
+                    Inst::Ld { dst: OnChipBuf::Weight, .. }
+                    | Inst::LdMerged { dst: OnChipBuf::Weight, .. } => break,
+                    Inst::Mm { .. } | Inst::Mv { .. } => {
+                        compute = Some(i);
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            let Some(compute) = compute else { return };
+            let diags = verify_stream(&m, &ctx);
+            assert!(
+                has(&diags, DiagnosticKind::ReadBeforeLoad, compute),
+                "dropped load at {ld} not caught at compute {compute}: {diags:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn fault_dropped_sync_caught() {
+        let (insts, ctx) = base();
+        let syncs: Vec<usize> = insts
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| matches!(i, Inst::Sys { op: SysOp::SyncSlr }))
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!syncs.is_empty());
+        proptest::check_with("dropped sync rejected", 64, |r: &mut Rng| {
+            let mut m = insts.clone();
+            m.remove(syncs[r.below(syncs.len() as u64) as usize]);
+            let diags = verify_stream(&m, &ctx);
+            assert!(
+                has(&diags, DiagnosticKind::SyncViolation, m.len()),
+                "dropped barrier not caught: {diags:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn fault_degenerate_sparsity_caught() {
+        let (insts, ctx) = base();
+        let computes: Vec<usize> = insts
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| matches!(i, Inst::Mm { .. } | Inst::Mv { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!computes.is_empty());
+        proptest::check_with("degenerate sparsity rejected", 64, |r: &mut Rng| {
+            let mut m = insts.clone();
+            let at = computes[r.below(computes.len() as u64) as usize];
+            let bad = if r.below(2) == 0 {
+                Sparsity::Nm { n: 8, m: 0 } // NaN density
+            } else {
+                Sparsity::Nm { n: 20, m: 16 } // density > 1
+            };
+            match &mut m[at] {
+                Inst::Mm { sparsity, .. } | Inst::Mv { sparsity, .. } => *sparsity = bad,
+                _ => unreachable!(),
+            }
+            let diags = verify_stream(&m, &ctx);
+            assert!(
+                has(&diags, DiagnosticKind::SparsityInvalid, at),
+                "sparsity at {at} not caught: {diags:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn fault_wild_address_caught() {
+        let (insts, ctx) = base();
+        let mems: Vec<usize> = insts
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.is_memory())
+            .map(|(i, _)| i)
+            .collect();
+        // Past both HBM (8 GB) and DDR (32 GB), 64-aligned so the word
+        // still round-trips and only the span check can fire.
+        let wild: u64 = 64_000_000_000;
+        proptest::check_with("wild address rejected", 64, |r: &mut Rng| {
+            let mut m = insts.clone();
+            let at = mems[r.below(mems.len() as u64) as usize];
+            match &mut m[at] {
+                Inst::Ld { addr, .. }
+                | Inst::St { addr, .. }
+                | Inst::LdMerged { addr, .. }
+                | Inst::StMerged { addr, .. } => *addr = wild,
+                _ => unreachable!(),
+            }
+            let diags = verify_stream(&m, &ctx);
+            assert!(
+                has(&diags, DiagnosticKind::AddressOutOfRange, at),
+                "wild address at {at} not caught: {diags:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn trailing_unsynced_store_flagged() {
+        let (mut insts, ctx) = base();
+        insts.push(Inst::St {
+            src: OnChipBuf::Global,
+            dst: MemSpace::Hbm { channel: 0 },
+            addr: 0,
+            bytes: 64,
+        });
+        let at = insts.len() - 1;
+        let diags = verify_stream(&insts, &ctx);
+        assert!(has(&diags, DiagnosticKind::SyncViolation, at), "{diags:?}");
+    }
+
+    #[test]
+    fn bucket_plan_lint_flags_gaps_and_overlaps() {
+        for m in [ModelConfig::llama2_7b(), ModelConfig::tiny()] {
+            assert!(verify_bucket_plan(&BucketPlan::paper_default(m.max_seq)).is_empty());
+            assert!(verify_bucket_plan(&BucketPlan::tiny(m.max_seq)).is_empty());
+        }
+        let gap = BucketPlan { max_seq: 256, decode: vec![256], prefill: vec![16, 128] };
+        let diags = verify_bucket_plan(&gap);
+        assert!(diags.iter().any(|d| d.kind == DiagnosticKind::BucketGap), "{diags:?}");
+        let overlap =
+            BucketPlan { max_seq: 256, decode: vec![64, 64, 256], prefill: vec![256] };
+        let diags = verify_bucket_plan(&overlap);
+        assert!(
+            diags.iter().any(|d| d.kind == DiagnosticKind::BucketOverlap && d.index == 1),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn layout_checked_accesses_must_hit_placed_tensors() {
+        let t = tiny();
+        let mut g = Graph::from_model(&t.model, &t.compression, Stage::Decode { ctx: 64 });
+        passes::optimize(&mut g);
+        let map = assign_addresses(&g, &t.platform).expect("tiny fits");
+        let ctx = VerifyContext::for_target(&t).with_layout(&g, &map);
+        // A load inside a placed HBM tensor verifies; the same span as
+        // DDR (wrong MemSpace) or past every placement does not.
+        let (addr, bytes) = map
+            .placements
+            .iter()
+            .find_map(|(id, p)| match p {
+                Placement::Hbm { addr, .. } => {
+                    Some((*addr, g.tensors[*id].bytes.min(4096) as u32))
+                }
+                _ => None,
+            })
+            .expect("some tensor lands on HBM");
+        let ld = |space| Inst::Ld { src: space, dst: OnChipBuf::Weight, addr, bytes };
+        let ok = vec![
+            ld(MemSpace::Hbm { channel: 0 }),
+            Inst::Mv { k: 16, n: 16, sparsity: Sparsity::Dense },
+            Inst::Sys { op: SysOp::SyncHost },
+        ];
+        assert!(verify_stream(&ok, &ctx).is_empty());
+        let wrong_space = vec![ld(MemSpace::Ddr)];
+        assert!(has(&verify_stream(&wrong_space, &ctx), DiagnosticKind::UnmappedAccess, 0));
+        let unplaced = vec![Inst::Ld {
+            src: MemSpace::Hbm { channel: 0 },
+            dst: OnChipBuf::Weight,
+            addr: map.hbm_used + (64 << 20),
+            bytes: 64,
+        }];
+        assert!(has(&verify_stream(&unplaced, &ctx), DiagnosticKind::UnmappedAccess, 0));
+    }
+
+    #[test]
+    fn machine_safety_subset_skips_occupancy_and_sync() {
+        let t = tiny();
+        let ctx = VerifyContext::machine_safety(&t);
+        // An ad-hoc engine-test style stream: compute with no prior load,
+        // stores never synced — machine-safe, semantically loose.
+        let insts = vec![
+            Inst::Mv { k: 1024, n: 256, sparsity: Sparsity::Dense },
+            Inst::St {
+                src: OnChipBuf::Global,
+                dst: MemSpace::Hbm { channel: 3 },
+                addr: 4096,
+                bytes: 4096,
+            },
+        ];
+        assert!(verify_stream(&insts, &ctx).is_empty());
+        // But machine-level faults still fire.
+        let bad = vec![Inst::LdMerged {
+            first_channel: 30,
+            channels: 8,
+            dst: OnChipBuf::Weight,
+            addr: 0,
+            bytes: 64,
+        }];
+        assert!(has(&verify_stream(&bad, &ctx), DiagnosticKind::ChannelOutOfRange, 0));
+    }
+
+    #[test]
+    fn unaligned_address_is_an_encoding_lint() {
+        let (_, ctx) = base();
+        let insts = vec![Inst::Ld {
+            src: MemSpace::Hbm { channel: 0 },
+            dst: OnChipBuf::Weight,
+            addr: 100, // not 64-aligned: truncates in the 16-byte word
+            bytes: 64,
+        }];
+        assert!(has(&verify_stream(&insts, &ctx), DiagnosticKind::EncodingMismatch, 0));
+    }
+
+    #[test]
+    fn misc_is_exempt_from_weight_raw_check() {
+        let (_, ctx) = base();
+        // SFU-only streams (layernorm etc.) read no weight buffer.
+        let insts = vec![Inst::Misc { op: MiscOp::RmsNorm, len: 256 }];
+        let diags = verify_stream(&insts, &ctx);
+        assert!(!diags.iter().any(|d| d.kind == DiagnosticKind::ReadBeforeLoad), "{diags:?}");
+    }
+}
