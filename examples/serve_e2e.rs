@@ -280,11 +280,12 @@ fn main() -> anyhow::Result<()> {
             kv_pages_per_shard: 64,
             prefix_cache: false,
             vocab: vocab as usize,
+            lane_threads: shards,
         };
         flightllm_serve_sharded(&t, generate_overload_trace(&fleet_ov), &spec)
     };
-    let (_, single) = run_fleet(1, RoutePolicy::LeastLoaded);
-    let (per_shard, fleet) = run_fleet(2, RoutePolicy::LeastLoaded);
+    let (_, single, _) = run_fleet(1, RoutePolicy::LeastLoaded);
+    let (per_shard, fleet, _) = run_fleet(2, RoutePolicy::LeastLoaded);
     println!("-- 1 board --\n{}", single.summary("virtual"));
     for (i, s) in per_shard.iter().enumerate() {
         println!("-- shard {i}/2 --\n{}", s.summary("virtual"));
@@ -321,6 +322,7 @@ fn main() -> anyhow::Result<()> {
             kv_pages_per_shard: 128,
             prefix_cache: true,
             vocab: vocab as usize,
+            lane_threads: 2,
         };
         flightllm_serve_sharded(&t, generate_shared_prefix_trace(&fleet_px), &spec).1
     };

@@ -242,6 +242,7 @@ fn main() {
         kv_pages_per_shard: if prefix_cache { 128 } else { 64 },
         prefix_cache,
         vocab: 512,
+        lane_threads: shards,
     };
     let mut shard_rows = Vec::new();
     let mut fleet_p99s = Vec::new();
@@ -249,7 +250,7 @@ fn main() {
     // the larger fleets.
     let mut solo_results = Vec::new();
     for shards in [1usize, 2, 4] {
-        let (per_shard, fleet) = flightllm_serve_sharded(
+        let (per_shard, fleet, _) = flightllm_serve_sharded(
             &target,
             generate_overload_trace(&fleet_ov),
             &fleet_spec(shards, RoutePolicy::LeastLoaded, false),
@@ -296,7 +297,7 @@ fn main() {
     let mut route_rows = Vec::new();
     let mut hit_rates = Vec::new();
     for route in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::PrefixAffinity] {
-        let (_, fleet) = flightllm_serve_sharded(
+        let (_, fleet, _) = flightllm_serve_sharded(
             &target,
             generate_shared_prefix_trace(&fleet_px),
             &fleet_spec(2, route, true),

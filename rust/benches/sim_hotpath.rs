@@ -1,18 +1,35 @@
-//! Perf bench for the L3 hot paths (feeds EXPERIMENTS.md §Perf):
+//! Perf bench for the L3 hot paths (feeds EXPERIMENTS.md §Perf and the
+//! `BENCH_sim_hotpath.json` trajectory at the repo root):
 //! - simulator instruction throughput (instructions/s through Engine)
 //! - compiler lowering throughput (instructions/s generated)
 //! - ISA encode/decode throughput
+//! - serving-step pricing + sampling throughput: dense `CostTable` +
+//!   `Logits::Peak` vs the legacy memoised-HashMap + materialized-row
+//!   path (the PR-7 hot-path speedup)
+//! - 8-shard fleet over a day-scale diurnal trace, sequential vs
+//!   parallel lane ticks (byte-identical streams asserted)
+//!
 //! Run: cargo bench --bench sim_hotpath
+//! `SIM_HOTPATH_SMOKE=1` shrinks every rep count so CI can run the
+//! whole thing in seconds; the JSON records which mode produced it.
 
+use std::path::Path;
 use std::time::Instant;
 
 use flightllm::compiler::{lower, CompilerOptions, CountSink, VecSink};
 use flightllm::config::Target;
+use flightllm::coordinator::{
+    Logits, ModelBackend, RoutePolicy, Sampler, SchedulerConfig, SeqSlot, SeqWork, ShardedService,
+    SimBackend,
+};
 use flightllm::ir::{passes, Graph, Stage};
 use flightllm::isa::{decode_stream, encode_stream};
 use flightllm::sim::Engine;
+use flightllm::util::Json;
+use flightllm::workload::{generate_day_trace, DayTraceConfig};
 
 fn main() {
+    let smoke = std::env::var("SIM_HOTPATH_SMOKE").is_ok();
     let t = Target::u280_llama2();
     let mut g = Graph::from_model(&t.model, &t.compression, Stage::Decode { ctx: 1024 });
     passes::optimize(&mut g);
@@ -22,7 +39,7 @@ fn main() {
     println!("decode stream: {} instructions", insts.len());
 
     // --- engine throughput -------------------------------------------
-    let reps = 200;
+    let reps = if smoke { 20 } else { 200 };
     let t0 = Instant::now();
     let mut total_ns = 0.0;
     for _ in 0..reps {
@@ -30,16 +47,17 @@ fn main() {
         total_ns += rep.total_ns;
     }
     let el = t0.elapsed().as_secs_f64();
+    let engine_minst = reps as f64 * insts.len() as f64 / el / 1e6;
     println!(
         "engine: {:.2} M inst/s ({:.1} µs per simulated decode step; sim total {:.3} ms)",
-        reps as f64 * insts.len() as f64 / el / 1e6,
+        engine_minst,
         el / reps as f64 * 1e6,
         total_ns / reps as f64 / 1e6,
     );
 
     // --- lowering throughput -----------------------------------------
     let t0 = Instant::now();
-    let reps2 = 200;
+    let reps2 = if smoke { 20 } else { 200 };
     let mut n = 0u64;
     for _ in 0..reps2 {
         let mut c = CountSink::default();
@@ -47,24 +65,176 @@ fn main() {
         n += c.count;
     }
     let el = t0.elapsed().as_secs_f64();
+    let lowering_minst = n as f64 / el / 1e6;
     println!(
         "lowering: {:.2} M inst/s generated ({:.1} µs per decode stream)",
-        n as f64 / el / 1e6,
+        lowering_minst,
         el / reps2 as f64 * 1e6
     );
 
     // --- ISA encode/decode --------------------------------------------
     let bytes = encode_stream(&insts);
     let t0 = Instant::now();
-    let reps3 = 500;
+    let reps3 = if smoke { 50 } else { 500 };
     for _ in 0..reps3 {
         let d = decode_stream(&bytes).unwrap();
         assert_eq!(d.len(), insts.len());
     }
     let el = t0.elapsed().as_secs_f64();
+    let isa_minst = reps3 as f64 * insts.len() as f64 / el / 1e6;
+    let isa_gib = reps3 as f64 * bytes.len() as f64 / el / (1 << 30) as f64;
+    println!("isa decode: {isa_minst:.2} M inst/s ({isa_gib:.2} GiB/s)");
+
+    // --- serving-step pricing + sampling ------------------------------
+    // One continuous-batching iteration at LLaMA2 scale: price an
+    // 8-slot decode batch and greedy-sample every row.  The dense path
+    // is a `CostTable` ordinal lookup plus `Logits::Peak` (three
+    // scalars); the legacy path hashes into the step-cost memo and
+    // materializes each 32K-vocab row dense before the sampler scans
+    // it — exactly what the serving loop did before this table existed.
+    let vocab = t.model.vocab;
+    let slots: Vec<SeqSlot> = (0..8)
+        .map(|i| SeqSlot {
+            seq: i,
+            work: SeqWork::Decode { last: (i * 7 + 3) as i32, pos: 900 + i as i32 },
+        })
+        .collect();
+    let mut sampler = Sampler::greedy();
+
+    let mut dense = SimBackend::new(t.clone()).with_max_batch(8);
+    let reps_dense: u64 = if smoke { 2_000 } else { 200_000 };
+    let t0 = Instant::now();
+    for _ in 0..reps_dense {
+        let out = dense.step(&slots).unwrap();
+        for l in out.logits.iter().flatten() {
+            std::hint::black_box(sampler.sample(l));
+        }
+    }
+    let dense_steps_per_s = reps_dense as f64 / t0.elapsed().as_secs_f64();
+
+    let mut memo = SimBackend::new(t.clone()).without_cost_table();
+    let reps_memo: u64 = if smoke { 200 } else { 2_000 };
+    let t0 = Instant::now();
+    for _ in 0..reps_memo {
+        let out = memo.step(&slots).unwrap();
+        for l in out.logits.iter().flatten() {
+            // Pre-table serving sampled from a dense Vec<f32> row.
+            let row = Logits::Dense(l.to_dense());
+            std::hint::black_box(sampler.sample(&row));
+        }
+    }
+    let memo_steps_per_s = reps_memo as f64 / t0.elapsed().as_secs_f64();
+    let (table_entries, fallback_pricings) = dense.cost_table_stats();
+    let step_speedup = dense_steps_per_s / memo_steps_per_s;
     println!(
-        "isa decode: {:.2} M inst/s ({:.2} GiB/s)",
-        reps3 as f64 * insts.len() as f64 / el / 1e6,
-        reps3 as f64 * bytes.len() as f64 / el / (1 << 30) as f64
+        "serving step (batch 8, vocab {vocab}): {dense_steps_per_s:.0} steps/s dense table, \
+         {memo_steps_per_s:.0} steps/s memo+materialize ({step_speedup:.1}x); \
+         {table_entries} table entries, {fallback_pricings} fallback pricings"
     );
+    assert_eq!(fallback_pricings, 0, "dense table must cover the bench batch");
+
+    // --- 8-shard fleet over a day-scale diurnal trace -----------------
+    // The same trace through the same fleet twice: lane ticks in place
+    // (threads=1) and on one worker per lane.  Streams must be
+    // byte-identical either way; the JSON records both wall times.
+    // (With the sim backend a tick is sub-microsecond, so the parallel
+    // number mostly prices thread fan-out overhead — the lanes exist
+    // for expensive real backends.)
+    let tiny = Target::u280_tiny();
+    let day = DayTraceConfig {
+        horizon_s: if smoke { 600.0 } else { 86_400.0 },
+        base_rate_per_s: 0.2,
+        peak_rate_per_s: 2.0,
+        prompt_len_choices: vec![16, 32, 64],
+        decode_len_choices: vec![16, 32],
+        vocab: 64,
+        seed: 42,
+    };
+    let trace = generate_day_trace(&day);
+    let shards = 8usize;
+    let cfg = SchedulerConfig {
+        max_batch: 8,
+        kv_pages: 8 * 256,
+        page_tokens: 16,
+        max_seq: 256,
+        ..Default::default()
+    };
+    let proto = SimBackend::with_vocab(tiny, 64).with_max_batch(8);
+    let mut run = |threads: usize| {
+        let mut fleet = ShardedService::new(
+            shards,
+            RoutePolicy::LeastLoaded,
+            cfg.clone(),
+            Sampler::greedy(),
+            |_| proto.clone(),
+        )
+        .with_lane_threads(threads);
+        let t0 = Instant::now();
+        let stats = fleet.run_trace(trace.clone()).unwrap();
+        (stats, t0.elapsed().as_secs_f64())
+    };
+    let (seq_stats, seq_wall) = run(1);
+    let (par_stats, par_wall) = run(shards);
+    assert_eq!(seq_stats.results.len(), par_stats.results.len());
+    assert_eq!(
+        seq_stats.served_s.to_bits(),
+        par_stats.served_s.to_bits(),
+        "parallel lanes must serve byte-identically"
+    );
+    println!(
+        "fleet day trace ({} shards, {} requests over {:.0}s): {seq_wall:.2}s sequential, \
+         {par_wall:.2}s with one worker per lane; {} engine steps, {:.1}s simulated serving",
+        shards,
+        trace.len(),
+        day.horizon_s,
+        par_stats.steps,
+        par_stats.served_s,
+    );
+
+    // --- JSON trajectory ----------------------------------------------
+    let json = Json::obj(vec![
+        ("bench", Json::str("sim_hotpath")),
+        ("mode", Json::str(if smoke { "smoke" } else { "full" })),
+        ("engine", Json::obj(vec![("m_inst_per_s", Json::num(engine_minst))])),
+        ("lowering", Json::obj(vec![("m_inst_per_s", Json::num(lowering_minst))])),
+        (
+            "isa_decode",
+            Json::obj(vec![
+                ("m_inst_per_s", Json::num(isa_minst)),
+                ("gib_per_s", Json::num(isa_gib)),
+            ]),
+        ),
+        (
+            "serving_step",
+            Json::obj(vec![
+                ("reps", Json::num(reps_dense as f64)),
+                ("batch", Json::num(slots.len() as f64)),
+                ("vocab", Json::num(vocab as f64)),
+                ("dense_steps_per_s", Json::num(dense_steps_per_s)),
+                ("memo_steps_per_s", Json::num(memo_steps_per_s)),
+                ("speedup", Json::num(step_speedup)),
+                ("table_entries", Json::num(table_entries as f64)),
+                ("fallback_pricings", Json::num(fallback_pricings as f64)),
+            ]),
+        ),
+        (
+            "fleet_day_trace",
+            Json::obj(vec![
+                ("shards", Json::num(shards as f64)),
+                ("requests", Json::num(trace.len() as f64)),
+                ("horizon_s", Json::num(day.horizon_s)),
+                ("sequential_wall_s", Json::num(seq_wall)),
+                ("parallel_wall_s", Json::num(par_wall)),
+                ("parallel_speedup", Json::num(seq_wall / par_wall)),
+                ("served_s", Json::num(par_stats.served_s)),
+                ("steps", Json::num(par_stats.steps as f64)),
+            ]),
+        ),
+    ]);
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_sim_hotpath.json");
+    std::fs::write(&path, json.to_string_pretty() + "\n").expect("write bench json");
+    println!("wrote {}", path.display());
 }

@@ -6,7 +6,7 @@
 //!                    [--platform u280|vhk158] [--prefix-cache]
 //!                    [--prefill-chunk N] [--live] [--rate R]
 //!                    [--swap] [--swap-gbps G]
-//!                    [--shards N] [--route rr|load|prefix]
+//!                    [--shards N] [--route rr|load|prefix] [--lane-threads N]
 //! flightllm simulate [--model llama2|opt] [--platform u280|vhk158]
 //!                    [--prefill N] [--decode N]
 //! flightllm report   [--what storage|resources|efficiency]
@@ -54,7 +54,14 @@
 //! `load` least-loaded (queue depth + live KV pages, the default), or
 //! `prefix` prefix-affinity — which switches to a shared-prefix trace
 //! with per-shard prefix caches and also prints the round-robin hit
-//! rate for comparison.
+//! rate for comparison.  `--lane-threads N` sets the worker threads the
+//! fleet ticks its lanes on (default: one per lane; `1` restores
+//! sequential ticking — streams are byte-identical either way).
+//!
+//! Every sim serve summary ends with the step-pricing line: how many
+//! (stage, bucket, batch) cost points the backend's dense table holds
+//! and how many pricings missed it (fell back to a lazily-memoised sim
+//! run), so out-of-table pricing is visible instead of silently slow.
 
 use crate::baselines::{GpuStack, GpuSystem};
 use crate::config::{ModelConfig, Target};
@@ -88,7 +95,7 @@ const USAGE: &str = "usage: flightllm <serve|simulate|report> [flags]
   serve    --backend runtime|sim --artifacts DIR --requests N --batch N --temp T
            --model llama2|opt|tiny --platform u280|vhk158 [--prefix-cache]
            [--prefill-chunk N] [--live] [--rate R] [--swap] [--swap-gbps G]
-           [--shards N] [--route rr|load|prefix]
+           [--shards N] [--route rr|load|prefix] [--lane-threads N]
   simulate --model llama2|opt --platform u280|vhk158 --prefill N --decode N
   report   --what storage|resources|efficiency
   verify   [--model llama2|opt|tiny] [--platform u280|vhk158]";
@@ -202,7 +209,9 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         if shards < 2 {
             eprintln!("note: the fleet comparison needs >= 2 shards; using 2");
         }
-        return cmd_serve_sim_sharded(&t, n, batch, vocab, shards.max(2), route);
+        // 0 = the default: one worker thread per lane.
+        let lane_threads = flag_u64(args, "--lane-threads", 0) as usize;
+        return cmd_serve_sim_sharded(&t, n, batch, vocab, shards.max(2), route, lane_threads);
     }
     if has_flag(args, "--live") {
         if has_flag(args, "--swap") {
@@ -246,7 +255,7 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
     let name = format!("{} on {}", t.model.name, t.platform.name);
     let sampler = sampler_for(args);
     let mut server = Server::new(
-        SimBackend::with_vocab(t, vocab as usize),
+        SimBackend::with_vocab(t, vocab as usize).with_max_batch(batch.max(1) as u32),
         SchedulerConfig {
             max_batch: batch.max(1),
             kv_pages: 512,
@@ -261,6 +270,8 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         Ok(stats) => {
             println!("sim-served {name} (virtual accelerator clock):");
             println!("{}", stats.summary("virtual"));
+            let (entries, fallbacks) = server.backend().cost_table_stats();
+            println!("step pricing: {entries} dense table entries, {fallbacks} fallback pricings");
             0
         }
         Err(e) => {
@@ -407,6 +418,7 @@ fn cmd_serve_sim_sharded(
     vocab: u32,
     shards: usize,
     route: crate::coordinator::RoutePolicy,
+    lane_threads: usize,
 ) -> i32 {
     use crate::coordinator::RoutePolicy;
     use crate::experiments::{flightllm_serve_sharded, FleetSpec};
@@ -453,19 +465,22 @@ fn cmd_serve_sim_sharded(
             kv_pages_per_shard: 256,
             prefix_cache: prefix_route,
             vocab: vocab as usize,
+            // 0 = default: one worker per lane.
+            lane_threads: if lane_threads == 0 { shards } else { lane_threads },
         };
         flightllm_serve_sharded(t, trace.clone(), &spec)
     };
-    let (_, single) = run(1, route);
+    let (_, single, _) = run(1, route);
     println!("-- 1 board --");
     println!("{}", single.summary("virtual"));
-    let (per_shard, fleet) = run(shards, route);
+    let (per_shard, fleet, (entries, fallbacks)) = run(shards, route);
     for (i, s) in per_shard.iter().enumerate() {
         println!("-- shard {i}/{shards} --");
         println!("{}", s.summary("virtual"));
     }
     println!("-- fleet merged ({shards} shards, {} routing) --", route.label());
     println!("{}", fleet.summary("virtual"));
+    println!("step pricing: {entries} dense table entries, {fallbacks} fallback pricings");
     println!(
         "fleet trade: P99 TTFT {:.1} -> {:.1} ms, served {:.3}s -> {:.3}s on {shards} boards",
         single.p99_ttft_s() * 1e3,
@@ -474,7 +489,7 @@ fn cmd_serve_sim_sharded(
         fleet.served_s
     );
     if prefix_route {
-        let (_, rr) = run(shards, RoutePolicy::RoundRobin);
+        let (_, rr, _) = run(shards, RoutePolicy::RoundRobin);
         println!(
             "prefix affinity: {:.0}% hit rate vs {:.0}% under round-robin",
             fleet.prefix_hit_rate() * 100.0,
@@ -756,6 +771,22 @@ mod tests {
             ])),
             0
         );
+    }
+
+    #[test]
+    fn serve_sim_sharded_lane_threads_runs() {
+        // Sequential and parallel lane ticking both serve the fleet
+        // comparison (streams are byte-identical; only wall time moves).
+        for threads in ["1", "4"] {
+            assert_eq!(
+                run(&s(&[
+                    "flightllm", "serve", "--backend", "sim", "--model", "tiny",
+                    "--requests", "8", "--batch", "2", "--shards", "2",
+                    "--lane-threads", threads,
+                ])),
+                0
+            );
+        }
     }
 
     #[test]

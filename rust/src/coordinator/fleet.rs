@@ -35,6 +35,17 @@
 //! `experiments::sharded_fleet_*` tests).  A cloned temperature sampler
 //! seeds one RNG per lane, so routing changes WOULD reorder its draws —
 //! the fleet comparisons therefore pin greedy sampling.
+//!
+//! Parallel lanes: each lane is fully self-contained (own backend,
+//! scheduler, KV pool, virtual clock — the PR 5 design), so a fleet
+//! tick can run the lane iterations on a scoped worker-thread pool
+//! ([`ShardedService::with_lane_threads`]; boards do run in parallel).
+//! Routing and command application stay on the caller's thread BEFORE
+//! the ticks, lane results are collected back IN LANE ORDER (first
+//! error in lane order wins, like the sequential loop), and stats
+//! merge by lane index — so a parallel fleet's served streams and
+//! merged stats are byte-identical to sequential ticking
+//! (`lane_threads == 1`), asserted by the equivalence test below.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -96,6 +107,9 @@ pub struct ShardedService<B: ModelBackend> {
     /// served, forever.
     homes: HashMap<u64, usize>,
     ticks: u64,
+    /// Worker threads for lane ticks (1 = sequential); capped at the
+    /// lane count.
+    lane_threads: usize,
     cmd_tx: Sender<Command>,
     cmd_rx: Receiver<Command>,
 }
@@ -143,9 +157,18 @@ impl<B: ModelBackend> ShardedService<B> {
             page_tokens: cfg.page_tokens,
             homes: HashMap::new(),
             ticks: 0,
+            lane_threads: shards,
             cmd_tx,
             cmd_rx,
         }
+    }
+
+    /// Worker threads for lane ticks.  Defaults to one per lane; `1`
+    /// restores strictly sequential ticking (same streams either way —
+    /// lanes share no state — this only trades wall time).
+    pub fn with_lane_threads(mut self, n: usize) -> Self {
+        self.lane_threads = n.max(1);
+        self
     }
 
     pub fn shards(&self) -> usize {
@@ -155,6 +178,12 @@ impl<B: ModelBackend> ShardedService<B> {
     /// One lane's scheduler (pool/accounting inspection in tests).
     pub fn scheduler(&self, shard: usize) -> &Scheduler {
         self.lanes[shard].scheduler()
+    }
+
+    /// One lane's model backend (inspection — e.g. `SimBackend`
+    /// step-pricing table stats for fleet serve summaries).
+    pub fn backend(&self, shard: usize) -> &B {
+        self.lanes[shard].backend()
     }
 
     /// The lane a request was routed to (`None` before its submit
@@ -238,12 +267,18 @@ impl<B: ModelBackend> ShardedService<B> {
         }
     }
 
-    /// Apply pending commands, then advance every lane one iteration.
+    /// Apply pending commands, then advance every lane one iteration —
+    /// on `lane_threads` scoped workers, or in place when sequential.
     /// Lanes tick independently — board clocks are not synchronized —
-    /// and a drained lane is a no-op.  `Stepped` if any lane stepped,
-    /// `Swept` if any did bookkeeping, `Drained` when the whole fleet
-    /// is idle.
-    pub fn tick(&mut self) -> Result<Tick> {
+    /// and a drained lane is a no-op.  Results are consumed in lane
+    /// order either way (first error in lane order wins), so parallel
+    /// and sequential ticking are byte-identical.  `Stepped` if any
+    /// lane stepped, `Swept` if any did bookkeeping, `Drained` when
+    /// the whole fleet is idle.
+    pub fn tick(&mut self) -> Result<Tick>
+    where
+        B: Send,
+    {
         self.apply_commands();
         self.ticks += 1;
         if self.ticks % HOME_PRUNE_TICKS == 0 {
@@ -252,10 +287,43 @@ impl<B: ModelBackend> ShardedService<B> {
             let lanes = &self.lanes;
             self.homes.retain(|&id, &mut shard| lanes[shard].scheduler().tracks(id));
         }
+        let threads = self.lane_threads.min(self.lanes.len()).max(1);
+        let ticks: Vec<Result<Tick>> = if threads == 1 {
+            // Sequential: tick in place, stopping at the first error
+            // (the pre-parallel fleet's exact behavior).
+            let mut out = Vec::with_capacity(self.lanes.len());
+            for lane in &mut self.lanes {
+                let t = lane.tick();
+                let failed = t.is_err();
+                out.push(t);
+                if failed {
+                    break;
+                }
+            }
+            out
+        } else {
+            // Each worker owns a disjoint chunk of lanes (no shared
+            // state — each lane is a whole board); joining in spawn
+            // order keeps the results in lane order.
+            let chunk = self.lanes.len().div_ceil(threads);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .lanes
+                    .chunks_mut(chunk)
+                    .map(|lanes| {
+                        s.spawn(move || lanes.iter_mut().map(|l| l.tick()).collect::<Vec<_>>())
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("lane worker panicked"))
+                    .collect()
+            })
+        };
         let mut any_stepped = false;
         let mut any_active = false;
-        for lane in &mut self.lanes {
-            match lane.tick()? {
+        for t in ticks {
+            match t? {
                 Tick::Drained => {}
                 Tick::Stepped => {
                     any_stepped = true;
@@ -274,7 +342,10 @@ impl<B: ModelBackend> ShardedService<B> {
     }
 
     /// Tick until every submitted request has resolved on every lane.
-    pub fn drain(&mut self) -> Result<()> {
+    pub fn drain(&mut self) -> Result<()>
+    where
+        B: Send,
+    {
         while self.tick()? != Tick::Drained {}
         Ok(())
     }
@@ -304,7 +375,10 @@ impl<B: ModelBackend> ShardedService<B> {
     /// clock jumps to the next arrival (the single-engine fast-forward,
     /// fleet-wide).  Results land in `shard_stats()` / `stats()`;
     /// per-request streaming still goes through `submit` handles.
-    pub fn run_trace(&mut self, mut trace: Vec<Request>) -> Result<ServeStats> {
+    pub fn run_trace(&mut self, mut trace: Vec<Request>) -> Result<ServeStats>
+    where
+        B: Send,
+    {
         trace.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let mut pending: std::collections::VecDeque<Request> = trace.into();
         loop {
@@ -333,7 +407,8 @@ mod tests {
     use crate::coordinator::Server;
     use crate::util::proptest;
     use crate::workload::{
-        generate_shared_prefix_trace, generate_trace, SharedPrefixConfig, TraceConfig,
+        generate_overload_trace, generate_shared_prefix_trace, generate_trace, OverloadConfig,
+        SharedPrefixConfig, TraceConfig,
     };
 
     fn echo_fleet(
@@ -527,6 +602,62 @@ mod tests {
         }
         // Every admission after each group's first hits that lane's cache.
         assert!(merged.prefix_hits >= merged.admissions - 3, "{} hits", merged.prefix_hits);
+    }
+
+    /// Tentpole equivalence (parallel lanes): a fleet ticked on 4
+    /// worker threads serves a mixed OVERLOAD trace — queueing,
+    /// preempt/swap cycles, staggered completions — byte-identical to
+    /// the same fleet ticked sequentially: per-request tokens,
+    /// bit-identical latencies, and every merged counter.
+    #[test]
+    fn parallel_lanes_match_sequential_byte_for_byte() {
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            // 20 pages/lane at 4-token pages vs 16-page sequences: two
+            // concurrent residents need 32 pages, so preemption and
+            // swap cycles are certain on every lane.
+            kv_pages: 4 * 20,
+            page_tokens: 4,
+            max_seq: 96,
+            swap: true,
+            ..Default::default()
+        };
+        let trace_cfg = OverloadConfig {
+            n_requests: 16,
+            prompt_len: 32,
+            decode_len_choices: vec![24, 32],
+            vocab: 64,
+            seed: 5,
+            ..Default::default()
+        };
+        let run = |threads: usize| {
+            let mut fleet = echo_fleet(4, RoutePolicy::LeastLoaded, cfg.clone())
+                .with_lane_threads(threads);
+            let stats = fleet.run_trace(generate_overload_trace(&trace_cfg)).unwrap();
+            (stats, fleet.shard_stats())
+        };
+        let (a, a_shards) = run(1);
+        let (b, b_shards) = run(4);
+        assert!(a.preemptions > 0, "the trace must actually overload the lanes");
+        assert_eq!(a.results.len(), 16);
+        assert_eq!(a.results.len(), b.results.len());
+        for x in &a.results {
+            let y = b.results.iter().find(|r| r.id == x.id).unwrap();
+            assert_eq!(x.tokens, y.tokens, "req {} tokens differ across threading", x.id);
+            assert_eq!(x.ttft_s.to_bits(), y.ttft_s.to_bits());
+            assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+            assert_eq!(x.queue_s.to_bits(), y.queue_s.to_bits());
+        }
+        assert_eq!(a.served_s.to_bits(), b.served_s.to_bits());
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.decode_steps, b.decode_steps);
+        assert_eq!(a.preemptions, b.preemptions);
+        assert_eq!(a.swapped_out_pages, b.swapped_out_pages);
+        assert_eq!(a.swapped_in_pages, b.swapped_in_pages);
+        assert_eq!(a.itl_total, b.itl_total);
+        for (i, (x, y)) in a_shards.iter().zip(&b_shards).enumerate() {
+            assert_eq!(x.results.len(), y.results.len(), "lane {i} served a different set");
+        }
     }
 
     /// Satellite (fleet property test): random routing policies and

@@ -87,6 +87,28 @@
 //! byte-identical to a single shard (asserted in
 //! `experiments::flightllm_serve_sharded` tests).
 //!
+//! 7. **Hot path & cost model**: what the serving loop does per step,
+//!    and what it never does.  *Precomputed:* `SimBackend` builds a
+//!    dense `CostTable` at construction — every (stage, bucket, batch)
+//!    point the `BucketPlan` can emit (§5.2 makes the set finite), so
+//!    step pricing is a bucket-ordinal array read with no hashing and
+//!    no lazy simulation; out-of-table points (a decode batch beyond
+//!    the table's `max_batch`) fall back to the old memoised sim run —
+//!    bit-identical cost — and are counted
+//!    (`SimBackend::cost_table_stats`), surfaced in `cli serve`
+//!    summaries.  *Allocations:* none on the synthetic hot path — a
+//!    yielded token's row is a compact [`Logits::Peak`] (index + value
+//!    + vocab width) the `Sampler` consumes directly (greedy in O(1),
+//!    temperature with dense-bit-identical arithmetic and the same
+//!    single RNG draw); only the PJRT backend carries
+//!    `Logits::Dense` vectors, because its numerics are real.
+//!    *Worker threads:* `ShardedService` ticks its lanes on a scoped
+//!    thread pool (`with_lane_threads`; lanes already own independent
+//!    backends, schedulers, KV pools and clocks), merging results and
+//!    `ServeStats` deterministically by lane index — served streams
+//!    are byte-identical to sequential ticking, asserted in the fleet
+//!    equivalence test.
+//!
 //! Below the backend boundary, every instruction stream the `SimBackend`
 //! executes has already passed the [`crate::verify`] static gate: the
 //! simulator's `Engine` prechecks streams against the machine-safety
@@ -108,7 +130,8 @@ pub use scheduler::{
     DecodeOutcome, PlanItem, PlanWork, Scheduler, SchedulerConfig, SeqState,
 };
 pub use server::{
-    ITL_SAMPLE_CAP, ModelBackend, RequestResult, SeqSlot, SeqWork, ServeStats, Server, StepOutput,
+    ITL_SAMPLE_CAP, Logits, ModelBackend, RequestResult, SeqSlot, SeqWork, ServeStats, Server,
+    StepOutput,
 };
 pub use service::{LiveService, RequestHandle, Service, StreamEvent, Tick};
 pub use sim_backend::SimBackend;
@@ -118,9 +141,10 @@ pub use sim_backend::SimBackend;
 pub(crate) mod testing {
     use anyhow::Result;
 
-    use super::server::{ModelBackend, SeqSlot, SeqWork, StepOutput};
+    use super::server::{Logits, ModelBackend, SeqSlot, SeqWork, StepOutput};
 
-    /// A deterministic toy backend: logits favor (last_token + 1) % V.
+    /// A deterministic toy backend: logits favor (last_token + 1) % V,
+    /// carried as compact `Logits::Peak` rows (no vocab-sized vectors).
     /// Step cost is flat per phase — every prefill CHUNK charges
     /// `prefill_s`, any number of decode slots share one `decode_s` (so
     /// batching visibly improves aggregate throughput).  Non-final
@@ -154,10 +178,10 @@ pub(crate) mod testing {
                                 // No token this iteration: no logits —
                                 // or, for the regression test, a row of
                                 // garbage the engine must ignore.
-                                return self.garbage_chunk_rows.then(|| {
-                                    let mut l = vec![0.0f32; self.vocab];
-                                    l[self.vocab - 1] = 99.0;
-                                    l
+                                return self.garbage_chunk_rows.then(|| Logits::Peak {
+                                    index: (self.vocab - 1) as u32,
+                                    value: 99.0,
+                                    vocab: self.vocab as u32,
                                 });
                             }
                             *prompt.last().unwrap_or(&0)
@@ -167,9 +191,11 @@ pub(crate) mod testing {
                             *last
                         }
                     } as usize;
-                    let mut l = vec![0.0f32; self.vocab];
-                    l[(last + 1) % self.vocab] = 10.0;
-                    Some(l)
+                    Some(Logits::Peak {
+                        index: ((last + 1) % self.vocab) as u32,
+                        value: 10.0,
+                        vocab: self.vocab as u32,
+                    })
                 })
                 .collect();
             if any_decode {

@@ -1,7 +1,17 @@
 //! Token sampling: greedy (the latency-benchmark default) and
 //! temperature sampling for the interactive demo.
+//!
+//! Both consume the compact [`Logits`] representation: a `Dense` row is
+//! scanned the classic way, while a `Peak` row (the synthetic backends'
+//! zero-alloc form) is sampled WITHOUT materializing the vocab-sized
+//! vector — greedy in O(1), temperature with the same per-position
+//! arithmetic (and the same single RNG draw) the dense path would
+//! perform on `to_dense()`, so the sampled token is bit-identical
+//! either way.
 
 use crate::util::Rng;
+
+use super::server::Logits;
 
 #[derive(Debug, Clone)]
 pub enum Sampler {
@@ -19,24 +29,72 @@ impl Sampler {
         Sampler::Temperature { t, rng: Rng::new(seed) }
     }
 
-    /// Pick the next token id from logits.
-    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+    /// Pick the next token id from a logits row.
+    pub fn sample(&mut self, logits: &Logits) -> u32 {
         match self {
-            Sampler::Greedy => argmax(logits) as u32,
-            Sampler::Temperature { t, rng } => {
-                let m = logits.iter().fold(f32::MIN, |a, &b| a.max(b));
-                let exps: Vec<f64> =
-                    logits.iter().map(|&l| (((l - m) as f64) / *t).exp()).collect();
-                let total: f64 = exps.iter().sum();
-                let mut u = rng.f64() * total;
-                for (i, e) in exps.iter().enumerate() {
-                    u -= e;
-                    if u <= 0.0 {
-                        return i as u32;
+            Sampler::Greedy => match logits {
+                Logits::Dense(v) => argmax(v) as u32,
+                Logits::Peak { index, value, vocab } => {
+                    // Mirror `argmax` over the virtual row exactly
+                    // (strict `>`, first maximum wins): a positive peak
+                    // wins; a zero or out-of-row peak leaves position 0
+                    // the first maximum; a NEGATIVE peak at position 0
+                    // loses to the first zero after it.
+                    if *value > 0.0 && *index < *vocab {
+                        *index
+                    } else if *value < 0.0 && *index == 0 && *vocab > 1 {
+                        1
+                    } else {
+                        0
                     }
                 }
-                (logits.len() - 1) as u32
-            }
+            },
+            Sampler::Temperature { t, rng } => match logits {
+                Logits::Dense(v) => {
+                    let m = v.iter().fold(f32::MIN, |a, &b| a.max(b));
+                    let exps: Vec<f64> =
+                        v.iter().map(|&l| (((l - m) as f64) / *t).exp()).collect();
+                    let total: f64 = exps.iter().sum();
+                    let mut u = rng.f64() * total;
+                    for (i, e) in exps.iter().enumerate() {
+                        u -= e;
+                        if u <= 0.0 {
+                            return i as u32;
+                        }
+                    }
+                    (v.len() - 1) as u32
+                }
+                Logits::Peak { index, value, vocab } => {
+                    // The dense computation replayed positionally over
+                    // the virtual row — same max, same exp per
+                    // position, same left-to-right f64 accumulation
+                    // order, one RNG draw — without allocating it.
+                    let n = *vocab as usize;
+                    let idx = *index as usize;
+                    let peak_in = idx < n;
+                    let mut m = f32::MIN;
+                    if n > usize::from(peak_in) {
+                        m = m.max(0.0);
+                    }
+                    if peak_in {
+                        m = m.max(*value);
+                    }
+                    let e_zero = (((0.0f32 - m) as f64) / *t).exp();
+                    let e_peak = (((*value - m) as f64) / *t).exp();
+                    let mut total = 0.0f64;
+                    for i in 0..n {
+                        total += if i == idx { e_peak } else { e_zero };
+                    }
+                    let mut u = rng.f64() * total;
+                    for i in 0..n {
+                        u -= if i == idx { e_peak } else { e_zero };
+                        if u <= 0.0 {
+                            return i as u32;
+                        }
+                    }
+                    n.saturating_sub(1) as u32
+                }
+            },
         }
     }
 }
@@ -58,13 +116,13 @@ mod tests {
     #[test]
     fn greedy_picks_max() {
         let mut s = Sampler::greedy();
-        assert_eq!(s.sample(&[0.1, 2.0, -1.0, 1.9]), 1);
+        assert_eq!(s.sample(&Logits::Dense(vec![0.1, 2.0, -1.0, 1.9])), 1);
     }
 
     #[test]
     fn temperature_prefers_high_logits() {
         let mut s = Sampler::temperature(0.5, 42);
-        let logits = [0.0f32, 5.0, 0.0, 0.0];
+        let logits = Logits::Dense(vec![0.0f32, 5.0, 0.0, 0.0]);
         let mut hits = 0;
         for _ in 0..200 {
             if s.sample(&logits) == 1 {
@@ -77,13 +135,63 @@ mod tests {
     #[test]
     fn temperature_is_stochastic_but_valid() {
         let mut s = Sampler::temperature(2.0, 7);
-        let logits = [1.0f32, 1.1, 0.9, 1.05];
+        let logits = Logits::Dense(vec![1.0f32, 1.1, 0.9, 1.05]);
         let mut seen = std::collections::HashSet::new();
         for _ in 0..100 {
             let t = s.sample(&logits);
-            assert!((t as usize) < logits.len());
+            assert!((t as usize) < 4);
             seen.insert(t);
         }
         assert!(seen.len() >= 3, "high temperature should spread mass");
+    }
+
+    /// Tentpole (zero-alloc logits): greedy over a `Peak` row matches
+    /// greedy over its dense materialization on every edge the argmax
+    /// tie-break can reach — positive peak anywhere, zero peak,
+    /// negative peak at and off position 0, out-of-row index.
+    #[test]
+    fn peak_greedy_matches_dense_materialization() {
+        let cases = [
+            Logits::Peak { index: 3, value: 10.0, vocab: 8 },
+            Logits::Peak { index: 0, value: 10.0, vocab: 8 },
+            Logits::Peak { index: 7, value: 10.0, vocab: 8 },
+            Logits::Peak { index: 3, value: 0.0, vocab: 8 },
+            Logits::Peak { index: 0, value: -1.0, vocab: 8 },
+            Logits::Peak { index: 5, value: -1.0, vocab: 8 },
+            Logits::Peak { index: 0, value: -1.0, vocab: 1 },
+            Logits::Peak { index: 9, value: 10.0, vocab: 8 },
+        ];
+        for p in cases {
+            let mut a = Sampler::greedy();
+            let mut b = Sampler::greedy();
+            let dense = Logits::Dense(p.to_dense());
+            assert_eq!(a.sample(&p), b.sample(&dense), "diverged on {p:?}");
+        }
+    }
+
+    /// Tentpole (zero-alloc logits): temperature sampling over `Peak`
+    /// rows is BIT-identical to sampling their dense materializations —
+    /// same arithmetic, same single RNG draw per token — across a run
+    /// long enough to exercise the RNG-state equivalence.
+    #[test]
+    fn peak_temperature_bit_identical_to_dense() {
+        let mut peak_s = Sampler::temperature(0.8, 1234);
+        let mut dense_s = Sampler::temperature(0.8, 1234);
+        for i in 0..300u32 {
+            let p = Logits::Peak { index: i % 7, value: 0.5 + (i % 11) as f32, vocab: 7 };
+            let d = Logits::Dense(p.to_dense());
+            assert_eq!(peak_s.sample(&p), dense_s.sample(&d), "diverged at draw {i}");
+        }
+    }
+
+    /// The virtual row reports its width like a dense one.
+    #[test]
+    fn vocab_and_to_dense_agree() {
+        let p = Logits::Peak { index: 2, value: 4.0, vocab: 5 };
+        assert_eq!(p.vocab(), 5);
+        assert_eq!(p.to_dense(), vec![0.0, 0.0, 4.0, 0.0, 0.0]);
+        let d = Logits::Dense(vec![1.0, 2.0]);
+        assert_eq!(d.vocab(), 2);
+        assert_eq!(d.to_dense(), vec![1.0, 2.0]);
     }
 }

@@ -67,17 +67,61 @@ pub struct SeqSlot {
     pub work: SeqWork,
 }
 
+/// One slot's sampling input.  The synthetic backends (sim, echo)
+/// fabricate a distribution with a single peak over an otherwise-zero
+/// vocab row; materializing that row as a `Vec<f32>` cost ~vocab floats
+/// of allocation per yielded token (~128 KB at LLaMA2 scale) just for
+/// the sampler to scan it.  `Peak` carries the three numbers that
+/// define the row instead — zero allocation on the serving hot path —
+/// while `Dense` keeps the full-row representation for backends with
+/// real numerics (the PJRT runtime).  `Sampler` consumes both and
+/// produces bit-identical tokens for a `Peak` and its `to_dense`
+/// materialization.
+#[derive(Debug, Clone)]
+pub enum Logits {
+    /// `value` at `index`, 0.0 at every other position of a
+    /// `vocab`-wide row.
+    Peak { index: u32, value: f32, vocab: u32 },
+    /// A full per-token logits row.
+    Dense(Vec<f32>),
+}
+
+impl Logits {
+    /// Width of the (possibly virtual) logits row.
+    pub fn vocab(&self) -> usize {
+        match self {
+            Logits::Peak { vocab, .. } => *vocab as usize,
+            Logits::Dense(v) => v.len(),
+        }
+    }
+
+    /// Materialize the full row (tests and the bench's emulation of the
+    /// pre-compact allocating path; never used by the serving loop).
+    pub fn to_dense(&self) -> Vec<f32> {
+        match self {
+            Logits::Dense(v) => v.clone(),
+            Logits::Peak { index, value, vocab } => {
+                let mut v = vec![0.0f32; *vocab as usize];
+                if let Some(slot) = v.get_mut(*index as usize) {
+                    *slot = *value;
+                }
+                v
+            }
+        }
+    }
+}
+
 /// What one batched step produced.
 #[derive(Debug, Clone)]
 pub struct StepOutput {
     /// Per-slot logits, same order as the input batch.  A slot that
     /// yields a sampled token this iteration (`SeqWork::yields_token`)
     /// must carry `Some`; a non-final prefill chunk carries `None` —
-    /// backends no longer fabricate a vocab-sized row just for the
-    /// engine to discard it.  The row count always matches the batch,
-    /// and the engine never samples from a non-yielding slot's row even
-    /// if a backend returns garbage there.
-    pub logits: Vec<Option<Vec<f32>>>,
+    /// backends no longer fabricate a row just for the engine to
+    /// discard it.  The row count always matches the batch, and the
+    /// engine never samples from a non-yielding slot's row even if a
+    /// backend returns garbage there.
+    pub logits: Vec<Option<Logits>>,
     /// Seconds of model time the step took (virtual for the simulator,
     /// measured wall time for the PJRT runtime).
     pub step_s: f64,
@@ -480,6 +524,12 @@ impl<B: ModelBackend> Server<B> {
     /// The scheduler (inspection; the serving loop owns mutation).
     pub fn scheduler(&self) -> &Scheduler {
         self.core.scheduler()
+    }
+
+    /// The model backend (inspection — e.g. `SimBackend` step-pricing
+    /// table stats for the serve summary).
+    pub fn backend(&self) -> &B {
+        self.core.backend()
     }
 
     /// Run a whole trace to completion (offline replay: all requests are

@@ -181,6 +181,12 @@ impl<B: ModelBackend> EngineCore<B> {
         &self.scheduler
     }
 
+    /// The model backend, for inspection (e.g. `SimBackend`
+    /// step-pricing table stats in serve summaries).
+    pub(crate) fn backend(&self) -> &B {
+        &self.backend
+    }
+
     /// The engine's serving-clock seconds so far (virtual mode: the
     /// lane clock the fleet's arrival-gated routing reads).
     pub(crate) fn clock_s(&self) -> f64 {

@@ -11,15 +11,25 @@
 //! prompt costs several small-bucket streams spread over iterations
 //! instead of one big one) — and all decode slots share ONE
 //! batched decode stream at the largest context bucket in the batch — the Fig. 15 multibatch lowering
-//! (`CompilerOptions::with_batch`).  Streams are lowered and simulated
-//! once per (stage, bucket, batch) and memoised, which is what keeps
-//! long traces cheap (the same trick as the grid sweeps in
-//! `experiments`).
+//! (`CompilerOptions::with_batch`).
+//!
+//! Stream pricing is a DENSE TABLE, not a lazy memo: length-adaptive
+//! compilation (§5.2) makes the set of (stage, bucket, batch) cost
+//! points small and finite, so the constructor enumerates the whole
+//! `BucketPlan` up front — prefill buckets at batch 1, decode buckets ×
+//! batch 1..=`max_batch` — and the serving hot path becomes a pure
+//! array read indexed by bucket-ordinal arithmetic (no hashing, no
+//! branch-to-simulate).  Points outside the table (a batch beyond
+//! `max_batch`, a foreign bucket) fall back to the old lazily-memoised
+//! sim run — byte-identical cost, since both paths call the same
+//! `sim_stage` — and are counted (`cost_table_stats`) so out-of-table
+//! pricing is visible in serve summaries instead of silently slow.
 //!
 //! The simulator prices time, not numerics, so logits are fabricated
 //! deterministically from (sequence, last token, position): served
 //! token streams and latencies are bit-identical across runs for a
-//! fixed trace and sampler seed.
+//! fixed trace and sampler seed.  A yielded token's row is a compact
+//! [`Logits::Peak`] — one index + value, no vocab-sized allocation.
 //!
 //! Swap pricing (§4.4 hybrid HBM/DDR placement): with a swap model
 //! configured (`with_swap_model`), preemption spill/resume traffic is
@@ -39,7 +49,7 @@ use crate::experiments::sim_stage;
 use crate::ir::Stage;
 use crate::util::Rng;
 
-use super::server::{ModelBackend, SeqSlot, SeqWork, StepOutput};
+use super::server::{Logits, ModelBackend, SeqSlot, SeqWork, StepOutput};
 
 /// DDR swap-tier cost model: how many bytes one KV page carries and how
 /// fast the DDR channel moves them.
@@ -49,13 +59,154 @@ struct SwapModel {
     ddr_gbps: f64,
 }
 
+/// Seconds for one (stage, bucket, batch) stream on the accelerator —
+/// the shared pricing primitive behind both the dense table and the
+/// fallback memo, so the two paths are bit-identical by construction.
+fn price_stream(target: &Target, prefill: bool, bucket: u64, batch: u32) -> f64 {
+    let stage = if prefill {
+        Stage::Prefill { n: bucket }
+    } else {
+        Stage::Decode { ctx: bucket }
+    };
+    let opt = if prefill {
+        CompilerOptions::full()
+    } else {
+        CompilerOptions::with_batch(batch)
+    };
+    sim_stage(target, stage, opt, true).total_ns * 1e-9
+}
+
+/// Dense (stage, bucket, batch) → seconds pricing table, precomputed
+/// from a [`BucketPlan`] so the serving hot path never hashes or
+/// simulates.
+///
+/// Layout: `prefill_s[ordinal]` for prefill buckets (always batch 1 —
+/// prefill streams are per-sequence, §5.2); `decode_s[ordinal *
+/// max_batch + (batch - 1)]` for decode buckets × batch
+/// 1..=`max_batch`.  Bucket ordinals come from a binary search over the
+/// edge list, with an O(1) arithmetic fast path when the edges are
+/// uniform-stride (the paper-default decode plan: every 64 tokens).
+///
+/// **Decode cost-key conflation (modeling choice, pinned by test):**
+/// the engine prices a decode batch by its LARGEST member's context
+/// bucket — `decode_cost_s(max_ctx, n_decode)` — because the Fig. 15
+/// multibatch lowering runs all batch lanes through one stream compiled
+/// at a single context bucket.  A mixed-context batch therefore pays
+/// the longest member's memory sweep for every lane; shorter members
+/// are conservatively over-priced rather than the stream under-priced.
+#[derive(Debug, Clone)]
+struct CostTable {
+    prefill_edges: Vec<u64>,
+    decode_edges: Vec<u64>,
+    /// `Some(s)` when `decode_edges[i] == (i + 1) * s` for all i — the
+    /// ordinal is then pure arithmetic instead of a binary search.
+    decode_stride: Option<u64>,
+    prefill_s: Vec<f64>,
+    decode_s: Vec<f64>,
+    max_batch: u32,
+}
+
+impl CostTable {
+    /// Enumerate every (stage, bucket, batch) point the plan can emit.
+    fn build(target: &Target, plan: &BucketPlan, max_batch: u32) -> Self {
+        let max_batch = max_batch.max(1);
+        let prefill_s = plan.prefill.iter().map(|&b| price_stream(target, true, b, 1)).collect();
+        let mut decode_s = Vec::with_capacity(plan.decode.len() * max_batch as usize);
+        for &b in &plan.decode {
+            for batch in 1..=max_batch {
+                decode_s.push(price_stream(target, false, b, batch));
+            }
+        }
+        Self {
+            prefill_edges: plan.prefill.clone(),
+            decode_edges: plan.decode.clone(),
+            decode_stride: uniform_stride(&plan.decode),
+            prefill_s,
+            decode_s,
+            max_batch,
+        }
+    }
+
+    /// A table that never hits — every pricing falls back to the memo.
+    fn empty() -> Self {
+        Self {
+            prefill_edges: Vec::new(),
+            decode_edges: Vec::new(),
+            decode_stride: None,
+            prefill_s: Vec::new(),
+            decode_s: Vec::new(),
+            max_batch: 0,
+        }
+    }
+
+    /// Seconds for a prefill chunk of `len` tokens, if tabled.
+    fn prefill_cost_s(&self, len: u64) -> Option<f64> {
+        let ord = ordinal(&self.prefill_edges, len)?;
+        self.prefill_s.get(ord).copied()
+    }
+
+    /// Seconds for a decode step over `batch` lanes at the batch's max
+    /// context, if tabled.  See the type doc for the conflation rule:
+    /// the whole batch is priced at `max_ctx`'s bucket.
+    fn decode_cost_s(&self, max_ctx: u64, batch: u32) -> Option<f64> {
+        if batch == 0 || batch > self.max_batch {
+            return None;
+        }
+        let n = self.decode_edges.len();
+        let ord = match self.decode_stride {
+            Some(s) => {
+                if n == 0 {
+                    return None;
+                }
+                (max_ctx.div_ceil(s).saturating_sub(1) as usize).min(n - 1)
+            }
+            None => ordinal(&self.decode_edges, max_ctx)?,
+        };
+        self.decode_s.get(ord * self.max_batch as usize + (batch - 1) as usize).copied()
+    }
+
+    /// Number of precomputed cost points (prefill + decode×batch).
+    fn entries(&self) -> usize {
+        self.prefill_s.len() + self.decode_s.len()
+    }
+}
+
+/// `Some(s)` when `edges[i] == (i + 1) * s` for every i (nonzero `s`).
+fn uniform_stride(edges: &[u64]) -> Option<u64> {
+    let s = *edges.first()?;
+    if s == 0 {
+        return None;
+    }
+    edges.iter().enumerate().all(|(i, &e)| e == (i as u64 + 1) * s).then_some(s)
+}
+
+/// Ordinal of the bucket covering `v`: first edge ≥ `v`, clamped to the
+/// last (matching `bucket_of` in the compiler's bucket plan).
+fn ordinal(edges: &[u64], v: u64) -> Option<usize> {
+    if edges.is_empty() {
+        return None;
+    }
+    Some(edges.partition_point(|&e| e < v).min(edges.len() - 1))
+}
+
 /// Serving backend that executes steps on the simulated accelerator.
+///
+/// `Clone` so a fleet can build the (eagerly priced) cost table ONCE in
+/// a prototype and stamp out one backend per lane.
+#[derive(Clone)]
 pub struct SimBackend {
     target: Target,
     plan: BucketPlan,
     vocab: usize,
-    /// Memoised stream timings: (is_prefill, bucket, batch) → seconds.
-    cache: HashMap<(bool, u64, u32), f64>,
+    /// Dense precomputed pricing — the hot path.
+    table: CostTable,
+    /// Lazily-memoised pricing for out-of-table points: (is_prefill,
+    /// bucket, batch) → seconds.  Same `sim_stage` as the table, so
+    /// falling back never changes a price.
+    fallback: HashMap<(bool, u64, u32), f64>,
+    /// How many pricings missed the table (visible via
+    /// `cost_table_stats`).
+    fallback_prices: u64,
     /// DDR swap pricing; `None` prices swap traffic free.
     swap: Option<SwapModel>,
 }
@@ -72,7 +223,39 @@ impl SimBackend {
     /// serving a synthetic trace against a 7B-scale target.
     pub fn with_vocab(target: Target, vocab: usize) -> Self {
         let plan = BucketPlan::paper_default(target.model.max_seq);
-        Self { target, plan, vocab: vocab.max(2), cache: HashMap::new(), swap: None }
+        let table = CostTable::build(&target, &plan, 1);
+        Self {
+            target,
+            plan,
+            vocab: vocab.max(2),
+            table,
+            fallback: HashMap::new(),
+            fallback_prices: 0,
+            swap: None,
+        }
+    }
+
+    /// Rebuild the dense table for decode batches up to `max_batch`
+    /// (the serving layer's `SchedulerConfig::max_batch`): steps whose
+    /// decode batch exceeds the table fall back to the memo and are
+    /// counted, so size this to the scheduler for a fully-dense run.
+    pub fn with_max_batch(mut self, max_batch: u32) -> Self {
+        self.table = CostTable::build(&self.target, &self.plan, max_batch.max(1));
+        self
+    }
+
+    /// Disable the dense table entirely — every pricing runs through
+    /// the lazily-memoised path.  The pre-table behavior, kept for the
+    /// bit-identity equivalence tests and the bench's before/after
+    /// comparison.
+    pub fn without_cost_table(mut self) -> Self {
+        self.table = CostTable::empty();
+        self
+    }
+
+    /// (dense table entries, pricings that missed the table so far).
+    pub fn cost_table_stats(&self) -> (usize, u64) {
+        (self.table.entries(), self.fallback_prices)
     }
 
     /// Enable DDR swap pricing for a serving layer using
@@ -87,31 +270,49 @@ impl SimBackend {
         self
     }
 
-    /// Seconds for one (stage, bucket, batch) stream on the accelerator.
-    fn stream_s(&mut self, prefill: bool, bucket: u64, batch: u32) -> f64 {
+    /// Seconds for this iteration's prefill chunk: dense table read,
+    /// falling back to the memo for a foreign bucket.
+    fn prefill_cost(&mut self, chunk: u64) -> f64 {
+        if let Some(s) = self.table.prefill_cost_s(chunk) {
+            return s;
+        }
+        self.fallback_prices += 1;
+        let bucket = self.plan.prefill_bucket(chunk);
+        self.memo_stream_s(true, bucket, 1)
+    }
+
+    /// Seconds for the shared decode stream: the WHOLE batch is priced
+    /// at the largest member's context bucket (Fig. 15 multibatch
+    /// lowering — one stream, one bucket; see [`CostTable`]).  Dense
+    /// table read, falling back to the memo when the batch exceeds the
+    /// table's `max_batch`.
+    fn decode_cost(&mut self, max_ctx: u64, batch: u32) -> f64 {
+        if let Some(s) = self.table.decode_cost_s(max_ctx, batch) {
+            return s;
+        }
+        self.fallback_prices += 1;
+        let bucket = self.plan.decode_bucket(max_ctx);
+        self.memo_stream_s(false, bucket, batch)
+    }
+
+    /// The pre-table pricing path: lower + simulate once per (stage,
+    /// bucket, batch) and memoise.
+    fn memo_stream_s(&mut self, prefill: bool, bucket: u64, batch: u32) -> f64 {
         let target = &self.target;
-        *self.cache.entry((prefill, bucket, batch)).or_insert_with(|| {
-            let stage = if prefill {
-                Stage::Prefill { n: bucket }
-            } else {
-                Stage::Decode { ctx: bucket }
-            };
-            let opt = if prefill {
-                CompilerOptions::full()
-            } else {
-                CompilerOptions::with_batch(batch)
-            };
-            sim_stage(target, stage, opt, true).total_ns * 1e-9
-        })
+        *self
+            .fallback
+            .entry((prefill, bucket, batch))
+            .or_insert_with(|| price_stream(target, prefill, bucket, batch))
     }
 
     /// Deterministic pseudo-logits: a single peak derived from the slot's
     /// identity and position (pure function — no mutable RNG state, so
     /// a request generates the same tokens on any shard of a fleet).
-    /// `None` for a non-final prefill chunk: it yields no token, so
-    /// fabricating a vocab-sized row for the engine to discard was pure
-    /// waste.
-    fn logits_for(&self, slot: &SeqSlot) -> Option<Vec<f32>> {
+    /// The row is a compact [`Logits::Peak`] — index + value, not a
+    /// vocab-sized vector — and `None` for a non-final prefill chunk:
+    /// it yields no token, so fabricating anything for the engine to
+    /// discard was pure waste.
+    fn logits_for(&self, slot: &SeqSlot) -> Option<Logits> {
         if !slot.work.yields_token() {
             return None;
         }
@@ -127,9 +328,7 @@ impl SimBackend {
             ^ last.rotate_left(17)
             ^ pos.rotate_left(41);
         let peak = Rng::new(seed).next_u64() % self.vocab as u64;
-        let mut logits = vec![0.0f32; self.vocab];
-        logits[peak as usize] = 10.0;
-        Some(logits)
+        Some(Logits::Peak { index: peak as u32, value: 10.0, vocab: self.vocab as u32 })
     }
 }
 
@@ -157,8 +356,7 @@ impl ModelBackend for SimBackend {
                         slot.seq
                     );
                     if chunk > 0 {
-                        let b = self.plan.prefill_bucket(chunk as u64);
-                        step_s += self.stream_s(true, b, 1);
+                        step_s += self.prefill_cost(chunk as u64);
                     }
                 }
                 SeqWork::Decode { pos, .. } => {
@@ -168,8 +366,7 @@ impl ModelBackend for SimBackend {
             }
         }
         if n_decode > 0 {
-            let b = self.plan.decode_bucket(max_ctx);
-            step_s += self.stream_s(false, b, n_decode);
+            step_s += self.decode_cost(max_ctx, n_decode);
         }
         let logits = batch.iter().map(|s| self.logits_for(s)).collect();
         Ok(StepOutput { logits, step_s })
@@ -356,9 +553,9 @@ mod tests {
     }
 
     /// Satellite: a non-final prefill chunk yields no token, so the
-    /// backend returns `None` for its row instead of fabricating a
-    /// vocab-sized logits vector the engine would discard; the final
-    /// chunk and decode slots carry real rows.
+    /// backend returns `None` for its row instead of fabricating
+    /// logits the engine would discard; the final chunk and decode
+    /// slots carry real rows.
     #[test]
     fn non_final_chunks_carry_no_logits_row() {
         let mut b = SimBackend::with_vocab(Target::u280_tiny(), 8);
@@ -400,5 +597,145 @@ mod tests {
             s4.decode_tps(),
             s1.decode_tps()
         );
+    }
+
+    fn decode_slot(seq: u64, pos: i32) -> SeqSlot {
+        SeqSlot { seq, work: SeqWork::Decode { last: 3, pos } }
+    }
+
+    fn prefill_slot(seq: u64, len: usize) -> SeqSlot {
+        SeqSlot {
+            seq,
+            work: SeqWork::Prefill {
+                prompt: vec![1; len],
+                cached_ctx: 0,
+                chunk_start: 0,
+                chunk_end: len,
+            },
+        }
+    }
+
+    /// Tentpole equivalence: the dense table returns BIT-identical
+    /// `step_s` to the memoised path across every (stage, bucket,
+    /// batch) the bucket plan can emit — edge lengths, mid-bucket
+    /// lengths, and every decode batch the table covers — with zero
+    /// fallbacks on the dense side.
+    #[test]
+    fn dense_table_prices_bit_identical_to_memoised_path() {
+        let t = Target::u280_tiny();
+        let plan = BucketPlan::paper_default(t.model.max_seq);
+        let mut dense = SimBackend::with_vocab(t.clone(), 8).with_max_batch(4);
+        let mut memo = SimBackend::with_vocab(t, 8).without_cost_table();
+        for &edge in &plan.prefill {
+            for len in [edge, edge.saturating_sub(5).max(1)] {
+                let a = dense.step(&[prefill_slot(0, len as usize)]).unwrap().step_s;
+                let b = memo.step(&[prefill_slot(0, len as usize)]).unwrap().step_s;
+                assert_eq!(a.to_bits(), b.to_bits(), "prefill len {len}");
+            }
+        }
+        for &edge in &plan.decode {
+            for ctx in [edge, edge.saturating_sub(7).max(1)] {
+                for batch in 1..=4u64 {
+                    let slots: Vec<SeqSlot> =
+                        (0..batch).map(|i| decode_slot(i, ctx as i32)).collect();
+                    let a = dense.step(&slots).unwrap().step_s;
+                    let b = memo.step(&slots).unwrap().step_s;
+                    assert_eq!(a.to_bits(), b.to_bits(), "decode ctx {ctx} batch {batch}");
+                }
+            }
+        }
+        assert_eq!(dense.cost_table_stats().1, 0, "dense path must never fall back");
+        let (entries, fallbacks) = memo.cost_table_stats();
+        assert_eq!(entries, 0, "disabled table holds nothing");
+        assert!(fallbacks > 0, "memo path counts every pricing as a fallback");
+    }
+
+    /// Tentpole: a pricing point outside the table (decode batch beyond
+    /// the table's max_batch) falls back to the memoised path — same
+    /// bits — and increments the fallback counter each time.
+    #[test]
+    fn out_of_table_points_fall_back_and_are_counted() {
+        let t = Target::u280_tiny();
+        let mut small = SimBackend::with_vocab(t.clone(), 8).with_max_batch(2);
+        let mut memo = SimBackend::with_vocab(t, 8).without_cost_table();
+        let slots: Vec<SeqSlot> = (0..3).map(|i| decode_slot(i, 100)).collect();
+        assert_eq!(small.cost_table_stats().1, 0);
+        let a = small.step(&slots).unwrap().step_s;
+        assert_eq!(small.cost_table_stats().1, 1, "batch 3 misses a max_batch-2 table");
+        let a2 = small.step(&slots).unwrap().step_s;
+        assert_eq!(small.cost_table_stats().1, 2, "every miss is counted, even memo hits");
+        let b = memo.step(&slots).unwrap().step_s;
+        assert_eq!(a.to_bits(), b.to_bits(), "fallback pricing is bit-identical");
+        assert_eq!(a.to_bits(), a2.to_bits());
+        let in_table: Vec<SeqSlot> = (0..2).map(|i| decode_slot(i, 100)).collect();
+        let _ = small.step(&in_table).unwrap();
+        assert_eq!(small.cost_table_stats().1, 2, "in-table pricing never falls back");
+    }
+
+    /// Satellite: the decode cost-key conflation, pinned — a
+    /// mixed-context decode batch is priced at its LARGEST member's
+    /// context bucket (one Fig. 15 stream, one bucket), not per-member.
+    #[test]
+    fn mixed_context_decode_batch_priced_at_largest_bucket() {
+        let t = Target::u280_tiny();
+        let mut b = SimBackend::with_vocab(t.clone(), 8).with_max_batch(2);
+        let mixed = b.step(&[decode_slot(0, 3), decode_slot(1, 200)]).unwrap().step_s;
+        let at_max = b.step(&[decode_slot(0, 200), decode_slot(1, 200)]).unwrap().step_s;
+        let at_min = b.step(&[decode_slot(0, 3), decode_slot(1, 3)]).unwrap().step_s;
+        assert_eq!(
+            mixed.to_bits(),
+            at_max.to_bits(),
+            "mixed batch must be priced at the largest member's bucket"
+        );
+        assert_ne!(
+            mixed.to_bits(),
+            at_min.to_bits(),
+            "ctx 3 and ctx 200 land in different decode buckets"
+        );
+    }
+
+    /// Tentpole equivalence, end to end: a served trace is byte- and
+    /// bit-identical with and without the dense table (tokens, TTFT,
+    /// latency, served_s) — the table changes how fast pricing runs,
+    /// never what it returns.
+    #[test]
+    fn end_to_end_serving_identical_with_and_without_table() {
+        let trace_cfg = TraceConfig {
+            n_requests: 8,
+            vocab: 64,
+            prompt_len_choices: vec![16, 32, 64],
+            decode_len_choices: vec![8, 16],
+            seed: 11,
+            ..Default::default()
+        };
+        let cfg = SchedulerConfig {
+            max_batch: 4,
+            kv_pages: 256,
+            page_tokens: 16,
+            max_seq: 256,
+            ..Default::default()
+        };
+        let dense = Server::new(
+            SimBackend::with_vocab(Target::u280_tiny(), 64).with_max_batch(4),
+            cfg.clone(),
+            Sampler::greedy(),
+        )
+        .run_trace(generate_trace(&trace_cfg))
+        .unwrap();
+        let memo = Server::new(
+            SimBackend::with_vocab(Target::u280_tiny(), 64).without_cost_table(),
+            cfg,
+            Sampler::greedy(),
+        )
+        .run_trace(generate_trace(&trace_cfg))
+        .unwrap();
+        assert_eq!(dense.results.len(), memo.results.len());
+        assert_eq!(dense.served_s.to_bits(), memo.served_s.to_bits());
+        for (x, y) in dense.results.iter().zip(&memo.results) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tokens, y.tokens, "tokens must not depend on the pricing path");
+            assert_eq!(x.ttft_s.to_bits(), y.ttft_s.to_bits());
+            assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+        }
     }
 }

@@ -180,7 +180,8 @@ pub fn flightllm_serve_batch_tps(
         ..Default::default()
     };
     let trace = generate_burst_trace(batch.max(1) as usize, ctx as usize, decode, vocab, 15);
-    let backend = SimBackend::with_vocab(target.clone(), vocab as usize);
+    let backend =
+        SimBackend::with_vocab(target.clone(), vocab as usize).with_max_batch(batch.max(1));
     Server::new(backend, cfg, Sampler::greedy())
         .run_trace(trace)
         .expect("sim serving is infallible")
@@ -211,7 +212,8 @@ pub fn flightllm_serve_prefix(
         ..Default::default()
     };
     let trace = generate_shared_prefix_trace(trace_cfg);
-    let backend = SimBackend::with_vocab(target.clone(), trace_cfg.vocab.max(2) as usize);
+    let backend = SimBackend::with_vocab(target.clone(), trace_cfg.vocab.max(2) as usize)
+        .with_max_batch(max_batch.max(1) as u32);
     Server::new(backend, cfg, Sampler::greedy())
         .run_trace(trace)
         .expect("sim serving is infallible")
@@ -248,6 +250,7 @@ pub fn flightllm_serve_overload(
     };
     let trace = generate_overload_trace(trace_cfg);
     let backend = SimBackend::with_vocab(target.clone(), trace_cfg.vocab.max(2) as usize)
+        .with_max_batch(max_batch.max(1) as u32)
         .with_swap_model(page_tokens, ddr_gbps);
     Server::new(backend, cfg, Sampler::greedy())
         .run_trace(trace)
@@ -309,7 +312,8 @@ pub fn flightllm_serve_chunk_sweep(
                 ..Default::default()
             };
             let trace = generate_mixed_burst_trace(trace_cfg);
-            let backend = SimBackend::with_vocab(target.clone(), trace_cfg.vocab.max(2) as usize);
+            let backend = SimBackend::with_vocab(target.clone(), trace_cfg.vocab.max(2) as usize)
+                .with_max_batch(max_batch.max(1) as u32);
             let stats = Server::new(backend, cfg, Sampler::greedy())
                 .run_trace(trace)
                 .expect("sim serving is infallible");
@@ -334,13 +338,19 @@ pub struct FleetSpec {
     pub prefix_cache: bool,
     /// Fabricated-logits width for the sim lanes.
     pub vocab: usize,
+    /// Worker threads for fleet lane ticks (1 = sequential; streams
+    /// are byte-identical either way).
+    pub lane_threads: usize,
 }
 
 /// Serve a trace across a multi-shard fleet of sim-backed replica
 /// lanes (`coordinator::ShardedService`) — the SLR/board-replication
 /// serving tier.  Each lane gets its own `SimBackend`, scheduler and
-/// KV pool per `spec`.  Returns (per-shard stats, merged fleet stats):
-/// the merged percentiles are recomputed from the pooled per-request
+/// KV pool per `spec` (the dense cost table is built ONCE in a
+/// prototype and cloned per lane), and the lanes tick on
+/// `spec.lane_threads` workers.  Returns (per-shard stats, merged
+/// fleet stats, fleet-summed (table entries, fallback pricings)): the
+/// merged percentiles are recomputed from the pooled per-request
 /// samples, and `served_s` is the fleet clock (max over lane clocks —
 /// boards run in parallel).  Sampling is greedy so token streams are
 /// comparable across shard counts (the sim backend derives logits from
@@ -351,7 +361,7 @@ pub fn flightllm_serve_sharded(
     target: &Target,
     trace: Vec<crate::workload::Request>,
     spec: &FleetSpec,
-) -> (Vec<crate::coordinator::ServeStats>, crate::coordinator::ServeStats) {
+) -> (Vec<crate::coordinator::ServeStats>, crate::coordinator::ServeStats, (usize, u64)) {
     use crate::coordinator::{Sampler, SchedulerConfig, ShardedService, SimBackend};
 
     let shards = spec.shards.max(1);
@@ -365,11 +375,16 @@ pub fn flightllm_serve_sharded(
         prefix_cache: spec.prefix_cache,
         ..Default::default()
     };
-    let mut fleet = ShardedService::new(shards, spec.route, cfg, Sampler::greedy(), |_| {
-        SimBackend::with_vocab(target.clone(), spec.vocab.max(2))
-    });
+    let proto = SimBackend::with_vocab(target.clone(), spec.vocab.max(2))
+        .with_max_batch(spec.max_batch.max(1) as u32);
+    let mut fleet =
+        ShardedService::new(shards, spec.route, cfg, Sampler::greedy(), |_| proto.clone())
+            .with_lane_threads(spec.lane_threads.max(1));
     let merged = fleet.run_trace(trace).expect("sim serving is infallible");
-    (fleet.shard_stats(), merged)
+    let pricing = (0..fleet.shards())
+        .map(|i| fleet.backend(i).cost_table_stats())
+        .fold((0usize, 0u64), |(e, f), (le, lf)| (e + le, f + lf));
+    (fleet.shard_stats(), merged, pricing)
 }
 
 /// Fig. 14's three rungs, normalized against a V100S-opt baseline the
@@ -744,11 +759,14 @@ mod tests {
                 kv_pages_per_shard: 64,
                 prefix_cache: false,
                 vocab: 64,
+                lane_threads: shards,
             };
             flightllm_serve_sharded(&t, generate_overload_trace(&cfg), &spec)
         };
-        let (_, single) = run(1);
-        let (per_shard, fleet) = run(2);
+        let (_, single, _) = run(1);
+        let (per_shard, fleet, (entries, fallbacks)) = run(2);
+        assert!(entries > 0, "lanes carry dense pricing tables");
+        assert_eq!(fallbacks, 0, "a max_batch-sized table never falls back");
         assert_eq!(single.results.len(), 12);
         assert_eq!(fleet.results.len(), 12);
         assert_eq!(per_shard.len(), 2);
@@ -803,11 +821,12 @@ mod tests {
                 kv_pages_per_shard: 128,
                 prefix_cache: true,
                 vocab: 64,
+                lane_threads: 2,
             };
             flightllm_serve_sharded(&t, crate::workload::generate_shared_prefix_trace(&cfg), &spec)
         };
-        let (_, rr) = run(RoutePolicy::RoundRobin);
-        let (_, affine) = run(RoutePolicy::PrefixAffinity);
+        let (_, rr, _) = run(RoutePolicy::RoundRobin);
+        let (_, affine, _) = run(RoutePolicy::PrefixAffinity);
         assert_eq!(rr.results.len(), 16);
         assert_eq!(affine.results.len(), 16);
         assert!(affine.prefix_hits > 0, "shared prefixes must hit");

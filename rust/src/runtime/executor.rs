@@ -240,7 +240,9 @@ impl crate::coordinator::ModelBackend for RuntimeBackend {
                     self.cached_tokens_reported += *cached_ctx as u64;
                     let out = self.rt.prefill(prompt)?;
                     self.kv.insert(slot.seq, out.kv);
-                    logits.push(Some(out.logits));
+                    // Real numerics: the full dense row (the compact
+                    // Peak form is for synthetic backends only).
+                    logits.push(Some(crate::coordinator::Logits::Dense(out.logits)));
                 }
                 SeqWork::Decode { last, pos } => {
                     let kv = self
@@ -249,7 +251,7 @@ impl crate::coordinator::ModelBackend for RuntimeBackend {
                         .ok_or_else(|| anyhow!("no KV state for sequence {}", slot.seq))?;
                     let out = self.rt.decode(*last, kv, *pos)?;
                     self.kv.insert(slot.seq, out.kv);
-                    logits.push(Some(out.logits));
+                    logits.push(Some(crate::coordinator::Logits::Dense(out.logits)));
                 }
             }
         }

@@ -271,6 +271,80 @@ pub fn generate_overload_trace(cfg: &OverloadConfig) -> Vec<Request> {
         .collect()
 }
 
+/// A day-scale open-loop workload: long-horizon Poisson arrivals whose
+/// rate follows a diurnal curve — `base_rate_per_s` in the overnight
+/// trough, `peak_rate_per_s` at midday, one full cosine cycle over the
+/// horizon.  This is the fleet-scale trace the serving bench and the
+/// SLO/autoscaling work share, so every consumer prices the same
+/// arrival process instead of hand-rolling loops.
+#[derive(Debug, Clone)]
+pub struct DayTraceConfig {
+    /// Trace length in seconds (a day by default).
+    pub horizon_s: f64,
+    /// Arrival rate at the trough (req/s).
+    pub base_rate_per_s: f64,
+    /// Arrival rate at the peak (req/s); clamped to ≥ base.
+    pub peak_rate_per_s: f64,
+    pub prompt_len_choices: Vec<u32>,
+    pub decode_len_choices: Vec<u32>,
+    pub vocab: u32,
+    pub seed: u64,
+}
+
+impl Default for DayTraceConfig {
+    fn default() -> Self {
+        Self {
+            horizon_s: 86_400.0,
+            base_rate_per_s: 0.5,
+            peak_rate_per_s: 4.0,
+            prompt_len_choices: vec![16, 32, 64],
+            decode_len_choices: vec![16, 32],
+            vocab: 512,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a day-scale diurnal trace (deterministic per seed, strictly
+/// increasing arrivals).  Implemented by Poisson THINNING: candidate
+/// arrivals are drawn at the peak rate, then each is kept with
+/// probability `rate(t) / peak` — the standard exact sampler for an
+/// inhomogeneous Poisson process, and it reuses the seeded `Rng`
+/// end to end.
+pub fn generate_day_trace(cfg: &DayTraceConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let base = cfg.base_rate_per_s.max(0.0);
+    let peak = cfg.peak_rate_per_s.max(base).max(1e-9);
+    let vocab = cfg.vocab.max(2) as u64;
+    let prompts =
+        if cfg.prompt_len_choices.is_empty() { vec![32] } else { cfg.prompt_len_choices.clone() };
+    let decodes =
+        if cfg.decode_len_choices.is_empty() { vec![16] } else { cfg.decode_len_choices.clone() };
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        t += rng.exp(peak);
+        if t >= cfg.horizon_s {
+            break;
+        }
+        // Diurnal rate: trough at the horizon's endpoints (cos phase 0
+        // and τ), peak at midday (phase π).
+        let phase = (std::f64::consts::TAU * t / cfg.horizon_s).cos();
+        let rate = base + (peak - base) * 0.5 * (1.0 - phase);
+        if rng.f64() * peak > rate {
+            continue;
+        }
+        let plen = *rng.choose(&prompts);
+        out.push(Request {
+            id: out.len() as u64,
+            arrival_s: t,
+            prompt: (0..plen).map(|_| rng.below(vocab) as u32).collect(),
+            max_new_tokens: (*rng.choose(&decodes)).max(1),
+        });
+    }
+    out
+}
+
 /// A burst: `n` identical-shape requests all arriving at t = 0 — the
 /// Fig. 15 multibatch scenario pushed through the serving path, and the
 /// worst-case admission pressure for the continuous-batching engine.
@@ -414,6 +488,70 @@ mod tests {
         }
         let budgets: Vec<u32> = a.iter().map(|r| r.max_new_tokens).collect();
         assert_eq!(budgets, vec![48, 64, 96, 48, 64, 96], "cycled decode budgets");
+    }
+
+    /// Satellite: the day trace is deterministic per seed, stays inside
+    /// its horizon with strictly increasing arrivals, and draws lengths
+    /// from the configured choices.
+    #[test]
+    fn day_trace_deterministic_and_in_horizon() {
+        let cfg = DayTraceConfig {
+            horizon_s: 500.0,
+            base_rate_per_s: 0.5,
+            peak_rate_per_s: 4.0,
+            seed: 7,
+            ..Default::default()
+        };
+        let a = generate_day_trace(&cfg);
+        let b = generate_day_trace(&cfg);
+        assert!(!a.is_empty(), "a 500 s horizon at ≥0.5 req/s yields requests");
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.prompt, y.prompt, "deterministic per seed");
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert!(x.arrival_s < cfg.horizon_s);
+            assert!(cfg.prompt_len_choices.contains(&(x.prompt.len() as u32)));
+            assert!(cfg.decode_len_choices.contains(&x.max_new_tokens));
+        }
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "ids are dense in arrival order");
+        }
+        for w in a.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s, "strictly increasing arrivals");
+        }
+    }
+
+    /// Satellite: the diurnal curve is real — the midday window carries
+    /// several times the traffic of the trough windows at the horizon's
+    /// edges.
+    #[test]
+    fn day_trace_rate_curve_peaks_at_midday() {
+        let cfg = DayTraceConfig {
+            horizon_s: 2000.0,
+            base_rate_per_s: 0.25,
+            peak_rate_per_s: 4.0,
+            seed: 13,
+            ..Default::default()
+        };
+        let trace = generate_day_trace(&cfg);
+        let count_in = |lo: f64, hi: f64| {
+            trace.iter().filter(|r| r.arrival_s >= lo && r.arrival_s < hi).count()
+        };
+        let edge = count_in(0.0, 250.0) + count_in(1750.0, 2000.0);
+        let mid = count_in(875.0, 1375.0);
+        assert!(
+            mid as f64 > 3.0 * edge.max(1) as f64,
+            "midday window must dominate the troughs: mid={mid} edge={edge}"
+        );
+    }
+
+    /// A degenerate horizon yields an empty trace, not a hang.
+    #[test]
+    fn day_trace_zero_horizon_is_empty() {
+        let cfg = DayTraceConfig { horizon_s: 0.0, ..Default::default() };
+        assert!(generate_day_trace(&cfg).is_empty());
     }
 
     #[test]
