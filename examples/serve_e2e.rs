@@ -29,6 +29,10 @@
 //!    streams, strictly better P99 TTFT, per-shard + merged summaries
 //!    — plus prefix-affinity vs round-robin hit rates on a
 //!    shared-prefix trace with per-shard prefix caches.
+//! 8. The flight recorder: the overload trace re-served with the event
+//!    ring installed — bit-identical stats, a Perfetto trace that
+//!    parses back through `util::Json`, and the run's Prometheus
+//!    metrics out of `ServeStats::metrics_registry`.
 //!
 //! Before any serving, the static verifier checks every instruction
 //! stream the simulated target can execute (occupancy, addresses,
@@ -43,9 +47,10 @@ use flightllm::coordinator::{
     RoutePolicy, Sampler, SchedulerConfig, Server, Service, SimBackend, StreamEvent,
 };
 use flightllm::experiments::{
-    flightllm_overload_three_way, flightllm_serve_chunk_sweep, flightllm_serve_prefix,
-    flightllm_serve_sharded, FleetSpec,
+    flightllm_overload_three_way, flightllm_serve_chunk_sweep, flightllm_serve_overload_recorded,
+    flightllm_serve_prefix, flightllm_serve_sharded, FleetSpec,
 };
+use flightllm::obs::perfetto_trace;
 use flightllm::workload::{
     generate_overload_trace, generate_shared_prefix_trace, generate_trace, MixedBurstConfig,
     OverloadConfig, Request, SharedPrefixConfig, TraceConfig,
@@ -337,6 +342,46 @@ fn main() -> anyhow::Result<()> {
         affine.prefix_hit_rate() * 100.0,
         rr.prefix_hit_rate() * 100.0
     );
+
+    // -- Section 8: the flight recorder ---------------------------------
+    println!("\n== flight recorder: events, Perfetto export, metrics registry ==");
+    let (rec_stats, rec_log) =
+        flightllm_serve_overload_recorded(&t, &ov, 3, 12, true, None, true);
+    assert_eq!(
+        rec_stats.served_s.to_bits(),
+        swapped.served_s.to_bits(),
+        "recording must not move the virtual clock"
+    );
+    let log = rec_log.expect("recording was on");
+    assert_eq!(log.dropped, 0, "the ring holds the whole run");
+    println!(
+        "recorded {} events on lane {}: {} steps, {} prefill chunks, {} preemptions, \
+         {} swap-outs / {} swap-ins, {} retired",
+        log.events.len(),
+        log.lane,
+        log.count("step"),
+        log.count("prefill_chunk"),
+        log.count("preempted"),
+        log.count("swap_out"),
+        log.count("swap_in"),
+        log.count("retired"),
+    );
+    assert_eq!(log.count("retired"), 6, "swap completes every request");
+    assert!(log.count("preempted") > 0 && log.count("swap_out") > 0);
+    let trace_json = perfetto_trace(std::slice::from_ref(&log)).to_string_pretty();
+    let parsed = flightllm::util::Json::parse(&trace_json).expect("trace JSON parses");
+    let n_trace_events =
+        parsed.get("traceEvents").and_then(flightllm::util::Json::as_arr).unwrap().len();
+    println!("Perfetto trace: {n_trace_events} trace events ({} bytes JSON)", trace_json.len());
+    let registry = rec_stats.metrics_registry();
+    let prom = registry.prometheus_text();
+    assert!(prom.contains("flightllm_requests_completed_total 6\n"));
+    println!(
+        "metrics registry: {} Prometheus lines, e.g. flightllm_preemptions_total {}",
+        prom.lines().count(),
+        registry.counter("flightllm_preemptions_total"),
+    );
+
     println!("serve_e2e OK");
     Ok(())
 }

@@ -8,6 +8,9 @@
 //!   path (the PR-7 hot-path speedup)
 //! - 8-shard fleet over a day-scale diurnal trace, sequential vs
 //!   parallel lane ticks (byte-identical streams asserted)
+//! - flight-recorder overhead on the serving path: the same trace
+//!   served recorder-off vs recorder-on (min-of-N walls, bit-identical
+//!   stats asserted; full mode enforces <5% overhead)
 //!
 //! Run: cargo bench --bench sim_hotpath
 //! `SIM_HOTPATH_SMOKE=1` shrinks every rep count so CI can run the
@@ -19,14 +22,15 @@ use std::time::Instant;
 use flightllm::compiler::{lower, CompilerOptions, CountSink, VecSink};
 use flightllm::config::Target;
 use flightllm::coordinator::{
-    Logits, ModelBackend, RoutePolicy, Sampler, SchedulerConfig, SeqSlot, SeqWork, ShardedService,
-    SimBackend,
+    Logits, ModelBackend, RoutePolicy, Sampler, SchedulerConfig, SeqSlot, SeqWork, Server,
+    ShardedService, SimBackend,
 };
 use flightllm::ir::{passes, Graph, Stage};
 use flightllm::isa::{decode_stream, encode_stream};
+use flightllm::obs::Recorder;
 use flightllm::sim::Engine;
 use flightllm::util::Json;
-use flightllm::workload::{generate_day_trace, DayTraceConfig};
+use flightllm::workload::{generate_day_trace, generate_trace, DayTraceConfig, TraceConfig};
 
 fn main() {
     let smoke = std::env::var("SIM_HOTPATH_SMOKE").is_ok();
@@ -191,6 +195,79 @@ fn main() {
         par_stats.served_s,
     );
 
+    // --- flight-recorder overhead on the serving path -----------------
+    // The same burst trace through the same Server twice per round:
+    // recorder off, then on (bounded ring; every emission only READS
+    // engine state).  Min-of-N walls absorb scheduler noise; the stats
+    // must come out bit-identical, which is the recorder's contract.
+    let rec_target = Target::u280_tiny();
+    let rec_trace = generate_trace(&TraceConfig {
+        n_requests: if smoke { 64 } else { 512 },
+        vocab: 64,
+        prompt_len_choices: vec![16, 32, 64],
+        decode_len_choices: vec![16, 32],
+        rate_per_s: 1e6, // near-simultaneous: the engine loop is the cost
+        ..Default::default()
+    });
+    let rec_cfg = SchedulerConfig {
+        max_batch: 8,
+        kv_pages: 512,
+        page_tokens: 16,
+        max_seq: 256,
+        ..Default::default()
+    };
+    let serve_once = |record: bool| {
+        let backend = SimBackend::with_vocab(rec_target.clone(), 64).with_max_batch(8);
+        let mut server = Server::new(backend, rec_cfg.clone(), Sampler::greedy());
+        if record {
+            server.set_recorder(Recorder::new());
+        }
+        let t0 = Instant::now();
+        let stats = server.run_trace(rec_trace.clone()).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let events = server.take_event_log().map_or(0, |l| l.events.len());
+        (stats, wall, events)
+    };
+    let rounds = if smoke { 3 } else { 7 };
+    let (mut base_wall, mut rec_wall) = (f64::INFINITY, f64::INFINITY);
+    let (mut base_stats, mut rec_stats, mut rec_events) = (None, None, 0usize);
+    for _ in 0..rounds {
+        let (s, w, _) = serve_once(false);
+        base_wall = base_wall.min(w);
+        base_stats = Some(s);
+        let (s, w, e) = serve_once(true);
+        rec_wall = rec_wall.min(w);
+        rec_stats = Some(s);
+        rec_events = e;
+    }
+    let (base_stats, rec_stats) = (base_stats.unwrap(), rec_stats.unwrap());
+    assert_eq!(
+        base_stats.served_s.to_bits(),
+        rec_stats.served_s.to_bits(),
+        "recording must not move the virtual clock"
+    );
+    assert_eq!(base_stats.steps, rec_stats.steps);
+    for (a, b) in base_stats.results.iter().zip(&rec_stats.results) {
+        assert_eq!(a.tokens, b.tokens, "recording must not change token streams");
+    }
+    let recorder_overhead = rec_wall / base_wall;
+    println!(
+        "recorder overhead ({} requests, {} events): {:.2} ms off, {:.2} ms on \
+         ({recorder_overhead:.3}x, min of {rounds} rounds)",
+        rec_trace.len(),
+        rec_events,
+        base_wall * 1e3,
+        rec_wall * 1e3,
+    );
+    if !smoke {
+        // Smoke rounds are too short to time honestly; the full bench
+        // enforces the acceptance bound.
+        assert!(
+            recorder_overhead < 1.05,
+            "flight recorder must cost <5% on the serving step loop, got {recorder_overhead:.3}x"
+        );
+    }
+
     // --- JSON trajectory ----------------------------------------------
     let json = Json::obj(vec![
         ("bench", Json::str("sim_hotpath")),
@@ -228,6 +305,17 @@ fn main() {
                 ("parallel_speedup", Json::num(seq_wall / par_wall)),
                 ("served_s", Json::num(par_stats.served_s)),
                 ("steps", Json::num(par_stats.steps as f64)),
+            ]),
+        ),
+        (
+            "recorder_overhead",
+            Json::obj(vec![
+                ("requests", Json::num(rec_trace.len() as f64)),
+                ("rounds", Json::num(rounds as f64)),
+                ("events", Json::num(rec_events as f64)),
+                ("base_wall_s", Json::num(base_wall)),
+                ("recorded_wall_s", Json::num(rec_wall)),
+                ("overhead_x", Json::num(recorder_overhead)),
             ]),
         ),
     ]);

@@ -7,6 +7,7 @@
 //!                    [--prefill-chunk N] [--live] [--rate R]
 //!                    [--swap] [--swap-gbps G]
 //!                    [--shards N] [--route rr|load|prefix] [--lane-threads N]
+//!                    [--trace-out FILE] [--metrics-out FILE]
 //! flightllm simulate [--model llama2|opt] [--platform u280|vhk158]
 //!                    [--prefill N] [--decode N]
 //! flightllm report   [--what storage|resources|efficiency]
@@ -62,12 +63,22 @@
 //! (stage, bucket, batch) cost points the backend's dense table holds
 //! and how many pricings missed it (fell back to a lazily-memoised sim
 //! run), so out-of-table pricing is visible instead of silently slow.
+//!
+//! `serve --trace-out FILE` installs the flight recorder and exports
+//! the run as a Chrome/Perfetto `trace_events` timeline (open it in
+//! ui.perfetto.dev): one track per shard lane with a slice per engine
+//! step (prefill/decode/mixed), an async span per request lifetime,
+//! and counter tracks for the KV footprint, queue depth and swap
+//! traffic.  `--metrics-out FILE` writes the run's
+//! `ServeStats::metrics_registry` as Prometheus text exposition.  Both
+//! apply to the default and `--shards` sim serve modes.
 
 use crate::baselines::{GpuStack, GpuSystem};
 use crate::config::{ModelConfig, Target};
 use crate::coordinator::{Sampler, SchedulerConfig, Server, SimBackend};
 use crate::experiments::flightllm_full;
 use crate::metrics::{format_table, EvalPoint};
+use crate::obs::{perfetto_trace, EventLog, Recorder};
 use crate::workload::{generate_trace, TraceConfig};
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -91,11 +102,29 @@ fn has_flag(args: &[String], key: &str) -> bool {
     args.iter().any(|a| a == key)
 }
 
+/// Write an observability artifact; reports and returns false on IO
+/// failure so the caller can exit nonzero.
+fn write_text(path: &str, contents: &str) -> bool {
+    match std::fs::write(path, contents) {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!("failed to write {path}: {e}");
+            false
+        }
+    }
+}
+
+/// Serialize drained event logs as a pretty-printed Perfetto trace.
+fn trace_json(logs: &[EventLog]) -> String {
+    perfetto_trace(logs).to_string_pretty() + "\n"
+}
+
 const USAGE: &str = "usage: flightllm <serve|simulate|report> [flags]
   serve    --backend runtime|sim --artifacts DIR --requests N --batch N --temp T
            --model llama2|opt|tiny --platform u280|vhk158 [--prefix-cache]
            [--prefill-chunk N] [--live] [--rate R] [--swap] [--swap-gbps G]
            [--shards N] [--route rr|load|prefix] [--lane-threads N]
+           [--trace-out FILE] [--metrics-out FILE]
   simulate --model llama2|opt --platform u280|vhk158 --prefill N --decode N
   report   --what storage|resources|efficiency
   verify   [--model llama2|opt|tiny] [--platform u280|vhk158]";
@@ -179,6 +208,8 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
     let chunk = flag_u64(args, "--prefill-chunk", 0) as usize;
     let max_seq = t.model.max_seq as usize;
     let vocab = (t.model.vocab as u32).min(512);
+    let trace_out = flag(args, "--trace-out");
+    let metrics_out = flag(args, "--metrics-out");
     let shards = flag_u64(args, "--shards", 1) as usize;
     if shards > 1 || flag(args, "--route").is_some() {
         use crate::coordinator::RoutePolicy;
@@ -211,7 +242,20 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         }
         // 0 = the default: one worker thread per lane.
         let lane_threads = flag_u64(args, "--lane-threads", 0) as usize;
-        return cmd_serve_sim_sharded(&t, n, batch, vocab, shards.max(2), route, lane_threads);
+        let fleet = FleetArgs { shards: shards.max(2), route, lane_threads };
+        return cmd_serve_sim_sharded(&t, n, batch, vocab, &fleet, trace_out, metrics_out);
+    }
+    if trace_out.is_some() || metrics_out.is_some() {
+        // The remaining sub-modes run several comparison traces; there
+        // is no single run to export, so the flags only apply to the
+        // default offline path below and to --shards above.
+        if has_flag(args, "--live") || has_flag(args, "--swap") || has_flag(args, "--prefix-cache")
+        {
+            eprintln!(
+                "note: --trace-out/--metrics-out are ignored with --live/--swap/--prefix-cache \
+                 (they export the default and --shards serve modes)"
+            );
+        }
     }
     if has_flag(args, "--live") {
         if has_flag(args, "--swap") {
@@ -266,13 +310,36 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
         },
         sampler,
     );
+    if trace_out.is_some() {
+        server.set_recorder(Recorder::new());
+    }
     match server.run_trace(trace) {
         Ok(stats) => {
             println!("sim-served {name} (virtual accelerator clock):");
             println!("{}", stats.summary("virtual"));
             let (entries, fallbacks) = server.backend().cost_table_stats();
             println!("step pricing: {entries} dense table entries, {fallbacks} fallback pricings");
-            0
+            let mut code = 0;
+            if let Some(path) = trace_out {
+                if let Some(rec) = server.recorder() {
+                    server.backend().record_cost_model(rec, 0, stats.served_s);
+                }
+                let logs: Vec<EventLog> = server.take_event_log().into_iter().collect();
+                let events: usize = logs.iter().map(|l| l.events.len()).sum();
+                if write_text(path, &trace_json(&logs)) {
+                    println!("wrote Perfetto trace ({events} events) to {path}");
+                } else {
+                    code = 1;
+                }
+            }
+            if let Some(path) = metrics_out {
+                if write_text(path, &stats.metrics_registry().prometheus_text()) {
+                    println!("wrote Prometheus metrics to {path}");
+                } else {
+                    code = 1;
+                }
+            }
+            code
         }
         Err(e) => {
             eprintln!("serving failed: {e:#}");
@@ -405,27 +472,38 @@ fn cmd_serve_sim_swap(t: &Target, n: usize, batch: usize, vocab: u32, gbps: Opti
     0
 }
 
+/// Fleet geometry flags for the `--shards` mode, bundled.
+#[derive(Clone, Copy)]
+struct FleetArgs {
+    shards: usize,
+    route: crate::coordinator::RoutePolicy,
+    lane_threads: usize,
+}
+
 /// The `--shards` mode: the same trace served on one board and on an
 /// N-shard fleet with the chosen routing policy — per-shard and merged
 /// summaries through the one `ServeStats` printer, plus the P99 TTFT
 /// delta the replication buys.  `--route prefix` switches to a
 /// shared-prefix trace with per-shard prefix caches and adds the
-/// round-robin hit rate for comparison.
+/// round-robin hit rate for comparison.  `--trace-out` records the
+/// N-shard run (one Perfetto track per lane); `--metrics-out` exports
+/// the merged fleet stats.
 fn cmd_serve_sim_sharded(
     t: &Target,
     n: usize,
     batch: usize,
     vocab: u32,
-    shards: usize,
-    route: crate::coordinator::RoutePolicy,
-    lane_threads: usize,
+    fleet_args: &FleetArgs,
+    trace_out: Option<&str>,
+    metrics_out: Option<&str>,
 ) -> i32 {
     use crate::coordinator::RoutePolicy;
-    use crate::experiments::{flightllm_serve_sharded, FleetSpec};
+    use crate::experiments::{flightllm_serve_sharded_recorded, FleetSpec};
     use crate::workload::{
         generate_overload_trace, generate_shared_prefix_trace, OverloadConfig, SharedPrefixConfig,
     };
 
+    let FleetArgs { shards, route, lane_threads } = *fleet_args;
     let prefix_route = route == RoutePolicy::PrefixAffinity;
     let trace = if prefix_route {
         let cfg = SharedPrefixConfig {
@@ -457,7 +535,7 @@ fn cmd_serve_sim_sharded(
         );
         generate_overload_trace(&cfg)
     };
-    let run = |shards: usize, route: RoutePolicy| {
+    let run = |shards: usize, route: RoutePolicy, record: bool| {
         let spec = FleetSpec {
             shards,
             route,
@@ -468,12 +546,12 @@ fn cmd_serve_sim_sharded(
             // 0 = default: one worker per lane.
             lane_threads: if lane_threads == 0 { shards } else { lane_threads },
         };
-        flightllm_serve_sharded(t, trace.clone(), &spec)
+        flightllm_serve_sharded_recorded(t, trace.clone(), &spec, record)
     };
-    let (_, single, _) = run(1, route);
+    let (_, single, _, _) = run(1, route, false);
     println!("-- 1 board --");
     println!("{}", single.summary("virtual"));
-    let (per_shard, fleet, (entries, fallbacks)) = run(shards, route);
+    let (per_shard, fleet, (entries, fallbacks), logs) = run(shards, route, trace_out.is_some());
     for (i, s) in per_shard.iter().enumerate() {
         println!("-- shard {i}/{shards} --");
         println!("{}", s.summary("virtual"));
@@ -489,14 +567,30 @@ fn cmd_serve_sim_sharded(
         fleet.served_s
     );
     if prefix_route {
-        let (_, rr, _) = run(shards, RoutePolicy::RoundRobin);
+        let (_, rr, _, _) = run(shards, RoutePolicy::RoundRobin, false);
         println!(
             "prefix affinity: {:.0}% hit rate vs {:.0}% under round-robin",
             fleet.prefix_hit_rate() * 100.0,
             rr.prefix_hit_rate() * 100.0
         );
     }
-    0
+    let mut code = 0;
+    if let Some(path) = trace_out {
+        let events: usize = logs.iter().map(|l| l.events.len()).sum();
+        if write_text(path, &trace_json(&logs)) {
+            println!("wrote Perfetto trace ({} lanes, {events} events) to {path}", logs.len());
+        } else {
+            code = 1;
+        }
+    }
+    if let Some(path) = metrics_out {
+        if write_text(path, &fleet.metrics_registry().prometheus_text()) {
+            println!("wrote Prometheus metrics to {path}");
+        } else {
+            code = 1;
+        }
+    }
+    code
 }
 
 /// The `--prefix-cache` mode: one shared-prefix trace, served twice
@@ -809,6 +903,65 @@ mod tests {
             ])),
             0
         );
+    }
+
+    /// `--trace-out`/`--metrics-out` on the default offline path: the
+    /// trace parses back through `util::Json` with a non-empty
+    /// `traceEvents` array, and the metrics file is Prometheus text.
+    #[test]
+    fn serve_sim_writes_trace_and_metrics() {
+        let dir = std::env::temp_dir();
+        let trace_path = dir.join(format!("flightllm_cli_trace_{}.json", std::process::id()));
+        let metrics_path = dir.join(format!("flightllm_cli_metrics_{}.txt", std::process::id()));
+        let trace_arg = trace_path.to_str().unwrap().to_string();
+        let metrics_arg = metrics_path.to_str().unwrap().to_string();
+        assert_eq!(
+            run(&s(&[
+                "flightllm", "serve", "--backend", "sim", "--model", "tiny",
+                "--requests", "3", "--batch", "2",
+                "--trace-out", &trace_arg, "--metrics-out", &metrics_arg,
+            ])),
+            0
+        );
+        let trace = std::fs::read_to_string(&trace_path).unwrap();
+        let json = crate::util::Json::parse(&trace).unwrap();
+        let events = json.get("traceEvents").and_then(crate::util::Json::as_arr).unwrap();
+        assert!(!events.is_empty(), "the trace must carry events");
+        assert!(
+            events.iter().all(|e| e.get("ph").and_then(crate::util::Json::as_str).is_some()),
+            "every trace event carries a phase"
+        );
+        let metrics = std::fs::read_to_string(&metrics_path).unwrap();
+        assert!(metrics.contains("# TYPE flightllm_requests_completed_total counter"));
+        assert!(metrics.contains("flightllm_requests_completed_total 3\n"));
+        let _ = std::fs::remove_file(&trace_path);
+        let _ = std::fs::remove_file(&metrics_path);
+    }
+
+    /// The sharded mode exports too: one Perfetto track per lane.
+    #[test]
+    fn serve_sim_sharded_writes_trace() {
+        let dir = std::env::temp_dir();
+        let trace_path =
+            dir.join(format!("flightllm_cli_fleet_trace_{}.json", std::process::id()));
+        let trace_arg = trace_path.to_str().unwrap().to_string();
+        assert_eq!(
+            run(&s(&[
+                "flightllm", "serve", "--backend", "sim", "--model", "tiny",
+                "--requests", "8", "--batch", "2", "--shards", "2",
+                "--trace-out", &trace_arg,
+            ])),
+            0
+        );
+        let trace = std::fs::read_to_string(&trace_path).unwrap();
+        let json = crate::util::Json::parse(&trace).unwrap();
+        let lanes = json
+            .get("otherData")
+            .and_then(|o| o.get("lanes"))
+            .and_then(crate::util::Json::as_u64)
+            .unwrap();
+        assert_eq!(lanes, 2, "one recorded track per fleet lane");
+        let _ = std::fs::remove_file(&trace_path);
     }
 
     #[test]

@@ -52,6 +52,7 @@ use std::sync::mpsc::{self, Receiver, Sender};
 
 use anyhow::Result;
 
+use crate::obs::{EventLog, Recorder};
 use crate::workload::Request;
 
 use super::kv_cache::{chain_hash, PREFIX_HASH_SEED};
@@ -169,6 +170,31 @@ impl<B: ModelBackend> ShardedService<B> {
     pub fn with_lane_threads(mut self, n: usize) -> Self {
         self.lane_threads = n.max(1);
         self
+    }
+
+    /// Install one flight recorder PER LANE (ring of `capacity` events
+    /// each, tagged with the lane index).  Lanes never share a
+    /// recorder, so the scoped lane workers record without
+    /// synchronization and parallel ticking stays byte-identical to
+    /// sequential.  Drain with [`ShardedService::take_event_logs`].
+    pub fn with_recording(mut self, capacity: usize) -> Self {
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            lane.set_recorder(Some(Recorder::with_capacity(capacity).for_lane(i as u32)));
+        }
+        self
+    }
+
+    /// Drain every lane's event ring, ordered by lane index.  Empty
+    /// when recording was never enabled.
+    pub fn take_event_logs(&mut self) -> Vec<EventLog> {
+        self.lanes.iter_mut().filter_map(EngineCore::take_event_log).collect()
+    }
+
+    /// One lane's flight recorder, if recording is enabled — lets a
+    /// caller land backend-specific events (e.g. the `SimBackend` cost
+    /// table stats) on the lane's ring before draining it.
+    pub fn recorder(&self, shard: usize) -> Option<&Recorder> {
+        self.lanes[shard].recorder()
     }
 
     pub fn shards(&self) -> usize {

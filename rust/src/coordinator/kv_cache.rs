@@ -219,6 +219,13 @@ impl PagePool {
         self.stats
     }
 
+    /// Report cumulative swap-tier traffic to the flight recorder,
+    /// which emits `SwapOut`/`SwapIn` deltas against its last sample.
+    /// Read-only: recording never changes pool state.
+    pub fn record_swap_traffic(&self, rec: &crate::obs::Recorder, now_s: f64) {
+        rec.swap_totals(now_s, self.stats.swapped_out_pages, self.stats.swapped_in_pages);
+    }
+
     /// Pages needed to hold `tokens` tokens at this pool's geometry.
     pub fn pages_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.page_tokens)

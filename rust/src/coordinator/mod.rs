@@ -109,6 +109,24 @@
 //!    are byte-identical to sequential ticking, asserted in the fleet
 //!    equivalence test.
 //!
+//! 8. **Observability** ([`crate::obs`]): the flight recorder.  Every
+//!    layer above accepts an optional [`crate::obs::Recorder`] — a
+//!    bounded per-lane event ring stamped on the serving virtual
+//!    clock.  The scheduler records admissions, the engine core records
+//!    request lifecycles (submitted → admitted → prefill chunks → first
+//!    token → retired, plus preempt/cancel/reject paths), the page pool
+//!    reports cumulative swap traffic, and each step lands a `Step`
+//!    event with phase/batch/KV-footprint/queue-depth.  Recording only
+//!    READS engine state, so token streams and `ServeStats` are
+//!    bit-identical with the recorder on or off (asserted in the golden
+//!    sequence test and the overload/sharded acceptance tests).  Drained
+//!    `EventLog`s export as a Chrome/Perfetto `trace_events` timeline
+//!    (`obs::perfetto_trace`, one track per shard lane), and
+//!    `ServeStats::metrics_registry` projects the same run into an
+//!    `obs::MetricsRegistry` (Prometheus text exposition) — the summary
+//!    printer reads from the registry, so the human and machine views
+//!    can never disagree.
+//!
 //! Below the backend boundary, every instruction stream the `SimBackend`
 //! executes has already passed the [`crate::verify`] static gate: the
 //! simulator's `Engine` prechecks streams against the machine-safety

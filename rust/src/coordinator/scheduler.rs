@@ -41,6 +41,7 @@
 
 use std::collections::VecDeque;
 
+use crate::obs::{Event, Recorder};
 use crate::workload::Request;
 
 use super::kv_cache::PagePool;
@@ -269,6 +270,13 @@ impl Scheduler {
     /// only the uncached prompt suffix: a cached full-page prefix is
     /// shared, not reallocated.
     pub fn schedule(&mut self, now_s: f64) -> Vec<u64> {
+        self.schedule_recorded(now_s, None)
+    }
+
+    /// [`Scheduler::schedule`] with a flight recorder: each admission
+    /// emits `Admitted{cached_tokens}` stamped at `now_s`.  Recording
+    /// reads scheduling state but never influences it.
+    pub fn schedule_recorded(&mut self, now_s: f64, rec: Option<&Recorder>) -> Vec<u64> {
         self.resume_preempted();
         // While anything is still parked in the swap tier, fresh
         // admissions are frozen: a new prompt must not consume the
@@ -285,6 +293,12 @@ impl Scheduler {
                 .pool
                 .admit(req.id, &req.prompt)
                 .expect("can_admit guaranteed admission");
+            if let Some(r) = rec {
+                r.record(
+                    now_s,
+                    Event::Admitted { id: req.id, cached_tokens: outcome.cached_tokens as u32 },
+                );
+            }
             self.running.push(SeqState {
                 req,
                 generated: Vec::new(),
@@ -309,7 +323,13 @@ impl Scheduler {
     /// a long prompt runs as several chunks across iterations instead of
     /// freezing the batch for one monolithic prefill.
     pub fn plan(&mut self, now_s: f64) -> Vec<PlanItem> {
-        let ids = self.schedule(now_s);
+        self.plan_recorded(now_s, None)
+    }
+
+    /// [`Scheduler::plan`] with a flight recorder threaded through
+    /// admission (see [`Scheduler::schedule_recorded`]).
+    pub fn plan_recorded(&mut self, now_s: f64, rec: Option<&Recorder>) -> Vec<PlanItem> {
+        let ids = self.schedule_recorded(now_s, rec);
         let mut remaining = match self.cfg.prefill_chunk {
             0 => usize::MAX,
             n => n,

@@ -29,6 +29,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::obs::registry::LATENCY_BUCKETS_S;
+use crate::obs::{EventLog, MetricsRegistry, Recorder};
 use crate::workload::Request;
 
 use super::sampler::Sampler;
@@ -427,25 +429,80 @@ impl ServeStats {
         self.prefix_hits as f64 / self.admissions as f64
     }
 
+    /// Export this run as a [`MetricsRegistry`]: counters for every
+    /// request outcome and traffic total, gauges for the derived
+    /// rates/percentiles, and fixed-bucket histograms over the
+    /// per-request TTFT/latency and retained ITL samples.  The
+    /// registry is the ONE source for serving numbers: `summary()`
+    /// formats from it and `prometheus_text()` exposes it, so the two
+    /// can never disagree.
+    pub fn metrics_registry(&self) -> MetricsRegistry {
+        let mut m = MetricsRegistry::new();
+        m.help("flightllm_requests_completed_total", "Requests that ran to completion.");
+        m.counter_add("flightllm_requests_completed_total", self.completed().count() as u64);
+        m.counter_add("flightllm_requests_rejected_total", self.rejected);
+        m.counter_add("flightllm_requests_cancelled_total", self.cancelled);
+        m.counter_add("flightllm_requests_truncated_total", self.preempted_truncated() as u64);
+        m.counter_add("flightllm_engine_steps_total", self.steps);
+        m.counter_add("flightllm_mixed_step_decodes_total", self.mixed_decodes);
+        m.counter_add("flightllm_itl_samples_total", self.itl_total);
+        m.counter_add("flightllm_admissions_total", self.admissions);
+        m.counter_add("flightllm_prefix_hits_total", self.prefix_hits);
+        m.counter_add("flightllm_prefix_cached_tokens_total", self.prefix_cached_tokens);
+        m.counter_add("flightllm_preemptions_total", self.preemptions);
+        m.counter_add("flightllm_swapped_out_pages_total", self.swapped_out_pages);
+        m.counter_add("flightllm_swapped_in_pages_total", self.swapped_in_pages);
+        m.counter_add("flightllm_peak_kv_pages", self.peak_kv_pages as u64);
+        m.gauge_set("flightllm_served_seconds", self.served_s);
+        m.gauge_set("flightllm_swap_seconds", self.swap_time_s);
+        m.help("flightllm_decode_tokens_per_second", "Steady-state decode throughput.");
+        m.gauge_set("flightllm_decode_tokens_per_second", self.decode_tps());
+        m.gauge_set("flightllm_mixed_decode_tokens_per_second", self.mixed_decode_tps());
+        m.gauge_set("flightllm_ttft_mean_seconds", self.mean_ttft_s());
+        m.gauge_set("flightllm_ttft_p50_seconds", self.p50_ttft_s());
+        m.gauge_set("flightllm_ttft_p99_seconds", self.p99_ttft_s());
+        m.gauge_set("flightllm_queue_mean_seconds", self.mean_queue_s());
+        m.gauge_set("flightllm_latency_mean_seconds", self.mean_latency_s());
+        m.gauge_set("flightllm_latency_p50_seconds", self.p50_latency_s());
+        m.gauge_set("flightllm_latency_p99_seconds", self.p99_latency_s());
+        m.gauge_set("flightllm_itl_mean_seconds", self.mean_itl_s());
+        m.gauge_set("flightllm_itl_p50_seconds", self.p50_itl_s());
+        m.gauge_set("flightllm_itl_p99_seconds", self.p99_itl_s());
+        m.gauge_set("flightllm_itl_max_seconds", self.max_itl_s());
+        m.gauge_set("flightllm_prefix_hit_ratio", self.prefix_hit_rate());
+        for r in self.completed() {
+            m.observe("flightllm_ttft_seconds", LATENCY_BUCKETS_S, r.ttft_s);
+            m.observe("flightllm_latency_seconds", LATENCY_BUCKETS_S, r.latency_s);
+        }
+        for &gap in &self.itl_s {
+            m.observe("flightllm_itl_seconds", LATENCY_BUCKETS_S, gap);
+        }
+        m
+    }
+
     /// Human-readable summary (one printer for the CLI and examples).
     /// `clock_label` names the serving clock: "virtual" or "measured".
+    /// Every number is read back out of [`ServeStats::metrics_registry`]
+    /// so the summary and the Prometheus exposition share one source.
     pub fn summary(&self, clock_label: &str) -> String {
+        let m = self.metrics_registry();
         let mut out = format!(
             "completed {} requests in {:.3}s {clock_label} ({} engine steps)\n",
-            self.completed().count(),
-            self.served_s,
-            self.steps
+            m.counter("flightllm_requests_completed_total"),
+            m.gauge("flightllm_served_seconds"),
+            m.counter("flightllm_engine_steps_total")
         );
-        if self.rejected > 0 {
+        let rejected = m.counter("flightllm_requests_rejected_total");
+        if rejected > 0 {
             out.push_str(&format!(
-                "rejected {} requests (prompt cannot fit the KV pool)\n",
-                self.rejected
+                "rejected {rejected} requests (prompt cannot fit the KV pool)\n"
             ));
         }
-        if self.cancelled > 0 {
-            out.push_str(&format!("cancelled {} requests (client-initiated)\n", self.cancelled));
+        let cancelled = m.counter("flightllm_requests_cancelled_total");
+        if cancelled > 0 {
+            out.push_str(&format!("cancelled {cancelled} requests (client-initiated)\n"));
         }
-        let truncated = self.preempted_truncated();
+        let truncated = m.counter("flightllm_requests_truncated_total");
         if truncated > 0 {
             out.push_str(&format!(
                 "preempted_truncated {truncated} requests (KV exhausted — excluded from \
@@ -455,53 +512,53 @@ impl ServeStats {
         out.push_str(&format!(
             "decode throughput {:.1} tok/s, mean TTFT {:.1} ms (queue {:.1} ms), \
              mean latency {:.1} ms\n",
-            self.decode_tps(),
-            self.mean_ttft_s() * 1e3,
-            self.mean_queue_s() * 1e3,
-            self.mean_latency_s() * 1e3
+            m.gauge("flightllm_decode_tokens_per_second"),
+            m.gauge("flightllm_ttft_mean_seconds") * 1e3,
+            m.gauge("flightllm_queue_mean_seconds") * 1e3,
+            m.gauge("flightllm_latency_mean_seconds") * 1e3
         ));
-        if self.mixed_decodes > 0 {
+        let mixed = m.counter("flightllm_mixed_step_decodes_total");
+        if mixed > 0 {
             out.push_str(&format!(
-                "mixed-step decodes {} ({:.1} tok/s alongside prefill chunks)\n",
-                self.mixed_decodes,
-                self.mixed_decode_tps()
+                "mixed-step decodes {mixed} ({:.1} tok/s alongside prefill chunks)\n",
+                m.gauge("flightllm_mixed_decode_tokens_per_second")
             ));
         }
         out.push_str(&format!(
             "TTFT P50/P99 {:.1}/{:.1} ms, latency P50/P99 {:.1}/{:.1} ms, \
              peak KV {} pages",
-            self.p50_ttft_s() * 1e3,
-            self.p99_ttft_s() * 1e3,
-            self.p50_latency_s() * 1e3,
-            self.p99_latency_s() * 1e3,
-            self.peak_kv_pages
+            m.gauge("flightllm_ttft_p50_seconds") * 1e3,
+            m.gauge("flightllm_ttft_p99_seconds") * 1e3,
+            m.gauge("flightllm_latency_p50_seconds") * 1e3,
+            m.gauge("flightllm_latency_p99_seconds") * 1e3,
+            m.counter("flightllm_peak_kv_pages")
         ));
-        if !self.itl_s.is_empty() {
+        if m.histogram("flightllm_itl_seconds").is_some_and(|h| h.count() > 0) {
             out.push_str(&format!(
                 "\ndecode ITL mean/P50/P99/max {:.2}/{:.2}/{:.2}/{:.2} ms",
-                self.mean_itl_s() * 1e3,
-                self.p50_itl_s() * 1e3,
-                self.p99_itl_s() * 1e3,
-                self.max_itl_s() * 1e3
+                m.gauge("flightllm_itl_mean_seconds") * 1e3,
+                m.gauge("flightllm_itl_p50_seconds") * 1e3,
+                m.gauge("flightllm_itl_p99_seconds") * 1e3,
+                m.gauge("flightllm_itl_max_seconds") * 1e3
             ));
         }
-        if self.prefix_hits > 0 {
+        let prefix_hits = m.counter("flightllm_prefix_hits_total");
+        if prefix_hits > 0 {
             out.push_str(&format!(
-                "\nprefix cache: {} hits ({:.0}% of admissions), {} prompt tokens \
+                "\nprefix cache: {prefix_hits} hits ({:.0}% of admissions), {} prompt tokens \
                  served from cache",
-                self.prefix_hits,
-                self.prefix_hit_rate() * 100.0,
-                self.prefix_cached_tokens
+                m.gauge("flightllm_prefix_hit_ratio") * 100.0,
+                m.counter("flightllm_prefix_cached_tokens_total")
             ));
         }
-        if self.preemptions > 0 {
+        let preemptions = m.counter("flightllm_preemptions_total");
+        if preemptions > 0 {
             out.push_str(&format!(
-                "\nswap tier: {} preemptions, {} pages out / {} pages in over DDR \
+                "\nswap tier: {preemptions} preemptions, {} pages out / {} pages in over DDR \
                  ({:.1} ms of swap traffic)",
-                self.preemptions,
-                self.swapped_out_pages,
-                self.swapped_in_pages,
-                self.swap_time_s * 1e3
+                m.counter("flightllm_swapped_out_pages_total"),
+                m.counter("flightllm_swapped_in_pages_total"),
+                m.gauge("flightllm_swap_seconds") * 1e3
             ));
         }
         out
@@ -530,6 +587,27 @@ impl<B: ModelBackend> Server<B> {
     /// table stats for the serve summary).
     pub fn backend(&self) -> &B {
         self.core.backend()
+    }
+
+    /// Install a flight recorder.  Every replayed request's lifecycle
+    /// and every engine step lands in its bounded ring; recording only
+    /// READS engine state, so the token streams and `ServeStats` are
+    /// bit-identical with or without one.
+    pub fn set_recorder(&mut self, rec: Recorder) {
+        self.core.set_recorder(Some(rec));
+    }
+
+    /// The installed flight recorder, if any — lets a caller land
+    /// backend-specific events (e.g. the `SimBackend` cost table
+    /// stats) on the ring before draining it.
+    pub fn recorder(&self) -> Option<&Recorder> {
+        self.core.recorder()
+    }
+
+    /// Drain the recorded events (chronological), if a recorder is
+    /// installed.  The recorder stays installed for the next run.
+    pub fn take_event_log(&mut self) -> Option<EventLog> {
+        self.core.take_event_log()
     }
 
     /// Run a whole trace to completion (offline replay: all requests are
@@ -679,6 +757,45 @@ mod tests {
         assert!(stats.p50_ttft_s() < stats.p99_ttft_s(), "spread is visible");
         assert!(stats.p50_latency_s() <= stats.p99_latency_s());
         assert!(stats.p50_ttft_s() > 0.0);
+    }
+
+    /// The metrics registry is the single source the summary formats
+    /// from: headline counters/gauges must round-trip the stats
+    /// helpers exactly, the histograms must hold one sample per
+    /// completion, and the Prometheus exposition must carry the same
+    /// series.
+    #[test]
+    fn metrics_registry_mirrors_stats_and_feeds_summary() {
+        let mut server = Server::new(
+            EchoBackend::new(16),
+            SchedulerConfig { max_batch: 1, max_seq: 64, ..Default::default() },
+            Sampler::greedy(),
+        );
+        let trace = (0..4).map(|i| req(i, 0.0, 4, 4)).collect();
+        let stats = server.run_trace(trace).unwrap();
+        let m = stats.metrics_registry();
+        assert_eq!(m.counter("flightllm_requests_completed_total"), 4);
+        assert_eq!(m.counter("flightllm_engine_steps_total"), stats.steps);
+        assert_eq!(
+            m.gauge("flightllm_decode_tokens_per_second").to_bits(),
+            stats.decode_tps().to_bits()
+        );
+        assert_eq!(
+            m.gauge("flightllm_ttft_p99_seconds").to_bits(),
+            stats.p99_ttft_s().to_bits()
+        );
+        let ttft = m.histogram("flightllm_ttft_seconds").unwrap();
+        assert_eq!(ttft.count(), 4);
+        assert!((ttft.sum() - stats.mean_ttft_s() * 4.0).abs() < 1e-12);
+        let text = m.prometheus_text();
+        assert!(text.contains("flightllm_requests_completed_total 4\n"));
+        assert!(text.contains("flightllm_ttft_seconds_bucket{le=\"+Inf\"} 4\n"));
+        // The summary's headline line formats the same registry values.
+        let summary = stats.summary("virtual");
+        assert!(summary.starts_with(&format!(
+            "completed 4 requests in {:.3}s virtual ({} engine steps)\n",
+            stats.served_s, stats.steps
+        )));
     }
 
     /// Satellite: every percentile/mean helper is well-defined on a

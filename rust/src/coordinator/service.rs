@@ -29,6 +29,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 
+use crate::obs::{Event, EventLog, Phase, Recorder};
 use crate::workload::Request;
 
 use super::sampler::Sampler;
@@ -158,6 +159,10 @@ pub(crate) struct EngineCore<B: ModelBackend> {
     subs: HashMap<u64, Sender<StreamEvent>>,
     /// Cumulative swap pages (out + in) already priced on the clock.
     swap_pages_charged: u64,
+    /// Flight recorder (obs layer).  `None` is the default and costs
+    /// nothing; when installed, every emission only READS engine
+    /// state, so streams and stats are bit-identical either way.
+    recorder: Option<Recorder>,
 }
 
 impl<B: ModelBackend> EngineCore<B> {
@@ -174,7 +179,23 @@ impl<B: ModelBackend> EngineCore<B> {
             last_token_s: HashMap::new(),
             subs: HashMap::new(),
             swap_pages_charged: 0,
+            recorder: None,
         }
+    }
+
+    /// Install (or remove) the flight recorder.
+    pub(crate) fn set_recorder(&mut self, rec: Option<Recorder>) {
+        self.recorder = rec;
+    }
+
+    pub(crate) fn recorder(&self) -> Option<&Recorder> {
+        self.recorder.as_ref()
+    }
+
+    /// Drain the recorder's ring (chronological, recorder stays
+    /// installed).  `None` when no recorder is installed.
+    pub(crate) fn take_event_log(&mut self) -> Option<EventLog> {
+        self.recorder.as_ref().map(Recorder::drain)
     }
 
     pub(crate) fn scheduler(&self) -> &Scheduler {
@@ -208,6 +229,12 @@ impl<B: ModelBackend> EngineCore<B> {
         if !req.arrival_s.is_finite() {
             req.arrival_s = 0.0;
         }
+        if let Some(rec) = &self.recorder {
+            rec.record(
+                req.arrival_s,
+                Event::Submitted { id: req.id, prompt_len: req.prompt.len() as u32 },
+            );
+        }
         self.arrivals.insert(req.id, req.arrival_s);
         if let Some(tx) = sub {
             self.subs.insert(req.id, tx);
@@ -221,6 +248,9 @@ impl<B: ModelBackend> EngineCore<B> {
     /// tokens it generated.  Unknown ids are ignored.
     pub(crate) fn cancel(&mut self, seq: u64) {
         if let Some(req) = self.scheduler.cancel_waiting(seq) {
+            if let Some(rec) = &self.recorder {
+                rec.record(self.clock, Event::Cancelled { id: seq });
+            }
             self.stats.cancelled += 1;
             let arrival = self.arrivals.remove(&seq).unwrap_or(req.arrival_s);
             let result = RequestResult {
@@ -263,6 +293,14 @@ impl<B: ModelBackend> EngineCore<B> {
     /// cancelled out of the swap tier, or terminally unresumable).
     fn finish_state(&mut self, s: SeqState, kind: FinishKind) {
         let seq = s.req.id;
+        if let Some(rec) = &self.recorder {
+            let ev = match kind {
+                FinishKind::Done => Event::Retired { id: seq, tokens: s.generated.len() as u32 },
+                FinishKind::Evicted => Event::Evicted { id: seq },
+                FinishKind::Cancelled => Event::Cancelled { id: seq },
+            };
+            rec.record(self.clock, ev);
+        }
         self.backend.release(seq);
         if kind == FinishKind::Cancelled {
             self.stats.cancelled += 1;
@@ -296,6 +334,12 @@ impl<B: ModelBackend> EngineCore<B> {
     /// already measures whatever the traffic costs, so only the page
     /// counters move.
     fn charge_swap_traffic(&mut self) {
+        // Swap events are derived from the pool's cumulative traffic
+        // counters (the recorder keeps its own last-sample memory), so
+        // the engine holds no recorder-only state.
+        if let Some(rec) = &self.recorder {
+            self.scheduler.pool.record_swap_traffic(rec, self.clock);
+        }
         let ps = self.scheduler.pool.stats();
         let moved = ps.swapped_out_pages + ps.swapped_in_pages;
         let delta = moved.saturating_sub(self.swap_pages_charged);
@@ -316,7 +360,7 @@ impl<B: ModelBackend> EngineCore<B> {
         if now > self.clock {
             self.clock = now;
         }
-        let plan = self.scheduler.plan(self.clock);
+        let plan = self.scheduler.plan_recorded(self.clock, self.recorder.as_ref());
         // A parked sequence whose next decode step exceeds the ENTIRE
         // pool can never resume: terminal eviction, the one eviction
         // mode that survives with swap enabled.
@@ -364,6 +408,9 @@ impl<B: ModelBackend> EngineCore<B> {
                     // prompt can never fit the KV pool.  Reject it
                     // explicitly instead of looping forever.
                     if let Some(req) = self.scheduler.reject_front() {
+                        if let Some(rec) = &self.recorder {
+                            rec.record(self.clock, Event::Rejected { id: req.id });
+                        }
                         self.stats.rejected += 1;
                         self.arrivals.remove(&req.id);
                         if let Some(tx) = self.subs.remove(&req.id) {
@@ -403,6 +450,7 @@ impl<B: ModelBackend> EngineCore<B> {
             })
             .collect();
 
+        let step_start = self.clock;
         let step_wall = Instant::now();
         let out = self.backend.step(&slots)?;
         ensure!(
@@ -439,7 +487,34 @@ impl<B: ModelBackend> EngineCore<B> {
             self.stats.mixed_decodes += n_decode;
             self.stats.mixed_time_s += step_cost_s;
         }
+        if let Some(rec) = &self.recorder {
+            let phase = if n_decode == slots.len() as u64 {
+                Phase::Decode
+            } else if n_decode == 0 {
+                Phase::Prefill
+            } else {
+                Phase::Mixed
+            };
+            rec.record(
+                step_start,
+                Event::Step {
+                    lane: rec.lane(),
+                    phase,
+                    batch: slots.len() as u32,
+                    step_s: step_cost_s,
+                    kv_pages: self.scheduler.pool.used_pages() as u32,
+                    queue_depth: self.scheduler.pending() as u32,
+                },
+            );
+        }
 
+        // Decode appends can park sequences (self-preemption OR a
+        // newest-first victim that is not this slot): diff the parked
+        // set around the loop so every preemption gets an event.
+        let parked_before: Option<Vec<u64>> = self
+            .recorder
+            .as_ref()
+            .map(|_| self.scheduler.preempted().iter().map(|s| s.req.id).collect());
         // Sample each token-yielding slot and stream it; non-final
         // prefill chunks only advance the prefill cursor — their logits
         // row (if a backend supplied one anyway) is never sampled.
@@ -460,12 +535,25 @@ impl<B: ModelBackend> EngineCore<B> {
                 );
             }
             match &slot.work {
-                SeqWork::Prefill { chunk_end, .. } if !slot.work.yields_token() => {
+                SeqWork::Prefill { chunk_start, chunk_end, .. } if !slot.work.yields_token() => {
+                    if let Some(rec) = &self.recorder {
+                        rec.record(
+                            self.clock,
+                            Event::PrefillChunk {
+                                id: slot.seq,
+                                start: *chunk_start as u32,
+                                end: *chunk_end as u32,
+                            },
+                        );
+                    }
                     self.scheduler.on_prefill_chunk(slot.seq, *chunk_end);
                 }
                 SeqWork::Prefill { .. } => {
                     let tok = self.sampler.sample(logits.as_ref().expect("checked above"));
                     self.scheduler.on_prefill_done(slot.seq, tok);
+                    if let Some(rec) = &self.recorder {
+                        rec.record(self.clock, Event::FirstToken { id: slot.seq });
+                    }
                     self.first_token_s.insert(slot.seq, self.clock);
                     self.last_token_s.insert(slot.seq, self.clock);
                     if !self.emit(slot.seq, StreamEvent::Token(tok)) {
@@ -494,6 +582,14 @@ impl<B: ModelBackend> EngineCore<B> {
                             }
                         }
                     }
+                }
+            }
+        }
+        if let Some(before) = parked_before {
+            let rec = self.recorder.as_ref().expect("recorder set when diff captured");
+            for s in self.scheduler.preempted() {
+                if !before.contains(&s.req.id) {
+                    rec.record(self.clock, Event::Preempted { id: s.req.id });
                 }
             }
         }
@@ -594,6 +690,16 @@ impl<B: ModelBackend> Service<B> {
     pub fn stats(&self) -> ServeStats {
         self.core.stats_snapshot()
     }
+
+    /// Install a flight recorder (replacing any existing one).
+    pub fn set_recorder(&mut self, rec: Recorder) {
+        self.core.set_recorder(Some(rec));
+    }
+
+    /// Drain the recorder's event ring; `None` without a recorder.
+    pub fn take_event_log(&mut self) -> Option<EventLog> {
+        self.core.take_event_log()
+    }
 }
 
 /// The real-time front-end: the engine core runs on a background thread
@@ -605,11 +711,26 @@ pub struct LiveService {
     cmd_tx: Sender<Command>,
     next_id: AtomicU64,
     t0: Instant,
-    join: Option<thread::JoinHandle<ServeStats>>,
+    join: Option<thread::JoinHandle<(ServeStats, Option<EventLog>)>>,
 }
 
 impl LiveService {
     pub fn spawn<B>(backend: B, cfg: SchedulerConfig, sampler: Sampler) -> Self
+    where
+        B: ModelBackend + Send + 'static,
+    {
+        Self::spawn_recorded(backend, cfg, sampler, None)
+    }
+
+    /// Spawn with a flight recorder installed on the engine thread;
+    /// the (bounded-ring) event log comes back from
+    /// [`LiveService::shutdown_with_events`].
+    pub fn spawn_recorded<B>(
+        backend: B,
+        cfg: SchedulerConfig,
+        sampler: Sampler,
+        recorder: Option<Recorder>,
+    ) -> Self
     where
         B: ModelBackend + Send + 'static,
     {
@@ -618,6 +739,7 @@ impl LiveService {
         let join = thread::spawn(move || {
             let mode = ClockMode::Real { t0 };
             let mut core = EngineCore::new(backend, Scheduler::new(cfg), sampler, mode);
+            core.set_recorder(recorder);
             let mut shutdown = false;
             loop {
                 while let Ok(cmd) = cmd_rx.try_recv() {
@@ -640,13 +762,22 @@ impl LiveService {
                     // A backend failure or stalled scheduler is fatal for
                     // the engine: report it (outstanding handles resolve
                     // to None) and hand back the stats gathered so far.
+                    // The structured event keeps the error in headless
+                    // runs where stderr is lost.
                     Err(e) => {
+                        if let Some(rec) = core.recorder() {
+                            rec.record(
+                                core.clock_s(),
+                                Event::EngineError { detail: format!("{e:#}") },
+                            );
+                        }
                         eprintln!("live service engine stopped: {e:#}");
                         break;
                     }
                 }
             }
-            core.stats_snapshot()
+            let events = core.take_event_log();
+            (core.stats_snapshot(), events)
         });
         Self { cmd_tx, next_id: AtomicU64::new(0), t0, join: Some(join) }
     }
@@ -668,10 +799,16 @@ impl LiveService {
     /// Drain in-flight requests, stop the engine thread, and return the
     /// final serving stats.
     pub fn shutdown(mut self) -> ServeStats {
+        self.shutdown_inner().map(|(stats, _)| stats).unwrap_or_default()
+    }
+
+    /// Like [`LiveService::shutdown`], also returning the drained
+    /// flight-recorder log (`None` unless spawned with a recorder).
+    pub fn shutdown_with_events(mut self) -> (ServeStats, Option<EventLog>) {
         self.shutdown_inner().unwrap_or_default()
     }
 
-    fn shutdown_inner(&mut self) -> Option<ServeStats> {
+    fn shutdown_inner(&mut self) -> Option<(ServeStats, Option<EventLog>)> {
         let _ = self.cmd_tx.send(Command::Shutdown);
         self.join.take().and_then(|j| j.join().ok())
     }
@@ -1017,6 +1154,73 @@ mod tests {
         let stats = svc.stats();
         assert_eq!(stats.cancelled, 1);
         assert_eq!(stats.preempted_truncated(), 0);
+    }
+
+    /// Tentpole (obs): the flight recorder captures the golden event
+    /// sequence for a deterministic chunked-prefill request, and
+    /// recording leaves tokens and stats bit-identical to a bare run.
+    #[test]
+    fn flight_recorder_golden_sequence_and_invisibility() {
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            max_seq: 64,
+            prefill_chunk: 8,
+            ..Default::default()
+        };
+        let run = |record: bool| {
+            let mut svc = Service::new(EchoBackend::new(32), cfg.clone(), Sampler::greedy());
+            if record {
+                svc.set_recorder(Recorder::new());
+            }
+            let h = svc.submit(req(0, 16, 2));
+            svc.drain().unwrap();
+            let log = svc.take_event_log();
+            (svc.stats(), h.wait().expect("completes"), log)
+        };
+        let (s_off, r_off, log_off) = run(false);
+        let (s_on, r_on, log_on) = run(true);
+        assert!(log_off.is_none(), "no recorder, no log");
+        assert_eq!(r_off.tokens, r_on.tokens, "recording never changes the stream");
+        assert_eq!(s_off.served_s.to_bits(), s_on.served_s.to_bits());
+        assert_eq!(s_off.steps, s_on.steps);
+
+        let log = log_on.expect("recorder installed");
+        assert_eq!(log.dropped, 0);
+        // prompt 16, chunk 8: chunk [0,8), final chunk (first token),
+        // then one decode step reaches the 2-token budget.
+        assert_eq!(
+            log.kinds(),
+            vec![
+                "submitted",
+                "admitted",
+                "step",
+                "prefill_chunk",
+                "step",
+                "first_token",
+                "step",
+                "retired",
+            ],
+            "golden event sequence"
+        );
+        let phases: Vec<Phase> = log
+            .events
+            .iter()
+            .filter_map(|s| match s.event {
+                Event::Step { phase, .. } => Some(phase),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(phases, vec![Phase::Prefill, Phase::Prefill, Phase::Decode]);
+        match &log.events[3].event {
+            Event::PrefillChunk { id: 0, start: 0, end: 8 } => {}
+            other => panic!("expected chunk [0,8), got {other:?}"),
+        }
+        match &log.events[7].event {
+            Event::Retired { id: 0, tokens: 2 } => {}
+            other => panic!("expected retired with 2 tokens, got {other:?}"),
+        }
+        // Timestamps are monotone on the virtual clock.
+        assert!(log.events.windows(2).all(|w| w[0].t_s <= w[1].t_s));
     }
 
     /// Live-mode cancellation: the handle always resolves — either the

@@ -258,6 +258,21 @@ impl SimBackend {
         (self.table.entries(), self.fallback_prices)
     }
 
+    /// Emit this backend's cost-model posture (dense-table coverage vs
+    /// fallback pricings) as a `CostModel` flight-recorder event — the
+    /// trace exporter shows it as a global annotation on `lane`.
+    pub fn record_cost_model(&self, rec: &crate::obs::Recorder, lane: u32, now_s: f64) {
+        let (entries, fallbacks) = self.cost_table_stats();
+        rec.record(
+            now_s,
+            crate::obs::Event::CostModel {
+                lane,
+                table_entries: entries as u64,
+                fallback_pricings: fallbacks,
+            },
+        );
+    }
+
     /// Enable DDR swap pricing for a serving layer using
     /// `page_tokens`-token KV pages.  Page bytes follow the model's KV
     /// geometry at the compression recipe's activation width;

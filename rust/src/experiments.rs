@@ -236,6 +236,24 @@ pub fn flightllm_serve_overload(
     swap: bool,
     ddr_gbps: Option<f64>,
 ) -> crate::coordinator::ServeStats {
+    flightllm_serve_overload_recorded(target, trace_cfg, max_batch, kv_pages, swap, ddr_gbps, false)
+        .0
+}
+
+/// [`flightllm_serve_overload`] with an optional flight recorder
+/// (`record`): the run comes back with its drained `EventLog` (`None`
+/// when `record` is off).  Recording only READS engine state, so the
+/// stats and token streams are bit-identical either way (asserted in
+/// the overload acceptance test).
+pub fn flightllm_serve_overload_recorded(
+    target: &Target,
+    trace_cfg: &crate::workload::OverloadConfig,
+    max_batch: usize,
+    kv_pages: usize,
+    swap: bool,
+    ddr_gbps: Option<f64>,
+    record: bool,
+) -> (crate::coordinator::ServeStats, Option<crate::obs::EventLog>) {
     use crate::coordinator::{Sampler, SchedulerConfig, Server, SimBackend};
     use crate::workload::generate_overload_trace;
 
@@ -252,9 +270,15 @@ pub fn flightllm_serve_overload(
     let backend = SimBackend::with_vocab(target.clone(), trace_cfg.vocab.max(2) as usize)
         .with_max_batch(max_batch.max(1) as u32)
         .with_swap_model(page_tokens, ddr_gbps);
-    Server::new(backend, cfg, Sampler::greedy())
-        .run_trace(trace)
-        .expect("sim serving is infallible")
+    let mut server = Server::new(backend, cfg, Sampler::greedy());
+    if record {
+        server.set_recorder(crate::obs::Recorder::new());
+    }
+    let stats = server.run_trace(trace).expect("sim serving is infallible");
+    if let Some(rec) = server.recorder() {
+        server.backend().record_cost_model(rec, 0, stats.served_s);
+    }
+    (stats, server.take_event_log())
 }
 
 /// The controlled three-way overload comparison: the SAME trace served
@@ -362,6 +386,29 @@ pub fn flightllm_serve_sharded(
     trace: Vec<crate::workload::Request>,
     spec: &FleetSpec,
 ) -> (Vec<crate::coordinator::ServeStats>, crate::coordinator::ServeStats, (usize, u64)) {
+    let (per_shard, merged, pricing, _) =
+        flightllm_serve_sharded_recorded(target, trace, spec, false);
+    (per_shard, merged, pricing)
+}
+
+/// [`flightllm_serve_sharded`] with an optional per-lane flight
+/// recorder (`record`): each lane gets its own bounded event ring, the
+/// backend's cost-table stats land on each ring after the drain, and
+/// the per-lane `EventLog`s come back ordered by lane index (empty
+/// when `record` is off).  Recording only READS engine state, so
+/// stats and token streams are bit-identical either way (asserted in
+/// the sharded acceptance test).
+pub fn flightllm_serve_sharded_recorded(
+    target: &Target,
+    trace: Vec<crate::workload::Request>,
+    spec: &FleetSpec,
+    record: bool,
+) -> (
+    Vec<crate::coordinator::ServeStats>,
+    crate::coordinator::ServeStats,
+    (usize, u64),
+    Vec<crate::obs::EventLog>,
+) {
     use crate::coordinator::{Sampler, SchedulerConfig, ShardedService, SimBackend};
 
     let shards = spec.shards.max(1);
@@ -380,11 +427,24 @@ pub fn flightllm_serve_sharded(
     let mut fleet =
         ShardedService::new(shards, spec.route, cfg, Sampler::greedy(), |_| proto.clone())
             .with_lane_threads(spec.lane_threads.max(1));
+    if record {
+        fleet = fleet.with_recording(crate::obs::Recorder::DEFAULT_CAPACITY);
+    }
     let merged = fleet.run_trace(trace).expect("sim serving is infallible");
     let pricing = (0..fleet.shards())
         .map(|i| fleet.backend(i).cost_table_stats())
         .fold((0usize, 0u64), |(e, f), (le, lf)| (e + le, f + lf));
-    (fleet.shard_stats(), merged, pricing)
+    let logs = if record {
+        for i in 0..fleet.shards() {
+            if let Some(rec) = fleet.recorder(i) {
+                fleet.backend(i).record_cost_model(rec, i as u32, fleet.clock_s());
+            }
+        }
+        fleet.take_event_logs()
+    } else {
+        Vec::new()
+    };
+    (fleet.shard_stats(), merged, pricing, logs)
 }
 
 /// Fig. 14's three rungs, normalized against a V100S-opt baseline the
@@ -792,6 +852,104 @@ mod tests {
             assert!(s.summary("virtual").contains("completed"), "shard {i} summary");
         }
         assert!(fleet.summary("virtual").contains("completed 12 requests"));
+    }
+
+    /// Acceptance (flight recorder invisibility, overload): the seed-5
+    /// swap-preemption trace served with the recorder ON is
+    /// bit-identical to the recorder-OFF run — same token streams,
+    /// same virtual clock, same swap pricing — and the drained log
+    /// carries the overload story: preemptions, swap traffic in both
+    /// directions, every request retired, the cost-model stats event.
+    #[test]
+    fn recorder_is_invisible_on_the_overload_trace() {
+        use crate::workload::OverloadConfig;
+        let t = Target::u280_tiny();
+        let cfg = OverloadConfig {
+            n_requests: 6,
+            prompt_len: 32,
+            decode_len_choices: vec![48, 64, 96],
+            rate_per_s: 1e7,
+            vocab: 64,
+            seed: 5,
+        };
+        // Same small swap-forcing pool as the swap acceptance test.
+        let (off, none) = flightllm_serve_overload_recorded(&t, &cfg, 3, 12, true, None, false);
+        let (on, log) = flightllm_serve_overload_recorded(&t, &cfg, 3, 12, true, None, true);
+        assert!(none.is_none(), "no recorder, no log");
+        let log = log.expect("recording was on");
+        for a in &off.results {
+            let b = on.results.iter().find(|r| r.id == a.id).expect("same ids");
+            assert_eq!(a.tokens, b.tokens, "request {} tokens must not change", a.id);
+        }
+        assert_eq!(off.served_s.to_bits(), on.served_s.to_bits(), "virtual clock");
+        assert_eq!(off.swap_time_s.to_bits(), on.swap_time_s.to_bits(), "swap pricing");
+        assert_eq!(off.decode_tps().to_bits(), on.decode_tps().to_bits());
+        assert_eq!(off.steps, on.steps);
+        assert_eq!(off.preemptions, on.preemptions);
+        assert_eq!(log.dropped, 0, "the default ring holds the whole run");
+        assert_eq!(log.lane, 0);
+        assert_eq!(log.count("submitted"), 6);
+        assert_eq!(log.count("retired"), 6, "swap completes everything");
+        assert_eq!(log.count("preempted") as u64, on.preemptions, "one event per preemption");
+        assert!(log.count("swap_out") > 0, "spill traffic is on the timeline");
+        assert!(log.count("swap_in") > 0, "resume traffic is on the timeline");
+        assert_eq!(log.count("step") as u64, on.steps, "one event per engine step");
+        assert_eq!(log.count("cost_model"), 1);
+        assert!(
+            log.events.windows(2).all(|w| w[0].t_s <= w[1].t_s),
+            "events are stamped in chronological order"
+        );
+    }
+
+    /// Acceptance (flight recorder invisibility, fleet): the seed-6
+    /// 2-shard run with per-lane recorders is bit-identical to the
+    /// unrecorded run, and the drained logs come back one per lane
+    /// with distinct lane ids, jointly covering all 12 requests.
+    #[test]
+    fn recorder_is_invisible_on_the_sharded_fleet() {
+        use crate::coordinator::RoutePolicy;
+        use crate::workload::{generate_overload_trace, OverloadConfig};
+        let t = Target::u280_tiny();
+        let cfg = OverloadConfig {
+            n_requests: 12,
+            prompt_len: 32,
+            decode_len_choices: vec![32, 48],
+            rate_per_s: 1e7,
+            vocab: 64,
+            seed: 6,
+        };
+        let spec = FleetSpec {
+            shards: 2,
+            route: RoutePolicy::RoundRobin,
+            max_batch: 2,
+            kv_pages_per_shard: 64,
+            prefix_cache: false,
+            vocab: 64,
+            lane_threads: 2,
+        };
+        let run = |record: bool| {
+            flightllm_serve_sharded_recorded(&t, generate_overload_trace(&cfg), &spec, record)
+        };
+        let (_, off, _, no_logs) = run(false);
+        let (_, on, _, logs) = run(true);
+        assert!(no_logs.is_empty(), "no recorders, no logs");
+        for a in &off.results {
+            let b = on.results.iter().find(|r| r.id == a.id).expect("same ids");
+            assert_eq!(a.tokens, b.tokens, "request {} tokens must not change", a.id);
+        }
+        assert_eq!(off.served_s.to_bits(), on.served_s.to_bits(), "fleet clock");
+        assert_eq!(off.p99_ttft_s().to_bits(), on.p99_ttft_s().to_bits());
+        assert_eq!(off.steps, on.steps);
+        assert_eq!(logs.len(), 2, "one event log per lane");
+        assert_eq!(logs[0].lane, 0);
+        assert_eq!(logs[1].lane, 1);
+        let retired: usize = logs.iter().map(|l| l.count("retired")).sum();
+        assert_eq!(retired, 12, "the lanes jointly retire every request");
+        for log in &logs {
+            assert!(log.count("step") > 0, "lane {} recorded steps", log.lane);
+            assert_eq!(log.count("cost_model"), 1, "lane {} pricing stats", log.lane);
+            assert_eq!(log.dropped, 0);
+        }
     }
 
     /// Acceptance (prefix-affinity routing): on the shared-prefix trace

@@ -27,6 +27,7 @@ pub mod coordinator;
 pub mod ir;
 pub mod isa;
 pub mod metrics;
+pub mod obs;
 pub mod quant;
 /// The PJRT runtime needs the `xla` crate (xla_extension bindings);
 /// everything else — simulator, compiler, coordinator with the

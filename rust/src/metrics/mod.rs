@@ -76,8 +76,13 @@ pub fn geomean(values: &[f64]) -> f64 {
     (log_sum / values.len() as f64).exp()
 }
 
-/// Format a paper-style table: header + aligned rows.
+/// Format a paper-style table: header + aligned rows.  An empty header
+/// degenerates to the title alone — `widths.len() - 1` below would
+/// otherwise wrap around and try to allocate a usize::MAX-char rule.
 pub fn format_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    if header.is_empty() {
+        return format!("== {title} ==\n");
+    }
     let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
     for row in rows {
         for (i, cell) in row.iter().enumerate() {
@@ -147,6 +152,16 @@ mod tests {
         );
         assert!(t.contains("Demo"));
         assert!(t.lines().count() >= 4);
+    }
+
+    /// Regression: an empty header used to underflow the separator
+    /// width (`widths.len() - 1` on a usize) and abort; it now prints
+    /// the degenerate title-only table.
+    #[test]
+    fn empty_header_degenerates_instead_of_underflowing() {
+        assert_eq!(format_table("Empty", &[], &[]), "== Empty ==\n");
+        // Rows without a header degrade the same way (nothing to align).
+        assert_eq!(format_table("Empty", &[], &[vec!["1".into()]]), "== Empty ==\n");
     }
 
     #[test]

@@ -1,0 +1,350 @@
+//! Serving-stack flight recorder (the observability layer).
+//!
+//! A deterministic, zero-cost-when-disabled event recorder for the
+//! continuous-batching serving stack. A [`Recorder`] is a bounded ring
+//! of [`Stamped`] events on the serving virtual clock; the engine and
+//! scheduler thread an `Option<&Recorder>` through the hot path and
+//! emit nothing when it is `None`. Recording NEVER touches the clock,
+//! stats, sampler RNG, or any scheduling decision, so served token
+//! streams and `ServeStats` are bit-identical with the recorder on or
+//! off (pinned by acceptance tests in `experiments` and the
+//! `sim_hotpath` bench, which also pins recorder overhead).
+//!
+//! The ring is bounded ([`Recorder::DEFAULT_CAPACITY`] events) so a
+//! long-lived `LiveService` with an always-on recorder stays flat:
+//! once full, the oldest events are overwritten and counted in
+//! [`EventLog::dropped`].
+//!
+//! Submodules:
+//! - [`perfetto`]: Chrome `trace_events` JSON export — open the file
+//!   written by `cli serve --trace-out` in <https://ui.perfetto.dev>.
+//!   One track per shard lane with step slices named by phase, async
+//!   spans per request lifetime, and counter tracks for KV pages,
+//!   queue depth and swap traffic.
+//! - [`registry`]: [`MetricsRegistry`] — counters, gauges and
+//!   fixed-bucket histograms with Prometheus text exposition
+//!   (`cli serve --metrics-out`). `ServeStats::summary()` is rebuilt
+//!   on top of it so the printed numbers and the exposition text have
+//!   exactly one source.
+
+use std::cell::RefCell;
+
+pub mod perfetto;
+pub mod registry;
+
+pub use perfetto::perfetto_trace;
+pub use registry::{Histogram, MetricsRegistry};
+
+/// What a serving step spent its time on: pure chunked prefill, pure
+/// batched decode, or a mixed iteration with both kinds of slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+    Mixed,
+}
+
+impl Phase {
+    /// Stable lower-case label (trace slice names, metrics labels).
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::Mixed => "mixed",
+        }
+    }
+}
+
+/// One typed serving event. Request-lifecycle variants carry the
+/// request id; `Step` describes one engine iteration; the rest are
+/// lane-level signals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Request entered the engine (stamped at its pinned arrival).
+    Submitted { id: u64, prompt_len: u32 },
+    /// Scheduler admitted the request into the running set;
+    /// `cached_tokens` is the prefix-cache hit charged at admission.
+    Admitted { id: u64, cached_tokens: u32 },
+    /// One prefill chunk `[start, end)` of the prompt finished.
+    PrefillChunk { id: u64, start: u32, end: u32 },
+    /// Prefill completed and the first output token streamed.
+    FirstToken { id: u64 },
+    /// KV exhaustion parked the request (swap-to-DDR preemption).
+    Preempted { id: u64 },
+    /// Pages moved HBM -> DDR since the last swap sample.
+    SwapOut { pages: u64 },
+    /// Pages moved DDR -> HBM since the last swap sample.
+    SwapIn { pages: u64 },
+    /// Request completed normally with `tokens` generated.
+    Retired { id: u64, tokens: u32 },
+    /// Request cancelled mid-flight (or while queued/parked).
+    Cancelled { id: u64 },
+    /// Request rejected at admission (queue shed).
+    Rejected { id: u64 },
+    /// Request terminally evicted (KV-truncated, unresumable).
+    Evicted { id: u64 },
+    /// One engine step: stamped at the step START on the virtual
+    /// clock; `step_s` is the priced duration, `kv_pages` /
+    /// `queue_depth` are sampled at the step boundary (after
+    /// admission and swap-ins, before this step's decode appends).
+    Step { lane: u32, phase: Phase, batch: u32, step_s: f64, kv_pages: u32, queue_depth: u32 },
+    /// Backend cost-model posture (dense-table coverage) at the end
+    /// of a run; emitted by `SimBackend::record_cost_model`.
+    CostModel { lane: u32, table_entries: u64, fallback_pricings: u64 },
+    /// Engine-level error (live service loop stopped). Headless runs
+    /// keep this even though stderr is gone.
+    EngineError { detail: String },
+}
+
+impl Event {
+    /// Stable lower-snake-case kind label (golden-sequence tests,
+    /// metrics label values).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Submitted { .. } => "submitted",
+            Event::Admitted { .. } => "admitted",
+            Event::PrefillChunk { .. } => "prefill_chunk",
+            Event::FirstToken { .. } => "first_token",
+            Event::Preempted { .. } => "preempted",
+            Event::SwapOut { .. } => "swap_out",
+            Event::SwapIn { .. } => "swap_in",
+            Event::Retired { .. } => "retired",
+            Event::Cancelled { .. } => "cancelled",
+            Event::Rejected { .. } => "rejected",
+            Event::Evicted { .. } => "evicted",
+            Event::Step { .. } => "step",
+            Event::CostModel { .. } => "cost_model",
+            Event::EngineError { .. } => "engine_error",
+        }
+    }
+}
+
+/// An event stamped on the serving virtual clock. `seq` is the
+/// recorder's monotone emission index (it keeps counting across ring
+/// overwrites, so gaps reveal exactly where drops happened).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stamped {
+    pub t_s: f64,
+    pub seq: u64,
+    pub event: Event,
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    buf: Vec<Stamped>,
+    /// Overwrite cursor once `buf` reached capacity.
+    head: usize,
+    next_seq: u64,
+    dropped: u64,
+    /// Last swap totals seen by [`Recorder::swap_totals`], so swap
+    /// events carry per-sample deltas without the engine keeping
+    /// recorder-only state.
+    last_swap_out: u64,
+    last_swap_in: u64,
+}
+
+/// Bounded-ring event recorder for one engine lane. Interior-mutable
+/// (`&self` recording) so the engine can hand `Option<&Recorder>`
+/// down into the scheduler while itself borrowed; single-threaded per
+/// lane by construction (each fleet lane owns its recorder, so the
+/// scoped lane workers never share one).
+#[derive(Debug)]
+pub struct Recorder {
+    lane: u32,
+    capacity: usize,
+    inner: RefCell<Ring>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    /// Default ring capacity; at one `Step` + a few lifecycle events
+    /// per iteration this is hours of live serving before overwrite.
+    pub const DEFAULT_CAPACITY: usize = 65_536;
+
+    pub fn new() -> Self {
+        Self::with_capacity(Self::DEFAULT_CAPACITY)
+    }
+
+    /// `capacity` is clamped to at least 1 event.
+    pub fn with_capacity(capacity: usize) -> Self {
+        Recorder {
+            lane: 0,
+            capacity: capacity.max(1),
+            inner: RefCell::new(Ring::default()),
+        }
+    }
+
+    /// Tag this recorder with a fleet lane index (stamped into `Step`
+    /// events and the exported track name).
+    pub fn for_lane(mut self, lane: u32) -> Self {
+        self.lane = lane;
+        self
+    }
+
+    pub fn lane(&self) -> u32 {
+        self.lane
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Append one event stamped at virtual time `t_s`, overwriting
+    /// the oldest event when the ring is full.
+    pub fn record(&self, t_s: f64, event: Event) {
+        let mut r = self.inner.borrow_mut();
+        let seq = r.next_seq;
+        r.next_seq += 1;
+        let s = Stamped { t_s, seq, event };
+        if r.buf.len() < self.capacity {
+            r.buf.push(s);
+        } else {
+            let head = r.head;
+            r.buf[head] = s;
+            r.head = (head + 1) % self.capacity;
+            r.dropped += 1;
+        }
+    }
+
+    /// Record swap traffic from *cumulative* pool totals: emits
+    /// `SwapOut` / `SwapIn` deltas against the last sample and only
+    /// when pages actually moved.
+    pub fn swap_totals(&self, t_s: f64, out_pages: u64, in_pages: u64) {
+        let (d_out, d_in) = {
+            let mut r = self.inner.borrow_mut();
+            let d_out = out_pages.saturating_sub(r.last_swap_out);
+            let d_in = in_pages.saturating_sub(r.last_swap_in);
+            r.last_swap_out = out_pages;
+            r.last_swap_in = in_pages;
+            (d_out, d_in)
+        };
+        if d_out > 0 {
+            self.record(t_s, Event::SwapOut { pages: d_out });
+        }
+        if d_in > 0 {
+            self.record(t_s, Event::SwapIn { pages: d_in });
+        }
+    }
+
+    /// Events currently held (<= capacity).
+    pub fn len(&self) -> usize {
+        self.inner.borrow().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events overwritten by ring wrap since the last drain.
+    pub fn dropped(&self) -> u64 {
+        self.inner.borrow().dropped
+    }
+
+    /// Copy the ring out in chronological order without resetting it.
+    pub fn snapshot(&self) -> EventLog {
+        let r = self.inner.borrow();
+        let mut events = Vec::with_capacity(r.buf.len());
+        events.extend_from_slice(&r.buf[r.head..]);
+        events.extend_from_slice(&r.buf[..r.head]);
+        EventLog { lane: self.lane, events, dropped: r.dropped }
+    }
+
+    /// Take the ring contents (chronological order) and reset the
+    /// recorder for reuse; swap-delta memory survives so a drained
+    /// live recorder keeps emitting correct deltas.
+    pub fn drain(&self) -> EventLog {
+        let log = self.snapshot();
+        let mut r = self.inner.borrow_mut();
+        r.buf.clear();
+        r.head = 0;
+        r.dropped = 0;
+        log
+    }
+}
+
+/// A drained (or snapshotted) event ring from one lane.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EventLog {
+    pub lane: u32,
+    pub events: Vec<Stamped>,
+    pub dropped: u64,
+}
+
+impl EventLog {
+    /// Kind labels in order — the golden-sequence test fixture.
+    pub fn kinds(&self) -> Vec<&'static str> {
+        self.events.iter().map(|s| s.event.kind()).collect()
+    }
+
+    /// Count of events of one kind (by label).
+    pub fn count(&self, kind: &str) -> usize {
+        self.events.iter().filter(|s| s.event.kind() == kind).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_chronological() {
+        let r = Recorder::with_capacity(4);
+        for i in 0..10u64 {
+            r.record(i as f64, Event::Submitted { id: i, prompt_len: 1 });
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        let log = r.snapshot();
+        let seqs: Vec<u64> = log.events.iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "oldest overwritten, order preserved");
+        // Drain resets the ring but keeps counting seq.
+        let drained = r.drain();
+        assert_eq!(drained.events.len(), 4);
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.dropped(), 0);
+        r.record(10.0, Event::FirstToken { id: 0 });
+        assert_eq!(r.snapshot().events[0].seq, 10);
+    }
+
+    #[test]
+    fn swap_totals_emit_deltas_only_when_pages_move() {
+        let r = Recorder::new();
+        r.swap_totals(0.0, 0, 0);
+        assert!(r.is_empty(), "no traffic, no events");
+        r.swap_totals(1.0, 8, 0);
+        r.swap_totals(2.0, 8, 0);
+        r.swap_totals(3.0, 12, 8);
+        let log = r.drain();
+        assert_eq!(
+            log.kinds(),
+            vec!["swap_out", "swap_out", "swap_in"],
+            "one event per direction per sample with movement"
+        );
+        assert_eq!(log.events[0].event, Event::SwapOut { pages: 8 });
+        assert_eq!(log.events[1].event, Event::SwapOut { pages: 4 });
+        assert_eq!(log.events[2].event, Event::SwapIn { pages: 8 });
+        // Delta memory survives the drain.
+        r.swap_totals(4.0, 13, 8);
+        assert_eq!(r.snapshot().events[0].event, Event::SwapOut { pages: 1 });
+    }
+
+    #[test]
+    fn kind_labels_are_stable() {
+        let ev = Event::Step {
+            lane: 0,
+            phase: Phase::Mixed,
+            batch: 2,
+            step_s: 1e-3,
+            kv_pages: 4,
+            queue_depth: 1,
+        };
+        assert_eq!(ev.kind(), "step");
+        assert_eq!(Phase::Prefill.label(), "prefill");
+        assert_eq!(Event::EngineError { detail: "x".into() }.kind(), "engine_error");
+    }
+}

@@ -1,0 +1,298 @@
+//! Chrome `trace_events` JSON export for drained [`EventLog`]s.
+//!
+//! The output is the classic Chrome/Perfetto JSON trace format: drop
+//! the file written by `cli serve --trace-out` onto
+//! <https://ui.perfetto.dev> (or `chrome://tracing`). Layout:
+//!
+//! - one *thread* track per shard lane (`pid` 0, `tid` = lane index)
+//!   carrying complete `ph:"X"` slices per engine step, named by
+//!   phase (`prefill` / `decode` / `mixed`) with batch size and KV
+//!   pages in `args`;
+//! - one *async* span (`ph:"b"` / `ph:"e"`, category `request`) per
+//!   request lifetime from `Submitted` to its terminal event, with
+//!   async-instant (`ph:"n"`) marks for admission, prefill chunks,
+//!   first token and preemption;
+//! - counter tracks (`ph:"C"`) per lane for live KV pages, queue
+//!   depth, and cumulative swapped-out/in pages.
+//!
+//! Timestamps are the serving virtual clock converted to
+//! microseconds (the unit the trace format requires).
+
+use crate::util::Json;
+
+use super::{Event, EventLog};
+
+/// Microseconds timestamp for the trace format.
+fn us(t_s: f64) -> Json {
+    Json::num(t_s * 1e6)
+}
+
+fn counter(tid: u32, name: &str, t_s: f64, value: f64) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("C")),
+        ("name", Json::str(format!("lane{tid} {name}"))),
+        ("pid", Json::num(0.0)),
+        ("tid", Json::num(tid as f64)),
+        ("ts", us(t_s)),
+        ("args", Json::obj(vec![(name, Json::num(value))])),
+    ])
+}
+
+fn async_event(ph: &str, id: u64, name: &str, t_s: f64, args: Option<Json>) -> Json {
+    let mut pairs = vec![
+        ("ph", Json::str(ph)),
+        ("cat", Json::str("request")),
+        ("id", Json::str(format!("{id}"))),
+        ("name", Json::str(name)),
+        ("pid", Json::num(0.0)),
+        ("ts", us(t_s)),
+    ];
+    if let Some(a) = args {
+        pairs.push(("args", a));
+    }
+    Json::obj(pairs)
+}
+
+/// Build the full trace document from per-lane event logs.
+///
+/// Pass one log per lane (a single-engine run is just one log with
+/// lane 0). The result serializes with `Json::to_string_pretty` and
+/// needs nothing but `util::json` — no serde.
+pub fn perfetto_trace(logs: &[EventLog]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    let mut total_dropped = 0u64;
+    for log in logs {
+        let tid = log.lane;
+        total_dropped += log.dropped;
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("thread_name")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(format!("shard lane {tid}")))])),
+        ]));
+        let mut swap_out_total = 0u64;
+        let mut swap_in_total = 0u64;
+        for s in &log.events {
+            match &s.event {
+                Event::Step { lane, phase, batch, step_s, kv_pages, queue_depth } => {
+                    events.push(Json::obj(vec![
+                        ("ph", Json::str("X")),
+                        ("name", Json::str(phase.label())),
+                        ("cat", Json::str("step")),
+                        ("pid", Json::num(0.0)),
+                        ("tid", Json::num(*lane as f64)),
+                        ("ts", us(s.t_s)),
+                        ("dur", Json::num(step_s * 1e6)),
+                        (
+                            "args",
+                            Json::obj(vec![
+                                ("batch", Json::num(*batch as f64)),
+                                ("kv_pages", Json::num(*kv_pages as f64)),
+                                ("queue_depth", Json::num(*queue_depth as f64)),
+                            ]),
+                        ),
+                    ]));
+                    // Counters are sampled after the step completes.
+                    let t_end = s.t_s + step_s;
+                    events.push(counter(tid, "kv_pages", t_end, *kv_pages as f64));
+                    events.push(counter(tid, "queue_depth", t_end, *queue_depth as f64));
+                }
+                Event::Submitted { id, prompt_len } => {
+                    events.push(async_event(
+                        "b",
+                        *id,
+                        "request",
+                        s.t_s,
+                        Some(Json::obj(vec![("prompt_len", Json::num(*prompt_len as f64))])),
+                    ));
+                }
+                Event::Admitted { id, cached_tokens } => {
+                    events.push(async_event(
+                        "n",
+                        *id,
+                        "admitted",
+                        s.t_s,
+                        Some(Json::obj(vec![(
+                            "cached_tokens",
+                            Json::num(*cached_tokens as f64),
+                        )])),
+                    ));
+                }
+                Event::PrefillChunk { id, start, end } => {
+                    events.push(async_event(
+                        "n",
+                        *id,
+                        "prefill_chunk",
+                        s.t_s,
+                        Some(Json::obj(vec![
+                            ("start", Json::num(*start as f64)),
+                            ("end", Json::num(*end as f64)),
+                        ])),
+                    ));
+                }
+                Event::FirstToken { id } => {
+                    events.push(async_event("n", *id, "first_token", s.t_s, None));
+                }
+                Event::Preempted { id } => {
+                    events.push(async_event("n", *id, "preempted", s.t_s, None));
+                }
+                Event::Retired { id, tokens } => {
+                    events.push(async_event(
+                        "e",
+                        *id,
+                        "request",
+                        s.t_s,
+                        Some(Json::obj(vec![("tokens", Json::num(*tokens as f64))])),
+                    ));
+                }
+                Event::Cancelled { id } => {
+                    events.push(async_event(
+                        "e",
+                        *id,
+                        "request",
+                        s.t_s,
+                        Some(Json::obj(vec![("outcome", Json::str("cancelled"))])),
+                    ));
+                }
+                Event::Rejected { id } => {
+                    // A rejected request never opened a span; emit a
+                    // zero-length one so it is still visible.
+                    events.push(async_event("b", *id, "request", s.t_s, None));
+                    events.push(async_event(
+                        "e",
+                        *id,
+                        "request",
+                        s.t_s,
+                        Some(Json::obj(vec![("outcome", Json::str("rejected"))])),
+                    ));
+                }
+                Event::Evicted { id } => {
+                    events.push(async_event(
+                        "e",
+                        *id,
+                        "request",
+                        s.t_s,
+                        Some(Json::obj(vec![("outcome", Json::str("evicted"))])),
+                    ));
+                }
+                Event::SwapOut { pages } => {
+                    swap_out_total += pages;
+                    events.push(counter(tid, "swapped_out_pages", s.t_s, swap_out_total as f64));
+                }
+                Event::SwapIn { pages } => {
+                    swap_in_total += pages;
+                    events.push(counter(tid, "swapped_in_pages", s.t_s, swap_in_total as f64));
+                }
+                Event::CostModel { lane, table_entries, fallback_pricings } => {
+                    events.push(Json::obj(vec![
+                        ("ph", Json::str("i")),
+                        ("s", Json::str("g")),
+                        ("name", Json::str("cost_model")),
+                        ("cat", Json::str("backend")),
+                        ("pid", Json::num(0.0)),
+                        ("tid", Json::num(*lane as f64)),
+                        ("ts", us(s.t_s)),
+                        (
+                            "args",
+                            Json::obj(vec![
+                                ("table_entries", Json::num(*table_entries as f64)),
+                                ("fallback_pricings", Json::num(*fallback_pricings as f64)),
+                            ]),
+                        ),
+                    ]));
+                }
+                Event::EngineError { detail } => {
+                    events.push(Json::obj(vec![
+                        ("ph", Json::str("i")),
+                        ("s", Json::str("g")),
+                        ("name", Json::str("engine_error")),
+                        ("cat", Json::str("error")),
+                        ("pid", Json::num(0.0)),
+                        ("tid", Json::num(tid as f64)),
+                        ("ts", us(s.t_s)),
+                        ("args", Json::obj(vec![("detail", Json::str(detail.clone()))])),
+                    ]));
+                }
+            }
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("generator", Json::str("flightllm obs::perfetto")),
+                ("lanes", Json::num(logs.len() as f64)),
+                ("dropped_events", Json::num(total_dropped as f64)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Phase, Recorder};
+    use super::*;
+
+    fn sample_log() -> EventLog {
+        let r = Recorder::new().for_lane(1);
+        r.record(0.0, Event::Submitted { id: 7, prompt_len: 16 });
+        r.record(0.0, Event::Admitted { id: 7, cached_tokens: 0 });
+        r.record(0.0, Event::Step {
+            lane: 1,
+            phase: Phase::Prefill,
+            batch: 1,
+            step_s: 2e-3,
+            kv_pages: 1,
+            queue_depth: 0,
+        });
+        r.record(2e-3, Event::PrefillChunk { id: 7, start: 0, end: 16 });
+        r.record(2e-3, Event::FirstToken { id: 7 });
+        r.swap_totals(3e-3, 4, 2);
+        r.record(4e-3, Event::Retired { id: 7, tokens: 3 });
+        r.drain()
+    }
+
+    #[test]
+    fn trace_round_trips_through_util_json() {
+        let doc = perfetto_trace(&[sample_log()]);
+        let text = doc.to_string_pretty();
+        let back = Json::parse(&text).expect("trace JSON parses");
+        let evs = back.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+        assert!(!evs.is_empty());
+        // Every event carries the required keys.
+        for e in evs {
+            assert!(e.get("ph").and_then(Json::as_str).is_some(), "ph on {e:?}");
+            assert!(e.get("pid").is_some());
+        }
+        assert_eq!(back.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    }
+
+    #[test]
+    fn request_spans_balance_and_counters_accumulate() {
+        let doc = perfetto_trace(&[sample_log()]);
+        let evs = match doc.get("traceEvents") {
+            Some(Json::Arr(v)) => v.clone(),
+            other => panic!("traceEvents missing: {other:?}"),
+        };
+        let ph = |p: &str| {
+            evs.iter()
+                .filter(|e| e.get("ph").and_then(Json::as_str) == Some(p))
+                .count()
+        };
+        assert_eq!(ph("b"), 1, "one request span opened");
+        assert_eq!(ph("e"), 1, "one request span closed");
+        assert_eq!(ph("X"), 1, "one step slice");
+        // kv_pages + queue_depth after the step, one per swap direction.
+        assert_eq!(ph("C"), 4);
+        let slice = evs
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .unwrap();
+        assert_eq!(slice.get("name").and_then(Json::as_str), Some("prefill"));
+        assert_eq!(slice.get("dur").and_then(Json::as_f64), Some(2e-3 * 1e6));
+        assert_eq!(slice.get("tid").and_then(Json::as_f64), Some(1.0));
+    }
+}

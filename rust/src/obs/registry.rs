@@ -1,0 +1,241 @@
+//! Counters, gauges and fixed-bucket histograms with Prometheus text
+//! exposition.
+//!
+//! [`MetricsRegistry`] is deliberately tiny: string-keyed maps with
+//! deterministic (sorted) iteration so the exposition text is stable
+//! across runs. `ServeStats::metrics_registry()` populates one from a
+//! finished run and `ServeStats::summary()` reads every number it
+//! prints back out of the registry, so the human summary and the
+//! `--metrics-out` Prometheus text can never drift apart.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A histogram with fixed upper-bound buckets (Prometheus
+/// `le`-style: cumulative on exposition, one overflow bucket).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    /// Ascending finite upper bounds; an implicit `+Inf` bucket
+    /// follows the last.
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts, `bounds.len() + 1` long.
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+/// Default latency buckets in seconds (1 ms .. 10 s, roughly
+/// log-spaced) — fits TTFT, per-request latency and ITL on every
+/// shipped target.
+pub const LATENCY_BUCKETS_S: &[f64] = &[
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+];
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let idx = self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Cumulative count at each bound plus the `+Inf` total, in
+    /// exposition order.
+    fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.counts
+            .iter()
+            .map(|c| {
+                acc += c;
+                acc
+            })
+            .collect()
+    }
+}
+
+/// String-keyed metrics store. Counter names should end in `_total`
+/// and histogram/gauge names should carry their unit as a suffix
+/// (`_seconds`, `_pages`) per Prometheus convention; nothing enforces
+/// it, but `ServeStats` follows it.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+    help: BTreeMap<String, String>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Attach `# HELP` text to a metric name (any kind).
+    pub fn help(&mut self, name: &str, text: &str) {
+        self.help.insert(name.to_string(), text.to_string());
+    }
+
+    pub fn counter_add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    /// Current counter value (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Current gauge value (0.0 if never set).
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn has_gauge(&self, name: &str) -> bool {
+        self.gauges.contains_key(name)
+    }
+
+    /// Observe `v` into histogram `name`, creating it with `bounds`
+    /// on first touch (later calls reuse the existing buckets).
+    pub fn observe(&mut self, name: &str, bounds: &[f64], v: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(bounds))
+            .observe(v);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Prometheus text exposition format, version 0.0.4 — ready for
+    /// a scrape endpoint or `cli serve --metrics-out`.
+    pub fn prometheus_text(&self) -> String {
+        fn write_num(out: &mut String, v: f64) {
+            if v.is_nan() {
+                out.push_str("NaN");
+            } else if v == f64::INFINITY {
+                out.push_str("+Inf");
+            } else if v == f64::NEG_INFINITY {
+                out.push_str("-Inf");
+            } else {
+                let _ = write!(out, "{v}");
+            }
+        }
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            if let Some(h) = self.help.get(name) {
+                let _ = writeln!(out, "# HELP {name} {h}");
+            }
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            if let Some(h) = self.help.get(name) {
+                let _ = writeln!(out, "# HELP {name} {h}");
+            }
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = write!(out, "{name} ");
+            write_num(&mut out, *v);
+            out.push('\n');
+        }
+        for (name, hist) in &self.histograms {
+            if let Some(h) = self.help.get(name) {
+                let _ = writeln!(out, "# HELP {name} {h}");
+            }
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            let cum = hist.cumulative();
+            for (i, c) in cum.iter().enumerate() {
+                let _ = write!(out, "{name}_bucket{{le=\"");
+                if i < hist.bounds.len() {
+                    write_num(&mut out, hist.bounds[i]);
+                } else {
+                    out.push_str("+Inf");
+                }
+                let _ = writeln!(out, "\"}} {c}");
+            }
+            let _ = write!(out, "{name}_sum ");
+            write_num(&mut out, hist.sum);
+            out.push('\n');
+            let _ = writeln!(out, "{name}_count {}", hist.count);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_cumulative_with_overflow() {
+        let mut h = Histogram::new(&[0.01, 0.1, 1.0]);
+        for v in [0.005, 0.005, 0.05, 0.5, 5.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.cumulative(), vec![2, 3, 4, 5]);
+        assert!((h.sum() - 5.56).abs() < 1e-9);
+        // Boundary value lands in its bucket (le semantics).
+        h.observe(0.01);
+        assert_eq!(h.cumulative(), vec![3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn prometheus_text_is_stable_and_well_formed() {
+        let mut m = MetricsRegistry::new();
+        m.counter_add("flightllm_requests_completed_total", 3);
+        m.counter_add("flightllm_requests_completed_total", 1);
+        m.help("flightllm_requests_completed_total", "Requests retired normally.");
+        m.gauge_set("flightllm_decode_tokens_per_second", 123.5);
+        m.observe("flightllm_ttft_seconds", &[0.01, 0.1], 0.05);
+        m.observe("flightllm_ttft_seconds", &[0.01, 0.1], 0.2);
+        let text = m.prometheus_text();
+        let expected = "\
+# HELP flightllm_requests_completed_total Requests retired normally.
+# TYPE flightllm_requests_completed_total counter
+flightllm_requests_completed_total 4
+# TYPE flightllm_decode_tokens_per_second gauge
+flightllm_decode_tokens_per_second 123.5
+# TYPE flightllm_ttft_seconds histogram
+flightllm_ttft_seconds_bucket{le=\"0.01\"} 0
+flightllm_ttft_seconds_bucket{le=\"0.1\"} 1
+flightllm_ttft_seconds_bucket{le=\"+Inf\"} 2
+flightllm_ttft_seconds_sum 0.25
+flightllm_ttft_seconds_count 2
+";
+        assert_eq!(text, expected);
+        assert_eq!(m.counter("flightllm_requests_completed_total"), 4);
+        assert_eq!(m.gauge("missing"), 0.0);
+    }
+
+    #[test]
+    fn non_finite_gauges_use_prometheus_tokens() {
+        let mut m = MetricsRegistry::new();
+        m.gauge_set("g_nan", f64::NAN);
+        m.gauge_set("g_inf", f64::INFINITY);
+        let text = m.prometheus_text();
+        assert!(text.contains("g_nan NaN\n"));
+        assert!(text.contains("g_inf +Inf\n"));
+    }
+}

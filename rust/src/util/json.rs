@@ -117,7 +117,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity tokens; `write!("{n}")`
+                    // would emit `inf`/`NaN` and the output would no
+                    // longer parse.  Serialize as null (what
+                    // serde_json does for non-finite f64 too).
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -459,5 +465,55 @@ mod tests {
     fn escapes_in_output() {
         let j = Json::Str("a\"b\\c\n".into());
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    /// Every escape class round-trips: quotes, backslashes, the named
+    /// control escapes, raw control bytes (\u-escaped on the way out)
+    /// and multi-byte UTF-8 — both compact and pretty writers.
+    #[test]
+    fn string_escaping_round_trips_exhaustively() {
+        let nasty = "quote\" back\\slash nl\n cr\r tab\t nul\u{0} bell\u{7} é⌘ 猫";
+        let j = Json::obj(vec![(nasty, Json::str(nasty))]);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j, "compact");
+        assert_eq!(Json::parse(&j.to_string_pretty()).unwrap(), j, "pretty");
+        let written = Json::str(nasty).to_string();
+        assert!(written.contains("\\u0000"), "raw NUL is \\u-escaped: {written}");
+        assert!(!written.contains('\u{0}'), "no raw control bytes in output");
+    }
+
+    /// Non-finite floats serialize as `null` (JSON has no Inf/NaN
+    /// tokens), and the parser rejects the bare tokens other writers
+    /// might emit for them.
+    #[test]
+    fn non_finite_floats_serialize_as_null_and_never_parse() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::num(v).to_string(), "null");
+            assert_eq!(
+                Json::Arr(vec![Json::num(v)]).to_string(),
+                "[null]",
+                "non-finite inside a container"
+            );
+        }
+        for bad in ["inf", "-inf", "Infinity", "-Infinity", "NaN", "nan", "[1, inf]"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        // Finite numbers still round-trip through the writer.
+        let j = Json::parse(&Json::num(2.5).to_string()).unwrap();
+        assert_eq!(j, Json::Num(2.5));
+    }
+
+    /// Schema check: the committed bench trajectory at the repo root
+    /// parses with this parser, carries the keys CI asserts on, and
+    /// round-trips value-identically through both writers.
+    #[test]
+    fn bench_trajectory_json_round_trips() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim_hotpath.json");
+        let text = std::fs::read_to_string(path).expect("committed bench trajectory");
+        let j = Json::parse(&text).expect("bench JSON parses");
+        let f = |keys: &[&str]| j.path(keys).and_then(Json::as_f64).expect("numeric key");
+        assert!(f(&["serving_step", "dense_steps_per_s"]) > 0.0);
+        assert!(f(&["fleet_day_trace", "parallel_wall_s"]) > 0.0);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert_eq!(Json::parse(&j.to_string_pretty()).unwrap(), j);
     }
 }
