@@ -243,6 +243,9 @@ fn main() {
         prefix_cache,
         vocab: 512,
         lane_threads: shards,
+        global_prefix: false,
+        migrate: false,
+        affinity_spill: 0,
     };
     let mut shard_rows = Vec::new();
     let mut fleet_p99s = Vec::new();

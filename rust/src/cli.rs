@@ -7,7 +7,7 @@
 //!                    [--prefill-chunk N] [--live] [--rate R]
 //!                    [--swap] [--swap-gbps G]
 //!                    [--shards N] [--route rr|load|prefix] [--lane-threads N]
-//!                    [--trace-out FILE] [--metrics-out FILE]
+//!                    [--migrate] [--trace-out FILE] [--metrics-out FILE]
 //! flightllm simulate [--model llama2|opt] [--platform u280|vhk158]
 //!                    [--prefill N] [--decode N]
 //! flightllm report   [--what storage|resources|efficiency]
@@ -58,6 +58,17 @@
 //! rate for comparison.  `--lane-threads N` sets the worker threads the
 //! fleet ticks its lanes on (default: one per lane; `1` restores
 //! sequential ticking — streams are byte-identical either way).
+//!
+//! `serve --backend sim --shards N --migrate` arms the PR 9 fleet
+//! memory (global prefix directory + cross-shard migration + per-lane
+//! swap) and replays the deterministic showcase trace: two long
+//! decodes round-robin onto lane 0 and outgrow its small pool, so the
+//! parked one is STOLEN by an idle lane and resumes there; a split
+//! shared-prefix pair makes lane 1 ADOPT the page lane 0 materialized
+//! instead of re-prefilling it.  The merged summary's `fleet memory:`
+//! line and the `prefix_adopted`/`migrated` trace markers carry the
+//! story.  The showcase pins round-robin routing, batch 2 and a
+//! 6-page-per-lane pool; `--requests`/`--batch`/`--route` are ignored.
 //!
 //! Every sim serve summary ends with the step-pricing line: how many
 //! (stage, bucket, batch) cost points the backend's dense table holds
@@ -124,7 +135,7 @@ const USAGE: &str = "usage: flightllm <serve|simulate|report> [flags]
            --model llama2|opt|tiny --platform u280|vhk158 [--prefix-cache]
            [--prefill-chunk N] [--live] [--rate R] [--swap] [--swap-gbps G]
            [--shards N] [--route rr|load|prefix] [--lane-threads N]
-           [--trace-out FILE] [--metrics-out FILE]
+           [--migrate] [--trace-out FILE] [--metrics-out FILE]
   simulate --model llama2|opt --platform u280|vhk158 --prefill N --decode N
   report   --what storage|resources|efficiency
   verify   [--model llama2|opt|tiny] [--platform u280|vhk158]";
@@ -211,7 +222,8 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
     let trace_out = flag(args, "--trace-out");
     let metrics_out = flag(args, "--metrics-out");
     let shards = flag_u64(args, "--shards", 1) as usize;
-    if shards > 1 || flag(args, "--route").is_some() {
+    let migrate = has_flag(args, "--migrate");
+    if shards > 1 || migrate || flag(args, "--route").is_some() {
         use crate::coordinator::RoutePolicy;
         let route = match flag(args, "--route") {
             None => RoutePolicy::LeastLoaded,
@@ -237,12 +249,16 @@ fn cmd_serve_sim(args: &[String]) -> i32 {
             // runs must generate byte-identical token streams.
             eprintln!("note: --temp is ignored with --shards (comparison is greedy)");
         }
+        if migrate && flag(args, "--route").is_some() && route != RoutePolicy::RoundRobin {
+            eprintln!("note: --migrate pins round-robin routing (the showcase is built for it)");
+        }
         if shards < 2 {
             eprintln!("note: the fleet comparison needs >= 2 shards; using 2");
         }
         // 0 = the default: one worker thread per lane.
         let lane_threads = flag_u64(args, "--lane-threads", 0) as usize;
-        let fleet = FleetArgs { shards: shards.max(2), route, lane_threads };
+        let route = if migrate { RoutePolicy::RoundRobin } else { route };
+        let fleet = FleetArgs { shards: shards.max(2), route, lane_threads, migrate };
         return cmd_serve_sim_sharded(&t, n, batch, vocab, &fleet, trace_out, metrics_out);
     }
     if trace_out.is_some() || metrics_out.is_some() {
@@ -478,6 +494,9 @@ struct FleetArgs {
     shards: usize,
     route: crate::coordinator::RoutePolicy,
     lane_threads: usize,
+    /// `--migrate`: arm the fleet memory (directory + migration) and
+    /// replay the deterministic showcase trace.
+    migrate: bool,
 }
 
 /// The `--shards` mode: the same trace served on one board and on an
@@ -498,14 +517,25 @@ fn cmd_serve_sim_sharded(
     metrics_out: Option<&str>,
 ) -> i32 {
     use crate::coordinator::RoutePolicy;
-    use crate::experiments::{flightllm_serve_sharded_recorded, FleetSpec};
+    use crate::experiments::{fleet_memory_demo_trace, flightllm_serve_sharded_recorded, FleetSpec};
     use crate::workload::{
         generate_overload_trace, generate_shared_prefix_trace, OverloadConfig, SharedPrefixConfig,
     };
 
-    let FleetArgs { shards, route, lane_threads } = *fleet_args;
+    let FleetArgs { shards, route, lane_threads, migrate } = *fleet_args;
     let prefix_route = route == RoutePolicy::PrefixAffinity;
-    let trace = if prefix_route {
+    let trace = if migrate {
+        let trace = fleet_memory_demo_trace(shards);
+        println!(
+            "sim-serving the fleet-memory showcase ({} requests: co-located long decodes \
+             force a steal, a split shared prefix forces an adoption) on 1 board vs \
+             {shards} shards, {} {}:",
+            trace.len(),
+            t.model.name,
+            t.platform.name
+        );
+        trace
+    } else if prefix_route {
         let cfg = SharedPrefixConfig {
             n_requests: n.max(8),
             vocab,
@@ -539,12 +569,17 @@ fn cmd_serve_sim_sharded(
         let spec = FleetSpec {
             shards,
             route,
-            max_batch: batch.max(1),
-            kv_pages_per_shard: 256,
-            prefix_cache: prefix_route,
+            // The showcase pins batch 2 and a 6-page pool: lane 0's
+            // long decodes must outgrow it so the steal is certain.
+            max_batch: if migrate { 2 } else { batch.max(1) },
+            kv_pages_per_shard: if migrate { 6 } else { 256 },
+            prefix_cache: prefix_route || migrate,
             vocab: vocab as usize,
             // 0 = default: one worker per lane.
             lane_threads: if lane_threads == 0 { shards } else { lane_threads },
+            global_prefix: migrate,
+            migrate,
+            affinity_spill: 0,
         };
         flightllm_serve_sharded_recorded(t, trace.clone(), &spec, record)
     };
@@ -566,6 +601,16 @@ fn cmd_serve_sim_sharded(
         single.served_s,
         fleet.served_s
     );
+    if migrate {
+        println!(
+            "fleet memory: {} prefix adoptions, {} migrations, {} pages over the \
+             inter-board link ({:.2} ms of transfer)",
+            fleet.prefix_adoptions,
+            fleet.migrations,
+            fleet.migrated_pages,
+            fleet.transfer_time_s * 1e3
+        );
+    }
     if prefix_route {
         let (_, rr, _, _) = run(shards, RoutePolicy::RoundRobin, false);
         println!(
@@ -881,6 +926,48 @@ mod tests {
                 0
             );
         }
+    }
+
+    #[test]
+    fn serve_sim_migrate_showcase_runs() {
+        assert_eq!(
+            run(&s(&[
+                "flightllm", "serve", "--backend", "sim", "--model", "tiny",
+                "--shards", "4", "--migrate",
+            ])),
+            0
+        );
+    }
+
+    /// `--migrate --trace-out/--metrics-out`: the showcase lands both
+    /// fleet-memory stories on the exported artifacts — the Perfetto
+    /// trace carries the `prefix_adopted` and `migrated` markers, and
+    /// the Prometheus text carries the fleet counters.
+    #[test]
+    fn serve_sim_migrate_writes_fleet_memory_artifacts() {
+        let dir = std::env::temp_dir();
+        let trace_path =
+            dir.join(format!("flightllm_cli_migrate_trace_{}.json", std::process::id()));
+        let metrics_path =
+            dir.join(format!("flightllm_cli_migrate_metrics_{}.txt", std::process::id()));
+        let trace_arg = trace_path.to_str().unwrap().to_string();
+        let metrics_arg = metrics_path.to_str().unwrap().to_string();
+        assert_eq!(
+            run(&s(&[
+                "flightllm", "serve", "--backend", "sim", "--model", "tiny",
+                "--shards", "4", "--migrate",
+                "--trace-out", &trace_arg, "--metrics-out", &metrics_arg,
+            ])),
+            0
+        );
+        let trace = std::fs::read_to_string(&trace_path).unwrap();
+        assert!(trace.contains("prefix_adopted"), "the adoption marker is on the timeline");
+        assert!(trace.contains("\"migrated\""), "the steal marker is on the timeline");
+        let metrics = std::fs::read_to_string(&metrics_path).unwrap();
+        assert!(metrics.contains("flightllm_prefix_adoptions_total 1\n"));
+        assert!(metrics.contains("flightllm_migrations_total 1\n"));
+        let _ = std::fs::remove_file(&trace_path);
+        let _ = std::fs::remove_file(&metrics_path);
     }
 
     #[test]

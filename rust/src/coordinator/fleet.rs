@@ -46,6 +46,39 @@
 //! merge by lane index — so a parallel fleet's served streams and
 //! merged stats are byte-identical to sequential ticking
 //! (`lane_threads == 1`), asserted by the equivalence test below.
+//!
+//! Fleet memory (PR 9, both opt-in so the defaults above are
+//! untouched): the boards' DDR tiers are treated as ONE memory system,
+//! the multi-board reading of FlightLLM's HBM/DDR hierarchy (§4.4).
+//!
+//! - **Global prefix directory** ([`ShardedService::with_global_prefix`]):
+//!   a fleet-level map from the pool's own chained page hash to the
+//!   lane that materialized the page — the SAME `chain_hash` routing
+//!   uses, so the directory can never drift from the lane caches.  At
+//!   routing time the target lane *adopts* any directory-owned prefix
+//!   pages it is missing (`PagePool::adopt_prefix_page`): the pages
+//!   are copied over the inter-board link (priced via
+//!   `ModelBackend::swap_cost_s`, like swap traffic) instead of being
+//!   re-prefilled, so a hot system prompt is prefilled on exactly one
+//!   board fleet-wide.  Stale entries self-heal: an owner that evicted
+//!   the page loses the claim to the next lane that materializes it.
+//! - **Cross-shard migration** ([`ShardedService::with_migration`]):
+//!   true work stealing over the PR 4 swap machinery.  When a lane
+//!   holds parked (swapped-out) requests and a strictly less loaded
+//!   lane has room, the oldest parked request's DDR image moves over
+//!   the inter-board link (`EngineCore::export_parked` →
+//!   `import_parked`), the sticky request→lane mapping re-homes, and
+//!   the target's ordinary `swap_in` path resumes it byte-identically
+//!   — the submit/stream/cancel front-end never notices.
+//! - **Affinity spill** ([`ShardedService::with_affinity_spill`]):
+//!   prefix-affinity routing falls back to least-loaded once the home
+//!   lane's in-flight depth exceeds the threshold, fixing the hotspot
+//!   a skewed prefix distribution creates.  With the directory on, the
+//!   spilled request's prefix follows it via adoption.
+//!
+//! Migration and adoption decisions run on the CALLER's thread (inside
+//! `tick`/`submit_routed`, never on lane workers), so parallel ticking
+//! stays byte-identical to sequential.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -111,6 +144,20 @@ pub struct ShardedService<B: ModelBackend> {
     /// Worker threads for lane ticks (1 = sequential); capped at the
     /// lane count.
     lane_threads: usize,
+    /// Fleet prefix directory: chained page hash → lane that
+    /// materialized the page (same hash chain as the per-lane index
+    /// and affinity routing — one definition, no drift).  Only
+    /// consulted when `global_prefix` is on; entries whose owner
+    /// evicted the page are stale and self-heal at the next lookup.
+    directory: HashMap<u64, usize>,
+    /// Opt-in: adopt directory-owned prefix pages across lanes.
+    global_prefix: bool,
+    /// Opt-in: steal parked (swapped-out) requests from overloaded
+    /// lanes onto less loaded ones.
+    migrate: bool,
+    /// Opt-in: prefix-affinity falls back to least-loaded once the
+    /// home lane's in-flight depth EXCEEDS this threshold.
+    affinity_spill: Option<usize>,
     cmd_tx: Sender<Command>,
     cmd_rx: Receiver<Command>,
 }
@@ -159,9 +206,40 @@ impl<B: ModelBackend> ShardedService<B> {
             homes: HashMap::new(),
             ticks: 0,
             lane_threads: shards,
+            directory: HashMap::new(),
+            global_prefix: false,
+            migrate: false,
+            affinity_spill: None,
             cmd_tx,
             cmd_rx,
         }
+    }
+
+    /// Enable the fleet-global prefix directory: a lane missing a
+    /// prefix page another lane already materialized ADOPTS it (one
+    /// inter-board page copy, priced like swap traffic) instead of
+    /// re-prefilling it.  Off by default.
+    pub fn with_global_prefix(mut self) -> Self {
+        self.global_prefix = true;
+        self
+    }
+
+    /// Enable cross-shard migration of parked requests (work
+    /// stealing): an overloaded lane's oldest swapped-out request
+    /// moves to a strictly less loaded lane with room and resumes
+    /// there byte-identically.  Off by default.
+    pub fn with_migration(mut self) -> Self {
+        self.migrate = true;
+        self
+    }
+
+    /// Make prefix-affinity routing fall back to least-loaded once the
+    /// home lane holds MORE than `max_in_flight` requests (waiting +
+    /// running + parked) — the hotspot guard for skewed prefix
+    /// distributions.  Off (pure affinity) by default.
+    pub fn with_affinity_spill(mut self, max_in_flight: usize) -> Self {
+        self.affinity_spill = Some(max_in_flight);
+        self
     }
 
     /// Worker threads for lane ticks.  Defaults to one per lane; `1`
@@ -258,6 +336,14 @@ impl<B: ModelBackend> ShardedService<B> {
         Some((h % self.lanes.len() as u64) as usize)
     }
 
+    /// Requests in flight on one lane (waiting + running + parked) —
+    /// the load signal both least-loaded routing and the migration /
+    /// affinity-spill policies read.
+    fn lane_load(&self, lane: usize) -> usize {
+        let s = self.lanes[lane].scheduler();
+        s.pending() + s.running().len() + s.preempted().len()
+    }
+
     fn pick_shard(&mut self, req: &Request) -> usize {
         match self.route {
             RoutePolicy::RoundRobin => {
@@ -266,16 +352,123 @@ impl<B: ModelBackend> ShardedService<B> {
                 shard
             }
             RoutePolicy::LeastLoaded => self.least_loaded(),
-            RoutePolicy::PrefixAffinity => {
-                self.prefix_shard(&req.prompt).unwrap_or_else(|| self.least_loaded())
+            RoutePolicy::PrefixAffinity => match self.prefix_shard(&req.prompt) {
+                // The hotspot guard: a skewed prefix distribution can
+                // pile every request onto one lane while the rest
+                // idle.  Past the spill threshold the request goes to
+                // the least-loaded lane instead — and with the global
+                // directory on, its prefix follows it by adoption.
+                Some(home) => {
+                    let spill = self
+                        .affinity_spill
+                        .is_some_and(|limit| self.lane_load(home) > limit);
+                    if spill {
+                        self.least_loaded()
+                    } else {
+                        home
+                    }
+                }
+                None => self.least_loaded(),
+            },
+        }
+    }
+
+    /// Walk the prompt's prefix-hash chain against the fleet directory:
+    /// pages this lane already holds re-assert its claim; pages another
+    /// live owner holds are ADOPTED (installed into this lane's pool
+    /// and priced as inter-board transfer); the first page nobody holds
+    /// breaks the chain — this lane will materialize it at prefill, so
+    /// it claims ownership of that page now and stops (pages past a
+    /// gap can never be served from cache, so copying them would be
+    /// pure waste).
+    fn adopt_and_publish(&mut self, shard: usize, req: &Request) {
+        let hashes = self.lanes[shard].scheduler().pool.prefix_hashes(&req.prompt);
+        let mut planned: Vec<(u64, usize)> = Vec::new();
+        for &h in &hashes {
+            if self.lanes[shard].scheduler().pool.has_indexed(h) {
+                self.directory.entry(h).or_insert(shard);
+                continue;
             }
+            let live_owner = self
+                .directory
+                .get(&h)
+                .copied()
+                .filter(|&o| o != shard && self.lanes[o].scheduler().pool.has_indexed(h));
+            match live_owner {
+                Some(owner) => planned.push((h, owner)),
+                None => {
+                    // Unowned, or a stale claim (owner evicted it, or
+                    // a dangling self-claim): this lane's prefill will
+                    // materialize the page, so the claim moves here.
+                    self.directory.insert(h, shard);
+                    break;
+                }
+            }
+        }
+        // Install in chain order, stopping at the first page the pool
+        // cannot take (no truly-free page — adoption never evicts the
+        // lane's own warm cache).  Consecutive pages from one owner are
+        // accounted as one transfer.
+        let mut groups: Vec<(usize, u64)> = Vec::new();
+        for (h, owner) in planned {
+            if !self.lanes[shard].scheduler_mut().pool.adopt_prefix_page(h) {
+                break;
+            }
+            match groups.last_mut() {
+                Some((o, pages)) if *o == owner => *pages += 1,
+                _ => groups.push((owner, 1)),
+            }
+        }
+        for (owner, pages) in groups {
+            self.lanes[shard].record_prefix_adoption(req.id, owner as u32, pages);
         }
     }
 
     fn submit_routed(&mut self, req: Request, sub: Option<Sender<StreamEvent>>) {
         let shard = self.pick_shard(&req);
         self.homes.insert(req.id, shard);
+        if self.global_prefix {
+            self.adopt_and_publish(shard, &req);
+        }
         self.lanes[shard].submit(req, sub);
+    }
+
+    /// Work stealing: for each lane holding parked (swapped-out)
+    /// requests, move its OLDEST parked request to the best strictly
+    /// less loaded lane that has no parked backlog of its own and
+    /// enough free pages to resume it.  The DDR image's inter-board
+    /// copy is priced on the target (`EngineCore::import_parked`); the
+    /// target's clock is first synced to the donor's so the resumed
+    /// request cannot observe time running backwards.  Runs on the
+    /// caller's thread, in lane order — deterministic.
+    fn migrate_parked(&mut self) {
+        for donor in 0..self.lanes.len() {
+            let oldest = self.lanes[donor]
+                .scheduler()
+                .preempted()
+                .iter()
+                .min_by(|a, b| {
+                    a.admitted_s.total_cmp(&b.admitted_s).then(a.req.id.cmp(&b.req.id))
+                })
+                .map(|s| (s.req.id, s.ctx));
+            let Some((seq, ctx)) = oldest else { continue };
+            let donor_load = self.lane_load(donor);
+            let need = self.lanes[donor].scheduler().pool.pages_for(ctx + 1);
+            let target = (0..self.lanes.len())
+                .filter(|&t| {
+                    t != donor
+                        && self.lanes[t].scheduler().preempted().is_empty()
+                        && self.lanes[t].scheduler().pool.free_pages() >= need
+                        && self.lane_load(t) + 1 < donor_load
+                })
+                .min_by_key(|&t| (self.lane_load(t), t));
+            let Some(target) = target else { continue };
+            let donor_clock = self.lanes[donor].clock_s();
+            let parked = self.lanes[donor].export_parked(seq).expect("picked from parked set");
+            self.lanes[target].sync_clock_at_least(donor_clock);
+            self.lanes[target].import_parked(parked, donor as u32);
+            self.homes.insert(seq, target);
+        }
     }
 
     fn apply_commands(&mut self) {
@@ -312,6 +505,11 @@ impl<B: ModelBackend> ShardedService<B> {
             // no lane tracks any more is a no-op on any lane.
             let lanes = &self.lanes;
             self.homes.retain(|&id, &mut shard| lanes[shard].scheduler().tracks(id));
+        }
+        if self.migrate {
+            // On the caller's thread, BEFORE the lane ticks: no lane
+            // worker ever sees a request mid-move.
+            self.migrate_parked();
         }
         let threads = self.lane_threads.min(self.lanes.len()).max(1);
         let ticks: Vec<Result<Tick>> = if threads == 1 {
@@ -630,6 +828,156 @@ mod tests {
         assert!(merged.prefix_hits >= merged.admissions - 3, "{} hits", merged.prefix_hits);
     }
 
+    /// Tentpole (migration): an overloaded lane's parked request is
+    /// stolen by an idle lane and resumes there byte-identically — the
+    /// handle keeps streaming, the sticky route re-homes, and the
+    /// fleet counters see exactly one migration.
+    #[test]
+    fn migration_steals_parked_request_and_resumes_byte_identically() {
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            kv_pages: 8, // 4 pages per lane at 4-token pages
+            page_tokens: 4,
+            max_seq: 64,
+            swap: true,
+            ..Default::default()
+        };
+        // Round-robin pins 0 and 2 to lane 0, 1 to lane 1.  Lane 0's
+        // pair outgrows its 4-page pool (preemption parks request 2);
+        // lane 1's short request finishes early and sits idle.
+        let reqs = || {
+            vec![
+                Request { id: 0, arrival_s: 0.0, prompt: (0..4).collect(), max_new_tokens: 12 },
+                Request { id: 1, arrival_s: 0.0, prompt: (0..4).collect(), max_new_tokens: 2 },
+                Request { id: 2, arrival_s: 0.0, prompt: (4..8).collect(), max_new_tokens: 12 },
+            ]
+        };
+        let run = |migrate: bool| {
+            let mut fleet = echo_fleet(2, RoutePolicy::RoundRobin, cfg.clone());
+            if migrate {
+                fleet = fleet.with_migration();
+            }
+            let handles: Vec<RequestHandle> =
+                reqs().into_iter().map(|r| fleet.submit(r)).collect();
+            fleet.drain().unwrap();
+            let results: Vec<_> =
+                handles.into_iter().map(|h| h.wait().expect("resolves")).collect();
+            (fleet, results)
+        };
+        let (_, baseline) = run(false);
+        let (mut fleet, stolen) = run(true);
+        let merged = fleet.stats();
+        assert_eq!(merged.migrations, 1, "exactly one steal");
+        assert!(merged.migrated_pages > 0, "the DDR image has a footprint");
+        let shards = fleet.shard_stats();
+        assert_eq!(shards[1].migrations, 1, "recorded on the RECEIVING lane");
+        assert_eq!(shards[0].migrations, 0);
+        assert_eq!(fleet.shard_of(2), Some(1), "sticky route re-homed");
+        for (a, b) in baseline.iter().zip(&stolen) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "request {} resumes byte-identically", a.id);
+        }
+        assert_eq!(stolen[0].tokens.len(), 12);
+        assert_eq!(stolen[2].tokens.len(), 12, "the migrated request completes in full");
+        // Both lanes fully unwound: nothing parked, nothing leaked.
+        for s in 0..2 {
+            assert!(fleet.scheduler(s).is_drained());
+            assert_eq!(fleet.scheduler(s).pool.swapped_seqs(), 0);
+        }
+    }
+
+    /// Tentpole (directory): a prefix materialized on one lane is
+    /// ADOPTED by another lane instead of re-prefilled — the adopting
+    /// lane's admit is a cache hit backed by pages it never prefilled,
+    /// and the copy shows up in the adoption counters on the adopting
+    /// lane only.
+    #[test]
+    fn global_prefix_directory_adopts_across_lanes() {
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            kv_pages: 32,
+            page_tokens: 4,
+            max_seq: 64,
+            prefix_cache: true,
+            ..Default::default()
+        };
+        let mk = |id| Request {
+            id,
+            arrival_s: 0.0,
+            prompt: (0..8).collect(),
+            max_new_tokens: 2,
+        };
+        // Round-robin deliberately SPLITS the shared prompt across
+        // lanes — without the directory it would be prefilled twice.
+        let mut fleet = echo_fleet(2, RoutePolicy::RoundRobin, cfg).with_global_prefix();
+        let h0 = fleet.submit(mk(0));
+        fleet.drain().unwrap();
+        let h1 = fleet.submit(mk(1));
+        fleet.drain().unwrap();
+        let pool1 = fleet.scheduler(1).pool.stats();
+        assert_eq!(pool1.adopted_pages, 1, "first page adopted, not prefilled");
+        assert_eq!(pool1.prefix_hits, 1, "the adopted page served the admit as a hit");
+        let shards = fleet.shard_stats();
+        assert_eq!(shards[1].prefix_adoptions, 1);
+        assert_eq!(shards[0].prefix_adoptions, 0, "the materializing lane adopts nothing");
+        let merged = fleet.stats();
+        assert_eq!(merged.prefix_adoptions, 1);
+        assert_eq!(merged.prefix_hits, 1);
+        let a = h0.wait().expect("completes");
+        let b = h1.wait().expect("completes");
+        assert_eq!(a.tokens, b.tokens, "identical prompt, identical stream");
+    }
+
+    /// Satellite (hotspot fix): a fully skewed prefix trace — every
+    /// request shares one first page — pins ALL traffic to one lane
+    /// under pure affinity (the ROADMAP caveat); with the spill
+    /// threshold the overflow reroutes to the least-loaded lane.
+    #[test]
+    fn affinity_spill_reroutes_hotspot_overflow() {
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            kv_pages: 64,
+            page_tokens: 4,
+            max_seq: 64,
+            prefix_cache: true,
+            ..Default::default()
+        };
+        let mk = |id| Request {
+            id,
+            arrival_s: 0.0,
+            prompt: (0..8).collect(),
+            max_new_tokens: 2,
+        };
+        let spread = |fleet: &ShardedService<EchoBackend>| {
+            let mut per = vec![0usize; fleet.shards()];
+            for id in 0..6 {
+                per[fleet.shard_of(id).expect("routed")] += 1;
+            }
+            per
+        };
+        let mut pure = echo_fleet(2, RoutePolicy::PrefixAffinity, cfg.clone());
+        let handles: Vec<_> = (0..6).map(|id| pure.submit(mk(id))).collect();
+        pure.tick().unwrap();
+        let per = spread(&pure);
+        assert!(per.contains(&6), "pure affinity hotspots one lane: {per:?}");
+        pure.drain().unwrap();
+        for h in handles {
+            assert!(h.wait().is_some());
+        }
+        // Spill threshold 2: the home lane keeps three in flight, the
+        // overflow goes to the idle lane instead of queueing behind.
+        let mut guarded =
+            echo_fleet(2, RoutePolicy::PrefixAffinity, cfg).with_affinity_spill(2);
+        let handles: Vec<_> = (0..6).map(|id| guarded.submit(mk(id))).collect();
+        guarded.tick().unwrap();
+        let per = spread(&guarded);
+        assert_eq!(per, vec![3, 3], "overflow spilled to the idle lane");
+        guarded.drain().unwrap();
+        for h in handles {
+            assert!(h.wait().is_some());
+        }
+    }
+
     /// Tentpole equivalence (parallel lanes): a fleet ticked on 4
     /// worker threads serves a mixed OVERLOAD trace — queueing,
     /// preempt/swap cycles, staggered completions — byte-identical to
@@ -686,11 +1034,14 @@ mod tests {
         }
     }
 
-    /// Satellite (fleet property test): random routing policies and
-    /// preempt/swap-cycle configs across ≥2 shards, with random
-    /// mid-flight cancellations — every lane keeps the ctx == pool
-    /// tokens (+ swap registry) invariant on every tick, no request is
-    /// ever visible on two shards, and every handle resolves.
+    /// Satellite (fleet property test): random routing policies,
+    /// preempt/swap-cycle configs, and fleet-memory features (global
+    /// prefix directory, cross-shard migration, affinity spill) across
+    /// ≥2 shards, with random mid-flight cancellations — every lane
+    /// keeps the ctx == pool tokens (+ swap registry) invariant on
+    /// every tick, no request is ever visible on two shards (including
+    /// mid-migration: moves complete atomically before lane ticks),
+    /// and every handle resolves.
     #[test]
     fn property_fleet_lanes_keep_accounting_and_isolation() {
         proptest::check_with("fleet lane accounting", 48, |r| {
@@ -714,6 +1065,15 @@ mod tests {
             let mut fleet = ShardedService::new(shards, route, cfg, Sampler::greedy(), |_| {
                 EchoBackend::new(32)
             });
+            if r.below(2) == 0 {
+                fleet = fleet.with_migration();
+            }
+            if r.below(2) == 0 {
+                fleet = fleet.with_global_prefix();
+            }
+            if r.below(2) == 0 {
+                fleet = fleet.with_affinity_spill(r.below(4) as usize);
+            }
             let trace = generate_trace(&TraceConfig {
                 n_requests: 8,
                 vocab: 32,

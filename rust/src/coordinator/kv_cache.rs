@@ -27,6 +27,14 @@
 //! exact page footprint and the scheduler can resume the sequence where
 //! it left off.  The pool tracks pages moved in each direction so the
 //! serving layer can price the DDR traffic.
+//!
+//! Fleet hooks: `prefix_hashes` exposes the chained keys a prompt's
+//! full pages index under (the fleet prefix directory's key space),
+//! `adopt_prefix_page` installs a page another lane materialized as a
+//! retained index entry (priced by the caller as inter-board
+//! transfer), and `register_swapped` re-homes a migrated sequence's
+//! swap-registry entry without re-counting the write traffic its home
+//! lane already paid for.
 
 use std::collections::{HashMap, VecDeque};
 
@@ -90,6 +98,9 @@ pub struct PoolStats {
     pub swapped_out_pages: u64,
     /// KV pages read DDR → HBM across all swap-ins.
     pub swapped_in_pages: u64,
+    /// Prefix pages installed from ANOTHER lane's cache (fleet
+    /// directory adoption) instead of local prefill.
+    pub adopted_pages: u64,
 }
 
 /// Seed for the chained prefix hash (any odd constant works).
@@ -271,6 +282,49 @@ impl PagePool {
     pub fn cached_prefix_tokens(&self, prompt: &[u32]) -> usize {
         let hashes = self.full_page_hashes(prompt);
         self.cached_prefix_pages(&hashes, prompt.len()).len() * self.page_tokens
+    }
+
+    /// Chained hashes of the prompt's full pages that a cache could
+    /// ever serve — same cap as admission: at least one prompt token is
+    /// always left for the backend to prefill, so a fully-paged prompt
+    /// drops its last hash.  Empty with prefix caching off.  This is
+    /// the key set the fleet's prefix DIRECTORY publishes and adopts
+    /// under: one definition with `admit`'s chain, so the directory can
+    /// never drift from the lane caches.
+    pub fn prefix_hashes(&self, prompt: &[u32]) -> Vec<u64> {
+        let mut hashes = self.full_page_hashes(prompt);
+        if hashes.len() * self.page_tokens >= prompt.len() {
+            hashes.pop();
+        }
+        hashes
+    }
+
+    /// Does the prefix index currently serve this chained hash?
+    pub fn has_indexed(&self, hash: u64) -> bool {
+        self.index.contains_key(&hash)
+    }
+
+    /// Adopt one prefix page another lane materialized (fleet prefix
+    /// directory): install a page under `hash` as a retained,
+    /// refcount-0 index entry — exactly the state a local prefill +
+    /// release would leave — so the next `admit` of the prompt serves
+    /// it as a cache hit instead of re-prefilling.  The caller prices
+    /// the inter-board transfer (`ModelBackend::swap_cost_s`).  Only
+    /// truly FREE pages are used: evicting warm local cache to install
+    /// remote cache would thrash.  Returns false (installing nothing)
+    /// when prefix caching is off, the hash is already indexed, or no
+    /// free page exists.
+    pub fn adopt_prefix_page(&mut self, hash: u64) -> bool {
+        if !self.prefix_caching || self.index.contains_key(&hash) {
+            return false;
+        }
+        let Some(p) = self.free.pop() else { return false };
+        debug_assert_eq!(self.refcnt[p as usize], 0, "free page must be unreferenced");
+        self.page_hash[p as usize] = Some(hash);
+        self.index.insert(hash, p);
+        self.retained.push_back(p);
+        self.stats.adopted_pages += 1;
+        true
     }
 
     /// Retained pages that could be evicted without losing pages the
@@ -491,6 +545,19 @@ impl PagePool {
     /// Sequences currently parked in the DDR swap tier.
     pub fn swapped_seqs(&self) -> usize {
         self.swapped.len()
+    }
+
+    /// Register a sequence as parked in the swap tier WITHOUT counting
+    /// traffic: cross-shard migration moves the registry entry to
+    /// another lane's pool — the image was already written to DDR by
+    /// the home lane's `swap_out`, and the later `swap_in` here counts
+    /// (and prices) the read side as usual.
+    pub(crate) fn register_swapped(&mut self, seq: u64, tokens: usize) {
+        debug_assert!(
+            !self.seqs.contains_key(&seq) && !self.swapped.contains_key(&seq),
+            "sequence {seq} already known to this pool"
+        );
+        self.swapped.insert(seq, tokens);
     }
 
     /// Forget a swapped-out sequence without bringing it back (cancelled
@@ -822,6 +889,78 @@ mod tests {
         );
         assert_eq!(p.seq(2).unwrap().tokens, 32);
         assert!(p.check_invariants());
+    }
+
+    /// An adopted prefix page is indistinguishable from a locally
+    /// prefilled-and-released one: the next admit of the prompt serves
+    /// it as a cache hit without any prefill having happened here.
+    #[test]
+    fn adopted_pages_serve_admits_like_local_prefill() {
+        let mut p = PagePool::with_prefix_cache(8, 16);
+        let prompt: Vec<u32> = (0..40).collect(); // 2 full pages + tail
+        let hashes = p.prefix_hashes(&prompt);
+        assert_eq!(hashes.len(), 2);
+        for &h in &hashes {
+            assert!(!p.has_indexed(h));
+            assert!(p.adopt_prefix_page(h), "free pool must install");
+            assert!(p.has_indexed(h));
+        }
+        assert!(!p.adopt_prefix_page(hashes[0]), "already indexed: no-op");
+        assert_eq!(p.retained_pages(), 2);
+        assert_eq!(p.used_pages(), 0, "adopted pages are reclaimable cache");
+        assert!(p.check_invariants());
+        let out = p.admit(1, &prompt).unwrap();
+        assert_eq!(out.cached_tokens, 32, "both adopted pages hit");
+        assert_eq!(p.stats().adopted_pages, 2);
+        assert_eq!(p.stats().prefix_hits, 1);
+        assert!(p.check_invariants());
+    }
+
+    /// A fully-paged prompt's hash set keeps the admission cap (one
+    /// token always left to prefill), and adoption never evicts warm
+    /// retained cache or fires with caching off.
+    #[test]
+    fn adoption_respects_cap_capacity_and_cache_flag() {
+        let mut p = PagePool::with_prefix_cache(2, 4);
+        assert_eq!(p.prefix_hashes(&[1; 8]).len(), 1, "last full page dropped");
+        assert_eq!(p.prefix_hashes(&[1; 9]).len(), 2);
+        assert_eq!(p.prefix_hashes(&[1; 3]).len(), 0);
+        // Fill the pool with warm retained cache: adoption must refuse
+        // rather than evict it.
+        p.admit(1, &[9; 8]).unwrap();
+        p.release(1).unwrap();
+        assert_eq!(p.retained_pages(), 2);
+        assert!(!p.adopt_prefix_page(777), "no free page: adoption refused");
+        assert_eq!(p.stats().adopted_pages, 0);
+        assert!(p.check_invariants());
+        let mut off = PagePool::new(4, 4);
+        assert!(off.prefix_hashes(&[1; 8]).is_empty());
+        assert!(!off.adopt_prefix_page(777), "caching off: no index to feed");
+        assert!(off.check_invariants());
+    }
+
+    /// `register_swapped` re-homes a parked footprint without counting
+    /// traffic; the later `swap_in` counts (and the caller prices) the
+    /// read side only.
+    #[test]
+    fn register_swapped_rehomes_without_traffic() {
+        let mut home = PagePool::new(4, 4);
+        home.admit(1, &[1; 10]).unwrap(); // 3 pages
+        assert_eq!(home.swap_out(1), Ok(3));
+        let tokens = home.swapped_tokens(1).unwrap();
+        home.drop_swapped(1).unwrap();
+        let mut target = PagePool::new(4, 4);
+        target.register_swapped(1, tokens);
+        assert_eq!(target.swapped_tokens(1), Some(10));
+        let before = target.stats();
+        assert_eq!((before.swap_outs, before.swapped_out_pages), (0, 0));
+        assert!(target.check_invariants());
+        assert_eq!(target.swap_in(1), Ok(3));
+        assert_eq!(target.seq(1).unwrap().tokens, 10);
+        let after = target.stats();
+        assert_eq!((after.swap_ins, after.swapped_in_pages), (1, 3));
+        assert_eq!(after.swapped_out_pages, 0, "write side stays on the home lane");
+        assert!(target.check_invariants());
     }
 
     /// `drop_swapped` forgets a parked sequence without touching HBM.

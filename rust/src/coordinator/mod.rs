@@ -75,6 +75,20 @@
 //!    their virtual clocks independently; fleet time is the max over
 //!    lanes, and per-shard `ServeStats` merge with percentiles
 //!    recomputed from pooled samples (`ServeStats::merge`).
+//!    **Fleet memory** (opt-in): a fleet-level *prefix directory*
+//!    (`with_global_prefix`) maps the same chained first-page hash the
+//!    router and the pools use to the lane that materialized it, so a
+//!    shard routed away from a warm cache *adopts* the prefix pages —
+//!    charged only the inter-board transfer via
+//!    `ModelBackend::swap_cost_s` instead of re-prefilling — and hot
+//!    prefixes are prefilled on exactly one lane fleet-wide.
+//!    *Cross-shard migration* (`with_migration`) work-steals behind the
+//!    unchanged front-end: when a lane parks a request under overload
+//!    while another sits idle, the fleet `swap_out`s it on the home
+//!    lane, re-homes the sticky request→lane mapping, `swap_in`s on the
+//!    target (same transfer pricing) and the stream resumes
+//!    byte-identically.  Both paths run on the caller's thread between
+//!    lane ticks, so parallel lane ticking stays deterministic.
 //!
 //! FlightLLM's own runtime is single-batch latency-oriented (§1); the
 //! coordinator serves that policy with `max_batch = 1` and the Fig. 15

@@ -529,6 +529,32 @@ impl Scheduler {
         Some(s)
     }
 
+    /// Take a parked sequence OFF this lane for cross-shard migration:
+    /// returns its full state (token image, prefill progress,
+    /// admission time) and clears the local swap-registry entry — no
+    /// cancel semantics, no traffic counters; the receiving lane
+    /// re-registers it via [`Scheduler::inject_parked`].
+    pub(crate) fn take_parked(&mut self, seq: u64) -> Option<SeqState> {
+        let i = self.preempted.iter().position(|s| s.req.id == seq)?;
+        let s = self.preempted.swap_remove(i);
+        self.pool
+            .drop_swapped(seq)
+            .expect("parked sequence is in the swap registry");
+        Some(s)
+    }
+
+    /// Inject a parked sequence migrated FROM another lane: its token
+    /// footprint joins this pool's swap registry (no traffic counters
+    /// — the DDR image was written by the home lane) and the sequence
+    /// queues for resume under the usual strict oldest-first order,
+    /// `admitted_s` travelling with it.  The later `swap_in` here
+    /// counts and prices the read side like any local resume.
+    pub(crate) fn inject_parked(&mut self, s: SeqState) {
+        debug_assert!(!self.tracks(s.req.id), "sequence {} already on this lane", s.req.id);
+        self.pool.register_swapped(s.req.id, s.ctx);
+        self.preempted.push(s);
+    }
+
     /// Drain sequences that can never resume (their next decode step
     /// exceeds the entire pool) for terminal eviction by the engine.
     pub fn take_unresumable(&mut self) -> Vec<SeqState> {
@@ -877,6 +903,54 @@ mod tests {
         assert_eq!(s.pool.swapped_seqs(), 0, "swap registry entry dropped");
         assert!(s.is_drained());
         assert!(s.check_accounting());
+    }
+
+    /// Cross-shard migration at the scheduler level: a parked sequence
+    /// taken off one scheduler and injected into another resumes there
+    /// byte-identically — ctx, prefill progress and generated tokens
+    /// intact, accounting holding on BOTH lanes throughout, with no
+    /// swap-out traffic counted on the receiving pool.
+    #[test]
+    fn parked_sequence_migrates_across_schedulers_byte_identically() {
+        let cfg = SchedulerConfig {
+            max_batch: 1,
+            kv_pages: 4,
+            page_tokens: 4,
+            max_seq: 64,
+            swap: true,
+            ..Default::default()
+        };
+        let mut home = Scheduler::new(cfg.clone());
+        home.submit(req(0, 6, 8));
+        assert_eq!(home.schedule(0.5), vec![0]);
+        home.on_prefill_done(0, 10);
+        assert_eq!(home.on_decode_done(0, 11), DecodeOutcome::Running);
+        assert!(home.preempt(0), "park the mid-decode sequence");
+        assert!(home.check_accounting());
+        let parked = home.take_parked(0).expect("parked sequence exports");
+        assert!(home.take_parked(0).is_none(), "gone from the home lane");
+        assert!(home.is_drained());
+        assert!(home.check_accounting());
+        assert_eq!(parked.ctx, 7);
+        assert_eq!(parked.generated, vec![10, 11]);
+        assert_eq!(parked.admitted_s, 0.5, "admission time travels");
+        let mut target = Scheduler::new(cfg);
+        target.inject_parked(parked);
+        assert!(target.tracks(0));
+        assert!(target.check_accounting());
+        // Resume on the foreign lane: swap-in happens inside plan().
+        let plan = target.plan(1.0);
+        assert_eq!(plan, vec![PlanItem { seq: 0, work: PlanWork::Decode }]);
+        let resumed = target.seq(0).unwrap();
+        assert_eq!(resumed.ctx, 7, "context restored on the foreign lane");
+        assert_eq!(resumed.generated, vec![10, 11], "token image byte-identical");
+        assert!(resumed.prefilled);
+        let st = target.pool.stats();
+        assert_eq!(st.swapped_in_pages, 2, "read side priced on the target");
+        assert_eq!(st.swapped_out_pages, 0, "write side stayed on the home lane");
+        assert!(target.check_accounting());
+        assert_eq!(target.on_decode_done(0, 12), DecodeOutcome::Running);
+        assert_eq!(target.seq(0).unwrap().generated, vec![10, 11, 12]);
     }
 
     /// Cancellation while parked in the swap tier: the sequence

@@ -230,6 +230,18 @@ pub struct ServeStats {
     /// Serving-clock seconds charged for that swap traffic (virtual
     /// clock only; on the host clock swap cost is whatever it measures).
     pub swap_time_s: f64,
+    /// Prefix adoptions: admissions on this lane served from prefix
+    /// pages ANOTHER lane materialized (fleet directory hit — the pages
+    /// were copied over the inter-board link instead of re-prefilled).
+    pub prefix_adoptions: u64,
+    /// Parked requests this lane RECEIVED from an overloaded lane
+    /// (cross-shard migration / work stealing).
+    pub migrations: u64,
+    /// KV pages copied over the inter-board link for those migrations.
+    pub migrated_pages: u64,
+    /// Serving-clock seconds charged for inter-board transfer traffic
+    /// (prefix adoptions + migrations; virtual clock only).
+    pub transfer_time_s: f64,
 }
 
 /// Most recent decode inter-token gaps retained for the ITL
@@ -332,6 +344,10 @@ impl ServeStats {
             out.swapped_out_pages += s.swapped_out_pages;
             out.swapped_in_pages += s.swapped_in_pages;
             out.swap_time_s += s.swap_time_s;
+            out.prefix_adoptions += s.prefix_adoptions;
+            out.migrations += s.migrations;
+            out.migrated_pages += s.migrated_pages;
+            out.transfer_time_s += s.transfer_time_s;
         }
         out
     }
@@ -452,9 +468,13 @@ impl ServeStats {
         m.counter_add("flightllm_preemptions_total", self.preemptions);
         m.counter_add("flightllm_swapped_out_pages_total", self.swapped_out_pages);
         m.counter_add("flightllm_swapped_in_pages_total", self.swapped_in_pages);
+        m.counter_add("flightllm_prefix_adoptions_total", self.prefix_adoptions);
+        m.counter_add("flightllm_migrations_total", self.migrations);
+        m.counter_add("flightllm_migrated_pages_total", self.migrated_pages);
         m.counter_add("flightllm_peak_kv_pages", self.peak_kv_pages as u64);
         m.gauge_set("flightllm_served_seconds", self.served_s);
         m.gauge_set("flightllm_swap_seconds", self.swap_time_s);
+        m.gauge_set("flightllm_transfer_seconds", self.transfer_time_s);
         m.help("flightllm_decode_tokens_per_second", "Steady-state decode throughput.");
         m.gauge_set("flightllm_decode_tokens_per_second", self.decode_tps());
         m.gauge_set("flightllm_mixed_decode_tokens_per_second", self.mixed_decode_tps());
@@ -559,6 +579,16 @@ impl ServeStats {
                 m.counter("flightllm_swapped_out_pages_total"),
                 m.counter("flightllm_swapped_in_pages_total"),
                 m.gauge("flightllm_swap_seconds") * 1e3
+            ));
+        }
+        let adoptions = m.counter("flightllm_prefix_adoptions_total");
+        let migrations = m.counter("flightllm_migrations_total");
+        if adoptions > 0 || migrations > 0 {
+            out.push_str(&format!(
+                "\nfleet memory: {adoptions} prefix adoptions, {migrations} migrations \
+                 ({} pages moved, {:.1} ms of inter-board transfer)",
+                m.counter("flightllm_migrated_pages_total"),
+                m.gauge("flightllm_transfer_seconds") * 1e3
             ));
         }
         out
@@ -927,6 +957,38 @@ mod tests {
         assert!(m.p99_ttft_s() > averaged);
         // Pooled P50 = ceil-rank 2 of {1, 2, 10, 20}.
         assert_eq!(m.p50_ttft_s(), 2.0);
+    }
+
+    /// Satellite (fleet-memory counters): adoption/migration counters
+    /// sum across shards, surface in the Prometheus exposition, and the
+    /// summary gains its fleet-memory section only when nonzero.
+    #[test]
+    fn fleet_memory_counters_merge_and_surface() {
+        let a = ServeStats { prefix_adoptions: 2, ..Default::default() };
+        let b = ServeStats {
+            migrations: 1,
+            migrated_pages: 3,
+            transfer_time_s: 0.25,
+            ..Default::default()
+        };
+        let m = ServeStats::merge(&[a, b]);
+        assert_eq!(m.prefix_adoptions, 2);
+        assert_eq!(m.migrations, 1);
+        assert_eq!(m.migrated_pages, 3);
+        assert_eq!(m.transfer_time_s, 0.25);
+        let reg = m.metrics_registry();
+        assert_eq!(reg.counter("flightllm_prefix_adoptions_total"), 2);
+        assert_eq!(reg.counter("flightllm_migrations_total"), 1);
+        assert_eq!(reg.counter("flightllm_migrated_pages_total"), 3);
+        assert_eq!(reg.gauge("flightllm_transfer_seconds"), 0.25);
+        let text = reg.prometheus_text();
+        assert!(text.contains("flightllm_prefix_adoptions_total 2\n"));
+        assert!(text.contains("flightllm_migrations_total 1\n"));
+        let summary = m.summary("virtual");
+        assert!(summary.contains("fleet memory: 2 prefix adoptions, 1 migrations"));
+        assert!(summary.contains("(3 pages moved, 250.0 ms of inter-board transfer)"));
+        // A run without fleet traffic keeps the summary clean.
+        assert!(!ServeStats::default().summary("virtual").contains("fleet memory"));
     }
 
     /// Satellite: the ITL buffer is a bounded ring — a long-lived

@@ -142,6 +142,27 @@ enum FinishKind {
     Cancelled,
 }
 
+/// A parked request packaged for cross-shard migration: the scheduler
+/// state plus every per-request table entry the engine keeps (arrival,
+/// token timestamps, streaming sink).  Moving ALL of it is what makes a
+/// migrated request resume byte-identically — latency aggregates keep
+/// the original arrival, and the client's handle keeps streaming from
+/// the new lane without noticing the move.
+pub(crate) struct ParkedRequest {
+    state: SeqState,
+    arrival_s: Option<f64>,
+    first_token_s: Option<f64>,
+    last_token_s: Option<f64>,
+    sub: Option<Sender<StreamEvent>>,
+}
+
+impl ParkedRequest {
+    /// Tokens of KV context the DDR image holds (sizes the transfer).
+    pub(crate) fn ctx(&self) -> usize {
+        self.state.ctx
+    }
+}
+
 /// The continuous-batching engine iteration, shared by the offline
 /// `Server` and the live `Service`/`LiveService` front-ends.
 pub(crate) struct EngineCore<B: ModelBackend> {
@@ -200,6 +221,12 @@ impl<B: ModelBackend> EngineCore<B> {
 
     pub(crate) fn scheduler(&self) -> &Scheduler {
         &self.scheduler
+    }
+
+    /// Mutable scheduler access for the fleet layer (prefix-page
+    /// adoption installs pages directly into the lane's pool).
+    pub(crate) fn scheduler_mut(&mut self) -> &mut Scheduler {
+        &mut self.scheduler
     }
 
     /// The model backend, for inspection (e.g. `SimBackend`
@@ -351,6 +378,86 @@ impl<B: ModelBackend> EngineCore<B> {
             let cost = self.backend.swap_cost_s(delta as usize).max(0.0);
             self.clock += cost;
             self.stats.swap_time_s += cost;
+        }
+    }
+
+    /// Advance the virtual clock to at least `t_s` (no-op on the real
+    /// clock, and never moves time backwards).  The fleet calls this on
+    /// a migration target with the donor lane's clock: the DDR image
+    /// cannot arrive before the donor finished writing it, so resuming
+    /// earlier would fabricate latency the hardware cannot deliver.
+    pub(crate) fn sync_clock_at_least(&mut self, t_s: f64) {
+        if let ClockMode::Virtual = self.mode {
+            self.clock = self.clock.max(t_s);
+        }
+    }
+
+    /// Package a parked (swap-tier) request for migration to another
+    /// lane: scheduler state out of the preempted set + swap registry,
+    /// plus every per-request engine table entry.  `None` if `seq` is
+    /// not parked here.  The home lane keeps the swap-out traffic it
+    /// already counted (the write side happened on ITS DDR); the read
+    /// side is priced where it happens — on the adopting lane.
+    pub(crate) fn export_parked(&mut self, seq: u64) -> Option<ParkedRequest> {
+        let state = self.scheduler.take_parked(seq)?;
+        Some(ParkedRequest {
+            state,
+            arrival_s: self.arrivals.remove(&seq),
+            first_token_s: self.first_token_s.remove(&seq),
+            last_token_s: self.last_token_s.remove(&seq),
+            sub: self.subs.remove(&seq),
+        })
+    }
+
+    /// Install a migrated request on this lane: the inter-board copy of
+    /// its DDR image is priced NOW (the clock advances by the transfer
+    /// before the sequence can even be considered for resume), then the
+    /// state re-enters the swap tier, where the ordinary `swap_in` path
+    /// later pays the DDR read like any locally parked sequence.
+    pub(crate) fn import_parked(&mut self, parked: ParkedRequest, from_lane: u32) {
+        let seq = parked.state.req.id;
+        let pages = self.scheduler.pool.pages_for(parked.state.ctx) as u64;
+        self.stats.migrations += 1;
+        self.stats.migrated_pages += pages;
+        let cost = self.backend.swap_cost_s(pages as usize).max(0.0);
+        if let ClockMode::Virtual = self.mode {
+            self.clock += cost;
+        }
+        self.stats.transfer_time_s += cost;
+        if let Some(rec) = &self.recorder {
+            rec.record(
+                self.clock,
+                Event::Migrated { id: seq, from_lane, to_lane: rec.lane(), pages },
+            );
+        }
+        if let Some(arrival) = parked.arrival_s {
+            self.arrivals.insert(seq, arrival);
+        }
+        if let Some(t) = parked.first_token_s {
+            self.first_token_s.insert(seq, t);
+        }
+        if let Some(t) = parked.last_token_s {
+            self.last_token_s.insert(seq, t);
+        }
+        if let Some(tx) = parked.sub {
+            self.subs.insert(seq, tx);
+        }
+        self.scheduler.inject_parked(parked.state);
+    }
+
+    /// Account for `pages` prefix pages this lane just adopted from
+    /// another lane's cache (fleet directory hit): the inter-board copy
+    /// is priced like swap traffic, and the adoption is recorded so the
+    /// trace shows WHY this lane served a prefix it never prefilled.
+    pub(crate) fn record_prefix_adoption(&mut self, id: u64, from_lane: u32, pages: u64) {
+        self.stats.prefix_adoptions += 1;
+        let cost = self.backend.swap_cost_s(pages as usize).max(0.0);
+        if let ClockMode::Virtual = self.mode {
+            self.clock += cost;
+        }
+        self.stats.transfer_time_s += cost;
+        if let Some(rec) = &self.recorder {
+            rec.record(self.clock, Event::PrefixAdopted { id, from_lane, pages });
         }
     }
 

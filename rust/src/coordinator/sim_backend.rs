@@ -37,7 +37,11 @@
 //! model's KV geometry (`ModelConfig::kv_bytes` per token × tokens per
 //! page at the serving layer's page size), the bandwidth defaults to
 //! the platform's DDR channel.  The virtual clock then shows the real
-//! cost of spilling under overload.
+//! cost of spilling under overload.  The fleet's memory tier reuses the
+//! same price for the inter-board link: adopting a prefix page another
+//! shard materialized and migrating a parked request's KV pages are
+//! both charged at `swap_cost_s(pages)`, so cross-board transfers cost
+//! exactly what local spill/resume traffic does.
 
 use std::collections::HashMap;
 
@@ -389,7 +393,9 @@ impl ModelBackend for SimBackend {
 
     /// Price preemption spill/resume traffic over the DDR channel:
     /// pages × page-bytes ÷ bandwidth.  Free when no swap model is
-    /// configured (swap disabled at the serving layer).
+    /// configured (swap disabled at the serving layer).  The fleet also
+    /// charges this price for inter-board transfers — prefix-page
+    /// adoption and parked-request migration between shards.
     fn swap_cost_s(&mut self, pages: usize) -> f64 {
         match self.swap {
             Some(m) => pages as f64 * m.page_bytes / (m.ddr_gbps * 1e9),

@@ -71,6 +71,14 @@ pub enum Event {
     FirstToken { id: u64 },
     /// KV exhaustion parked the request (swap-to-DDR preemption).
     Preempted { id: u64 },
+    /// This lane installed `pages` prefix pages another lane
+    /// materialized (fleet prefix directory), priced as inter-board
+    /// transfer instead of re-prefilling.
+    PrefixAdopted { id: u64, from_lane: u32, pages: u64 },
+    /// A parked request migrated across shards (work stealing):
+    /// `pages` is the DDR image footprint copied over the inter-board
+    /// link.  Recorded on the RECEIVING lane's ring.
+    Migrated { id: u64, from_lane: u32, to_lane: u32, pages: u64 },
     /// Pages moved HBM -> DDR since the last swap sample.
     SwapOut { pages: u64 },
     /// Pages moved DDR -> HBM since the last swap sample.
@@ -106,6 +114,8 @@ impl Event {
             Event::PrefillChunk { .. } => "prefill_chunk",
             Event::FirstToken { .. } => "first_token",
             Event::Preempted { .. } => "preempted",
+            Event::PrefixAdopted { .. } => "prefix_adopted",
+            Event::Migrated { .. } => "migrated",
             Event::SwapOut { .. } => "swap_out",
             Event::SwapIn { .. } => "swap_in",
             Event::Retired { .. } => "retired",
@@ -346,5 +356,13 @@ mod tests {
         assert_eq!(ev.kind(), "step");
         assert_eq!(Phase::Prefill.label(), "prefill");
         assert_eq!(Event::EngineError { detail: "x".into() }.kind(), "engine_error");
+        assert_eq!(
+            Event::PrefixAdopted { id: 1, from_lane: 0, pages: 2 }.kind(),
+            "prefix_adopted"
+        );
+        assert_eq!(
+            Event::Migrated { id: 1, from_lane: 0, to_lane: 1, pages: 3 }.kind(),
+            "migrated"
+        );
     }
 }

@@ -11,9 +11,11 @@
 //! - one *async* span (`ph:"b"` / `ph:"e"`, category `request`) per
 //!   request lifetime from `Submitted` to its terminal event, with
 //!   async-instant (`ph:"n"`) marks for admission, prefill chunks,
-//!   first token and preemption;
+//!   first token, preemption, prefix adoption (fleet directory) and
+//!   cross-shard migration;
 //! - counter tracks (`ph:"C"`) per lane for live KV pages, queue
-//!   depth, and cumulative swapped-out/in pages.
+//!   depth, cumulative swapped-out/in pages, and cumulative migrated
+//!   pages on lanes that receive migrated requests.
 //!
 //! Timestamps are the serving virtual clock converted to
 //! microseconds (the unit the trace format requires).
@@ -73,6 +75,7 @@ pub fn perfetto_trace(logs: &[EventLog]) -> Json {
         ]));
         let mut swap_out_total = 0u64;
         let mut swap_in_total = 0u64;
+        let mut migrated_total = 0u64;
         for s in &log.events {
             match &s.event {
                 Event::Step { lane, phase, batch, step_s, kv_pages, queue_depth } => {
@@ -136,6 +139,33 @@ pub fn perfetto_trace(logs: &[EventLog]) -> Json {
                 }
                 Event::Preempted { id } => {
                     events.push(async_event("n", *id, "preempted", s.t_s, None));
+                }
+                Event::PrefixAdopted { id, from_lane, pages } => {
+                    events.push(async_event(
+                        "n",
+                        *id,
+                        "prefix_adopted",
+                        s.t_s,
+                        Some(Json::obj(vec![
+                            ("from_lane", Json::num(*from_lane as f64)),
+                            ("pages", Json::num(*pages as f64)),
+                        ])),
+                    ));
+                }
+                Event::Migrated { id, from_lane, to_lane, pages } => {
+                    events.push(async_event(
+                        "n",
+                        *id,
+                        "migrated",
+                        s.t_s,
+                        Some(Json::obj(vec![
+                            ("from_lane", Json::num(*from_lane as f64)),
+                            ("to_lane", Json::num(*to_lane as f64)),
+                            ("pages", Json::num(*pages as f64)),
+                        ])),
+                    ));
+                    migrated_total += pages;
+                    events.push(counter(tid, "migrated_pages", s.t_s, migrated_total as f64));
                 }
                 Event::Retired { id, tokens } => {
                     events.push(async_event(
@@ -294,5 +324,55 @@ mod tests {
         assert_eq!(slice.get("name").and_then(Json::as_str), Some("prefill"));
         assert_eq!(slice.get("dur").and_then(Json::as_f64), Some(2e-3 * 1e6));
         assert_eq!(slice.get("tid").and_then(Json::as_f64), Some(1.0));
+    }
+
+    /// Adoption and migration render as instant markers on the request
+    /// span, and migrated pages accumulate on a per-lane counter track.
+    #[test]
+    fn adoption_and_migration_render_markers_and_counter() {
+        let r = Recorder::new().for_lane(1);
+        r.record(0.0, Event::Submitted { id: 9, prompt_len: 48 });
+        r.record(1e-3, Event::PrefixAdopted { id: 9, from_lane: 0, pages: 2 });
+        r.record(2e-3, Event::Migrated { id: 9, from_lane: 0, to_lane: 1, pages: 3 });
+        r.record(3e-3, Event::Migrated { id: 9, from_lane: 2, to_lane: 1, pages: 4 });
+        r.record(4e-3, Event::Retired { id: 9, tokens: 5 });
+        let doc = perfetto_trace(&[r.drain()]);
+        let evs = match doc.get("traceEvents") {
+            Some(Json::Arr(v)) => v.clone(),
+            other => panic!("traceEvents missing: {other:?}"),
+        };
+        let named = |n: &str| {
+            evs.iter()
+                .filter(|e| e.get("name").and_then(Json::as_str) == Some(n))
+                .cloned()
+                .collect::<Vec<_>>()
+        };
+        let adopted = named("prefix_adopted");
+        assert_eq!(adopted.len(), 1);
+        assert_eq!(adopted[0].get("ph").and_then(Json::as_str), Some("n"));
+        let args = adopted[0].get("args").expect("adoption args");
+        assert_eq!(args.get("from_lane").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(args.get("pages").and_then(Json::as_f64), Some(2.0));
+        let migrated = named("migrated");
+        assert_eq!(migrated.len(), 2, "one marker per migration");
+        assert!(migrated
+            .iter()
+            .all(|e| e.get("ph").and_then(Json::as_str) == Some("n")));
+        assert_eq!(
+            migrated[1].get("args").and_then(|a| a.get("to_lane")).and_then(Json::as_f64),
+            Some(1.0)
+        );
+        let counters = named("lane1 migrated_pages");
+        assert_eq!(counters.len(), 2, "one counter sample per migration");
+        let values: Vec<f64> = counters
+            .iter()
+            .map(|e| {
+                e.get("args")
+                    .and_then(|a| a.get("migrated_pages"))
+                    .and_then(Json::as_f64)
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(values, vec![3.0, 7.0], "counter is cumulative");
     }
 }

@@ -154,6 +154,75 @@ pub fn generate_shared_prefix_trace(cfg: &SharedPrefixConfig) -> Vec<Request> {
         .collect()
 }
 
+/// A SKEWED shared-prefix workload: like [`SharedPrefixConfig`], but
+/// one hot group (group 0) draws `hot_percent` of the requests while
+/// the rest spread uniformly over the remaining groups — the traffic
+/// shape that hotspots prefix-affinity routing (every hot request
+/// hashes to ONE lane) and that the fleet's global prefix directory +
+/// cross-shard migration are built to absorb.
+#[derive(Debug, Clone)]
+pub struct SkewedPrefixConfig {
+    /// Distinct system prompts; group 0 is the hot one.
+    pub n_groups: usize,
+    /// Tokens in each shared prefix.
+    pub prefix_len: usize,
+    pub tail_len_choices: Vec<u32>,
+    pub decode_len_choices: Vec<u32>,
+    pub n_requests: usize,
+    /// Percent of requests drawing the hot group (clamped to 100).
+    pub hot_percent: u32,
+    pub rate_per_s: f64,
+    pub vocab: u32,
+    pub seed: u64,
+}
+
+impl Default for SkewedPrefixConfig {
+    fn default() -> Self {
+        Self {
+            n_groups: 4,
+            prefix_len: 64,
+            tail_len_choices: vec![8, 16],
+            decode_len_choices: vec![8, 16],
+            n_requests: 24,
+            hot_percent: 75,
+            rate_per_s: 1e3,
+            vocab: 512,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a skewed shared-prefix trace (deterministic per seed,
+/// strictly increasing Poisson arrivals).
+pub fn generate_skewed_prefix_trace(cfg: &SkewedPrefixConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let n_groups = cfg.n_groups.max(1);
+    let hot = cfg.hot_percent.min(100) as u64;
+    let prefixes: Vec<Vec<u32>> = (0..n_groups)
+        .map(|_| (0..cfg.prefix_len).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let mut t = 0.0f64;
+    (0..cfg.n_requests)
+        .map(|i| {
+            t += rng.exp(cfg.rate_per_s);
+            let group = if rng.below(100) < hot || n_groups == 1 {
+                0
+            } else {
+                1 + rng.below((n_groups - 1) as u64) as usize
+            };
+            let tail_len = *rng.choose(&cfg.tail_len_choices);
+            let mut prompt = prefixes[group].clone();
+            prompt.extend((0..tail_len).map(|_| rng.below(cfg.vocab as u64) as u32));
+            Request {
+                id: i as u64,
+                arrival_s: t,
+                prompt,
+                max_new_tokens: *rng.choose(&cfg.decode_len_choices),
+            }
+        })
+        .collect()
+}
+
 /// A mixed burst: `n_decode_heavy` short-prompt / long-decode requests
 /// arrive at t = 0 and settle into steady decode; `n_prefill_heavy`
 /// long-prompt requests then land at `prefill_stagger_s` intervals
@@ -596,6 +665,58 @@ mod tests {
         // A different seed must not replay the same trace.
         let c = generate_shared_prefix_trace(&SharedPrefixConfig { seed: 10, ..Default::default() });
         assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    /// Satellite: the skewed trace is deterministic per seed, keeps
+    /// strictly increasing arrivals, and its hot group actually
+    /// dominates (while the cold groups still appear).
+    #[test]
+    fn skewed_prefix_trace_hot_group_dominates() {
+        let cfg = SkewedPrefixConfig { n_requests: 200, seed: 21, ..Default::default() };
+        let a = generate_skewed_prefix_trace(&cfg);
+        let b = generate_skewed_prefix_trace(&cfg);
+        assert_eq!(a.len(), 200);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt, "deterministic per seed");
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        }
+        for w in a.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s, "strictly increasing arrivals");
+        }
+        // Group by prefix: the hot prefix is the modal one by a wide
+        // margin, and at least one cold group still shows up.
+        let mut counts: Vec<(Vec<u32>, usize)> = Vec::new();
+        for r in &a {
+            let p = r.prompt[..cfg.prefix_len].to_vec();
+            match counts.iter_mut().find(|(q, _)| *q == p) {
+                Some((_, n)) => *n += 1,
+                None => counts.push((p, 1)),
+            }
+        }
+        assert!(counts.len() >= 2, "cold groups must appear");
+        assert!(counts.len() <= cfg.n_groups);
+        let hot = counts.iter().map(|(_, n)| *n).max().unwrap();
+        assert!(
+            hot >= 200 * 60 / 100,
+            "hot group must dominate at 75%: modal count {hot}/200"
+        );
+    }
+
+    /// A single-group skewed config degenerates gracefully: every
+    /// request draws the one prefix.
+    #[test]
+    fn skewed_prefix_trace_single_group_is_total_skew() {
+        let cfg = SkewedPrefixConfig {
+            n_groups: 1,
+            hot_percent: 0,
+            n_requests: 8,
+            ..Default::default()
+        };
+        let trace = generate_skewed_prefix_trace(&cfg);
+        let first = trace[0].prompt[..cfg.prefix_len].to_vec();
+        for r in &trace {
+            assert_eq!(r.prompt[..cfg.prefix_len], first[..], "one group, one prefix");
+        }
     }
 
     #[test]
