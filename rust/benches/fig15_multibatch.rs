@@ -14,10 +14,13 @@ use flightllm::baselines::{GpuStack, GpuSystem};
 use flightllm::config::Target;
 use flightllm::coordinator::RoutePolicy;
 use flightllm::experiments::{
-    flightllm_batch_tps, flightllm_overload_three_way, flightllm_serve_batch_tps,
-    flightllm_serve_chunk_sweep, flightllm_serve_prefix, flightllm_serve_sharded, FleetSpec,
+    analyze_stage_pricing, flightllm_batch_tps, flightllm_overload_three_way,
+    flightllm_serve_batch_tps, flightllm_serve_chunk_sweep, flightllm_serve_prefix,
+    flightllm_serve_sharded, FleetSpec,
 };
+use flightllm::ir::Stage;
 use flightllm::metrics::format_table;
+use flightllm::verify::shipped_presets;
 use flightllm::workload::{
     generate_overload_trace, generate_shared_prefix_trace, MixedBurstConfig, OverloadConfig,
     SharedPrefixConfig,
@@ -327,4 +330,63 @@ fn main() {
         affine_rate >= rr_rate,
         "prefix affinity {affine_rate} must be at least round-robin {rr_rate}"
     );
+
+    // The certified stream optimizer priced through the simulator: per
+    // compiler preset, the decode stream before and after dead-load /
+    // redundant-reload / removable-sync elimination.  The naive preset's
+    // off-chip activation schedule reloads shared input vectors, so its
+    // row must save bytes strictly; no row may get slower or move more.
+    let mut an_rows = Vec::new();
+    let mut any_saved = false;
+    for (name, opt) in shipped_presets() {
+        let p = analyze_stage_pricing(&target, Stage::Decode { ctx }, opt, true);
+        assert!(p.certified, "{name}: optimizer output must certify");
+        assert!(
+            p.bytes_after <= p.bytes_before,
+            "{name}: optimization must not add traffic ({} -> {})",
+            p.bytes_before,
+            p.bytes_after
+        );
+        assert!(
+            p.ns_after <= p.ns_before + 1e-9,
+            "{name}: optimization must not slow the step ({} -> {})",
+            p.ns_before,
+            p.ns_after
+        );
+        let saved = p.bytes_before - p.bytes_after;
+        if name == "naive" {
+            assert!(saved > 0, "the naive preset's redundant reloads must be eliminated");
+        }
+        any_saved |= saved > 0;
+        an_rows.push(vec![
+            name.to_string(),
+            format!("{}", p.insts_before),
+            format!("{}", p.insts_after),
+            format!("{:.2}", p.bytes_before as f64 / 1e6),
+            format!("{:.2}", p.bytes_after as f64 / 1e6),
+            format!("{:.2}", saved as f64 / 1e6),
+            format!("{:.1}", p.ns_before / 1e3),
+            format!("{:.1}", p.ns_after / 1e3),
+        ]);
+    }
+    println!(
+        "{}",
+        format_table(
+            &format!(
+                "Analyze: certified stream optimization — LLaMA2-U280 decode @ctx={ctx}"
+            ),
+            &[
+                "preset",
+                "insts",
+                "insts'",
+                "MB moved",
+                "MB moved'",
+                "MB saved",
+                "step us",
+                "step us'",
+            ],
+            &an_rows
+        )
+    );
+    assert!(any_saved, "the analyze sweep must find and eliminate waste somewhere");
 }

@@ -11,7 +11,8 @@
 //! flightllm simulate [--model llama2|opt] [--platform u280|vhk158]
 //!                    [--prefill N] [--decode N]
 //! flightllm report   [--what storage|resources|efficiency]
-//! flightllm verify   [--model llama2|opt|tiny] [--platform u280|vhk158]
+//! flightllm verify   [--model llama2|opt|tiny] [--platform u280|vhk158] [--json]
+//! flightllm analyze  [--model llama2|opt|tiny] [--platform u280|vhk158] [--json]
 //! ```
 //!
 //! `verify` statically checks every shipped instruction stream (all
@@ -20,6 +21,16 @@
 //! discipline, bucket coverage — and exits nonzero on any diagnostic.
 //! With no flags it covers the LLaMA2-on-U280, LLaMA2-on-VHK158 and tiny
 //! targets; `--model`/`--platform` narrow it to one.
+//!
+//! `analyze` runs the `verify::dataflow` efficiency tier over the same
+//! stream matrix: per-stream liveness findings (dead loads, redundant
+//! reloads, removable SLR barriers) and byte costs, then the certified
+//! `compiler::optimize_stream` pass, exiting nonzero unless every
+//! optimized stream is certified equivalent, re-verifies clean and
+//! analyzes to zero residual inefficiencies.  Both commands take
+//! `--json` to emit the report through `util::json` with a stable
+//! schema for CI and tooling (see ROADMAP's "Reading an analysis
+//! report").
 //!
 //! `serve --backend sim` needs no artifacts: the trace is served by the
 //! continuous-batching engine against the cycle-approximate simulator,
@@ -90,6 +101,7 @@ use crate::coordinator::{Sampler, SchedulerConfig, Server, SimBackend};
 use crate::experiments::flightllm_full;
 use crate::metrics::{format_table, EvalPoint};
 use crate::obs::{perfetto_trace, EventLog, Recorder};
+use crate::util::Json;
 use crate::workload::{generate_trace, TraceConfig};
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -130,7 +142,7 @@ fn trace_json(logs: &[EventLog]) -> String {
     perfetto_trace(logs).to_string_pretty() + "\n"
 }
 
-const USAGE: &str = "usage: flightllm <serve|simulate|report> [flags]
+const USAGE: &str = "usage: flightllm <serve|simulate|report|verify|analyze> [flags]
   serve    --backend runtime|sim --artifacts DIR --requests N --batch N --temp T
            --model llama2|opt|tiny --platform u280|vhk158 [--prefix-cache]
            [--prefill-chunk N] [--live] [--rate R] [--swap] [--swap-gbps G]
@@ -138,7 +150,8 @@ const USAGE: &str = "usage: flightllm <serve|simulate|report> [flags]
            [--migrate] [--trace-out FILE] [--metrics-out FILE]
   simulate --model llama2|opt --platform u280|vhk158 --prefill N --decode N
   report   --what storage|resources|efficiency
-  verify   [--model llama2|opt|tiny] [--platform u280|vhk158]";
+  verify   [--model llama2|opt|tiny] [--platform u280|vhk158] [--json]
+  analyze  [--model llama2|opt|tiny] [--platform u280|vhk158] [--json]";
 
 pub fn run(args: &[String]) -> i32 {
     match args.get(1).map(|s| s.as_str()) {
@@ -146,6 +159,7 @@ pub fn run(args: &[String]) -> i32 {
         Some("simulate") => cmd_simulate(&args[2..]),
         Some("report") => cmd_report(&args[2..]),
         Some("verify") => cmd_verify(&args[2..]),
+        Some("analyze") => cmd_analyze(&args[2..]),
         Some("--help") | Some("-h") | None => {
             eprintln!("{USAGE}");
             if args.len() <= 1 {
@@ -734,47 +748,199 @@ fn cmd_serve_runtime(_args: &[String]) -> i32 {
     1
 }
 
+/// The shipped verification targets, or the one `--model`/`--platform`
+/// narrow to.
+fn selected_targets(args: &[String]) -> Vec<Target> {
+    if flag(args, "--model").is_some() || flag(args, "--platform").is_some() {
+        vec![target_for(args)]
+    } else {
+        vec![Target::u280_llama2(), Target::vhk158_llama2(), Target::u280_tiny()]
+    }
+}
+
+fn diag_json(d: &crate::verify::Diagnostic) -> Json {
+    Json::obj(vec![
+        ("index", Json::num(d.index as f64)),
+        ("kind", Json::str(format!("{:?}", d.kind))),
+        ("detail", Json::str(d.detail.clone())),
+    ])
+}
+
+/// Stable `verify --json` schema: command/clean at the top, one entry
+/// per target with its per-stream diagnostics.
+fn verify_report_json(reports: &[crate::verify::TargetReport]) -> Json {
+    let clean = reports.iter().all(|r| r.is_clean());
+    let targets: Vec<Json> = reports
+        .iter()
+        .map(|r| {
+            let streams: Vec<Json> = r
+                .streams
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("stream", Json::str(s.label.clone())),
+                        ("instructions", Json::num(s.instructions as f64)),
+                        ("suppressed", Json::num(s.suppressed as f64)),
+                        ("diags", Json::Arr(s.diags.iter().map(diag_json).collect())),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![
+                ("target", Json::str(r.target.clone())),
+                ("clean", Json::Bool(r.is_clean())),
+                ("instructions", Json::num(r.total_instructions() as f64)),
+                ("bucket_diags", Json::Arr(r.bucket_diags.iter().map(diag_json).collect())),
+                ("streams", Json::Arr(streams)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("command", Json::str("verify")),
+        ("clean", Json::Bool(clean)),
+        ("targets", Json::Arr(targets)),
+    ])
+}
+
+/// Stable `analyze --json` schema: per-stream pre-opt findings/costs,
+/// what the optimizer removed, and the certification/gate state.
+fn analyze_report_json(reports: &[crate::verify::dataflow::TargetAnalysis]) -> Json {
+    let gate = reports.iter().all(|r| r.gate_passes());
+    let targets: Vec<Json> = reports
+        .iter()
+        .map(|r| {
+            let streams: Vec<Json> = r
+                .streams
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("stream", Json::str(s.label.clone())),
+                        ("instructions", Json::num(s.instructions as f64)),
+                        ("optimized_instructions", Json::num(s.optimized_instructions as f64)),
+                        ("bytes_moved", Json::num(s.cost.offchip_bytes() as f64)),
+                        (
+                            "optimized_bytes_moved",
+                            Json::num(s.optimized_cost.offchip_bytes() as f64),
+                        ),
+                        ("bytes_saved", Json::num(s.bytes_saved as f64)),
+                        ("dead_loads", Json::num(s.cost.dead_loads as f64)),
+                        ("redundant_reloads", Json::num(s.cost.redundant_reloads as f64)),
+                        ("removable_syncs", Json::num(s.cost.removable_syncs as f64)),
+                        ("optimized_findings", Json::num(s.optimized_cost.findings() as f64)),
+                        ("certified", Json::Bool(s.certified)),
+                        ("reverify_clean", Json::Bool(s.reverify_clean)),
+                        ("suppressed", Json::num(s.suppressed as f64)),
+                        ("diags", Json::Arr(s.diags.iter().map(diag_json).collect())),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![
+                ("target", Json::str(r.target.clone())),
+                ("gate_passed", Json::Bool(r.gate_passes())),
+                ("bytes_moved", Json::num(r.total_bytes_moved() as f64)),
+                ("bytes_saved", Json::num(r.total_bytes_saved() as f64)),
+                ("findings", Json::num(r.total_findings() as f64)),
+                ("streams", Json::Arr(streams)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("command", Json::str("analyze")),
+        ("gate_passed", Json::Bool(gate)),
+        ("targets", Json::Arr(targets)),
+    ])
+}
+
 /// Statically verify the shipped instruction streams; exit 1 on any
 /// diagnostic (the CI gate).
 fn cmd_verify(args: &[String]) -> i32 {
-    let targets: Vec<Target> =
-        if flag(args, "--model").is_some() || flag(args, "--platform").is_some() {
-            vec![target_for(args)]
-        } else {
-            vec![Target::u280_llama2(), Target::vhk158_llama2(), Target::u280_tiny()]
-        };
-    let mut diag_total = 0usize;
-    for t in &targets {
-        let report = crate::verify::verify_target(t);
-        println!(
-            "{}: {} streams, {} instructions — {}",
-            report.target,
-            report.streams.len(),
-            report.total_instructions(),
-            if report.is_clean() {
-                "clean".to_string()
-            } else {
-                format!("{} diagnostics", report.total_diags())
+    let reports: Vec<crate::verify::TargetReport> =
+        selected_targets(args).iter().map(crate::verify::verify_target).collect();
+    let diag_total: usize = reports.iter().map(|r| r.total_diags()).sum();
+    if has_flag(args, "--json") {
+        println!("{}", verify_report_json(&reports).to_string_pretty());
+    } else {
+        for report in &reports {
+            println!(
+                "{}: {} streams, {} instructions — {}",
+                report.target,
+                report.streams.len(),
+                report.total_instructions(),
+                if report.is_clean() {
+                    "clean".to_string()
+                } else {
+                    format!("{} diagnostics", report.total_diags())
+                }
+            );
+            for d in &report.bucket_diags {
+                println!("  bucket plan: {d}");
             }
-        );
-        for d in &report.bucket_diags {
-            println!("  bucket plan: {d}");
+            for s in report.streams.iter().filter(|s| !s.diags.is_empty()) {
+                for d in s.diags.iter().take(5) {
+                    println!("  {}: {d}", s.label);
+                }
+                if s.diags.len() > 5 {
+                    println!("  {}: ... and {} more", s.label, s.diags.len() - 5);
+                }
+                if s.suppressed > 0 {
+                    println!(
+                        "  {}: {} further diagnostics suppressed past the per-kind cap",
+                        s.label, s.suppressed
+                    );
+                }
+            }
         }
-        for s in report.streams.iter().filter(|s| !s.diags.is_empty()) {
-            for d in s.diags.iter().take(5) {
-                println!("  {}: {d}", s.label);
-            }
-            if s.diags.len() > 5 {
-                println!("  {}: ... and {} more", s.label, s.diags.len() - 5);
-            }
-        }
-        diag_total += report.total_diags();
     }
     if diag_total > 0 {
         eprintln!("verification failed with {diag_total} diagnostics");
         1
     } else {
         0
+    }
+}
+
+/// Run the dataflow/optimizer analysis over the shipped streams; exit 1
+/// unless every optimized stream passes the zero-inefficiency gate.
+fn cmd_analyze(args: &[String]) -> i32 {
+    let reports: Vec<crate::verify::dataflow::TargetAnalysis> =
+        selected_targets(args).iter().map(crate::verify::dataflow::analyze_target).collect();
+    let gate = reports.iter().all(|r| r.gate_passes());
+    if has_flag(args, "--json") {
+        println!("{}", analyze_report_json(&reports).to_string_pretty());
+    } else {
+        for r in &reports {
+            println!(
+                "{}: {} streams, {} findings pre-opt, {:.3} GB moved, {:.3} MB saved — {}",
+                r.target,
+                r.streams.len(),
+                r.total_findings(),
+                r.total_bytes_moved() as f64 / 1e9,
+                r.total_bytes_saved() as f64 / 1e6,
+                if r.gate_passes() { "gate passed" } else { "GATE FAILED" }
+            );
+            for s in r.streams.iter().filter(|s| s.cost.findings() > 0 || !s.gate_passes()) {
+                println!(
+                    "  {}: {} dead / {} redundant / {} removable syncs -> \
+                     removed {}+{}+{} ({} B saved), certified {}, reverify {}, residual {}",
+                    s.label,
+                    s.cost.dead_loads,
+                    s.cost.redundant_reloads,
+                    s.cost.removable_syncs,
+                    s.dead_loads_removed,
+                    s.redundant_reloads_removed,
+                    s.syncs_removed,
+                    s.bytes_saved,
+                    s.certified,
+                    s.reverify_clean,
+                    s.optimized_cost.findings()
+                );
+            }
+        }
+    }
+    if gate {
+        0
+    } else {
+        eprintln!("analyze gate failed");
+        1
     }
 }
 
@@ -1063,6 +1229,58 @@ mod tests {
             0,
             "shipped tiny streams must verify clean"
         );
+    }
+
+    #[test]
+    fn analyze_tiny_target_passes_gate() {
+        assert_eq!(
+            run(&s(&["flightllm", "analyze", "--model", "tiny"])),
+            0,
+            "shipped tiny streams must pass the zero-inefficiency gate"
+        );
+    }
+
+    /// The `--json` schemas round-trip through `util::Json` and carry
+    /// the fields the CI python checks scrape.
+    #[test]
+    fn verify_json_schema_is_stable() {
+        let report = crate::verify::verify_target(&Target::u280_tiny());
+        let j = verify_report_json(&[report]);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("command").and_then(Json::as_str), Some("verify"));
+        assert_eq!(parsed.get("clean"), Some(&Json::Bool(true)));
+        let targets = parsed.get("targets").and_then(Json::as_arr).unwrap();
+        assert_eq!(targets.len(), 1);
+        let streams = targets[0].get("streams").and_then(Json::as_arr).unwrap();
+        assert!(!streams.is_empty());
+        for s in streams {
+            assert!(s.get("stream").and_then(Json::as_str).is_some());
+            assert!(s.get("instructions").and_then(Json::as_u64).is_some());
+            assert_eq!(s.get("suppressed").and_then(Json::as_u64), Some(0));
+            assert!(s.get("diags").and_then(Json::as_arr).unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn analyze_json_schema_is_stable() {
+        let report = crate::verify::dataflow::analyze_target(&Target::u280_tiny());
+        let j = analyze_report_json(&[report]);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("command").and_then(Json::as_str), Some("analyze"));
+        assert_eq!(parsed.get("gate_passed"), Some(&Json::Bool(true)));
+        let targets = parsed.get("targets").and_then(Json::as_arr).unwrap();
+        assert!(targets[0].get("bytes_saved").and_then(Json::as_u64).unwrap() > 0);
+        let streams = targets[0].get("streams").and_then(Json::as_arr).unwrap();
+        assert!(!streams.is_empty());
+        for s in streams {
+            assert_eq!(s.get("certified"), Some(&Json::Bool(true)));
+            assert_eq!(s.get("reverify_clean"), Some(&Json::Bool(true)));
+            assert_eq!(s.get("optimized_findings").and_then(Json::as_u64), Some(0));
+            let moved = s.get("bytes_moved").and_then(Json::as_u64).unwrap();
+            let opt = s.get("optimized_bytes_moved").and_then(Json::as_u64).unwrap();
+            let label = s.get("stream").and_then(Json::as_str).unwrap();
+            assert!(opt <= moved, "{label}: optimization must not add traffic");
+        }
     }
 
     #[test]

@@ -115,6 +115,12 @@ struct Lowerer<'a, S: InstSink> {
     /// Rotating HBM address cursor (addresses come from ir::layout in a
     /// full run; the rotation here only has to keep channels distinct).
     addr: u64,
+    /// Activation spill cursor for the naive schedule, allocating slots
+    /// in the upper half of HBM, clear of the weight-stream region.
+    act_addr: u64,
+    /// Last naive input slot as `(addr, bytes)`: siblings that read the
+    /// same vector (wq/wk/wv, w1/w3) reload it from the same slot.
+    act_in: Option<(u64, u64)>,
 }
 
 impl<'a, S: InstSink> Lowerer<'a, S> {
@@ -153,23 +159,25 @@ impl<'a, S: InstSink> Lowerer<'a, S> {
         self.addr += MERGE_CHANNELS as u64 * leg as u64;
     }
 
-    /// Activation vector traffic for the non-fused (naive) schedule.
-    fn emit_act_roundtrip(&mut self, bytes: u64, load: bool, store: bool) {
-        if load {
-            self.sink.emit(Inst::Ld {
-                src: MemSpace::Hbm { channel: self.next_channel },
-                dst: OnChipBuf::Activation,
-                addr: self.addr,
-                bytes: bytes as u32,
-            });
-        }
-        if store {
-            self.sink.emit(Inst::St {
-                src: OnChipBuf::Global,
-                dst: MemSpace::Hbm { channel: self.next_channel },
-                addr: self.addr,
-                bytes: bytes as u32,
-            });
+    /// Fresh 64-aligned activation slot in the naive spill region.
+    fn alloc_act_slot(&mut self, bytes: u64) -> u64 {
+        let at = self.act_addr;
+        self.act_addr += bytes.max(1).next_multiple_of(64);
+        at
+    }
+
+    /// Slot a naive linear loads its input vector from.  A layer that
+    /// `shares` its input with the previous linear (wk/wv after wq,
+    /// w3 after w1) rereads the same slot — the round-trip the dataflow
+    /// analysis flags as a redundant reload and the optimizer deletes.
+    fn naive_act_in(&mut self, bytes: u64, shares: bool) -> u64 {
+        match self.act_in {
+            Some((a, b)) if shares && b == bytes => a,
+            _ => {
+                let a = self.alloc_act_slot(bytes);
+                self.act_in = Some((a, bytes));
+                a
+            }
         }
     }
 
@@ -181,6 +189,7 @@ impl<'a, S: InstSink> Lowerer<'a, S> {
         sparsity: Sparsity,
         weight_bits: f64,
         fused: &[MiscOp],
+        shares_input: bool,
     ) {
         let slr = self.t.platform.slr_count as u64;
         let out_slr = out_dim.div_ceil(slr);
@@ -202,7 +211,13 @@ impl<'a, S: InstSink> Lowerer<'a, S> {
         let act_bytes = in_dim * (self.t.compression.act_bits as u64 / 8).max(1);
 
         if !self.opt.onchip_decode {
-            self.emit_act_roundtrip(act_bytes, true, false);
+            let at = self.naive_act_in(act_bytes, shares_input);
+            self.sink.emit(Inst::Ld {
+                src: MemSpace::Hbm { channel: self.next_channel },
+                dst: OnChipBuf::Activation,
+                addr: at,
+                bytes: act_bytes as u32,
+            });
         }
         for i in 0..tiles {
             let this_out = out_per_tile.min(out_slr.saturating_sub(i * out_per_tile));
@@ -238,7 +253,13 @@ impl<'a, S: InstSink> Lowerer<'a, S> {
             self.sink.emit(Inst::Misc { op: *op, len: out_slr as u32 });
         }
         if !self.opt.onchip_decode {
-            self.emit_act_roundtrip(out_slr * 1, false, true);
+            let at = self.alloc_act_slot(out_slr);
+            self.sink.emit(Inst::St {
+                src: OnChipBuf::Global,
+                dst: MemSpace::Hbm { channel: self.next_channel },
+                addr: at,
+                bytes: out_slr as u32,
+            });
         }
     }
 
@@ -340,8 +361,21 @@ impl<'a, S: InstSink> Lowerer<'a, S> {
                         bytes: (dim_bytes * 128) as u32,
                     });
                 }
-                Op::Linear { out_dim, in_dim, sparsity, weight_bits, fused, .. } => {
-                    self.lower_linear(g.stage, *out_dim, *in_dim, *sparsity, *weight_bits, fused);
+                Op::Linear { name, out_dim, in_dim, sparsity, weight_bits, fused } => {
+                    // wk/wv read the same normed vector wq does, and w3
+                    // the same FFN input w1 does.
+                    let shares = name.ends_with(".wk")
+                        || name.ends_with(".wv")
+                        || name.ends_with(".w3");
+                    self.lower_linear(
+                        g.stage,
+                        *out_dim,
+                        *in_dim,
+                        *sparsity,
+                        *weight_bits,
+                        fused,
+                        shares,
+                    );
                 }
                 Op::Attention { kind, heads, hd, fused_softmax } => {
                     self.lower_attention(g.stage, *kind, *heads, *hd, *fused_softmax);
@@ -361,7 +395,7 @@ impl<'a, S: InstSink> Lowerer<'a, S> {
                     });
                 }
                 Op::Head { vocab, dim } => {
-                    self.lower_linear(g.stage, *vocab, *dim, Sparsity::Dense, 16.0, &[]);
+                    self.lower_linear(g.stage, *vocab, *dim, Sparsity::Dense, 16.0, &[], false);
                     self.sink.emit(Inst::Sys { op: SysOp::SyncHost });
                 }
                 Op::KvWrite { bytes } => {
@@ -398,7 +432,15 @@ impl<'a, S: InstSink> Lowerer<'a, S> {
 
 /// Lower an optimized IR graph into `sink` for one SLR of `target`.
 pub fn lower<S: InstSink>(g: &Graph, target: &Target, opt: CompilerOptions, sink: &mut S) {
-    let mut l = Lowerer { t: target, opt, sink, next_channel: 0, addr: 0 };
+    let mut l = Lowerer {
+        t: target,
+        opt,
+        sink,
+        next_channel: 0,
+        addr: 0,
+        act_addr: (target.platform.hbm.capacity_bytes() / 2).next_multiple_of(64),
+        act_in: None,
+    };
     l.lower_graph(g);
 }
 
@@ -453,6 +495,24 @@ mod tests {
             st(&naive.0),
             st(&full.0)
         );
+    }
+
+    #[test]
+    fn naive_activation_slots_reflect_graph_sharing() {
+        // wk/wv reload wq's input slot and w3 reloads w1's: the naive
+        // stream's activation addresses must make that visible to the
+        // dataflow analysis, and the full stream must have no findings.
+        let t = Target::u280_tiny();
+        let mut g =
+            Graph::from_model(&t.model, &t.compression, Stage::Decode { ctx: t.model.max_seq });
+        passes::optimize(&mut g);
+        let mut naive = VecSink::default();
+        lower(&g, &t, CompilerOptions::naive(), &mut naive);
+        let report = crate::verify::dataflow::analyze_stream(&naive.0);
+        assert_eq!(report.cost.redundant_reloads, 3 * t.model.n_layers, "{:?}", report.diags);
+        let mut full = VecSink::default();
+        lower(&g, &t, CompilerOptions::full(), &mut full);
+        assert_eq!(crate::verify::dataflow::analyze_stream(&full.0).cost.findings(), 0);
     }
 
     #[test]

@@ -8,11 +8,20 @@
 //! machine (on-chip occupancy, off-chip address bounds, channel runs,
 //! encode/decode, sync discipline) and the `flightllm verify` CI gate
 //! holds every shipped target × preset to zero diagnostics.
+//!
+//! The [`optimize_stream`] pass closes the loop in the other direction:
+//! `verify::dataflow`'s liveness analysis feeds a certified peephole
+//! optimizer (dead-load elimination, redundant-reload coalescing,
+//! removable-sync deletion) whose every rewrite must preserve the
+//! stream's symbolic memory-effect summary, and whose output the
+//! `flightllm analyze` CI gate holds to zero residual inefficiencies.
 
 mod buckets;
 mod lowering;
+mod optimize;
 mod size_model;
 
 pub use buckets::{decode_bucket, prefill_bucket, BucketPlan};
 pub use lowering::{lower, AttnGranularity, CompilerOptions, CountSink, InstSink, VecSink};
+pub use optimize::{optimize_stream, OptimizeOutcome};
 pub use size_model::{storage_report, StorageReport};

@@ -1,0 +1,120 @@
+//! Certified peephole optimizer over compiled instruction streams.
+//!
+//! Three rewrites, all driven by `verify::dataflow`: dead-load
+//! elimination (a definition nobody reads), redundant-reload coalescing
+//! (an off-chip span the buffer already mirrors), and removable-sync
+//! deletion (an SLR barrier fencing an empty region).  None of them is
+//! trusted: every candidate stream must produce a symbolic
+//! memory-effect summary *identical* to the original's — the same
+//! compute instructions over the same operand spans, the same stores in
+//! the same order — or the rewrite is refused.  A failed certification
+//! falls back to the original stream with `certified: false`, so a
+//! broken rewrite can never ship silently: the `analyze` CI gate fails
+//! loudly instead.
+
+use crate::isa::Inst;
+use crate::verify::dataflow;
+
+/// What `optimize_stream` did to one stream.
+#[derive(Debug, Clone)]
+pub struct OptimizeOutcome {
+    pub insts: Vec<Inst>,
+    pub dead_loads_removed: u64,
+    pub redundant_reloads_removed: u64,
+    pub syncs_removed: u64,
+    /// Off-chip bytes the removed instructions no longer move.
+    pub bytes_saved: u64,
+    /// Effect-summary equivalence held for every accepted rewrite.
+    pub certified: bool,
+}
+
+/// Remove certified-useless work from a stream.
+pub fn optimize_stream(insts: &[Inst]) -> OptimizeOutcome {
+    let report = dataflow::analyze_stream(insts);
+    if report.cost.findings() == 0 {
+        // Identity is trivially certified — and skipping the effect
+        // summaries matters for the million-instruction prefill streams.
+        return OptimizeOutcome {
+            insts: insts.to_vec(),
+            dead_loads_removed: 0,
+            redundant_reloads_removed: 0,
+            syncs_removed: 0,
+            bytes_saved: 0,
+            certified: true,
+        };
+    }
+    let reference = dataflow::effect_summary(insts);
+    let mut current: Vec<Inst> = insts.to_vec();
+    let (mut dead_removed, mut redundant_removed) = (0u64, 0u64);
+
+    // Stage 1: dead loads and redundant reloads in one cut.  Dead
+    // definitions appear in no operand set and redundant reloads create
+    // no definition, so the cut preserves the summary — checked anyway.
+    let cut: std::collections::HashSet<usize> =
+        report.dead_loads.iter().chain(&report.redundant_reloads).copied().collect();
+    if !cut.is_empty() {
+        let cand: Vec<Inst> = insts
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !cut.contains(i))
+            .map(|(_, x)| x.clone())
+            .collect();
+        if dataflow::effect_summary(&cand) == reference {
+            current = cand;
+            dead_removed = report.dead_loads.len() as u64;
+            redundant_removed = report.redundant_reloads.len() as u64;
+        }
+    }
+
+    // Stage 2: removable syncs.  Re-analyze (stage 1 moved indices) and
+    // try each barrier individually, highest index first so the earlier
+    // indices stay valid.  Deleting a barrier merges two regions, which
+    // can leak live definitions into later operand sets — so only
+    // individually-certified removals are kept.
+    let mut syncs_removed = 0u64;
+    let mut candidates = dataflow::analyze_stream(&current).removable_syncs;
+    candidates.sort_unstable_by_key(|&x| std::cmp::Reverse(x));
+    for idx in candidates {
+        let mut cand = current.clone();
+        cand.remove(idx);
+        if dataflow::effect_summary(&cand) == reference {
+            current = cand;
+            syncs_removed += 1;
+        }
+    }
+
+    if dead_removed + redundant_removed + syncs_removed == 0 {
+        return OptimizeOutcome {
+            insts: insts.to_vec(),
+            dead_loads_removed: 0,
+            redundant_reloads_removed: 0,
+            syncs_removed: 0,
+            bytes_saved: 0,
+            certified: true,
+        };
+    }
+
+    // Belt and suspenders: the final stream as a whole must still
+    // summarize identically; on failure ship the original, loudly.
+    let certified = dataflow::effect_summary(&current) == reference;
+    if !certified {
+        return OptimizeOutcome {
+            insts: insts.to_vec(),
+            dead_loads_removed: 0,
+            redundant_reloads_removed: 0,
+            syncs_removed: 0,
+            bytes_saved: 0,
+            certified: false,
+        };
+    }
+    let bytes_saved = insts.iter().map(Inst::offchip_bytes).sum::<u64>()
+        - current.iter().map(Inst::offchip_bytes).sum::<u64>();
+    OptimizeOutcome {
+        insts: current,
+        dead_loads_removed: dead_removed,
+        redundant_reloads_removed: redundant_removed,
+        syncs_removed,
+        bytes_saved,
+        certified,
+    }
+}

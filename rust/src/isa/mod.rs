@@ -210,6 +210,26 @@ impl Inst {
         }
     }
 
+    /// The contiguous off-chip span this instruction touches after
+    /// decoder expansion, as `(is_hbm, addr, total_bytes)` — a merged
+    /// run's per-channel legs are laid out back-to-back from `addr`, so
+    /// its span is `channels * bytes` wide.  `None` for compute/sync.
+    pub fn offchip_span(&self) -> Option<(bool, u64, u64)> {
+        match self {
+            Inst::Ld { src, addr, bytes, .. } => {
+                Some((matches!(src, MemSpace::Hbm { .. }), *addr, *bytes as u64))
+            }
+            Inst::St { dst, addr, bytes, .. } => {
+                Some((matches!(dst, MemSpace::Hbm { .. }), *addr, *bytes as u64))
+            }
+            Inst::LdMerged { channels, addr, bytes, .. }
+            | Inst::StMerged { channels, addr, bytes, .. } => {
+                Some((true, *addr, *channels as u64 * *bytes as u64))
+            }
+            _ => None,
+        }
+    }
+
     /// Expand merged LD/ST into per-channel micro-instructions — the
     /// hardware decoder of §5.2. Non-merged instructions pass through.
     ///

@@ -1,0 +1,689 @@
+//! Def-use/liveness dataflow analysis over compiled instruction streams
+//! — the *efficiency* tier on top of the parent module's safety checks.
+//!
+//! A stream can verify perfectly safe and still waste the machine's
+//! time: load bytes nobody reads, reload a span whose on-chip copy is
+//! still sitting in the buffer, or raise an SLR barrier no data
+//! dependency crosses.  The analysis tracks, per on-chip buffer, every
+//! live *definition* — which `LD`/`LD_MERGED` wrote it, which off-chip
+//! span it mirrors, and whether any `MM`/`MV`/`MISC`/`ST` has read it —
+//! and emits three diagnostics the safety tier cannot see:
+//!
+//! - [`DiagnosticKind::DeadLoad`] — a definition never read before the
+//!   next barrier or stream end.  Pure wasted off-chip traffic.
+//! - [`DiagnosticKind::RedundantReload`] — a load of an off-chip span
+//!   an unread-or-read but still-live on-chip copy already mirrors
+//!   (no intervening store touched the span).  The reload moves bytes
+//!   for data the chip already holds.
+//! - [`DiagnosticKind::RemovableSync`] — a `SyncSlr` with no store
+//!   since the previous barrier: nothing was published off-chip, so no
+//!   cross-SLR def-use edge crosses it.  (`SyncHost` is exempt — it is
+//!   the host-visible completion contract, not a dataflow fence.)
+//!
+//! Alongside the diagnostics, every stream gets a [`StreamCost`]: total
+//! off-chip bytes moved, bytes wasted by dead/redundant loads, and the
+//! barrier count against the dataflow minimum.
+//!
+//! The same machine produces the *symbolic memory-effect summary* that
+//! certifies `compiler::optimize_stream`: the ordered sequence of
+//! compute instructions (each with the sorted set of off-chip spans its
+//! operands mirror) plus every stored span.  Two streams with identical
+//! summaries perform the same computation on the same data and publish
+//! the same results — dead-load elimination, redundant-reload
+//! coalescing and empty-barrier deletion all preserve the summary by
+//! construction, and the optimizer refuses any rewrite that does not.
+//!
+//! Model notes, matching the parent module's abstract machine: on-chip
+//! buffers are accumulation areas (several definitions coexist, e.g.
+//! the 8 per-channel legs of one weight tile), `MM`/`MV` consume the
+//! streamed weight buffer (its definitions end there — the next tile
+//! reuses it), `MISC` reads activations, and barriers drain everything.
+
+use super::{
+    buf_index, shipped_presets, verify_stream, DiagBudget, Diagnostic, DiagnosticKind,
+    VerifyContext, BUFS,
+};
+use crate::compiler::{lower, optimize_stream, BucketPlan, VecSink};
+use crate::config::Target;
+use crate::ir::{passes, Graph, Stage};
+use crate::isa::{Inst, OnChipBuf, SysOp};
+
+/// A contiguous off-chip byte range (merged runs already expanded).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct OffchipSpan {
+    pub hbm: bool,
+    pub addr: u64,
+    pub bytes: u64,
+}
+
+impl OffchipSpan {
+    fn of(inst: &Inst) -> Option<OffchipSpan> {
+        inst.offchip_span().map(|(hbm, addr, bytes)| OffchipSpan { hbm, addr, bytes })
+    }
+
+    fn overlaps(&self, other: &OffchipSpan) -> bool {
+        self.hbm == other.hbm
+            && self.addr < other.addr.saturating_add(other.bytes)
+            && other.addr < self.addr.saturating_add(self.bytes)
+    }
+}
+
+/// One entry of a stream's symbolic memory-effect summary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Effect {
+    /// A compute instruction with the off-chip spans its live operand
+    /// definitions mirror (sorted, deduplicated).
+    Compute { inst: Inst, operands: Vec<OffchipSpan> },
+    /// An off-chip span published by a store.
+    Store { span: OffchipSpan },
+}
+
+/// A live on-chip definition: which load produced it, what it mirrors.
+#[derive(Debug, Clone, Copy)]
+struct Def {
+    index: usize,
+    span: OffchipSpan,
+    read: bool,
+    /// False once a store overwrote any part of the mirrored span — a
+    /// reload after that fetches fresh data and is not redundant.
+    mirror: bool,
+}
+
+/// Static per-stream cost report.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamCost {
+    pub loaded_bytes: u64,
+    pub stored_bytes: u64,
+    pub dead_load_bytes: u64,
+    pub redundant_load_bytes: u64,
+    pub dead_loads: u64,
+    pub redundant_reloads: u64,
+    pub slr_syncs: u64,
+    pub removable_syncs: u64,
+}
+
+impl StreamCost {
+    /// Total off-chip bytes the stream moves.
+    pub fn offchip_bytes(&self) -> u64 {
+        self.loaded_bytes + self.stored_bytes
+    }
+
+    /// Bytes moved for nothing (dead + redundant loads).
+    pub fn wasted_bytes(&self) -> u64 {
+        self.dead_load_bytes + self.redundant_load_bytes
+    }
+
+    /// The dataflow-minimal SLR barrier count.
+    pub fn min_syncs(&self) -> u64 {
+        self.slr_syncs - self.removable_syncs
+    }
+
+    /// Total inefficiency findings.
+    pub fn findings(&self) -> u64 {
+        self.dead_loads + self.redundant_reloads + self.removable_syncs
+    }
+}
+
+/// Everything one `analyze_stream` pass produces.
+#[derive(Debug, Clone)]
+pub struct DataflowReport {
+    /// Efficiency diagnostics, sorted by instruction index and capped
+    /// per kind ([`super::DIAG_KIND_CAP`]).
+    pub diags: Vec<Diagnostic>,
+    pub suppressed: u64,
+    pub cost: StreamCost,
+    /// Instruction indices of the offending loads/syncs — uncapped, so
+    /// the optimizer sees every site even when diagnostics saturate.
+    pub dead_loads: Vec<usize>,
+    pub redundant_reloads: Vec<usize>,
+    pub removable_syncs: Vec<usize>,
+}
+
+/// The abstract dataflow machine: per-buffer definition lists, waste
+/// accounting, and (optionally) the memory-effect summary.
+struct Machine {
+    defs: [Vec<Def>; 4],
+    budget: DiagBudget,
+    diags: Vec<Diagnostic>,
+    cost: StreamCost,
+    dead: Vec<usize>,
+    redundant: Vec<usize>,
+    removable: Vec<usize>,
+    stores_since_sync: u64,
+    effects: Vec<Effect>,
+    collect_effects: bool,
+}
+
+impl Machine {
+    fn new(collect_effects: bool) -> Self {
+        Self {
+            defs: [Vec::new(), Vec::new(), Vec::new(), Vec::new()],
+            budget: DiagBudget::default(),
+            diags: Vec::new(),
+            cost: StreamCost::default(),
+            dead: Vec::new(),
+            redundant: Vec::new(),
+            removable: Vec::new(),
+            stores_since_sync: 0,
+            effects: Vec::new(),
+            collect_effects,
+        }
+    }
+
+    fn diag(&mut self, index: usize, kind: DiagnosticKind, detail: String) {
+        self.budget.push(&mut self.diags, Diagnostic { index, kind, detail });
+    }
+
+    fn step(&mut self, index: usize, inst: &Inst) {
+        match inst {
+            Inst::Ld { dst, .. } | Inst::LdMerged { dst, .. } => {
+                let span = OffchipSpan::of(inst).expect("loads carry a span");
+                self.load(index, *dst, span);
+            }
+            Inst::St { src, .. } | Inst::StMerged { src, .. } => {
+                let span = OffchipSpan::of(inst).expect("stores carry a span");
+                self.store(*src, span);
+            }
+            Inst::Mm { .. } | Inst::Mv { .. } => {
+                self.compute(inst, &[OnChipBuf::Weight, OnChipBuf::Activation, OnChipBuf::Index]);
+                // Tile streaming: the consumed weight tile's definitions
+                // end here — the buffer is reused by the next tile.
+                self.defs[buf_index(OnChipBuf::Weight)].clear();
+            }
+            Inst::Misc { .. } => self.compute(inst, &[OnChipBuf::Activation]),
+            Inst::Sys { op } => self.sync(index, *op),
+        }
+    }
+
+    fn load(&mut self, index: usize, dst: OnChipBuf, span: OffchipSpan) {
+        self.cost.loaded_bytes += span.bytes;
+        let b = buf_index(dst);
+        let live = self.defs[b].iter().find(|d| d.mirror && d.span == span).map(|d| d.index);
+        if let Some(since) = live {
+            // The buffer already mirrors this exact span: the reload is
+            // an alias of the existing definition, not a new one.
+            self.cost.redundant_reloads += 1;
+            self.cost.redundant_load_bytes += span.bytes;
+            self.redundant.push(index);
+            self.diag(
+                index,
+                DiagnosticKind::RedundantReload,
+                format!(
+                    "{dst:?} already mirrors [{:#x}, {:#x}) loaded at inst {since}",
+                    span.addr,
+                    span.addr.saturating_add(span.bytes)
+                ),
+            );
+        } else {
+            self.defs[b].push(Def { index, span, read: false, mirror: true });
+        }
+    }
+
+    fn store(&mut self, src: OnChipBuf, span: OffchipSpan) {
+        self.cost.stored_bytes += span.bytes;
+        self.stores_since_sync += 1;
+        if self.collect_effects {
+            self.effects.push(Effect::Store { span });
+        }
+        for d in &mut self.defs[buf_index(src)] {
+            d.read = true;
+        }
+        // Any on-chip copy mirroring an overlapping off-chip range is
+        // stale after this store: a later reload fetches fresh data.
+        for defs in &mut self.defs {
+            for d in defs.iter_mut() {
+                if d.span.overlaps(&span) {
+                    d.mirror = false;
+                }
+            }
+        }
+    }
+
+    fn compute(&mut self, inst: &Inst, bufs: &[OnChipBuf]) {
+        if self.collect_effects {
+            let mut operands: Vec<OffchipSpan> = bufs
+                .iter()
+                .flat_map(|&b| self.defs[buf_index(b)].iter().map(|d| d.span))
+                .collect();
+            operands.sort_unstable();
+            operands.dedup();
+            self.effects.push(Effect::Compute { inst: inst.clone(), operands });
+        }
+        for &b in bufs {
+            for d in &mut self.defs[buf_index(b)] {
+                d.read = true;
+            }
+        }
+    }
+
+    fn sync(&mut self, index: usize, op: SysOp) {
+        if op == SysOp::SyncSlr {
+            self.cost.slr_syncs += 1;
+            if self.stores_since_sync == 0 {
+                self.cost.removable_syncs += 1;
+                self.removable.push(index);
+                self.diag(
+                    index,
+                    DiagnosticKind::RemovableSync,
+                    "SyncSlr publishes nothing: no store since the previous barrier, so no \
+                     cross-SLR def-use edge crosses it"
+                        .into(),
+                );
+            }
+        }
+        self.stores_since_sync = 0;
+        self.drain_defs();
+    }
+
+    /// Barrier/stream-end drain: unread definitions were dead loads.
+    fn drain_defs(&mut self) {
+        for b in 0..self.defs.len() {
+            for d in std::mem::take(&mut self.defs[b]) {
+                if !d.read {
+                    self.cost.dead_loads += 1;
+                    self.cost.dead_load_bytes += d.span.bytes;
+                    self.dead.push(d.index);
+                    self.diag(
+                        d.index,
+                        DiagnosticKind::DeadLoad,
+                        format!(
+                            "{:?} load of [{:#x}, {:#x}) is never read before the next barrier",
+                            BUFS[b],
+                            d.span.addr,
+                            d.span.addr.saturating_add(d.span.bytes)
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    fn finish(mut self) -> (DataflowReport, Vec<Effect>) {
+        self.drain_defs();
+        self.diags.sort_by_key(|d| d.index);
+        self.dead.sort_unstable();
+        (
+            DataflowReport {
+                diags: self.diags,
+                suppressed: self.budget.suppressed(),
+                cost: self.cost,
+                dead_loads: self.dead,
+                redundant_reloads: self.redundant,
+                removable_syncs: self.removable,
+            },
+            self.effects,
+        )
+    }
+}
+
+/// Run the dataflow analysis over a stream.
+pub fn analyze_stream(insts: &[Inst]) -> DataflowReport {
+    let mut m = Machine::new(false);
+    for (i, inst) in insts.iter().enumerate() {
+        m.step(i, inst);
+    }
+    m.finish().0
+}
+
+/// The stream's symbolic memory-effect summary — the certification
+/// currency of `compiler::optimize_stream`.
+pub fn effect_summary(insts: &[Inst]) -> Vec<Effect> {
+    let mut m = Machine::new(true);
+    for (i, inst) in insts.iter().enumerate() {
+        m.step(i, inst);
+    }
+    m.finish().1
+}
+
+/// One shipped stream's analysis: the pre-optimization findings, what
+/// the certified optimizer removed, and the post-optimization state.
+#[derive(Debug, Clone)]
+pub struct StreamAnalysis {
+    pub label: String,
+    pub instructions: usize,
+    pub diags: Vec<Diagnostic>,
+    pub suppressed: u64,
+    pub cost: StreamCost,
+    pub optimized_instructions: usize,
+    pub optimized_cost: StreamCost,
+    pub dead_loads_removed: u64,
+    pub redundant_reloads_removed: u64,
+    pub syncs_removed: u64,
+    pub bytes_saved: u64,
+    /// The optimizer's effect-summary equivalence check passed.
+    pub certified: bool,
+    /// The optimized stream re-verifies clean under the full safety
+    /// discipline (occupancy, sync counts, encoding, addresses).
+    pub reverify_clean: bool,
+}
+
+impl StreamAnalysis {
+    /// The CI gate: certified, safety-clean, zero residual inefficiency.
+    pub fn gate_passes(&self) -> bool {
+        self.certified && self.reverify_clean && self.optimized_cost.findings() == 0
+    }
+}
+
+/// Dataflow analysis of every shipped stream for one target.
+#[derive(Debug, Clone)]
+pub struct TargetAnalysis {
+    pub target: String,
+    pub streams: Vec<StreamAnalysis>,
+}
+
+impl TargetAnalysis {
+    pub fn gate_passes(&self) -> bool {
+        self.streams.iter().all(StreamAnalysis::gate_passes)
+    }
+
+    /// Pre-optimization findings over all streams.
+    pub fn total_findings(&self) -> u64 {
+        self.streams.iter().map(|s| s.cost.findings()).sum()
+    }
+
+    /// Pre-optimization off-chip traffic over all streams.
+    pub fn total_bytes_moved(&self) -> u64 {
+        self.streams.iter().map(|s| s.cost.offchip_bytes()).sum()
+    }
+
+    pub fn total_bytes_saved(&self) -> u64 {
+        self.streams.iter().map(|s| s.bytes_saved).sum()
+    }
+}
+
+/// Analyze and optimize every shipped stream of `t` — the same preset ×
+/// stage × bucket matrix `super::verify_target` checks for safety.
+pub fn analyze_target(t: &Target) -> TargetAnalysis {
+    let plan = BucketPlan::paper_default(t.model.max_seq);
+    let vctx = VerifyContext::for_target(t).expect_slr_syncs(t.model.n_layers);
+    let mut streams = Vec::new();
+    let stages = plan
+        .decode
+        .iter()
+        .map(|&b| Stage::Decode { ctx: b })
+        .chain(plan.prefill.iter().map(|&b| Stage::Prefill { n: b }));
+    for stage in stages {
+        let mut g = Graph::from_model(&t.model, &t.compression, stage);
+        passes::optimize(&mut g);
+        for (name, opt) in shipped_presets() {
+            let mut sink = VecSink::default();
+            lower(&g, t, opt, &mut sink);
+            let insts = sink.0;
+            let pre = analyze_stream(&insts);
+            let out = optimize_stream(&insts);
+            let post = if out.insts.len() == insts.len() {
+                pre.clone()
+            } else {
+                analyze_stream(&out.insts)
+            };
+            let reverify_clean = verify_stream(&out.insts, &vctx).is_empty();
+            streams.push(StreamAnalysis {
+                label: format!("{} {:?} {}", t.model.name, stage, name),
+                instructions: insts.len(),
+                diags: pre.diags,
+                suppressed: pre.suppressed,
+                cost: pre.cost,
+                optimized_instructions: out.insts.len(),
+                optimized_cost: post.cost,
+                dead_loads_removed: out.dead_loads_removed,
+                redundant_reloads_removed: out.redundant_reloads_removed,
+                syncs_removed: out.syncs_removed,
+                bytes_saved: out.bytes_saved,
+                certified: out.certified,
+                reverify_clean,
+            });
+        }
+    }
+    TargetAnalysis { target: format!("{} on {}", t.model.name, t.platform.name), streams }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::CompilerOptions;
+    use crate::isa::{MemSpace, Sparsity};
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    fn shipped(t: &Target, opt: CompilerOptions) -> Vec<Inst> {
+        let mut g =
+            Graph::from_model(&t.model, &t.compression, Stage::Decode { ctx: t.model.max_seq });
+        passes::optimize(&mut g);
+        let mut sink = VecSink::default();
+        lower(&g, t, opt, &mut sink);
+        sink.0
+    }
+
+    /// The clean tiny decode stream the fault tests corrupt.
+    fn base() -> Vec<Inst> {
+        shipped(&Target::u280_tiny(), CompilerOptions::full())
+    }
+
+    #[test]
+    fn shipped_full_stream_is_efficient() {
+        let report = analyze_stream(&base());
+        assert_eq!(report.cost.findings(), 0, "{:?}", report.diags);
+        assert!(report.cost.loaded_bytes > 0);
+        assert!(report.cost.stored_bytes > 0);
+        assert!(report.cost.slr_syncs > 0);
+        assert_eq!(report.cost.wasted_bytes(), 0);
+        assert_eq!(report.cost.min_syncs(), report.cost.slr_syncs);
+    }
+
+    #[test]
+    fn naive_preset_reloads_shared_activations() {
+        // wq/wk/wv read the same normed vector and w1/w3 the same FFN
+        // input; the naive off-chip schedule reloads the sibling's slot
+        // — 3 redundant reloads per layer, none anywhere else.
+        let t = Target::u280_tiny();
+        let report = analyze_stream(&shipped(&t, CompilerOptions::naive()));
+        assert_eq!(report.cost.redundant_reloads, 3 * t.model.n_layers, "{:?}", report.diags);
+        assert_eq!(report.cost.dead_loads, 0, "{:?}", report.diags);
+        assert_eq!(report.cost.removable_syncs, 0, "{:?}", report.diags);
+        assert!(report.cost.redundant_load_bytes > 0);
+        // The full preset keeps activations on-chip: nothing to reload.
+        assert_eq!(analyze_stream(&base()).cost.findings(), 0);
+    }
+
+    #[test]
+    fn stream_cost_accounts_waste() {
+        let ld = |addr: u64| Inst::Ld {
+            src: MemSpace::Hbm { channel: 0 },
+            dst: OnChipBuf::Weight,
+            addr,
+            bytes: 64,
+        };
+        let mv = Inst::Mv { k: 8, n: 8, sparsity: Sparsity::Dense };
+        let st = Inst::St {
+            src: OnChipBuf::Global,
+            dst: MemSpace::Hbm { channel: 0 },
+            addr: 4096,
+            bytes: 64,
+        };
+        let insts = vec![
+            ld(0),                             // 0: live def
+            ld(0),                             // 1: redundant reload
+            mv,                                // 2: consumes the weight tile
+            st,                                // 3: publishes 64 B
+            Inst::Sys { op: SysOp::SyncSlr },  // 4: real barrier
+            Inst::Sys { op: SysOp::SyncSlr },  // 5: removable (empty region)
+            ld(64),                            // 6: dead load
+            Inst::Sys { op: SysOp::SyncHost }, // 7: drains -> 6 is dead
+        ];
+        let r = analyze_stream(&insts);
+        assert_eq!(r.cost.loaded_bytes, 192);
+        assert_eq!(r.cost.stored_bytes, 64);
+        assert_eq!(r.cost.redundant_load_bytes, 64);
+        assert_eq!(r.cost.dead_load_bytes, 64);
+        assert_eq!(r.cost.slr_syncs, 2);
+        assert_eq!(r.cost.removable_syncs, 1);
+        assert_eq!(r.cost.offchip_bytes(), 256);
+        assert_eq!(r.cost.wasted_bytes(), 128);
+        assert_eq!(r.cost.min_syncs(), 1);
+        assert_eq!(r.cost.findings(), 3);
+        assert_eq!(r.dead_loads, vec![6]);
+        assert_eq!(r.redundant_reloads, vec![1]);
+        assert_eq!(r.removable_syncs, vec![5]);
+        assert_eq!(r.diags.len(), 3);
+    }
+
+    #[test]
+    fn effect_summaries_certify_equivalence() {
+        let ld = |addr: u64| Inst::Ld {
+            src: MemSpace::Hbm { channel: 0 },
+            dst: OnChipBuf::Weight,
+            addr,
+            bytes: 64,
+        };
+        let st = |addr: u64| Inst::St {
+            src: OnChipBuf::Global,
+            dst: MemSpace::Hbm { channel: 0 },
+            addr,
+            bytes: 64,
+        };
+        let mv = Inst::Mv { k: 8, n: 8, sparsity: Sparsity::Dense };
+        // A redundant reload is an alias: the summary does not change.
+        let a = vec![ld(0), ld(0), mv.clone()];
+        let b = vec![ld(0), mv.clone()];
+        assert_eq!(effect_summary(&a), effect_summary(&b));
+        // Dropping a consumed load changes the compute's operand set.
+        assert_ne!(effect_summary(&b), effect_summary(&[mv]));
+        // Store order is part of the summary.
+        assert_ne!(effect_summary(&[st(0), st(64)]), effect_summary(&[st(64), st(0)]));
+    }
+
+    #[test]
+    fn fault_injected_dead_load_caught_and_eliminated() {
+        let insts = base();
+        let syncs: Vec<usize> = insts
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| matches!(i, Inst::Sys { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!syncs.is_empty());
+        proptest::check_with("dead load caught", 32, |r: &mut Rng| {
+            // A load right before a barrier: nothing can read it.
+            let at = syncs[r.below(syncs.len() as u64) as usize];
+            let mut m = insts.clone();
+            m.insert(
+                at,
+                Inst::Ld {
+                    src: MemSpace::Hbm { channel: 0 },
+                    dst: OnChipBuf::Weight,
+                    addr: 3 << 30,
+                    bytes: 64,
+                },
+            );
+            let report = analyze_stream(&m);
+            assert!(report.dead_loads.contains(&at), "dead load at {at}: {:?}", report.diags);
+            assert!(
+                report.diags.iter().any(|d| d.kind == DiagnosticKind::DeadLoad && d.index == at),
+                "{:?}",
+                report.diags
+            );
+            let out = optimize_stream(&m);
+            assert!(out.certified);
+            assert_eq!(out.insts.len(), insts.len());
+            assert_eq!(out.dead_loads_removed, 1);
+            assert_eq!(out.bytes_saved, 64);
+            assert_eq!(analyze_stream(&out.insts).cost.findings(), 0);
+        });
+    }
+
+    #[test]
+    fn fault_injected_redundant_reload_caught_and_eliminated() {
+        let insts = base();
+        let loads: Vec<usize> = insts
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| matches!(i, Inst::LdMerged { dst: OnChipBuf::Weight, .. }))
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!loads.is_empty());
+        proptest::check_with("redundant reload caught", 32, |r: &mut Rng| {
+            // Duplicate a weight load while its definition is still live.
+            let at = loads[r.below(loads.len() as u64) as usize];
+            let mut m = insts.clone();
+            let dup = m[at].clone();
+            let bytes = dup.offchip_span().expect("load").2;
+            m.insert(at + 1, dup);
+            let report = analyze_stream(&m);
+            assert!(
+                report.redundant_reloads.contains(&(at + 1)),
+                "reload at {}: {:?}",
+                at + 1,
+                report.diags
+            );
+            assert!(
+                report
+                    .diags
+                    .iter()
+                    .any(|d| d.kind == DiagnosticKind::RedundantReload && d.index == at + 1),
+                "{:?}",
+                report.diags
+            );
+            let out = optimize_stream(&m);
+            assert!(out.certified);
+            assert_eq!(out.insts.len(), insts.len());
+            assert_eq!(out.redundant_reloads_removed, 1);
+            assert_eq!(out.bytes_saved, bytes);
+            assert_eq!(analyze_stream(&out.insts).cost.findings(), 0);
+        });
+    }
+
+    #[test]
+    fn fault_injected_spurious_sync_caught_and_eliminated() {
+        let insts = base();
+        let syncs: Vec<usize> = insts
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| matches!(i, Inst::Sys { op: SysOp::SyncSlr }))
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!syncs.is_empty());
+        proptest::check_with("spurious sync caught", 32, |r: &mut Rng| {
+            // A barrier right after a barrier fences an empty region.
+            let at = syncs[r.below(syncs.len() as u64) as usize] + 1;
+            let mut m = insts.clone();
+            m.insert(at, Inst::Sys { op: SysOp::SyncSlr });
+            let report = analyze_stream(&m);
+            assert!(report.removable_syncs.contains(&at), "sync at {at}: {:?}", report.diags);
+            assert!(
+                report
+                    .diags
+                    .iter()
+                    .any(|d| d.kind == DiagnosticKind::RemovableSync && d.index == at),
+                "{:?}",
+                report.diags
+            );
+            let out = optimize_stream(&m);
+            assert!(out.certified);
+            assert_eq!(out.insts.len(), insts.len());
+            assert_eq!(out.syncs_removed, 1);
+            assert_eq!(out.bytes_saved, 0);
+            assert_eq!(analyze_stream(&out.insts).cost.findings(), 0);
+        });
+    }
+
+    #[test]
+    fn optimizer_is_identity_on_clean_streams() {
+        let insts = base();
+        let out = optimize_stream(&insts);
+        assert!(out.certified);
+        assert_eq!(out.insts, insts);
+        assert_eq!(out.bytes_saved, 0);
+    }
+
+    #[test]
+    fn tiny_target_analysis_gates_clean_after_optimization() {
+        let a = analyze_target(&Target::u280_tiny());
+        assert!(!a.streams.is_empty());
+        for s in &a.streams {
+            assert!(s.gate_passes(), "{} fails the gate: {:?}", s.label, s.diags);
+        }
+        assert!(a.total_findings() > 0, "the naive preset's reloads must be visible pre-opt");
+        assert!(a.total_bytes_saved() > 0, "the optimizer must eliminate them");
+        assert!(a.gate_passes());
+    }
+}

@@ -24,6 +24,18 @@
 //! 6. **Bucket coverage** — `BucketPlan` lint: every length 1..=max_seq
 //!    maps to exactly one bucket (no gaps, no overlaps).
 //!
+//! Safety is half the contract.  The [`dataflow`] submodule layers an
+//! *efficiency* tier on top: per-buffer def-use/liveness analysis that
+//! flags dead loads, redundant reloads and removable barriers, computes
+//! the symbolic memory-effect summaries that certify
+//! `compiler::optimize_stream`, and drives the `flightllm analyze` CI
+//! gate (zero inefficiencies after optimization).
+//!
+//! Diagnostics are flood-capped per kind ([`DIAG_KIND_CAP`]): a
+//! systematically-corrupt stream keeps the first N findings of each kind
+//! and counts the rest as `suppressed` instead of allocating millions of
+//! `Diagnostic`s.
+//!
 //! The analyzer itself is proven by fault-injection property tests: each
 //! corruption class (byte flip, channel bump, capacity bust, dropped LD,
 //! dropped SYS, degenerate sparsity, wild address) must be rejected with
@@ -34,6 +46,8 @@ use crate::compiler::{lower, BucketPlan, CompilerOptions, InstSink};
 use crate::config::Target;
 use crate::ir::{passes, AddressMap, Graph, Placement, Stage};
 use crate::isa::{self, Inst, MemSpace, OnChipBuf, SysOp, INST_BYTES};
+
+pub mod dataflow;
 
 /// One verifier finding, anchored to an instruction index.  End-of-stream
 /// findings (e.g. a missing barrier) use the stream length as index.
@@ -76,6 +90,18 @@ pub enum DiagnosticKind {
     BucketGap,
     /// Bucket plan edges overlap (not strictly ascending).
     BucketOverlap,
+    /// Load whose data is never read before the next barrier or stream
+    /// end — wasted off-chip traffic (dataflow tier).
+    DeadLoad,
+    /// Load of an off-chip span whose on-chip copy is still live and
+    /// unchanged — the reload moves bytes for nothing (dataflow tier).
+    RedundantReload,
+    /// `SyncSlr` with no cross-SLR def-use edge crossing it: nothing was
+    /// published off-chip since the previous barrier (dataflow tier).
+    RemovableSync,
+    /// Encoded stream length is not a multiple of the 16-byte word; the
+    /// tail bytes cannot form an instruction.
+    TruncatedTail,
 }
 
 /// A placed tensor span the layout check holds accesses against.
@@ -173,6 +199,35 @@ fn buf_index(buf: OnChipBuf) -> usize {
 const BUFS: [OnChipBuf; 4] =
     [OnChipBuf::Weight, OnChipBuf::Activation, OnChipBuf::Global, OnChipBuf::Index];
 
+/// Per-kind diagnostic flood cap: the first N findings of each kind are
+/// kept, the rest only counted — so a systematically-corrupt stream
+/// (every instruction tripping the same check) can't allocate millions
+/// of `Diagnostic`s.
+pub const DIAG_KIND_CAP: usize = 64;
+
+/// Routes diagnostics through the per-kind cap, counting the overflow.
+#[derive(Debug, Default)]
+pub(crate) struct DiagBudget {
+    counts: std::collections::HashMap<DiagnosticKind, u64>,
+    suppressed: u64,
+}
+
+impl DiagBudget {
+    pub(crate) fn push(&mut self, diags: &mut Vec<Diagnostic>, d: Diagnostic) {
+        let c = self.counts.entry(d.kind).or_insert(0);
+        *c += 1;
+        if *c as usize <= DIAG_KIND_CAP {
+            diags.push(d);
+        } else {
+            self.suppressed += 1;
+        }
+    }
+
+    pub(crate) fn suppressed(&self) -> u64 {
+        self.suppressed
+    }
+}
+
 /// Streaming verifier: feed it a stream via `InstSink::emit` (or let
 /// `lower` do so), then call `finish` for the end-of-stream checks.
 #[derive(Debug)]
@@ -187,6 +242,7 @@ pub struct VerifySink {
     /// Indices of stores not yet covered by a following SYS.
     pending_stores: Vec<usize>,
     last_inst_was_host_sync: bool,
+    budget: DiagBudget,
     diags: Vec<Diagnostic>,
 }
 
@@ -200,6 +256,7 @@ impl VerifySink {
             slr_syncs: 0,
             pending_stores: Vec::new(),
             last_inst_was_host_sync: false,
+            budget: DiagBudget::default(),
             diags: Vec::new(),
         }
     }
@@ -209,7 +266,7 @@ impl VerifySink {
     }
 
     fn diag(&mut self, kind: DiagnosticKind, detail: String) {
-        self.diags.push(Diagnostic { index: self.idx, kind, detail });
+        self.budget.push(&mut self.diags, Diagnostic { index: self.idx, kind, detail });
     }
 
     fn check_encoding(&mut self, inst: &Inst) {
@@ -372,37 +429,52 @@ impl VerifySink {
         self.idx += 1;
     }
 
-    /// End-of-stream checks; returns every diagnostic found.
-    pub fn finish(mut self) -> Vec<Diagnostic> {
+    /// End-of-stream checks; returns every kept diagnostic.
+    pub fn finish(self) -> Vec<Diagnostic> {
+        self.finish_with_suppressed().0
+    }
+
+    /// End-of-stream checks; returns the kept diagnostics plus the count
+    /// suppressed by the per-kind flood cap ([`DIAG_KIND_CAP`]).
+    pub fn finish_with_suppressed(mut self) -> (Vec<Diagnostic>, u64) {
         if self.ctx.check_sync {
             for idx in std::mem::take(&mut self.pending_stores) {
-                self.diags.push(Diagnostic {
-                    index: idx,
-                    kind: DiagnosticKind::SyncViolation,
-                    detail: "store not followed by any SYS before stream end".into(),
-                });
+                self.budget.push(
+                    &mut self.diags,
+                    Diagnostic {
+                        index: idx,
+                        kind: DiagnosticKind::SyncViolation,
+                        detail: "store not followed by any SYS before stream end".into(),
+                    },
+                );
             }
             if let Some(expected) = self.ctx.expected_slr_syncs {
                 if self.slr_syncs != expected {
-                    self.diags.push(Diagnostic {
-                        index: self.idx,
-                        kind: DiagnosticKind::SyncViolation,
-                        detail: format!(
-                            "{} SyncSlr barriers, expected {expected} (one per layer slice)",
-                            self.slr_syncs
-                        ),
-                    });
+                    self.budget.push(
+                        &mut self.diags,
+                        Diagnostic {
+                            index: self.idx,
+                            kind: DiagnosticKind::SyncViolation,
+                            detail: format!(
+                                "{} SyncSlr barriers, expected {expected} (one per layer slice)",
+                                self.slr_syncs
+                            ),
+                        },
+                    );
                 }
                 if self.idx > 0 && !self.last_inst_was_host_sync {
-                    self.diags.push(Diagnostic {
-                        index: self.idx,
-                        kind: DiagnosticKind::SyncViolation,
-                        detail: "stream does not end with a host sync".into(),
-                    });
+                    self.budget.push(
+                        &mut self.diags,
+                        Diagnostic {
+                            index: self.idx,
+                            kind: DiagnosticKind::SyncViolation,
+                            detail: "stream does not end with a host sync".into(),
+                        },
+                    );
                 }
             }
         }
-        self.diags
+        (self.diags, self.budget.suppressed())
     }
 }
 
@@ -422,19 +494,16 @@ pub fn verify_stream(insts: &[Inst], ctx: &VerifyContext) -> Vec<Diagnostic> {
 }
 
 /// Verify an encoded stream: undecodable words become `EncodingMismatch`
-/// diagnostics at their word index; a fully-decodable stream is then run
-/// through the stream checks.
+/// diagnostics at their word index; a fully-decodable prefix is then run
+/// through the stream checks.  A length that is not a multiple of the
+/// 16-byte word is a typed `TruncatedTail` diagnostic at the tail's word
+/// index — the whole words before it are still verified.
 pub fn verify_encoded(bytes: &[u8], ctx: &VerifyContext) -> Vec<Diagnostic> {
-    if bytes.len() % INST_BYTES != 0 {
-        return vec![Diagnostic {
-            index: bytes.len() / INST_BYTES,
-            kind: DiagnosticKind::EncodingMismatch,
-            detail: format!("{} trailing bytes, not a whole word", bytes.len() % INST_BYTES),
-        }];
-    }
-    let mut insts = Vec::with_capacity(bytes.len() / INST_BYTES);
+    let tail = bytes.len() % INST_BYTES;
+    let whole = &bytes[..bytes.len() - tail];
+    let mut insts = Vec::with_capacity(whole.len() / INST_BYTES);
     let mut diags = Vec::new();
-    for (i, w) in bytes.chunks_exact(INST_BYTES).enumerate() {
+    for (i, w) in whole.chunks_exact(INST_BYTES).enumerate() {
         match isa::decode(w.try_into().expect("chunk is INST_BYTES")) {
             Ok(inst) => insts.push(inst),
             Err(e) => diags.push(Diagnostic {
@@ -444,10 +513,17 @@ pub fn verify_encoded(bytes: &[u8], ctx: &VerifyContext) -> Vec<Diagnostic> {
             }),
         }
     }
-    if !diags.is_empty() {
-        return diags;
+    if diags.is_empty() {
+        diags = verify_stream(&insts, ctx);
     }
-    verify_stream(&insts, ctx)
+    if tail != 0 {
+        diags.push(Diagnostic {
+            index: bytes.len() / INST_BYTES,
+            kind: DiagnosticKind::TruncatedTail,
+            detail: format!("{tail} trailing bytes do not form a whole 16-byte word"),
+        });
+    }
+    diags
 }
 
 /// Lint a bucket plan: edges strictly ascending (else overlap), nonzero,
@@ -511,6 +587,8 @@ pub struct StreamReport {
     pub label: String,
     pub instructions: usize,
     pub diags: Vec<Diagnostic>,
+    /// Diagnostics dropped by the per-kind flood cap ([`DIAG_KIND_CAP`]).
+    pub suppressed: u64,
 }
 
 /// Verification of every shipped stream for one target: every
@@ -564,10 +642,12 @@ pub fn verify_target(t: &Target) -> TargetReport {
             let mut sink = VerifySink::new(ctx.clone());
             lower(&g, t, opt, &mut sink);
             let instructions = sink.instructions();
+            let (diags, suppressed) = sink.finish_with_suppressed();
             streams.push(StreamReport {
                 label: format!("{} {:?} {}", t.model.name, stage, name),
                 instructions,
-                diags: sink.finish(),
+                diags,
+                suppressed,
             });
         }
     }
@@ -966,5 +1046,50 @@ mod tests {
         let insts = vec![Inst::Misc { op: MiscOp::RmsNorm, len: 256 }];
         let diags = verify_stream(&insts, &ctx);
         assert!(!diags.iter().any(|d| d.kind == DiagnosticKind::ReadBeforeLoad), "{diags:?}");
+    }
+
+    #[test]
+    fn diagnostic_flood_is_capped_per_kind() {
+        // A stream tripping one kind thousands of times keeps the first
+        // DIAG_KIND_CAP findings and counts the rest as suppressed.
+        let t = tiny();
+        // No expected sync count: the only diagnostics are the floods'.
+        let ctx = VerifyContext::for_target(&t);
+        let mut insts = vec![Inst::Ld {
+            src: MemSpace::Hbm { channel: 0 },
+            dst: OnChipBuf::Weight,
+            addr: 0,
+            bytes: 64,
+        }];
+        let flood = 5000usize;
+        // Invalid N:M (density > 1) but round-trips the encoding cleanly,
+        // so every MV trips exactly one SparsityInvalid.
+        insts.extend(
+            (0..flood).map(|_| Inst::Mv { k: 16, n: 16, sparsity: Sparsity::Nm { n: 20, m: 16 } }),
+        );
+        let mut sink = VerifySink::new(ctx);
+        for inst in &insts {
+            sink.observe(inst);
+        }
+        let (diags, suppressed) = sink.finish_with_suppressed();
+        assert_eq!(diags.len(), DIAG_KIND_CAP);
+        assert!(diags.iter().all(|d| d.kind == DiagnosticKind::SparsityInvalid), "{diags:?}");
+        assert_eq!(diags[0].index, 1);
+        assert_eq!(diags.last().unwrap().index, DIAG_KIND_CAP);
+        assert_eq!(suppressed, (flood - DIAG_KIND_CAP) as u64);
+    }
+
+    #[test]
+    fn truncated_tail_is_a_typed_diagnostic() {
+        let (insts, ctx) = base();
+        let bytes = isa::encode_stream(&insts);
+        assert!(verify_encoded(&bytes, &ctx).is_empty());
+        for r in 1..INST_BYTES {
+            let mut cut = bytes.clone();
+            cut.resize(bytes.len() + r, 0);
+            let diags = verify_encoded(&cut, &ctx);
+            assert_eq!(diags.len(), 1, "remainder {r}: {diags:?}");
+            assert!(has(&diags, DiagnosticKind::TruncatedTail, insts.len()), "{diags:?}");
+        }
     }
 }
